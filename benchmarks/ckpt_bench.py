@@ -1,0 +1,137 @@
+"""Beyond-paper benchmark: AFT as the checkpoint fabric of the training
+framework — save/restore throughput vs model size and chunking, plus the
+torn-weight-refresh anomaly count with and without AFT (the serving-side
+Table-2 analogue)."""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AftCheckpointer
+from repro.checkpoint.serializer import leaf_to_bytes
+
+from .common import QUICK_TIME_SCALE, engine, make_cluster, save
+
+
+def _tree(n_leaves: int, leaf_kb: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = leaf_kb * 256  # f32 elements per leaf
+    return {f"layer{i:03d}": rng.standard_normal(n).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def run(quick: bool = True) -> Dict:
+    ts = QUICK_TIME_SCALE
+    out: Dict[str, Dict] = {}
+
+    # --- save/restore throughput vs size and chunking ----------------------
+    for n_leaves, leaf_kb, chunk_kb in ((16, 64, 256), (64, 64, 256),
+                                        (64, 256, 256), (64, 256, 1024)):
+        cluster = make_cluster(engine("dynamodb", ts), time_scale=ts)
+        ck = AftCheckpointer(cluster.client(), run_id="bench",
+                             chunk_bytes=chunk_kb * 1024, writers=16)
+        tree = _tree(n_leaves, leaf_kb)
+        total_mb = n_leaves * leaf_kb / 1024
+        t0 = time.perf_counter()
+        res = ck.save(1, tree)
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, restored, _ = ck.restore(like=tree)
+        restore_s = time.perf_counter() - t0
+        out[f"leaves{n_leaves}_leaf{leaf_kb}kb_chunk{chunk_kb}kb"] = {
+            "total_mb": round(total_mb, 1),
+            "keys": res.num_keys,
+            "save_s": round(save_s, 3),
+            "restore_s": round(restore_s, 3),
+            "save_mb_s": round(total_mb / save_s, 1),
+            "restore_mb_s": round(total_mb / restore_s, 1),
+        }
+        cluster.stop()
+
+    # --- torn weight refresh: plain storage vs AFT --------------------------
+    # a "trainer" rewrites all N leaves with a per-version tag while a
+    # "server" repeatedly reads all leaves and checks version consistency.
+    n_leaves, rounds, reads = 12, 30 if quick else 200, 60 if quick else 400
+
+    def torn_reads_plain() -> int:
+        eng = engine("dynamodb", ts)
+        stop = threading.Event()
+        torn = [0]
+
+        def writer():
+            v = 0
+            while not stop.is_set():
+                v += 1
+                for i in range(n_leaves):
+                    eng.put(f"w/{i}", f"{v}".encode())
+                if v >= rounds:
+                    break
+
+        def reader():
+            for _ in range(reads):
+                versions = {eng.get(f"w/{i}") for i in range(n_leaves)}
+                versions.discard(None)
+                if len(versions) > 1:
+                    torn[0] += 1
+
+        wt = threading.Thread(target=writer)
+        rt = threading.Thread(target=reader)
+        wt.start(); rt.start()
+        rt.join(); stop.set(); wt.join()
+        return torn[0]
+
+    def torn_reads_aft() -> int:
+        cluster = make_cluster(engine("dynamodb", ts), time_scale=ts)
+        client = cluster.client()
+        stop = threading.Event()
+        torn = [0]
+
+        def writer():
+            for v in range(1, rounds + 1):
+                txid = client.start_transaction()
+                for i in range(n_leaves):
+                    client.put(txid, f"w/{i}", f"{v}".encode())
+                client.commit_transaction(txid)
+                if stop.is_set():
+                    break
+
+        def reader():
+            for _ in range(reads):
+                txid = client.start_transaction()
+                try:
+                    versions = {client.get(txid, f"w/{i}")
+                                for i in range(n_leaves)}
+                except Exception:
+                    continue
+                finally:
+                    client.abort_transaction(txid)
+                versions.discard(None)
+                if len(versions) > 1:
+                    torn[0] += 1
+
+        wt = threading.Thread(target=writer)
+        rt = threading.Thread(target=reader)
+        wt.start(); rt.start()
+        rt.join(); stop.set(); wt.join(timeout=30)
+        cluster.stop()
+        return torn[0]
+
+    out["torn_weight_refresh"] = {
+        "plain_torn_reads": torn_reads_plain(),
+        "aft_torn_reads": torn_reads_aft(),
+        "reader_samples": reads,
+        "leaves": n_leaves,
+    }
+    save("ckpt_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

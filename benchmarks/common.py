@@ -1,0 +1,71 @@
+"""Shared benchmark plumbing: cluster construction, result IO, quick-mode
+scaling.
+
+Latency/throughput *shapes* reproduce the paper's figures; absolute numbers
+are driven by the simulated engine latency models (calibrated to Fig 2/3 of
+the paper) compressed by ``time_scale`` so the whole suite runs in minutes
+on this container.  ``--full`` in run.py lifts the compression.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, Optional
+
+from repro.core import AftCluster, AftNodeConfig, ClusterConfig
+from repro.faas.platform import FaasConfig
+from repro.faas.workload import WorkloadConfig, run_workload
+from repro.storage.simulated import make_engine
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+# compress simulated storage/faas latencies (1 sim-ms → 0.03 real-ms).
+QUICK_TIME_SCALE = 0.03
+
+
+def save(name: str, payload: Dict) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{name}.json"
+    out.write_text(json.dumps(payload, indent=1, default=str))
+    return out
+
+
+def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
+                 standby: int = 0, time_scale: float = QUICK_TIME_SCALE,
+                 gc_interval_s: float = 0.2,
+                 fast_failover: bool = False) -> AftCluster:
+    from repro.core import FaultManagerConfig
+
+    node_cfg = AftNodeConfig(
+        enable_data_cache=data_cache,
+        multicast_interval_s=0.05,
+        gc_interval_s=gc_interval_s,
+        txn_timeout_s=30.0,
+    )
+    fm = FaultManagerConfig(scan_interval_s=0.1, gc_interval_s=0.15,
+                            heartbeat_interval_s=0.3 if fast_failover else 1.0,
+                            heartbeat_misses=3)
+    cfg = ClusterConfig(num_nodes=nodes, standby_nodes=standby, node=node_cfg,
+                        fault_manager=fm,
+                        replacement_delay_s=1.0 * time_scale * 33)
+    cluster = AftCluster(engine, cfg)
+    cluster.start()
+    return cluster
+
+
+def workload_cfg(*, zipf: float = 1.0, functions: int = 2, reads: int = 2,
+                 writes: int = 1, num_keys: int = 1000,
+                 time_scale: float = QUICK_TIME_SCALE,
+                 seed: int = 0) -> WorkloadConfig:
+    return WorkloadConfig(
+        num_keys=num_keys, zipf=zipf, functions_per_txn=functions,
+        reads_per_function=reads, writes_per_function=writes,
+        value_bytes=4096,
+        faas=FaasConfig(time_scale=time_scale, seed=seed),
+        seed=seed)
+
+
+def engine(name: str, time_scale: float = QUICK_TIME_SCALE, seed: int = 0):
+    return make_engine(name, time_scale=time_scale, seed=seed)

@@ -1,0 +1,48 @@
+"""Fig 4: read caching × access skew — AFT over DynamoDB / Redis with and
+without the data cache, plus DynamoDB transaction mode, Zipf ∈ {1.0, 1.5,
+2.0} over a 100k key space."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.faas.workload import run_workload
+
+from .common import QUICK_TIME_SCALE, engine, make_cluster, save, workload_cfg
+
+
+def run(quick: bool = True) -> Dict:
+    clients = 10
+    per_client = 40 if quick else 1000
+    num_keys = 10_000 if quick else 100_000
+    ts = QUICK_TIME_SCALE
+    out: Dict[str, Dict] = {}
+    for zipf in (1.0, 1.5, 2.0):
+        row: Dict[str, Dict] = {}
+        for store in ("dynamodb", "redis"):
+            for cache in (True, False):
+                cluster = make_cluster(engine(store, ts), data_cache=cache,
+                                       time_scale=ts)
+                cfg = workload_cfg(zipf=zipf, num_keys=num_keys,
+                                   time_scale=ts, seed=int(zipf * 10))
+                res = run_workload("aft", cfg=cfg, clients=clients,
+                                   txns_per_client=per_client,
+                                   cluster=cluster)
+                row[f"aft_{store}_{'cache' if cache else 'nocache'}"] = \
+                    res.summary()
+                cluster.stop()
+        cfg = workload_cfg(zipf=zipf, num_keys=num_keys, time_scale=ts,
+                           seed=int(zipf * 10))
+        res = run_workload("dynamo_txn", cfg=cfg, clients=clients,
+                           txns_per_client=per_client,
+                           storage=engine("dynamodb", ts))
+        row["dynamodb_txn_mode"] = res.summary()
+        out[f"zipf_{zipf}"] = row
+    save("fig4_caching_skew", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

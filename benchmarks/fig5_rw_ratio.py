@@ -1,0 +1,38 @@
+"""Fig 5: read/write ratio — 10-IO transactions, reads from 0% to 100%,
+AFT over DynamoDB and Redis."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.faas.workload import run_workload
+
+from .common import QUICK_TIME_SCALE, engine, make_cluster, save, workload_cfg
+
+
+def run(quick: bool = True) -> Dict:
+    clients = 10
+    per_client = 40 if quick else 1000
+    ts = QUICK_TIME_SCALE
+    out: Dict[str, Dict] = {}
+    for reads in (0, 2, 4, 6, 8, 10):
+        writes = 10 - reads
+        row = {}
+        for store in ("dynamodb", "redis"):
+            cluster = make_cluster(engine(store, ts), time_scale=ts)
+            # single function carrying all 10 IOs (isolates the IO path)
+            cfg = workload_cfg(functions=1, reads=reads, writes=writes,
+                               time_scale=ts, seed=reads)
+            res = run_workload("aft", cfg=cfg, clients=clients,
+                               txns_per_client=per_client, cluster=cluster)
+            row[f"aft_{store}"] = res.summary()
+            cluster.stop()
+        out[f"reads_{reads*10}pct"] = row
+    save("fig5_rw_ratio", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

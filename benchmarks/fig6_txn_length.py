@@ -1,0 +1,36 @@
+"""Fig 6: transaction length — 1..10 functions (3 IOs each: 2 reads,
+1 write), AFT over DynamoDB and Redis."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.faas.workload import run_workload
+
+from .common import QUICK_TIME_SCALE, engine, make_cluster, save, workload_cfg
+
+
+def run(quick: bool = True) -> Dict:
+    clients = 10
+    per_client = 30 if quick else 1000
+    ts = QUICK_TIME_SCALE
+    out: Dict[str, Dict] = {}
+    for nfuncs in (1, 2, 4, 6, 8, 10):
+        row = {}
+        for store in ("dynamodb", "redis"):
+            cluster = make_cluster(engine(store, ts), time_scale=ts)
+            cfg = workload_cfg(functions=nfuncs, reads=2, writes=1,
+                               time_scale=ts, seed=nfuncs)
+            res = run_workload("aft", cfg=cfg, clients=clients,
+                               txns_per_client=per_client, cluster=cluster)
+            row[f"aft_{store}"] = res.summary()
+            cluster.stop()
+        out[f"functions_{nfuncs}"] = row
+    save("fig6_txn_length", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,38 @@
+"""Fig 7: single-node scalability — throughput vs parallel clients (1..50),
+AFT over DynamoDB and Redis, Zipf 1.5."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.faas.workload import run_workload
+
+from .common import QUICK_TIME_SCALE, engine, make_cluster, save, workload_cfg
+
+
+def run(quick: bool = True) -> Dict:
+    per_client = 20 if quick else 1000
+    # scalability figures use milder time compression: at 0.03 the simulated
+    # IO shrinks below python-thread overheads and the curve measures the
+    # GIL, not the shim.  0.2 keeps sim latency ≫ scheduler noise.
+    ts = 0.2
+    client_counts = (1, 5, 10, 20, 30, 40, 50)
+    out: Dict[str, Dict] = {}
+    for store in ("dynamodb", "redis"):
+        row = {}
+        for clients in client_counts:
+            cluster = make_cluster(engine(store, ts), time_scale=ts)
+            cfg = workload_cfg(zipf=1.5, time_scale=ts, seed=clients)
+            res = run_workload("aft", cfg=cfg, clients=clients,
+                               txns_per_client=per_client, cluster=cluster)
+            row[f"clients_{clients}"] = res.summary()
+            cluster.stop()
+        out[store] = row
+    save("fig7_single_node", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,95 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from
+benchmarks/results/{dryrun,roofline}.json.
+
+  PYTHONPATH=src python -m benchmarks.report [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    res = json.loads((RESULTS / "dryrun.json").read_text())
+    rows = ["| arch | shape | mesh | status | GiB/dev (args+tmp+out) | "
+            "HLO GFLOPs/dev | coll MiB/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(res):
+        r = res[key]
+        if r["status"] == "ok":
+            m = r["memory"]
+            per_dev = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"]
+                       + m["output_size_in_bytes"]
+                       - m.get("alias_size_in_bytes", 0))
+            coll = sum(r.get("collective_bytes", {}).values())
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{per_dev/2**30:.2f} | {r['flops']/1e9:.0f} | "
+                f"{coll/2**20:.0f} | {r.get('compile_s','')} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip | — | — | — | — |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | — | — | — | — |")
+    return "\n".join(rows)
+
+
+def roofline_table(tagged: bool = False) -> str:
+    res = json.loads((RESULTS / "roofline.json").read_text())
+    rows = ["| arch | shape | variant | compute ms | memory ms | coll ms | "
+            "bound | MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(res):
+        r = res[key]
+        parts = key.split("|")
+        tag = parts[3] if len(parts) > 3 else "baseline"
+        if tagged != (tag != "baseline"):
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"skip | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {tag} | — | — | — |"
+                        f" ERROR | — | — |")
+            continue
+        t = r["terms"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {tag} | "
+            f"{t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} | "
+            f"{t['collective_s']*1e3:.2f} | {r['dominant'].split('_')[0]} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "variants"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline baselines (single pod, 256 chips)\n")
+        print(roofline_table(tagged=False))
+        print()
+    if args.section in ("all", "variants"):
+        print("### Perf-iteration variants\n")
+        print(roofline_table(tagged=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark driver: one module per paper figure/table + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode (minutes)
+  PYTHONPATH=src python -m benchmarks.run --only fig3,fig9
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale counts
+
+Roofline/dry-run artifacts (benchmarks/results/{dryrun,roofline}.json) are
+produced by ``repro.launch.dryrun`` / ``repro.launch.roofline`` — see
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+MODULES = {
+    "fig2": "benchmarks.fig2_io_latency",
+    "fig3": "benchmarks.fig3_table2_e2e",     # includes table2
+    "fig4": "benchmarks.fig4_caching_skew",
+    "fig5": "benchmarks.fig5_rw_ratio",
+    "fig6": "benchmarks.fig6_txn_length",
+    "fig7": "benchmarks.fig7_single_node",
+    "fig8": "benchmarks.fig8_distributed",
+    "fig9": "benchmarks.fig9_gc",
+    "fig10": "benchmarks.fig10_fault_tolerance",
+    "ckpt": "benchmarks.ckpt_bench",
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig3,fig9")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale txn counts (slow)")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        or list(MODULES)
+    failures = 0
+    for name in names:
+        mod = importlib.import_module(MODULES[name])
+        t0 = time.time()
+        print(f"=== {name} ({MODULES[name]}) ===", flush=True)
+        try:
+            result = mod.run(quick=not args.full)
+            dt = time.time() - t0
+            summary = json.dumps(result, indent=1, default=str)
+            if len(summary) > 1800:
+                summary = summary[:1800] + "\n ...(see benchmarks/results)"
+            print(summary)
+            print(f"=== {name} done in {dt:.1f}s ===", flush=True)
+        except Exception:
+            failures += 1
+            print(f"=== {name} FAILED ===")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""AFT-backed atomic checkpointing of sharded pytrees."""
+
+from .serializer import leaf_from_bytes, leaf_to_bytes, tree_paths
+from .checkpointer import AftCheckpointer, CheckpointNotFound
+
+__all__ = ["AftCheckpointer", "CheckpointNotFound", "leaf_to_bytes",
+           "leaf_from_bytes", "tree_paths"]

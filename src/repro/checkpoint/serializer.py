@@ -1,0 +1,72 @@
+"""Leaf (de)serialization: jax/numpy arrays ↔ self-describing bytes.
+
+Format: 16-byte header (magic, dtype code, rank) + dims (u32 each) + raw
+little-endian data.  No pickle — checkpoints must be readable across python
+versions and safe to load from shared storage.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+_MAGIC = b"AFTL"
+
+_DTYPES: List[str] = [
+    "float32", "float64", "float16", "bfloat16", "int8", "int16", "int32",
+    "int64", "uint8", "uint32", "uint64", "bool",
+]
+_DTYPE_CODE = {name: i for i, name in enumerate(_DTYPES)}
+
+
+def leaf_to_bytes(x: Any) -> bytes:
+    arr = np.asarray(jax.device_get(x))
+    name = arr.dtype.name if arr.dtype.name in _DTYPE_CODE else None
+    if name is None:
+        # bfloat16 prints as 'bfloat16' via ml_dtypes; fall back via jnp
+        name = str(arr.dtype)
+    code = _DTYPE_CODE[name]
+    header = _MAGIC + struct.pack("<BBHI", code, arr.ndim, 0, 0)
+    dims = struct.pack(f"<{arr.ndim}I", *arr.shape) if arr.ndim else b""
+    if name == "bfloat16":
+        payload = arr.view(np.uint16).tobytes()
+    else:
+        payload = arr.tobytes()
+    return header + dims + payload
+
+
+def leaf_from_bytes(data: bytes) -> np.ndarray:
+    assert data[:4] == _MAGIC, "bad leaf magic"
+    code, ndim, _, _ = struct.unpack("<BBHI", data[4:12])
+    name = _DTYPES[code]
+    off = 12
+    shape: Tuple[int, ...] = ()
+    if ndim:
+        shape = struct.unpack(f"<{ndim}I", data[off:off + 4 * ndim])
+        off += 4 * ndim
+    if name == "bfloat16":
+        import ml_dtypes
+
+        raw = np.frombuffer(data, np.uint16, offset=off)
+        return raw.view(ml_dtypes.bfloat16).reshape(shape)
+    return np.frombuffer(data, np.dtype(name), offset=off).reshape(shape).copy()
+
+
+def tree_paths(tree: Any) -> List[Tuple[str, Any]]:
+    """Stable (path, leaf) pairs; path is '/'-joined dict keys/indices."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out

@@ -1,0 +1,21 @@
+"""Assigned-architecture registry: one module per architecture.
+
+Importing this package registers every config; select with
+``repro.models.config.get_config(name)`` or ``--arch <name>`` in the
+launchers.
+"""
+
+from . import (  # noqa: F401
+    gemma2_9b,
+    kimi_k2_1t_a32b,
+    llama4_scout_17b_a16e,
+    llama_3_2_vision_11b,
+    qwen1_5_110b,
+    qwen2_0_5b,
+    tinyllama_1_1b,
+    whisper_medium,
+    xlstm_350m,
+    zamba2_7b,
+)
+
+from repro.models.config import get_config, list_configs  # noqa: F401

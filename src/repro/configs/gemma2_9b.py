@@ -1,0 +1,28 @@
+"""gemma2-9b — local+global alternating attention, logit softcaps
+[arXiv:2408.00118; hf].
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000; head_dim=256,
+sliding window 4096 on local layers, attn softcap 50, final logit softcap 30,
+sandwich (post-block) norms, tied embeddings.
+"""
+
+from repro.models.config import ATTN, LOCAL, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma2-9b",
+    family="dense",
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=256000,
+    pattern=(LOCAL, ATTN),
+    pattern_repeats=21,
+    head_dim=256,
+    sliding_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    post_block_norm=True,
+    tie_embeddings=True,
+    act="geglu",
+))

@@ -1,0 +1,26 @@
+"""kimi-k2-1t-a32b — trillion-param MoE (paper-table) [arXiv:2501.kimi2;
+unverified].
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840, MoE 384 experts
+top-8 + 1 shared expert; one dense layer (placed as the tail block here —
+the pattern scan carries the 60 MoE layers).
+"""
+
+from repro.models.config import DENSE, MOE, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=163840,
+    pattern=(MOE,),
+    pattern_repeats=60,
+    tail=(DENSE,),
+    num_experts=384,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+))

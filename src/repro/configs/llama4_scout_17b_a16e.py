@@ -1,0 +1,25 @@
+"""llama4-scout-17b-a16e — MoE, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16 experts
+top-1 + shared expert on alternating layers (interleaved dense/MoE).
+"""
+
+from repro.models.config import DENSE, MOE, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    pattern=(DENSE, MOE),
+    pattern_repeats=24,
+    num_experts=16,
+    experts_per_token=1,
+    num_shared_experts=1,
+    moe_d_ff=8192,
+    rope_theta=500_000.0,
+))

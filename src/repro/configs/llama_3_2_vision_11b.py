@@ -1,0 +1,23 @@
+"""llama-3.2-vision-11b — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.  Every 5th layer
+cross-attends to stub vision patch embeddings (B, 1600, d_model) provided by
+``input_specs()`` — the vision tower is a STUB per the assignment.
+"""
+
+from repro.models.config import ATTN, CROSS, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    pattern=(ATTN, ATTN, ATTN, ATTN, CROSS),
+    pattern_repeats=8,
+    vision_seq=1600,
+    rope_theta=500_000.0,
+))

@@ -1,0 +1,20 @@
+"""qwen1.5-110b — QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064.
+"""
+
+from repro.models.config import ATTN, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    pattern=(ATTN,),
+    pattern_repeats=80,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+))

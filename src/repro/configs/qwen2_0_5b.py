@@ -1,0 +1,21 @@
+"""qwen2-0.5b — GQA, QKV bias [arXiv:2407.10671; hf].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+"""
+
+from repro.models.config import ATTN, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    pattern=(ATTN,),
+    pattern_repeats=24,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+))

@@ -1,0 +1,25 @@
+"""whisper-medium — enc-dec, conv frontend (stub) [arXiv:2212.04356;
+unverified].
+
+24L (decoder; + 24 encoder layers) d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865.  The audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, 1500, d_model); the encoder is a
+bidirectional attention stack and the decoder uses cross-attention blocks.
+"""
+
+from repro.models.config import CROSS, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    pattern=(CROSS,),
+    pattern_repeats=24,
+    encoder_layers=24,
+    encoder_seq=1500,
+    act="gelu",
+))

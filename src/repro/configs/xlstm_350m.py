@@ -1,0 +1,22 @@
+"""xlstm-350m — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+24L d_model=1024 4H d_ff=0 vocab=50304.  3:1 mLSTM:sLSTM interleave
+(the sLSTM blocks carry the true recurrence; mLSTM blocks are the
+chunkwise-parallel matrix-memory form).
+"""
+
+from repro.models.config import MLSTM, SLSTM, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=(MLSTM, MLSTM, MLSTM, SLSTM),
+    pattern_repeats=6,
+    tie_embeddings=True,
+    ssm_chunk=256,
+))

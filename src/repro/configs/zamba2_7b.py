@@ -1,0 +1,28 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; unverified].
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+Layout: 5 Mamba-2 blocks then one application of the *shared* attention+MLP
+block (weights shared across all applications; per-application norms),
+repeated 13× (= 78 layers), plus a 3-Mamba tail → 81 layers.
+"""
+
+from repro.models.config import MAMBA2, SHARED_ATTN, ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    pattern=(MAMBA2, MAMBA2, MAMBA2, MAMBA2, MAMBA2, SHARED_ATTN),
+    pattern_repeats=13,
+    tail=(MAMBA2, MAMBA2, MAMBA2),
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+))

@@ -1,0 +1,86 @@
+"""AFT core — the paper's contribution (§3–§5), faithful.
+
+Public surface: the Table-1 transactional KVS API via ``AftNode`` (single
+node) or ``AftCluster``/``AftClient`` (distributed, §4), plus the protocol
+building blocks for tests and tooling.
+"""
+
+from .anomaly import AnomalyAggregator, AnomalyCounts, TransactionObserver
+from .atomic_read import (
+    ReadSelection,
+    ReadStatus,
+    atomic_read_select,
+    fractured_read_witness,
+    is_atomic_readset,
+)
+from .cluster import AftClient, AftCluster, ClusterConfig
+from .commit_cache import CommitSetCache, DataCache
+from .errors import (
+    AftError,
+    NodeFailed,
+    ReadAbortError,
+    TransactionNotRunning,
+    UnknownTransaction,
+)
+from .fault_manager import FaultManager, FaultManagerConfig
+from .gc import LocalGcAgent
+from .ids import Clock, TxnHandle, TxnId, fresh_uuid
+from .multicast import FAULT_MANAGER_ID, MulticastAgent, MulticastBus
+from .node import AftNode, AftNodeConfig, TxnState
+from .records import (
+    COMMIT_PREFIX,
+    DATA_PREFIX,
+    TransactionRecord,
+    VersionedValue,
+    commit_key,
+    data_key,
+    embed_metadata,
+    extract_metadata,
+)
+from .supersede import is_superseded, superseded_subset
+from .write_buffer import TransactionWriteBuffer
+
+__all__ = [
+    "AftNode",
+    "AftNodeConfig",
+    "AftCluster",
+    "AftClient",
+    "ClusterConfig",
+    "TxnState",
+    "TxnId",
+    "TxnHandle",
+    "Clock",
+    "fresh_uuid",
+    "TransactionRecord",
+    "VersionedValue",
+    "CommitSetCache",
+    "DataCache",
+    "TransactionWriteBuffer",
+    "MulticastBus",
+    "MulticastAgent",
+    "FAULT_MANAGER_ID",
+    "FaultManager",
+    "FaultManagerConfig",
+    "LocalGcAgent",
+    "atomic_read_select",
+    "ReadStatus",
+    "ReadSelection",
+    "is_atomic_readset",
+    "fractured_read_witness",
+    "is_superseded",
+    "superseded_subset",
+    "AnomalyAggregator",
+    "AnomalyCounts",
+    "TransactionObserver",
+    "AftError",
+    "NodeFailed",
+    "ReadAbortError",
+    "TransactionNotRunning",
+    "UnknownTransaction",
+    "commit_key",
+    "data_key",
+    "embed_metadata",
+    "extract_metadata",
+    "COMMIT_PREFIX",
+    "DATA_PREFIX",
+]

@@ -1,0 +1,114 @@
+"""Consistency anomaly detection (Table 2 methodology, §6.1.2).
+
+Two detectors, both driven from *observed reads* so they work identically for
+AFT-shimmed and plain-storage executions:
+
+* **Read-Your-Write (RYW) anomaly** — a transaction wrote key ``k`` and a
+  later read of ``k`` within the same transaction returned a different
+  version (or different bytes).
+* **Fractured Read (FR) anomaly** — the transaction's accumulated read set
+  violates Definition 1: it read ``k_i`` whose transaction cowrote ``l``, and
+  it also read ``l_j`` with ``j < i``.  This subsumes repeatable-read
+  anomalies (§3.5: re-reading a key at a different version shows up as a
+  Definition-1 violation since every version cowrites itself).
+
+For plain-storage runs the per-version metadata (timestamp, UUID, cowritten
+set — ~70 bytes) is embedded in the stored values (``records.embed_metadata``),
+exactly as §6.1.2 describes.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Optional, Tuple
+
+from .atomic_read import fractured_read_witness
+from .ids import TxnId
+
+
+@dataclass
+class AnomalyCounts:
+    ryw: int = 0
+    fractured: int = 0
+    transactions: int = 0
+    transactions_with_ryw: int = 0
+    transactions_with_fr: int = 0
+
+    def merge(self, other: "AnomalyCounts") -> None:
+        self.ryw += other.ryw
+        self.fractured += other.fractured
+        self.transactions += other.transactions
+        self.transactions_with_ryw += other.transactions_with_ryw
+        self.transactions_with_fr += other.transactions_with_fr
+
+
+class TransactionObserver:
+    """Accumulates one transaction's observed reads/writes and scores them."""
+
+    def __init__(self) -> None:
+        self.read_versions: Dict[str, TxnId] = {}
+        self.cowritten_of: Dict[TxnId, FrozenSet[str]] = {}
+        self.my_writes: Dict[str, bytes] = {}
+        self.ryw_anomalies = 0
+        self.fr_anomalies = 0
+
+    def observe_write(self, key: str, value: bytes) -> None:
+        self.my_writes[key] = value
+
+    def observe_read(
+        self,
+        key: str,
+        value: Optional[bytes],
+        tid: Optional[TxnId],
+        cowritten: Tuple[str, ...] = (),
+    ) -> None:
+        # RYW check: once we wrote k, a read must return our bytes.
+        if key in self.my_writes and value != self.my_writes[key]:
+            self.ryw_anomalies += 1
+            return  # a foreign version read after our write is not part of
+            # "our" atomic readset accounting — count it once as RYW.
+        if tid is None or value is None:
+            return
+        self.read_versions[key] = tid
+        self.cowritten_of[tid] = frozenset(cowritten) | frozenset({key})
+        # FR check: incremental Definition-1 validation on every read.
+        witness = fractured_read_witness(self.read_versions, self.cowritten_of)
+        if witness is not None:
+            self.fr_anomalies += 1
+            # drop the offending read so one stale read isn't counted again
+            # on every subsequent read of the transaction
+            del self.read_versions[key]
+
+    def counts(self) -> AnomalyCounts:
+        return AnomalyCounts(
+            ryw=self.ryw_anomalies,
+            fractured=self.fr_anomalies,
+            transactions=1,
+            transactions_with_ryw=int(self.ryw_anomalies > 0),
+            transactions_with_fr=int(self.fr_anomalies > 0),
+        )
+
+
+class AnomalyAggregator:
+    """Thread-safe workload-wide anomaly tally (one row of Table 2)."""
+
+    def __init__(self, label: str):
+        self.label = label
+        self.total = AnomalyCounts()
+        self._lock = threading.Lock()
+
+    def record(self, observer: TransactionObserver) -> None:
+        with self._lock:
+            self.total.merge(observer.counts())
+
+    def summary(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "label": self.label,
+                "transactions": self.total.transactions,
+                "ryw_anomalies": self.total.ryw,
+                "fr_anomalies": self.total.fractured,
+                "txns_with_ryw": self.total.transactions_with_ryw,
+                "txns_with_fr": self.total.transactions_with_fr,
+            }

@@ -1,0 +1,134 @@
+"""Algorithm 1 — AtomicRead (§3.4) and the Definition-1 checker.
+
+Given a requested key ``k`` and the transaction's read set ``R`` (a map from
+key to the version already read), select the newest committed version ``k_t``
+such that ``R ∪ {k_t}`` is still an Atomic Readset (Definition 1):
+
+  (1) for every ``l_i ∈ R`` with ``k ∈ l_i.cowritten``: ``t ≥ i``
+      — the *lower bound*: a cowritten sibling forces us at least as new;
+  (2) for every ``l ∈ k_t.cowritten`` with ``l_j ∈ R``: ``j ≥ t``
+      — no candidate may have a cowritten sibling that we already read at an
+      older version (we could no longer "repair" that read, §3.6).
+
+Unlike RAMP, read sets are built *dynamically* — no pre-declared read/write
+sets — at the cost of potentially staler reads and, in rare cases, an abort
+when no valid version survives both constraints (§3.6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+from typing import Dict, Mapping, Optional
+
+from .commit_cache import CommitSetCache
+from .ids import TxnId
+
+
+class ReadStatus(Enum):
+    OK = "ok"                       # a version was selected
+    NOT_FOUND = "not_found"         # key has only the NULL version (line 8-9)
+    NO_VALID_VERSION = "no_valid"   # versions exist but none satisfies Def. 1
+                                    # (§3.6 staleness abort / §5.2.1 GC hole)
+
+
+@dataclass(frozen=True)
+class ReadSelection:
+    status: ReadStatus
+    tid: Optional[TxnId] = None
+
+
+def atomic_read_select(
+    key: str,
+    read_set: Mapping[str, TxnId],
+    cache: CommitSetCache,
+) -> ReadSelection:
+    """Lines 1–23 of Algorithm 1: choose a version; storage fetch is the
+    caller's job (line 25)."""
+    with cache.lock:  # one consistent view of records + index for this read
+        # lines 3–5: lower bound from cowritten sets of prior reads (case 1)
+        lower: Optional[TxnId] = None
+        for l_key, l_tid in read_set.items():
+            record = cache.get(l_tid)
+            if record is None:
+                # GC never removes records read by a running transaction
+                # (§5.1); a miss here means the version arrived via another
+                # node's session — treat conservatively as no constraint.
+                continue
+            if key in record.write_set and (lower is None or l_tid > lower):
+                lower = l_tid
+
+        versions = cache.versions_of(key)
+
+        # lines 7–9: key was never written (NULL version) and nothing forces
+        # a version to exist ⇒ legitimate NULL read.
+        if not versions and lower is None:
+            return ReadSelection(ReadStatus.NOT_FOUND)
+
+        # line 11: candidates at least as new as the lower bound
+        candidates = (
+            versions if lower is None else [t for t in versions if t >= lower]
+        )
+
+        # lines 13–21: newest-first, reject candidates whose cowritten set
+        # conflicts with an older prior read (case 2)
+        for t in reversed(candidates):
+            record = cache.get(t)
+            if record is None:  # pruned concurrently; skip
+                continue
+            valid = True
+            for l_key in record.write_set:
+                prior = read_set.get(l_key)
+                if prior is not None and prior < t:
+                    valid = False
+                    break
+            if valid:
+                return ReadSelection(ReadStatus.OK, t)
+
+        # line 22–23: no valid version — abort/retry (§3.6)
+        return ReadSelection(ReadStatus.NO_VALID_VERSION)
+
+
+# ---------------------------------------------------------------------------
+# Definition 1 checker — used by tests, the anomaly detectors (Table 2), and
+# the hypothesis property suite.  Deliberately a *separate, direct* encoding of
+# the definition so it can catch bugs in the protocol implementation.
+# ---------------------------------------------------------------------------
+
+def is_atomic_readset(
+    read_versions: Mapping[str, TxnId],
+    cowritten_of: Mapping[TxnId, frozenset],
+) -> bool:
+    """Definition 1: ∀ k_i ∈ R, ∀ l ∈ k_i.cowritten, l_j ∈ R ⇒ j ≥ i.
+
+    ``read_versions`` maps key → version read; ``cowritten_of`` maps a version
+    (its TxnId) to the set of keys cowritten by that transaction.
+    """
+    for _k, i in read_versions.items():
+        cowritten = cowritten_of.get(i)
+        if cowritten is None:
+            continue
+        for l in cowritten:
+            j = read_versions.get(l)
+            if j is not None and j < i:
+                return False
+    return True
+
+
+def fractured_read_witness(
+    read_versions: Mapping[str, TxnId],
+    cowritten_of: Mapping[TxnId, frozenset],
+) -> Optional[str]:
+    """Human-readable witness of a Definition-1 violation, or None."""
+    for k, i in read_versions.items():
+        cowritten = cowritten_of.get(i)
+        if cowritten is None:
+            continue
+        for l in cowritten:
+            j = read_versions.get(l)
+            if j is not None and j < i:
+                return (
+                    f"read {k}@{i} whose txn cowrote {l}, but read {l}@{j} "
+                    f"with {j} < {i}"
+                )
+    return None

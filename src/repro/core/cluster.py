@@ -1,0 +1,274 @@
+"""Cluster deployment harness (§4.3, §6.7).
+
+Plays the role Kubernetes plays in the paper: membership, a stateless
+round-robin load balancer, a standby-node pool for fast replacement, and the
+wiring between nodes, the multicast bus, local GC agents, and the fault
+manager.  Autoscaling policy is pluggable (§4.3 leaves it out of scope; we
+provide a simple load-based policy as a beyond-paper extension in
+``autoscale.py``).
+
+``AftClient`` is the application-facing handle: a logical request (possibly
+spanning many FaaS functions / trainer hosts) opens a session pinned to one
+AFT node (§3.1: "each transaction sends all operations to a single AFT node")
+and drives the Table-1 API through it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from ..storage.base import StorageEngine
+from .errors import NodeFailed
+from .fault_manager import FaultManager, FaultManagerConfig
+from .gc import LocalGcAgent
+from .ids import TxnId
+from .multicast import MulticastAgent, MulticastBus
+from .node import AftNode, AftNodeConfig
+
+
+@dataclass
+class ClusterConfig:
+    num_nodes: int = 1
+    standby_nodes: int = 0
+    node: AftNodeConfig = field(default_factory=AftNodeConfig)
+    fault_manager: FaultManagerConfig = field(default_factory=FaultManagerConfig)
+    # §6.7: replacement nodes pay a cold-start (container download + metadata
+    # cache warm-up).  Simulated; scaled by the storage time_scale in benches.
+    replacement_delay_s: float = 0.0
+    start_background_threads: bool = True
+
+
+class AftCluster:
+    def __init__(self, storage: StorageEngine, config: Optional[ClusterConfig] = None):
+        self.storage = storage
+        self.config = config or ClusterConfig()
+        self.bus = MulticastBus()
+        self.nodes: List[AftNode] = []
+        self.agents: Dict[str, MulticastAgent] = {}
+        self.gc_agents: Dict[str, LocalGcAgent] = {}
+        self.standbys: List[AftNode] = []
+        self._rr = 0
+        self._node_seq = 0
+        self._lock = threading.RLock()
+        self.fault_manager = FaultManager(
+            storage,
+            self.bus,
+            membership=self.all_nodes,  # incl. dead: heartbeat detection
+            config=self.config.fault_manager,
+            on_node_failure=self._replace_node,
+        )
+        for _ in range(self.config.num_nodes):
+            self._add_node()
+        for _ in range(self.config.standby_nodes):
+            self.standbys.append(self._make_node(bootstrap=False))
+        if self.config.start_background_threads:
+            self.start()
+
+    # ------------------------------------------------------------- topology
+    def _make_node(self, bootstrap: bool = True) -> AftNode:
+        with self._lock:
+            node_id = f"aft-{self._node_seq}"
+            self._node_seq += 1
+        cfg = AftNodeConfig(**{**self.config.node.__dict__, "node_id": node_id})
+        return AftNode(self.storage, cfg, bootstrap=bootstrap)
+
+    def _wire_node(self, node: AftNode) -> None:
+        agent = MulticastAgent(node, self.bus, peers=self.live_node_ids)
+        gc_agent = LocalGcAgent(node)
+        with self._lock:
+            self.nodes.append(node)
+            self.agents[node.node_id] = agent
+            self.gc_agents[node.node_id] = gc_agent
+        if self.config.start_background_threads:
+            agent.start()
+            gc_agent.start()
+
+    def _add_node(self) -> AftNode:
+        node = self._make_node()
+        self._wire_node(node)
+        return node
+
+    def _replace_node(self, dead: AftNode) -> None:
+        """§6.7 recovery path: detach the dead node, promote a standby (or
+        cold-start a new one), warm its metadata cache, join the cluster."""
+        with self._lock:
+            if dead in self.nodes:
+                self.nodes.remove(dead)
+            agent = self.agents.pop(dead.node_id, None)
+            gc_agent = self.gc_agents.pop(dead.node_id, None)
+            standby = self.standbys.pop(0) if self.standbys else None
+        if agent is not None:
+            agent.stop()
+        if gc_agent is not None:
+            gc_agent.stop()
+        if self.config.replacement_delay_s > 0:
+            time.sleep(self.config.replacement_delay_s)  # container download
+        node = standby if standby is not None else self._make_node(bootstrap=False)
+        node.bootstrap()  # metadata cache warm-up from the Commit Set (§3.1)
+        self._wire_node(node)
+
+    # ------------------------------------------------------------ membership
+    def all_nodes(self) -> List[AftNode]:
+        with self._lock:
+            return list(self.nodes)
+
+    def live_nodes(self) -> List[AftNode]:
+        with self._lock:
+            return [n for n in self.nodes if n.alive]
+
+    def live_node_ids(self) -> List[str]:
+        return [n.node_id for n in self.live_nodes()]
+
+    def scale_to(self, n: int) -> None:
+        """Elastically add/remove nodes (coordination-free: §4.3)."""
+        while len(self.live_nodes()) < n:
+            self._add_node()
+        while len(self.live_nodes()) > n:
+            node = self.live_nodes()[-1]
+            self.remove_node(node)
+
+    def remove_node(self, node: AftNode) -> None:
+        with self._lock:
+            if node in self.nodes:
+                self.nodes.remove(node)
+            agent = self.agents.pop(node.node_id, None)
+            gc_agent = self.gc_agents.pop(node.node_id, None)
+        # drain its fresh commits into the bus before detaching
+        if agent is not None:
+            agent.step()
+            agent.stop()
+        if gc_agent is not None:
+            gc_agent.stop()
+
+    def kill_node(self, index: int = 0) -> AftNode:
+        """Failure injection (§6.7): hard-kill a live node."""
+        node = self.live_nodes()[index]
+        node.fail()
+        return node
+
+    # ---------------------------------------------------------- load balance
+    def pick_node(self) -> AftNode:
+        """Stateless round-robin LB (§6: 'simple stateless load balancer')."""
+        nodes = self.live_nodes()
+        if not nodes:
+            raise NodeFailed("no live AFT nodes")
+        with self._lock:
+            node = nodes[self._rr % len(nodes)]
+            self._rr += 1
+        return node
+
+    def client(self) -> "AftClient":
+        return AftClient(self)
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for agent in list(self.agents.values()):
+            agent.start()
+        for gc_agent in list(self.gc_agents.values()):
+            gc_agent.start()
+        self.fault_manager.start()
+
+    def stop(self) -> None:
+        self.fault_manager.stop()
+        for agent in list(self.agents.values()):
+            agent.stop()
+        for gc_agent in list(self.gc_agents.values()):
+            gc_agent.stop()
+
+    # deterministic single-step for tests -----------------------------------
+    def step_all(self) -> None:
+        for agent in list(self.agents.values()):
+            agent.step()
+        for agent in list(self.agents.values()):
+            agent.step()  # second pass delivers what the first pass sent
+        for gc_agent in list(self.gc_agents.values()):
+            gc_agent.step()
+        self.fault_manager.step()
+
+    def __enter__(self) -> "AftCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class AftClient:
+    """Application-facing session API; one transaction ↔ one AFT node."""
+
+    def __init__(self, cluster: AftCluster):
+        self.cluster = cluster
+        self._sessions: Dict[str, AftNode] = {}
+        self._session_history: Dict[str, AftNode] = {}
+        self._lock = threading.Lock()
+
+    # -- Table 1 --------------------------------------------------------------
+    def start_transaction(self, uuid: Optional[str] = None) -> str:
+        node: Optional[AftNode] = None
+        if uuid is not None:
+            # §3.3.1: a retry continues the transaction — stick to the node
+            # that owns the session if it is still alive, so local
+            # idempotence metadata is found without a storage scan.
+            with self._lock:
+                prior = self._session_history.get(uuid)
+            if prior is not None and prior.alive:
+                node = prior
+        if node is None:
+            node = self.cluster.pick_node()
+        txid = node.start_transaction(uuid)
+        with self._lock:
+            self._sessions[txid] = node
+            self._session_history[txid] = node
+        return txid
+
+    def _node(self, txid: str) -> AftNode:
+        with self._lock:
+            node = self._sessions.get(txid)
+        if node is None:
+            raise NodeFailed(f"no session for {txid}")
+        return node
+
+    def get(self, txid: str, key: str) -> Optional[bytes]:
+        return self._node(txid).get(txid, key)
+
+    def put(self, txid: str, key: str, value: bytes) -> None:
+        self._node(txid).put(txid, key, value)
+
+    def commit_transaction(self, txid: str) -> TxnId:
+        node = self._node(txid)
+        tid = node.commit_transaction(txid)
+        node.release_transaction(txid)
+        with self._lock:
+            self._sessions.pop(txid, None)
+        return tid
+
+    def abort_transaction(self, txid: str) -> None:
+        node = self._node(txid)
+        node.abort_transaction(txid)
+        node.release_transaction(txid)
+        with self._lock:
+            self._sessions.pop(txid, None)
+
+    def node_of(self, txid: str) -> AftNode:
+        return self._node(txid)
+
+    def committed_tid_for_uuid(self, uuid: str):
+        """Cluster-wide idempotence probe (§3.3.1): has this logical
+        transaction already committed anywhere?  Checks live nodes' caches
+        first, then falls back to the durable Commit Set in storage."""
+        for node in self.cluster.live_nodes():
+            tid = node.committed_tid_for_uuid(uuid)
+            if tid is not None:
+                return tid
+        from .records import COMMIT_PREFIX, TransactionRecord
+
+        for key in self.cluster.storage.list_keys(COMMIT_PREFIX):
+            raw = self.cluster.storage.get(key)
+            if raw is None:
+                continue
+            record = TransactionRecord.decode(raw)
+            if record.tid.uuid == uuid:
+                return record.tid
+        return None

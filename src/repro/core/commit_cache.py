@@ -1,0 +1,168 @@
+"""Commit Set Cache + key version index (§3.1).
+
+Each AFT node locally caches the IDs (and write sets) of recently committed
+transactions to avoid a metadata fetch on every read, plus an index mapping
+each key to the recently-created versions of that key — the two structures
+Algorithm 1 consumes.  The cache is warmed at node start by scanning the
+latest records of the durable Transaction Commit Set (bootstrap, §3.1) and is
+pruned by the local metadata GC (§5.1).
+"""
+
+from __future__ import annotations
+
+import threading
+from bisect import bisect_left, insort
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+from .ids import TxnId
+from .records import TransactionRecord
+
+
+class CommitSetCache:
+    """Thread-safe committed-transaction metadata cache.
+
+    Invariant: a transaction appears in ``_index`` (key → sorted versions)
+    iff its record is in ``_records``; Algorithm 1 may therefore resolve any
+    indexed version's cowritten set locally.
+    """
+
+    def __init__(self) -> None:
+        self._records: Dict[TxnId, TransactionRecord] = {}
+        # key → sorted (ascending) list of committed TxnIds that wrote it
+        self._index: Dict[str, List[TxnId]] = {}
+        self._lock = threading.RLock()
+        # monotone log of locally-known commits, for the multicast thread to
+        # drain ("transactions committed recently on this node", §4)
+        self._fresh: List[TransactionRecord] = []
+
+    # -- writes --------------------------------------------------------------
+    def add(self, record: TransactionRecord, *, fresh: bool = False) -> bool:
+        """Merge a committed transaction's metadata.  Returns False if known."""
+        with self._lock:
+            if record.tid in self._records:
+                return False
+            self._records[record.tid] = record
+            for key in record.write_set:
+                insort(self._index.setdefault(key, []), record.tid)
+            if fresh:
+                self._fresh.append(record)
+            return True
+
+    def remove(self, tid: TxnId) -> Optional[TransactionRecord]:
+        """Drop a transaction's metadata (local GC, §5.1)."""
+        with self._lock:
+            record = self._records.pop(tid, None)
+            if record is None:
+                return None
+            for key in record.write_set:
+                versions = self._index.get(key)
+                if versions is None:
+                    continue
+                i = bisect_left(versions, tid)
+                if i < len(versions) and versions[i] == tid:
+                    versions.pop(i)
+                if not versions:
+                    del self._index[key]
+            return record
+
+    def drain_fresh(self) -> List[TransactionRecord]:
+        """Hand the multicast thread everything committed since last drain."""
+        with self._lock:
+            out, self._fresh = self._fresh, []
+            return out
+
+    # -- reads ---------------------------------------------------------------
+    def get(self, tid: TxnId) -> Optional[TransactionRecord]:
+        with self._lock:
+            return self._records.get(tid)
+
+    def __contains__(self, tid: TxnId) -> bool:
+        with self._lock:
+            return tid in self._records
+
+    def versions_of(self, key: str) -> List[TxnId]:
+        """Committed versions of ``key`` known locally, ascending."""
+        with self._lock:
+            return list(self._index.get(key, ()))
+
+    def latest_version_of(self, key: str) -> Optional[TxnId]:
+        with self._lock:
+            versions = self._index.get(key)
+            return versions[-1] if versions else None
+
+    def all_tids(self) -> List[TxnId]:
+        with self._lock:
+            return list(self._records.keys())
+
+    def snapshot_records(self) -> List[TransactionRecord]:
+        with self._lock:
+            return list(self._records.values())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    # -- coarse lock for multi-structure atomic sections ---------------------
+    @property
+    def lock(self) -> threading.RLock:
+        return self._lock
+
+
+class DataCache:
+    """LRU (key, version) → bytes cache (§3.1, evaluated in §6.2).
+
+    Values are immutable once committed (versions are never overwritten), so
+    the cache never needs invalidation — only eviction (capacity or GC).
+    """
+
+    def __init__(self, max_bytes: int = 64 * 1024 * 1024) -> None:
+        self.max_bytes = max_bytes
+        self._data: Dict[tuple, bytes] = {}
+        self._order: List[tuple] = []  # LRU approximation: move-to-end
+        self._size = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str, tid: TxnId) -> Optional[bytes]:
+        with self._lock:
+            v = self._data.get((key, tid))
+            if v is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return v
+
+    def put(self, key: str, tid: TxnId, value: bytes) -> None:
+        if len(value) > self.max_bytes:
+            return
+        with self._lock:
+            ent = (key, tid)
+            if ent in self._data:
+                self._size -= len(self._data[ent])
+            else:
+                self._order.append(ent)
+            self._data[ent] = value
+            self._size += len(value)
+            while self._size > self.max_bytes and self._order:
+                old = self._order.pop(0)
+                v = self._data.pop(old, None)
+                if v is not None:
+                    self._size -= len(v)
+
+    def evict_transaction(self, record: TransactionRecord) -> None:
+        """Drop any cached data written by ``record`` (GC eviction, §5.1)."""
+        with self._lock:
+            for key in record.write_set:
+                v = self._data.pop((key, record.tid), None)
+                if v is not None:
+                    self._size -= len(v)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "entries": len(self._data),
+                "bytes": self._size,
+            }

@@ -1,0 +1,26 @@
+"""Exception types for the AFT shim."""
+
+from __future__ import annotations
+
+
+class AftError(Exception):
+    """Base class for shim errors."""
+
+
+class UnknownTransaction(AftError):
+    """Operation referenced a transaction this node does not know."""
+
+
+class TransactionNotRunning(AftError):
+    """Operation on a transaction that already committed or aborted."""
+
+
+class ReadAbortError(AftError):
+    """Algorithm 1 found no valid version (§3.6): versions of the key exist
+    but none can join the transaction's Atomic Readset — equivalent to
+    reading from a fixed snapshot where the key is absent.  Clients abort
+    and retry the whole logical request."""
+
+
+class NodeFailed(AftError):
+    """Injected/simulated node failure — requests to a dead node fail."""

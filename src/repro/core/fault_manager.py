@@ -1,0 +1,269 @@
+"""Fault manager + global garbage collector (§4.2, §5.2).
+
+A stateless process outside the request critical path that guarantees
+*liveness* for the distributed protocols:
+
+* it receives every node's committed-transaction stream **without** the
+  pruning optimization;
+* it periodically scans the durable Transaction Commit Set for records it
+  never saw via broadcast (a node committed, acknowledged, and died before
+  multicasting) and notifies all nodes — committed data can never be silently
+  lost (§4.2);
+* it drives the two-phase global data GC (§5.2): propose superseded
+  transactions, gather *all* nodes' locally-deleted confirmations, and only
+  then delete version bytes + commit records from storage, on a dedicated
+  deletion executor ("we allocate separate cores for the data deletion
+  process");
+* it monitors node heartbeats and replaces failed nodes from a standby pool
+  (§4.3/§6.7 — the Kubernetes role), and sweeps orphaned buffer spills.
+
+Statelessness: if the fault manager itself dies, a fresh one rebuilds its
+view by re-scanning the Commit Set (§4.2).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+from ..storage.base import StorageEngine
+from .commit_cache import CommitSetCache
+from .ids import TxnId
+from .multicast import FAULT_MANAGER_ID, MulticastBus
+from .node import AftNode
+from .records import (
+    COMMIT_PREFIX,
+    DATA_PREFIX,
+    TransactionRecord,
+    commit_key,
+)
+from .supersede import is_superseded
+
+
+@dataclass
+class FaultManagerConfig:
+    scan_interval_s: float = 1.0
+    gc_interval_s: float = 1.0
+    heartbeat_interval_s: float = 1.0
+    heartbeat_misses: int = 3
+    orphan_spill_age_s: float = 120.0
+    gc_batch: int = 512
+    delete_batch: int = 256
+
+
+class DeletionExecutor:
+    """Dedicated batched-delete worker (§5.2: separate cores for deletes)."""
+
+    def __init__(self, storage: StorageEngine, batch: int = 256):
+        self.storage = storage
+        self.batch = batch
+        self._pending: List[str] = []
+        self._lock = threading.Lock()
+        self.deleted_total = 0
+
+    def submit(self, keys: Iterable[str]) -> None:
+        with self._lock:
+            self._pending.extend(keys)
+
+    def step(self) -> int:
+        with self._lock:
+            chunk, self._pending = (
+                self._pending[: self.batch],
+                self._pending[self.batch :],
+            )
+        if chunk:
+            self.storage.delete_batch(chunk)
+            self.deleted_total += len(chunk)
+        return len(chunk)
+
+    def drain(self) -> int:
+        n = 0
+        while True:
+            done = self.step()
+            if not done:
+                return n
+            n += done
+
+    def backlog(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+
+class FaultManager:
+    def __init__(
+        self,
+        storage: StorageEngine,
+        bus: MulticastBus,
+        membership: Callable[[], List[AftNode]],
+        config: Optional[FaultManagerConfig] = None,
+        on_node_failure: Optional[Callable[[AftNode], None]] = None,
+    ) -> None:
+        self.storage = storage
+        self.bus = bus
+        self.membership = membership
+        self.config = config or FaultManagerConfig()
+        self.on_node_failure = on_node_failure
+        self.bus.register(FAULT_MANAGER_ID)
+        self.cache = CommitSetCache()  # aggregate (unpruned) view
+        self.deleter = DeletionExecutor(storage, self.config.delete_batch)
+        self._seen_commit_keys: Set[str] = set()
+        self._failed_reported: Set[str] = set()
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self.stats: Dict[str, int] = {
+            "recovered_commits": 0,
+            "gc_deleted_txns": 0,
+            "orphan_spills_deleted": 0,
+            "nodes_replaced": 0,
+        }
+
+    # ------------------------------------------------------------ ingestion
+    def ingest(self) -> int:
+        """Drain unpruned commit streams from all nodes."""
+        n = 0
+        for _src, records in self.bus.drain(FAULT_MANAGER_ID):
+            for record in records:
+                self.cache.add(record)
+                self._seen_commit_keys.add(commit_key(record.tid))
+                n += 1
+        return n
+
+    # --------------------------------------------------------- §4.2 liveness
+    def scan_commit_set(self) -> int:
+        """Find durable commit records never announced via broadcast and
+        notify all nodes — the committed-then-died-pre-broadcast case."""
+        self.ingest()
+        keys = self.storage.list_keys(COMMIT_PREFIX)
+        missing = [k for k in keys if k not in self._seen_commit_keys]
+        if not missing:
+            return 0
+        raws = self.storage.get_batch(missing)
+        recovered: List[TransactionRecord] = []
+        for k in missing:
+            raw = raws.get(k)
+            if raw is None:
+                continue  # deleted between list and get (GC race) — fine
+            record = TransactionRecord.decode(raw)
+            self.cache.add(record)
+            self._seen_commit_keys.add(k)
+            recovered.append(record)
+        if recovered:
+            for node in self.membership():
+                if node.alive:
+                    node.merge_remote_commits(recovered)
+            self.stats["recovered_commits"] += len(recovered)
+        return len(recovered)
+
+    # ------------------------------------------------------------- §5.2 GC
+    def gc_round(self) -> int:
+        """Two-phase global data GC.  Returns transactions fully deleted."""
+        self.ingest()
+        nodes = [n for n in self.membership() if n.alive]
+        if not nodes:
+            return 0
+        # phase 0: propose superseded transactions from the aggregate view
+        candidates = [
+            r
+            for r in self.cache.snapshot_records()
+            if is_superseded(r, self.cache)
+        ][: self.config.gc_batch]
+        if not candidates:
+            return 0
+        tids = [r.tid for r in candidates]
+        # phase 1: all nodes must confirm local deletion — "when the GC
+        # process receives acknowledgements from all nodes, it deletes ..."
+        confirmed: Set[TxnId] = set(tids)
+        for node in nodes:
+            confirmed &= set(node.confirm_locally_deleted(tids))
+            if not confirmed:
+                return 0
+        # phase 2: delete version bytes + commit records (batched, off-path)
+        doomed = [r for r in candidates if r.tid in confirmed]
+        keys: List[str] = []
+        for record in doomed:
+            keys.extend(record.storage_key_for(k) for k in record.write_set)
+            keys.append(commit_key(record.tid))
+        self.deleter.submit(keys)
+        for record in doomed:
+            self.cache.remove(record.tid)
+            self._seen_commit_keys.discard(commit_key(record.tid))
+        for node in nodes:
+            node.forget_deleted(confirmed)
+        self.stats["gc_deleted_txns"] += len(doomed)
+        return len(doomed)
+
+    # ------------------------------------------------- orphaned spill sweep
+    def sweep_orphan_spills(self) -> int:
+        """Delete pre-commit buffer spills whose transaction never committed
+        (node crashed between spill and commit record, §3.3/§5)."""
+        referenced: Set[str] = set()
+        for record in self.cache.snapshot_records():
+            referenced.update(record.storage_keys.values())
+        now_ns = time.time_ns()
+        doomed: List[str] = []
+        for skey in self.storage.list_keys(DATA_PREFIX):
+            if "/.spill/" not in skey or skey in referenced:
+                continue
+            doomed.append(skey)
+        if doomed:
+            self.deleter.submit(doomed)
+            self.stats["orphan_spills_deleted"] += len(doomed)
+        return len(doomed)
+
+    # ------------------------------------------------------------ liveness
+    def check_heartbeats(self) -> List[str]:
+        """Detect dead nodes and trigger replacement (§6.7)."""
+        failed: List[str] = []
+        for node in self.membership():
+            if not node.alive and node.node_id not in self._failed_reported:
+                self._failed_reported.add(node.node_id)
+                failed.append(node.node_id)
+                if self.on_node_failure is not None:
+                    self.on_node_failure(node)
+                self.stats["nodes_replaced"] += 1
+        return failed
+
+    # ------------------------------------------------------------- driving
+    def step(self) -> None:
+        self.ingest()
+        self.scan_commit_set()
+        self.gc_round()
+        self.deleter.step()
+        self.check_heartbeats()
+
+    def start(self) -> None:
+        if self._threads:
+            return
+        self._stop.clear()
+
+        def control_loop() -> None:
+            while not self._stop.is_set():
+                try:
+                    self.ingest()
+                    self.scan_commit_set()
+                    self.gc_round()
+                    self.check_heartbeats()
+                except Exception:
+                    pass  # stateless: next round rebuilds what it needs
+                self._stop.wait(self.config.scan_interval_s)
+
+        def delete_loop() -> None:  # the "separate core"
+            while not self._stop.is_set():
+                if not self.deleter.step():
+                    self._stop.wait(self.config.gc_interval_s / 4 + 0.01)
+
+        for name, target in (
+            ("fault-manager", control_loop),
+            ("gc-deleter", delete_loop),
+        ):
+            t = threading.Thread(target=target, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads.clear()

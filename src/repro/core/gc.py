@@ -1,0 +1,58 @@
+"""Local metadata garbage collection agent (§5.1).
+
+Each node runs a background GC process that periodically sweeps the committed
+transaction metadata cache: a transaction is dropped locally when Algorithm 2
+says it is superseded **and** no currently-executing transaction on this node
+has read from its write set.  Dropped transactions are remembered in the
+node's locally-deleted log, which the global GC (fault manager, §5.2)
+aggregates before deleting actual version bytes.
+
+The agent also performs the §3.3.1 duty of aborting RUNNING transactions that
+outlived the client timeout (their function died mid-request).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+from .ids import TxnId
+from .node import AftNode
+
+
+class LocalGcAgent:
+    def __init__(self, node: AftNode):
+        self.node = node
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def step(self) -> List[TxnId]:
+        if not self.node.alive:
+            return []
+        self.node.sweep_timed_out_transactions()
+        return self.node.gc_sweep_local()
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                try:
+                    self.step()
+                except Exception:
+                    if not self.node.alive:
+                        return
+                self._stop.wait(self.node.config.gc_interval_s)
+
+        self._thread = threading.Thread(
+            target=loop, name=f"gc-{self.node.node_id}", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None

@@ -1,0 +1,165 @@
+"""TPU-native commit-digest plane (§4 multicast on the ICI).
+
+The paper's commit-set multicast is a host-network broadcast.  When AFT
+nodes are TPU hosts, the metadata plane can instead ride the interconnect:
+each node packs its recently-committed transaction IDs into a fixed-size
+``(k, 4)`` int32 digest — ``[ts_hi, ts_lo, hash_hi, hash_lo]`` rows — and a
+single ``shard_map``-ped ``all_gather`` over the ``nodes`` mesh axis
+exchanges all digests in one collective, off the transaction critical path.
+
+A digest row is a *pointer*, not the record: the receiver resolves the full
+commit record from shared storage via the timestamp-prefixed commit-log key
+(IDs serialize with a zero-padded timestamp, so a prefix listing is exact),
+verifies the uuid hash, and merges via the same ``merge_remote_commits``
+path the host-network multicast uses.  The write-ordering protocol (§3.3)
+guarantees the record is durable before its ID can appear in any digest.
+
+Supersedence pruning (§4.1, Algorithm 2) applies before packing, exactly as
+in the host-network plane.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .ids import TxnId
+from .node import AftNode
+from .records import COMMIT_PREFIX, TransactionRecord, commit_key
+from .supersede import is_superseded
+
+DIGEST_WIDTH = 4
+
+
+def _hash64(s: str) -> int:
+    return int.from_bytes(hashlib.blake2b(s.encode(), digest_size=8).digest(),
+                          "big", signed=False)
+
+
+def _split64(v: int) -> Tuple[int, int]:
+    v &= (1 << 64) - 1
+    return (v >> 32) & 0xFFFFFFFF, v & 0xFFFFFFFF
+
+
+def _join64(hi: int, lo: int) -> int:
+    return ((hi & 0xFFFFFFFF) << 32) | (lo & 0xFFFFFFFF)
+
+
+def pack_digest(tids: Sequence[TxnId], k: int) -> np.ndarray:
+    """(k, 4) int32 digest; zero rows pad.  Keeps the newest k txns."""
+    rows = np.zeros((k, DIGEST_WIDTH), dtype=np.uint32)
+    newest = sorted(tids)[-k:]
+    for i, tid in enumerate(newest):
+        ts_hi, ts_lo = _split64(tid.timestamp)
+        h_hi, h_lo = _split64(_hash64(tid.encode()))
+        rows[i] = (ts_hi, ts_lo, h_hi, h_lo)
+    return rows.view(np.int32)
+
+
+def unpack_digest(rows: np.ndarray) -> List[Tuple[int, int]]:
+    """→ [(timestamp, uuid_hash64)] for non-empty rows."""
+    rows = np.asarray(rows).view(np.uint32).reshape(-1, DIGEST_WIDTH)
+    out = []
+    for ts_hi, ts_lo, h_hi, h_lo in rows.tolist():
+        if not (ts_hi | ts_lo | h_hi | h_lo):
+            continue
+        out.append((_join64(ts_hi, ts_lo), _join64(h_hi, h_lo)))
+    return out
+
+
+def exchange_digests(digests: np.ndarray,
+                     mesh: Optional[Mesh] = None) -> np.ndarray:
+    """All-gather node digests over the ``nodes`` mesh axis.
+
+    ``digests``: (n_nodes, k, 4) int32, row i owned by node i.  Returns the
+    same array made globally visible — on an n-device mesh each device
+    contributes its shard and receives the gathered whole in one collective.
+    """
+    n = digests.shape[0]
+    if mesh is None:
+        ndev = len(jax.devices())
+        use = 1
+        for d in range(min(n, ndev), 0, -1):
+            if n % d == 0:
+                use = d
+                break
+        mesh = jax.make_mesh((use,), ("nodes",),
+                             devices=jax.devices()[:use])
+
+    @jax.jit
+    def run(x):
+        def body(shard):
+            return jax.lax.all_gather(shard, "nodes", axis=0, tiled=True)
+
+        return shard_map(body, mesh=mesh, in_specs=P("nodes"),
+                         out_specs=P(), check_rep=False)(x)
+
+    return np.asarray(run(jnp.asarray(digests)))
+
+
+class DigestPlane:
+    """Drives gossip rounds for an in-process set of AFT nodes."""
+
+    def __init__(self, nodes: Sequence[AftNode], storage, *,
+                 k: int = 128, mesh: Optional[Mesh] = None):
+        self.nodes = list(nodes)
+        self.storage = storage
+        self.k = k
+        self.mesh = mesh
+        self._pending: Dict[str, List[TransactionRecord]] = {
+            n.node_id: [] for n in self.nodes}
+        self.stats = {"rounds": 0, "rows_sent": 0, "records_fetched": 0,
+                      "pruned": 0}
+
+    def _resolve(self, ts: int, uuid_hash: int) -> Optional[TransactionRecord]:
+        """Commit-log lookup by timestamp prefix + hash verification."""
+        prefix = f"{COMMIT_PREFIX}{ts:020d}."
+        for key in self.storage.list_keys(prefix):
+            raw = self.storage.get(key)
+            if raw is None:
+                continue
+            rec = TransactionRecord.decode(raw)
+            if _hash64(rec.tid.encode()) == uuid_hash:
+                return rec
+        return None
+
+    def step(self) -> int:
+        """One gossip round.  Returns the number of records merged."""
+        per_node: List[np.ndarray] = []
+        for node in self.nodes:
+            fresh = self._pending[node.node_id]
+            fresh.extend(node.drain_fresh_commits())
+            kept = []
+            for rec in fresh:
+                if is_superseded(rec, node.cache):
+                    self.stats["pruned"] += 1
+                    continue
+                kept.append(rec)
+            self._pending[node.node_id] = []
+            tids = [r.tid for r in kept]
+            self.stats["rows_sent"] += len(tids)
+            per_node.append(pack_digest(tids, self.k))
+        if not per_node:
+            return 0
+        gathered = exchange_digests(np.stack(per_node), self.mesh)
+        merged = 0
+        for i, node in enumerate(self.nodes):
+            if not node.alive:
+                continue
+            for j in range(len(self.nodes)):
+                if j == i:
+                    continue
+                for ts, h in unpack_digest(gathered[j]):
+                    rec = self._resolve(ts, h)
+                    if rec is None:
+                        continue
+                    self.stats["records_fetched"] += 1
+                    merged += node.merge_remote_commits([rec])
+        self.stats["rounds"] += 1
+        return merged

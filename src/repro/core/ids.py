@@ -1,0 +1,105 @@
+"""Transaction identifiers (§3.1).
+
+A transaction is assigned a globally-unique UUID at ``StartTransaction`` time
+and a commit *timestamp* (from the committing node's local clock) at
+``CommitTransaction`` time.  The pair ``⟨timestamp, uuid⟩`` is the transaction's
+ID.  Correctness never relies on clock synchronization: timestamps only provide
+*relative freshness*, and ties are broken by lexicographic UUID comparison, so
+the order is total without coordination.
+
+IDs serialize to strings whose lexicographic order equals the ID order, which
+lets sorted storage listings double as timestamp-ordered commit logs.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid as _uuid
+from dataclasses import dataclass, field
+from functools import total_ordering
+from typing import Optional
+
+# Width of the zero-padded timestamp in the string form.  64-bit nanosecond
+# timestamps need at most 20 decimal digits.
+_TS_WIDTH = 20
+
+
+@total_ordering
+@dataclass(frozen=True)
+class TxnId:
+    """A committed transaction's ID: ``⟨timestamp, uuid⟩`` (§3.1)."""
+
+    timestamp: int
+    uuid: str
+
+    # -- total order -------------------------------------------------------
+    def __lt__(self, other: "TxnId") -> bool:
+        if not isinstance(other, TxnId):
+            return NotImplemented
+        return (self.timestamp, self.uuid) < (other.timestamp, other.uuid)
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, TxnId):
+            return NotImplemented
+        return (self.timestamp, self.uuid) == (other.timestamp, other.uuid)
+
+    def __hash__(self) -> int:
+        return hash((self.timestamp, self.uuid))
+
+    # -- serialization -----------------------------------------------------
+    def encode(self) -> str:
+        """Lexicographically order-preserving string form."""
+        return f"{self.timestamp:0{_TS_WIDTH}d}.{self.uuid}"
+
+    @staticmethod
+    def decode(s: str) -> "TxnId":
+        ts, _, u = s.partition(".")
+        return TxnId(timestamp=int(ts), uuid=u)
+
+    def __repr__(self) -> str:  # compact for logs
+        return f"Txn({self.timestamp}.{self.uuid[:8]})"
+
+
+class Clock:
+    """Strictly-monotonic per-node clock.
+
+    The paper uses each machine's local system clock; we additionally force
+    strict monotonicity within a process so that two commits on the same node
+    never share a timestamp (across nodes, UUIDs break ties).  A ``skew_ns``
+    offset supports tests that deliberately de-synchronize node clocks to
+    check that correctness holds without synchronized time.
+    """
+
+    def __init__(self, skew_ns: int = 0):
+        self._last = 0
+        self._skew = skew_ns
+        self._lock = threading.Lock()
+
+    def now_ns(self) -> int:
+        with self._lock:
+            t = time.time_ns() + self._skew
+            if t <= self._last:
+                t = self._last + 1
+            self._last = t
+            return t
+
+
+def fresh_uuid() -> str:
+    return _uuid.uuid4().hex
+
+
+@dataclass
+class TxnHandle:
+    """Client-visible handle for an *in-flight* transaction.
+
+    Before commit only the UUID exists (the timestamp is assigned at commit
+    time, §3.1); the handle also remembers which node owns the session so that
+    multi-function requests route every operation to a single AFT node.
+    """
+
+    uuid: str = field(default_factory=fresh_uuid)
+    node_id: Optional[str] = None
+
+    def __str__(self) -> str:
+        return self.uuid

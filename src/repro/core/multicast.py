@@ -1,0 +1,147 @@
+"""Commit-set multicast with supersedence pruning (§4, §4.1).
+
+Each node runs a background agent that periodically (default 1 s) gathers the
+transactions committed locally since the last round, prunes any that are
+already locally superseded (Algorithm 2 — "for highly contended workloads …
+this significantly reduces the volume of metadata"), and broadcasts the rest
+to every peer.  The *unpruned* set always goes to the fault manager (§4.2),
+which is what makes commit announcements loss-proof.
+
+Components expose a synchronous ``step()`` so tests and deterministic
+simulations can drive rounds manually; ``start()`` runs the same step on a
+daemon thread.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from .ids import TxnId
+from .node import AftNode
+from .records import TransactionRecord
+from .supersede import is_superseded
+
+
+class MulticastBus:
+    """In-process message fabric between AFT nodes and the fault manager.
+
+    Models the paper's point-to-point broadcast; an optional delivery delay
+    and drop hook let tests exercise races (commit acknowledged → node dies
+    before broadcast — the §4.2 liveness scenario).
+    """
+
+    def __init__(self) -> None:
+        self._inboxes: Dict[str, "queue.SimpleQueue[Tuple[str, List[TransactionRecord]]]"] = {}
+        self._lock = threading.Lock()
+        self.drop_filter: Optional[Callable[[str, str], bool]] = None
+        self.messages_sent = 0
+        self.records_sent = 0
+
+    def register(self, member_id: str) -> None:
+        with self._lock:
+            self._inboxes.setdefault(member_id, queue.SimpleQueue())
+
+    def unregister(self, member_id: str) -> None:
+        with self._lock:
+            self._inboxes.pop(member_id, None)
+
+    def members(self) -> List[str]:
+        with self._lock:
+            return list(self._inboxes.keys())
+
+    def send(
+        self, src: str, dst: str, records: List[TransactionRecord]
+    ) -> None:
+        if not records:
+            return
+        if self.drop_filter is not None and self.drop_filter(src, dst):
+            return
+        with self._lock:
+            inbox = self._inboxes.get(dst)
+        if inbox is None:
+            return
+        inbox.put((src, records))
+        self.messages_sent += 1
+        self.records_sent += len(records)
+
+    def drain(self, member_id: str) -> List[Tuple[str, List[TransactionRecord]]]:
+        with self._lock:
+            inbox = self._inboxes.get(member_id)
+        out: List[Tuple[str, List[TransactionRecord]]] = []
+        if inbox is None:
+            return out
+        while True:
+            try:
+                out.append(inbox.get_nowait())
+            except queue.Empty:
+                return out
+
+
+FAULT_MANAGER_ID = "fault-manager"
+
+
+class MulticastAgent:
+    """Per-node §4 background thread: broadcast fresh commits (pruned) to
+    peers + (unpruned) to the fault manager; merge everything received."""
+
+    def __init__(self, node: AftNode, bus: MulticastBus, peers: Callable[[], List[str]]):
+        self.node = node
+        self.bus = bus
+        self.peers = peers  # live membership comes from the cluster manager
+        self.bus.register(node.node_id)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.pruned_total = 0
+        self.broadcast_total = 0
+
+    # -- one §4 round --------------------------------------------------------
+    def step(self) -> None:
+        if not self.node.alive:
+            return
+        fresh = self.node.drain_fresh_commits()
+        if fresh:
+            # fault manager always receives the unpruned set (§4.2)
+            self.bus.send(self.node.node_id, FAULT_MANAGER_ID, list(fresh))
+            # peers receive the §4.1-pruned set
+            outgoing = [r for r in fresh if not is_superseded(r, self.node.cache)]
+            self.pruned_total += len(fresh) - len(outgoing)
+            if outgoing:
+                for peer in self.peers():
+                    if peer != self.node.node_id:
+                        self.bus.send(self.node.node_id, peer, outgoing)
+                self.broadcast_total += len(outgoing)
+        # merge inbound announcements (receiver-side supersedence check is
+        # inside merge_remote_commits)
+        for _src, records in self.bus.drain(self.node.node_id):
+            try:
+                self.node.merge_remote_commits(records)
+            except Exception:
+                if not self.node.alive:
+                    return
+                raise
+
+    # -- threading -----------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                self.step()
+                self._stop.wait(self.node.config.multicast_interval_s)
+
+        self._thread = threading.Thread(
+            target=loop, name=f"multicast-{self.node.node_id}", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        self.bus.unregister(self.node.node_id)

@@ -1,0 +1,478 @@
+"""AftNode — the per-node transaction manager (§3).
+
+Implements the Table-1 API (Start/Get/Put/Commit/Abort) with:
+
+* the write-ordering commit protocol (§3.3): buffer → persist versions →
+  persist commit record → acknowledge → make visible;
+* Algorithm 1 reads (§3.4) over the local Commit Set Cache / key version
+  index, yielding dynamically-constructed Atomic Readsets;
+* read-your-writes (which bypasses Algorithm 1, §3.5) and repeatable reads
+  (a corollary of Theorem 1 — the default path *re-runs* Algorithm 1 and the
+  property tests assert the corollary emerges; ``fast_repeatable_read`` turns
+  on the short-circuit);
+* idempotent commits keyed by the transaction UUID (§3.3.1) so retries give
+  exactly-once semantics;
+* hooks for the distributed layer (§4): fresh-commit draining for multicast,
+  remote-commit merging with supersedence filtering, local metadata GC and
+  the locally-deleted log the global GC consumes (§5).
+
+Every public method is thread-safe; a node serves many concurrent client
+sessions (FaaS functions, trainer hosts, serving replicas).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
+
+from ..storage.base import StorageEngine
+from .atomic_read import ReadSelection, ReadStatus, atomic_read_select
+from .commit_cache import CommitSetCache, DataCache
+from .errors import (
+    NodeFailed,
+    ReadAbortError,
+    TransactionNotRunning,
+    UnknownTransaction,
+)
+from .ids import Clock, TxnHandle, TxnId, fresh_uuid
+from .records import (
+    COMMIT_PREFIX,
+    TransactionRecord,
+    commit_key,
+    data_key,
+)
+from .supersede import is_superseded
+from .write_buffer import TransactionWriteBuffer
+
+
+@dataclass
+class AftNodeConfig:
+    node_id: str = "aft-0"
+    data_cache_bytes: int = 64 * 1024 * 1024
+    enable_data_cache: bool = True
+    write_buffer_max_bytes: int = 256 * 1024 * 1024
+    multicast_interval_s: float = 1.0     # §4: "every 1 second"
+    gc_interval_s: float = 1.0
+    txn_timeout_s: float = 60.0           # §3.3.1 abort-after-timeout
+    bootstrap_scan_limit: int = 10_000    # "latest records" warmed at start
+    fast_repeatable_read: bool = False    # short-circuit vs re-running Alg. 1
+    verify_uuid_on_retry: bool = True     # §3.3.1 cross-node retry safety:
+                                          # scan the Commit Set before
+                                          # committing an unfamiliar retried
+                                          # UUID (rare path only)
+    storage_read_retries: int = 3
+    storage_read_retry_s: float = 0.02
+    min_gc_age_s: float = 0.0             # §5.2.1 mitigation knob
+    clock_skew_ns: int = 0                # tests: protocols don't need sync
+
+
+class TxnState(Enum):
+    RUNNING = "running"
+    COMMITTED = "committed"
+    ABORTED = "aborted"
+
+
+@dataclass
+class TransactionContext:
+    uuid: str
+    buffer: TransactionWriteBuffer
+    read_set: Dict[str, TxnId] = field(default_factory=dict)
+    state: TxnState = TxnState.RUNNING
+    started_at: float = field(default_factory=time.monotonic)
+    committed_tid: Optional[TxnId] = None
+    is_retry: bool = False  # client reopened with a prior UUID (§3.3.1)
+
+
+class AftNode:
+    def __init__(
+        self,
+        storage: StorageEngine,
+        config: Optional[AftNodeConfig] = None,
+        *,
+        bootstrap: bool = True,
+    ) -> None:
+        self.storage = storage
+        self.config = config or AftNodeConfig()
+        self.node_id = self.config.node_id
+        self.clock = Clock(skew_ns=self.config.clock_skew_ns)
+        self.cache = CommitSetCache()
+        self.data_cache = DataCache(self.config.data_cache_bytes)
+        self._txns: Dict[str, TransactionContext] = {}
+        self._committed_uuids: Dict[str, TxnId] = {}
+        self._locally_deleted: Set[TxnId] = set()
+        self._lock = threading.RLock()
+        self._alive = True
+        self.stats: Dict[str, int] = {
+            "reads": 0,
+            "read_cache_hits": 0,
+            "ryw_hits": 0,
+            "writes": 0,
+            "commits": 0,
+            "aborts": 0,
+            "staleness_aborts": 0,
+            "remote_merges": 0,
+            "remote_skipped_superseded": 0,
+            "gc_removed": 0,
+        }
+        if bootstrap:
+            self.bootstrap()
+
+    # ------------------------------------------------------------------ util
+    def _check_alive(self) -> None:
+        if not self._alive:
+            raise NodeFailed(f"node {self.node_id} is down")
+
+    def fail(self) -> None:
+        """Simulate a node crash: all in-flight transactions are lost (§3.3.1);
+        committed data survives in storage by the write-ordering protocol."""
+        with self._lock:
+            self._alive = False
+            self._txns.clear()
+
+    @property
+    def alive(self) -> bool:
+        return self._alive
+
+    def _ctx(self, txid: str) -> TransactionContext:
+        with self._lock:
+            ctx = self._txns.get(txid)
+        if ctx is None:
+            raise UnknownTransaction(txid)
+        return ctx
+
+    # ------------------------------------------------------------- bootstrap
+    def bootstrap(self) -> int:
+        """Warm the metadata cache from the durable Transaction Commit Set
+        (§3.1).  Called at node start / recovery; returns records loaded."""
+        keys = self.storage.list_keys(COMMIT_PREFIX)
+        keys = keys[-self.config.bootstrap_scan_limit :]
+        loaded = 0
+        if not keys:
+            return 0
+        raws = self.storage.get_batch(keys)
+        for k in keys:
+            raw = raws.get(k)
+            if raw is None:
+                continue
+            record = TransactionRecord.decode(raw)
+            if self.cache.add(record):
+                self._committed_uuids[record.tid.uuid] = record.tid
+                loaded += 1
+        return loaded
+
+    # ------------------------------------------------------------- Table 1
+    def start_transaction(self, uuid: Optional[str] = None) -> str:
+        """StartTransaction() → txid.  A retried request may pass its old
+        UUID to continue/recommit the same logical transaction (§3.3.1)."""
+        self._check_alive()
+        is_retry = uuid is not None
+        uuid = uuid or fresh_uuid()
+        with self._lock:
+            if uuid not in self._txns or self._txns[uuid].state is not TxnState.RUNNING:
+                self._txns[uuid] = TransactionContext(
+                    uuid=uuid,
+                    buffer=TransactionWriteBuffer(
+                        uuid, self.storage, self.config.write_buffer_max_bytes
+                    ),
+                    is_retry=is_retry,
+                )
+        return uuid
+
+    def put(self, txid: str, key: str, value: bytes) -> None:
+        self._check_alive()
+        ctx = self._ctx(txid)
+        if ctx.state is not TxnState.RUNNING:
+            raise TransactionNotRunning(txid)
+        ctx.buffer.put(key, value)
+        self.stats["writes"] += 1
+
+    def get(self, txid: str, key: str) -> Optional[bytes]:
+        """Get(txid, key) → value.  Raises ReadAbortError when Algorithm 1
+        finds no valid version (§3.6)."""
+        value, _tid = self.get_versioned(txid, key)
+        return value
+
+    def get_versioned(self, txid: str, key: str) -> Tuple[Optional[bytes], Optional[TxnId]]:
+        self._check_alive()
+        ctx = self._ctx(txid)
+        if ctx.state is not TxnState.RUNNING:
+            raise TransactionNotRunning(txid)
+        self.stats["reads"] += 1
+
+        # (1) read-your-writes takes precedence (§3.5) — buffered versions
+        # have no commit timestamp yet, so they live outside Algorithm 1.
+        hit, value = ctx.buffer.get(key)
+        if hit:
+            self.stats["ryw_hits"] += 1
+            return value, None
+
+        # (2) repeatable-read short-circuit (optional; Corollary 1.1 proves
+        # Algorithm 1 returns the same version anyway).
+        if self.config.fast_repeatable_read:
+            prior = ctx.read_set.get(key)
+            if prior is not None:
+                return self._fetch(key, prior), prior
+
+        # (3) Algorithm 1.
+        sel = atomic_read_select(key, ctx.read_set, self.cache)
+        if sel.status is ReadStatus.NOT_FOUND:
+            return None, None
+        if sel.status is ReadStatus.NO_VALID_VERSION:
+            self.stats["staleness_aborts"] += 1
+            raise ReadAbortError(
+                f"no version of {key!r} joins the atomic readset of {txid}"
+            )
+        assert sel.tid is not None
+        value = self._fetch(key, sel.tid)
+        ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
+        return value, sel.tid
+
+    def abort_transaction(self, txid: str) -> None:
+        self._check_alive()
+        ctx = self._ctx(txid)
+        if ctx.state is not TxnState.RUNNING:
+            return
+        spilled = ctx.buffer.discard()
+        ctx.state = TxnState.ABORTED
+        self.stats["aborts"] += 1
+        if spilled:  # nothing was visible; clean up best-effort (§3.3)
+            try:
+                self.storage.delete_batch(spilled)
+            except Exception:
+                pass  # orphan GC (fault manager) is the backstop
+
+    def commit_transaction(self, txid: str) -> TxnId:
+        """CommitTransaction(txid): persist updates, then the commit record,
+        only then acknowledge + make visible (§3.3).  Idempotent per UUID."""
+        self._check_alive()
+        ctx = self._ctx(txid)
+        with self._lock:
+            already = self._committed_uuids.get(ctx.uuid)
+        if already is None and ctx.is_retry and self.config.verify_uuid_on_retry:
+            # Rare path: a retried request landed on a node that has not yet
+            # heard (via multicast/fault manager) whether the original commit
+            # succeeded.  The Commit Set in storage is the source of truth —
+            # commit-record keys embed ⟨timestamp, uuid⟩, so a suffix scan
+            # answers "did this UUID ever commit?" (§3.3.1, §4.2).
+            suffix = f".{ctx.uuid}"
+            for ck in self.storage.list_keys(COMMIT_PREFIX):
+                if ck.endswith(suffix):
+                    raw = self.storage.get(ck)
+                    if raw is not None:
+                        record = TransactionRecord.decode(raw)
+                        self.cache.add(record)
+                        with self._lock:
+                            self._committed_uuids[ctx.uuid] = record.tid
+                        already = record.tid
+                    break
+        if already is not None:  # §3.3.1 retry of a committed transaction
+            ctx.state = TxnState.COMMITTED
+            ctx.committed_tid = already
+            return already
+        if ctx.state is not TxnState.RUNNING:
+            raise TransactionNotRunning(txid)
+
+        tid = TxnId(self.clock.now_ns(), ctx.uuid)
+        to_write, storage_keys = ctx.buffer.finalize(tid)
+        write_set = tuple(sorted(storage_keys.keys()))
+
+        if write_set:
+            # step 1: persist all data versions (batched when the engine
+            # supports it — AFT batches by default, §6.1.1)
+            if to_write:
+                self.storage.put_batch(to_write)
+            # step 2: persist the commit record — the *linearization point*
+            # for durability; a crash before this line loses the txn (client
+            # retries), a crash after it is a committed txn (§3.3.1).
+            record = TransactionRecord(
+                tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
+            )
+            self.storage.put(commit_key(tid), record.encode())
+            # step 3: acknowledge + make visible locally.
+            with self._lock:
+                self.cache.add(record, fresh=True)
+                self._committed_uuids[ctx.uuid] = tid
+            if self.config.enable_data_cache:
+                for key, skey in storage_keys.items():
+                    raw = to_write.get(skey)
+                    if raw is not None:
+                        self.data_cache.put(key, tid, raw)
+        else:
+            # read-only transaction: nothing to persist or announce.
+            with self._lock:
+                self._committed_uuids[ctx.uuid] = tid
+
+        ctx.state = TxnState.COMMITTED
+        ctx.committed_tid = tid
+        self.stats["commits"] += 1
+        return tid
+
+    # ---------------------------------------------------------------- reads
+    def _fetch(self, key: str, tid: TxnId) -> bytes:
+        """Line 25: storage.get(k_target), through the data cache (§3.1)."""
+        if self.config.enable_data_cache:
+            cached = self.data_cache.get(key, tid)
+            if cached is not None:
+                self.stats["read_cache_hits"] += 1
+                return cached
+        record = self.cache.get(tid)
+        skey = record.storage_key_for(key) if record else data_key(key, tid)
+        value = None
+        for attempt in range(self.config.storage_read_retries):
+            value = self.storage.get(skey)
+            if value is not None:
+                break
+            # Committed metadata exists ⇒ the version bytes were durably
+            # acked before the commit record (§3.3); fresh-key read-after-
+            # write makes a miss here transient (or a GC race, §5.2.1).
+            time.sleep(self.config.storage_read_retry_s * (attempt + 1))
+        if value is None:
+            self.stats["staleness_aborts"] += 1
+            raise ReadAbortError(
+                f"version bytes for {key!r}@{tid} unreadable (GC race?)"
+            )
+        if self.config.enable_data_cache:
+            self.data_cache.put(key, tid, value)
+        return value
+
+    # --------------------------------------------------- distributed hooks
+    def drain_fresh_commits(self) -> List[TransactionRecord]:
+        """Everything committed here since the last multicast round (§4)."""
+        return self.cache.drain_fresh()
+
+    def merge_remote_commits(self, records: Iterable[TransactionRecord]) -> int:
+        """Merge peer/fault-manager commit announcements, skipping anything
+        already superseded by local knowledge (§4.1)."""
+        self._check_alive()
+        merged = 0
+        for record in records:
+            if is_superseded(record, self.cache):
+                self.stats["remote_skipped_superseded"] += 1
+                continue
+            if self.cache.add(record):
+                with self._lock:
+                    self._committed_uuids.setdefault(record.tid.uuid, record.tid)
+                merged += 1
+        self.stats["remote_merges"] += merged
+        return merged
+
+    def committed_tid_for_uuid(self, uuid: str) -> Optional[TxnId]:
+        with self._lock:
+            return self._committed_uuids.get(uuid)
+
+    # ------------------------------------------------------------------- GC
+    def _has_active_readers(self, record: TransactionRecord) -> bool:
+        """§5.1: is any currently-executing transaction reading from this
+        transaction's write set?"""
+        with self._lock:
+            active = [c for c in self._txns.values() if c.state is TxnState.RUNNING]
+        for ctx in active:
+            for key in record.write_set:
+                if ctx.read_set.get(key) == record.tid:
+                    return True
+        return False
+
+    def gc_sweep_local(self, max_removals: int = 10_000) -> List[TxnId]:
+        """Local metadata GC (§5.1): drop superseded transactions with no
+        active readers, oldest first (the §5.2.1 mitigation), remembering them
+        in the locally-deleted log for the global GC (§5.2)."""
+        self._check_alive()
+        removed: List[TxnId] = []
+        now_ns = time.time_ns()
+        min_age = int(self.config.min_gc_age_s * 1e9)
+        for tid in sorted(self.cache.all_tids()):  # oldest first
+            if len(removed) >= max_removals:
+                break
+            record = self.cache.get(tid)
+            if record is None:
+                continue
+            if min_age and now_ns - tid.timestamp < min_age:
+                continue
+            if not is_superseded(record, self.cache):
+                continue
+            if self._has_active_readers(record):
+                continue
+            self.cache.remove(tid)
+            self.data_cache.evict_transaction(record)
+            with self._lock:
+                self._locally_deleted.add(tid)
+            removed.append(tid)
+        self.stats["gc_removed"] += len(removed)
+        return removed
+
+    def confirm_locally_deleted(self, tids: Iterable[TxnId]) -> List[TxnId]:
+        """Global GC phase 1 (§5.2): which of these have we locally deleted?
+        Also opportunistically deletes any we *could* delete right now, which
+        keeps the global protocol from stalling on idle nodes."""
+        self._check_alive()
+        confirmed: List[TxnId] = []
+        with self._lock:
+            deleted = set(self._locally_deleted)
+        for tid in tids:
+            if tid in deleted:
+                confirmed.append(tid)
+                continue
+            record = self.cache.get(tid)
+            if record is None:
+                # never knew it (e.g. node joined later): safe to confirm —
+                # no local transaction can be reading it.
+                if not self._has_active_readers_tid(tid):
+                    confirmed.append(tid)
+                continue
+            if is_superseded(record, self.cache) and not self._has_active_readers(record):
+                self.cache.remove(tid)
+                self.data_cache.evict_transaction(record)
+                with self._lock:
+                    self._locally_deleted.add(tid)
+                confirmed.append(tid)
+        return confirmed
+
+    def _has_active_readers_tid(self, tid: TxnId) -> bool:
+        with self._lock:
+            active = [c for c in self._txns.values() if c.state is TxnState.RUNNING]
+        return any(tid in ctx.read_set.values() for ctx in active)
+
+    def forget_deleted(self, tids: Iterable[TxnId]) -> None:
+        """Global GC finished deleting these; shrink the locally-deleted log."""
+        with self._lock:
+            self._locally_deleted.difference_update(tids)
+
+    # ------------------------------------------------------------- liveness
+    def sweep_timed_out_transactions(self) -> List[str]:
+        """Abort RUNNING transactions older than the timeout (§3.3.1: a failed
+        function's transaction 'will be aborted after a timeout')."""
+        cutoff = time.monotonic() - self.config.txn_timeout_s
+        stale: List[str] = []
+        with self._lock:
+            for uuid, ctx in self._txns.items():
+                if ctx.state is TxnState.RUNNING and ctx.started_at < cutoff:
+                    stale.append(uuid)
+        for uuid in stale:
+            try:
+                self.abort_transaction(uuid)
+            except (UnknownTransaction, NodeFailed):
+                pass
+        return stale
+
+    def release_transaction(self, txid: str) -> None:
+        """Drop a finished transaction's context (client session closed)."""
+        with self._lock:
+            ctx = self._txns.get(txid)
+            if ctx is not None and ctx.state is not TxnState.RUNNING:
+                del self._txns[txid]
+
+    # ---------------------------------------------------------------- intro
+    def active_transaction_count(self) -> int:
+        with self._lock:
+            return sum(
+                1 for c in self._txns.values() if c.state is TxnState.RUNNING
+            )
+
+    def metadata_size(self) -> int:
+        return len(self.cache)
+
+    def read_set_of(self, txid: str) -> Dict[str, TxnId]:
+        return dict(self._ctx(txid).read_set)

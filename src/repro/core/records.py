@@ -1,0 +1,142 @@
+"""On-disk / in-cache record types (§3.1, §3.3).
+
+Storage layout
+--------------
+AFT never overwrites a key in place (§3.3): every key version maps to a unique
+storage key derived from the writing transaction's ID, and every committed
+transaction persists a *commit record* that names its write set.  The layout:
+
+======================  =====================================================
+storage key             contents
+======================  =====================================================
+``d/<key>/<txnid>``     the bytes of version ``<key>_<txnid>``
+``t/<txnid>``           commit record: write set + (key → storage key) map
+``u/<uuid>``            uuid → committed txnid index (idempotent retry lookup)
+======================  =====================================================
+
+``t/``-prefixed keys form the **Transaction Commit Set** (§3.1); because
+``TxnId.encode`` is order-preserving, a sorted listing of ``t/`` is a
+timestamp-ordered commit log, which the fault manager (§4.2) and node
+bootstrap (§3.1) scan.
+
+A version's *cowritten set* is simply its transaction's write set (§3.2):
+``k_i.cowritten == T_i.writeset``, so commit records are the only metadata
+needed by Algorithm 1.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional, Tuple
+
+from .ids import TxnId
+
+DATA_PREFIX = "d/"
+COMMIT_PREFIX = "t/"
+UUID_PREFIX = "u/"
+
+
+def data_key(key: str, tid: TxnId) -> str:
+    """Unique per-version storage key (§3.3: no in-place overwrites)."""
+    return f"{DATA_PREFIX}{key}/{tid.encode()}"
+
+
+def spill_key(key: str, uuid: str, seq: int) -> str:
+    """Storage key for a pre-commit buffer spill (§3.3, saturation).
+
+    The commit timestamp is unknown before commit, so spilled intermediary
+    data lands at a uuid-derived key; the commit record's explicit
+    ``key → storage key`` map keeps it addressable.  Orphans (spills whose
+    transaction never committed) are swept by the fault manager's orphan GC.
+    """
+    return f"{DATA_PREFIX}{key}/.spill/{uuid}/{seq}"
+
+
+def commit_key(tid: TxnId) -> str:
+    return f"{COMMIT_PREFIX}{tid.encode()}"
+
+
+def uuid_key(uuid: str) -> str:
+    return f"{UUID_PREFIX}{uuid}"
+
+
+@dataclass(frozen=True)
+class TransactionRecord:
+    """A committed transaction's durable metadata (the commit record, §3.3).
+
+    ``write_set`` is the set of *logical* keys written; ``storage_keys`` maps
+    each logical key to the storage key holding that version's bytes (usually
+    ``data_key(key, tid)``, but spilled writes may live at uuid-derived keys).
+    """
+
+    tid: TxnId
+    write_set: Tuple[str, ...]
+    storage_keys: Dict[str, str] = field(default_factory=dict, hash=False)
+
+    def storage_key_for(self, key: str) -> str:
+        return self.storage_keys.get(key) or data_key(key, self.tid)
+
+    def cowritten(self) -> Tuple[str, ...]:
+        """cowritten(k_i) == T_i.writeset for every k in the write set."""
+        return self.write_set
+
+    # -- serialization -----------------------------------------------------
+    def encode(self) -> bytes:
+        body = {
+            "t": self.tid.encode(),
+            "w": sorted(self.write_set),
+            # only store non-default storage keys to keep records small
+            "s": {
+                k: v
+                for k, v in self.storage_keys.items()
+                if v != data_key(k, self.tid)
+            },
+        }
+        return json.dumps(body, separators=(",", ":")).encode()
+
+    @staticmethod
+    def decode(raw: bytes) -> "TransactionRecord":
+        body = json.loads(raw)
+        tid = TxnId.decode(body["t"])
+        return TransactionRecord(
+            tid=tid, write_set=tuple(body["w"]), storage_keys=dict(body.get("s", {}))
+        )
+
+
+@dataclass(frozen=True)
+class VersionedValue:
+    """A read result: the bytes plus the version that produced them.
+
+    Versions are *hidden from users* (§3.2); the framework layers (checkpoint
+    restore, anomaly detectors, property tests) use ``tid`` for validation.
+    ``value is None`` with ``tid is None`` means the key has never been
+    written (the NULL version); ``value is None`` with ``aborted=True`` means
+    Algorithm 1 found no valid version (§3.6) and the transaction should
+    abort/retry.
+    """
+
+    value: Optional[bytes]
+    tid: Optional[TxnId]
+    aborted: bool = False
+
+
+def embed_metadata(value: bytes, tid: TxnId, cowritten: Iterable[str]) -> bytes:
+    """Prefix a payload with AFT metadata.
+
+    Used in two places: (1) AFT's own data versions, so that values are
+    self-describing for recovery tooling; (2) the *plain* storage baselines of
+    §6.1.2, which embed "the same metadata AFT uses—a timestamp, a UUID, and a
+    cowritten key set" (~70 bytes) to let the anomaly detectors of Table 2
+    observe RYW/FR violations without a shim.
+    """
+    header = json.dumps(
+        {"t": tid.encode(), "c": sorted(cowritten)}, separators=(",", ":")
+    ).encode()
+    return len(header).to_bytes(4, "big") + header + value
+
+
+def extract_metadata(raw: bytes) -> Tuple[bytes, TxnId, Tuple[str, ...]]:
+    hlen = int.from_bytes(raw[:4], "big")
+    header = json.loads(raw[4 : 4 + hlen])
+    return raw[4 + hlen :], TxnId.decode(header["t"]), tuple(header["c"])

@@ -1,0 +1,37 @@
+"""Algorithm 2 — IsTransactionSuperseded (§4.1).
+
+A transaction ``T_i`` is *locally superseded* when, for every key it wrote,
+the local index already knows a strictly newer committed version.  Superseded
+transactions are (a) omitted from multicast (§4.1), (b) eligible for local
+metadata GC (§5.1), and (c) candidates for global data GC (§5.2).
+
+Supersedence can be decided without coordination because each node's known
+version set for any key only *grows* (commits are never retracted): once a
+transaction is superseded at a node, it stays superseded there.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from .commit_cache import CommitSetCache
+from .ids import TxnId
+from .records import TransactionRecord
+
+
+def is_superseded(record: TransactionRecord, cache: CommitSetCache) -> bool:
+    """Algorithm 2 over the node's key-version index."""
+    for key in record.write_set:
+        latest = cache.latest_version_of(key)
+        # ``latest`` can only be ≥ record.tid if the record is indexed; if the
+        # record was already pruned locally, a missing key entry means we
+        # cannot prove supersedence — be conservative.
+        if latest is None or latest <= record.tid:
+            return False
+    return True
+
+
+def superseded_subset(
+    records: Iterable[TransactionRecord], cache: CommitSetCache
+) -> List[TransactionRecord]:
+    return [r for r in records if is_superseded(r, cache)]

@@ -1,0 +1,143 @@
+"""Atomic Write Buffer (§3.3).
+
+Sequesters every update of an in-flight transaction; nothing reaches the
+storage engine's *visible* namespace until commit.  When the buffer saturates
+(large update sets — e.g. a trillion-parameter checkpoint commit), it
+proactively spills intermediary data to uuid-derived storage keys; the
+write-ordering protocol guarantees spilled bytes stay invisible until the
+commit record is persisted, and orphaned spills (transaction never committed)
+are swept by the fault manager's orphan GC (§5).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..storage.base import StorageEngine
+from .ids import TxnId
+from .records import data_key, spill_key
+
+
+@dataclass
+class _PendingWrite:
+    value: Optional[bytes]          # None ⇒ spilled to storage
+    storage_key: Optional[str] = None  # set iff spilled
+
+
+class TransactionWriteBuffer:
+    """Per-transaction buffered write set with saturation spill."""
+
+    def __init__(
+        self,
+        uuid: str,
+        storage: StorageEngine,
+        max_bytes: int = 256 * 1024 * 1024,
+    ) -> None:
+        self.uuid = uuid
+        self.storage = storage
+        self.max_bytes = max_bytes
+        self._writes: Dict[str, _PendingWrite] = {}
+        self._bytes = 0
+        self._spill_seq = 0
+        self._spilled_keys: List[str] = []
+        self._lock = threading.Lock()
+
+    # -- API used by AftNode -------------------------------------------------
+    def put(self, key: str, value: bytes) -> None:
+        with self._lock:
+            prev = self._writes.get(key)
+            if prev is not None and prev.value is not None:
+                self._bytes -= len(prev.value)
+            self._writes[key] = _PendingWrite(value=value)
+            self._bytes += len(value)
+            if self._bytes > self.max_bytes:
+                self._spill_locked()
+
+    def get(self, key: str) -> Tuple[bool, Optional[bytes]]:
+        """Read-your-writes lookup (§3.5): returns (hit, value)."""
+        with self._lock:
+            pending = self._writes.get(key)
+            if pending is None:
+                return False, None
+            if pending.value is not None:
+                return True, pending.value
+        # spilled: fetch back from storage outside the lock
+        assert pending.storage_key is not None
+        value = self.storage.get(pending.storage_key)
+        if value is None:
+            raise RuntimeError(
+                f"spilled write {pending.storage_key!r} missing from storage; "
+                "engine violated durability contract"
+            )
+        return True, value
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list(self._writes.keys())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._writes)
+
+    @property
+    def buffered_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def spilled_storage_keys(self) -> List[str]:
+        with self._lock:
+            return list(self._spilled_keys)
+
+    # -- spill ---------------------------------------------------------------
+    def _spill_locked(self) -> None:
+        """Write all currently-buffered values to storage at spill keys."""
+        batch: Dict[str, bytes] = {}
+        for key, pending in self._writes.items():
+            if pending.value is None:
+                continue
+            skey = spill_key(key, self.uuid, self._spill_seq)
+            self._spill_seq += 1
+            batch[skey] = pending.value
+            self._writes[key] = _PendingWrite(value=None, storage_key=skey)
+            self._spilled_keys.append(skey)
+        self._bytes = 0
+        if batch:
+            self.storage.put_batch(batch)
+
+    def spill(self) -> None:
+        with self._lock:
+            self._spill_locked()
+
+    # -- commit support -------------------------------------------------------
+    def finalize(self, tid: TxnId) -> Tuple[Dict[str, bytes], Dict[str, str]]:
+        """Resolve the buffer into (fresh writes to persist, key → storage key).
+
+        Buffered values are destined for canonical ``d/<key>/<tid>`` keys;
+        spilled values stay where they are and the commit record's storage-key
+        map points at them (§3.3: the record, not key naming, is the source of
+        truth for locating version bytes).
+        """
+        with self._lock:
+            to_write: Dict[str, bytes] = {}
+            storage_keys: Dict[str, str] = {}
+            for key, pending in self._writes.items():
+                if pending.value is not None:
+                    skey = data_key(key, tid)
+                    to_write[skey] = pending.value
+                    storage_keys[key] = skey
+                else:
+                    assert pending.storage_key is not None
+                    storage_keys[key] = pending.storage_key
+            return to_write, storage_keys
+
+    def discard(self) -> List[str]:
+        """Abort (§3.3): drop buffered updates; report spilled keys so the
+        caller can delete them from storage (nothing was ever visible)."""
+        with self._lock:
+            spilled = list(self._spilled_keys)
+            self._writes.clear()
+            self._spilled_keys.clear()
+            self._bytes = 0
+            return spilled

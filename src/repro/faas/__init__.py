@@ -1,0 +1,17 @@
+from .platform import FaasConfig, FunctionFailure, LambdaPlatform
+from .workload import (
+    WorkloadConfig,
+    WorkloadResult,
+    ZipfSampler,
+    run_workload,
+)
+
+__all__ = [
+    "LambdaPlatform",
+    "FaasConfig",
+    "FunctionFailure",
+    "WorkloadConfig",
+    "WorkloadResult",
+    "ZipfSampler",
+    "run_workload",
+]

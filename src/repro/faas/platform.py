@@ -1,0 +1,124 @@
+"""FaaS platform emulation (AWS-Lambda-shaped).
+
+Models the properties of commodity FaaS that AFT's design responds to:
+
+* a logical request is a *linear composition* of functions (§2.2), each
+  potentially on a different machine, all funneling their state operations to
+  one AFT node through the request's transaction session;
+* functions are retried on failure (at-least-once); a retry may re-run with
+  the same transaction UUID to continue/recommit idempotently (§3.3.1), which
+  with AFT's atomicity yields exactly-once effects;
+* per-invocation overhead (warm-start latency) is simulated so end-to-end
+  numbers are Lambda-shaped (§6.1.2).
+
+Failure injection kills a function at a configurable point mid-body, which is
+how tests/benchmarks produce the fractional-execution hazards of §1.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
+
+
+class FunctionFailure(Exception):
+    """A function instance died mid-execution (injected)."""
+
+
+@dataclass
+class FaasConfig:
+    warm_latency_ms: float = 4.0      # per-invocation overhead (warm start)
+    latency_sigma: float = 0.3
+    time_scale: float = 1.0
+    failure_rate: float = 0.0         # probability a function dies mid-body
+    max_retries: int = 5
+    retry_backoff_ms: float = 5.0
+    reuse_uuid_on_retry: bool = True  # §3.3.1 continue-the-transaction
+    max_workers: int = 64
+    seed: int = 0
+
+
+class LambdaPlatform:
+    def __init__(self, config: Optional[FaasConfig] = None):
+        self.config = config or FaasConfig()
+        self._rng = random.Random(self.config.seed)
+        self._rng_lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=self.config.max_workers)
+        self.invocations = 0
+        self.failures_injected = 0
+        self.retries = 0
+
+    # -- simulation hooks ------------------------------------------------
+    def _sleep_ms(self, ms: float) -> None:
+        scaled = ms * self.config.time_scale / 1e3
+        if scaled > 0:
+            time.sleep(scaled)
+
+    def _sample_overhead(self) -> float:
+        with self._rng_lock:
+            return self.config.warm_latency_ms * self._rng.lognormvariate(
+                0.0, self.config.latency_sigma
+            )
+
+    def maybe_fail(self) -> None:
+        """Called by instrumented functions at their failure points."""
+        if self.config.failure_rate <= 0:
+            return
+        with self._rng_lock:
+            die = self._rng.random() < self.config.failure_rate
+        if die:
+            self.failures_injected += 1
+            raise FunctionFailure("injected mid-function crash")
+
+    # -- execution ---------------------------------------------------------
+    def invoke(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
+        """Invoke one function with warm-start overhead (no retry)."""
+        self.invocations += 1
+        self._sleep_ms(self._sample_overhead())
+        return fn(*args, **kwargs)
+
+    def run_request(
+        self,
+        functions: Sequence[Callable[..., Any]],
+        *,
+        begin: Callable[[Optional[str]], Any],
+        finish: Callable[[Any], Any],
+        on_failure: Callable[[Any], None],
+    ) -> Any:
+        """Run a logical request: ``begin`` opens the session (optionally
+        with a prior UUID on retry), each function runs in order receiving
+        the session, ``finish`` commits.  On any failure the whole request
+        retries from scratch (the platform's retry-based model, §7)."""
+        uuid: Optional[str] = None
+        last_exc: Optional[BaseException] = None
+        for attempt in range(self.config.max_retries + 1):
+            if attempt:
+                self.retries += 1
+                self._sleep_ms(self.config.retry_backoff_ms * attempt)
+            session = begin(uuid if self.config.reuse_uuid_on_retry else None)
+            if self.config.reuse_uuid_on_retry and uuid is None:
+                uuid = getattr(session, "uuid", None)
+            try:
+                for fn in functions:
+                    self.invoke(fn, session)
+                return finish(session)
+            except BaseException as exc:  # noqa: BLE001 - retry everything
+                last_exc = exc
+                try:
+                    on_failure(session)
+                except Exception:
+                    pass
+        raise RuntimeError(
+            f"request failed after {self.config.max_retries} retries"
+        ) from last_exc
+
+    def map(self, fn: Callable[[int], Any], n: int) -> List[Any]:
+        """Run ``fn(0..n-1)`` on the platform pool (parallel clients)."""
+        return list(self._pool.map(fn, range(n)))
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)

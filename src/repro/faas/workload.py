@@ -1,0 +1,417 @@
+"""The paper's evaluation workload (§6).
+
+Transactions are linear compositions of ``F`` functions, each performing
+``R`` reads and ``W`` writes of ~4KB objects over a Zipf-distributed key
+space.  The same specs drive three execution modes:
+
+* ``aft``      — through the AFT shim (cluster client): buffered writes,
+                 Algorithm-1 reads, atomic commit.
+* ``plain``    — direct to storage, overwriting keys in place, with AFT's
+                 metadata (~70 B: timestamp, UUID, cowritten set) embedded in
+                 each value so anomalies are observable (§6.1.2).
+* ``dynamo_txn`` — DynamoDB transaction-mode shape (§6.1.2): per-function
+                 read-only batches + one write-only atomic batch at the end,
+                 with conflict-abort + retry behavior; atomic per API call
+                 but *not* across functions, so fractured reads remain.
+
+Every transaction is scored by the Table-2 anomaly detectors; latency,
+throughput, abort and retry counts come back in a ``WorkloadResult``.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from bisect import bisect_left
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import (
+    AftCluster,
+    AnomalyAggregator,
+    ReadAbortError,
+    TransactionObserver,
+    TxnId,
+    embed_metadata,
+    extract_metadata,
+)
+from ..core.ids import Clock, fresh_uuid
+from ..storage.base import StorageEngine
+from .platform import FaasConfig, LambdaPlatform
+
+
+# ---------------------------------------------------------------------------
+# key-space sampling
+# ---------------------------------------------------------------------------
+
+class ZipfSampler:
+    """Bounded Zipf over ``num_keys`` keys with coefficient ``theta``."""
+
+    def __init__(self, num_keys: int, theta: float, seed: int = 0):
+        self.num_keys = num_keys
+        ranks = np.arange(1, num_keys + 1, dtype=np.float64)
+        weights = ranks ** (-theta) if theta > 0 else np.ones_like(ranks)
+        self._cdf = np.cumsum(weights / weights.sum())
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def sample(self) -> int:
+        with self._lock:
+            u = self._rng.random()
+        return int(bisect_left(self._cdf, u))
+
+    def key(self) -> str:
+        return f"key{self.sample():06d}"
+
+
+# ---------------------------------------------------------------------------
+# workload spec
+# ---------------------------------------------------------------------------
+
+@dataclass
+class WorkloadConfig:
+    num_keys: int = 1_000
+    zipf: float = 1.0
+    functions_per_txn: int = 2
+    reads_per_function: int = 2
+    writes_per_function: int = 1
+    value_bytes: int = 4_096
+    faas: FaasConfig = field(default_factory=FaasConfig)
+    seed: int = 0
+
+
+@dataclass
+class WorkloadResult:
+    mode: str
+    latencies_ms: List[float]
+    anomalies: Dict[str, int]
+    wall_s: float
+    committed: int
+    client_count: int
+    retries: int = 0
+    conflict_aborts: int = 0
+    staleness_aborts: int = 0
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.committed / self.wall_s if self.wall_s > 0 else 0.0
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_ms:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies_ms), p))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "mode": self.mode,
+            "txns": self.committed,
+            "median_ms": round(self.percentile(50), 3),
+            "p99_ms": round(self.percentile(99), 3),
+            "tps": round(self.throughput_tps, 1),
+            "ryw_anomalies": self.anomalies.get("ryw_anomalies", 0),
+            "fr_anomalies": self.anomalies.get("fr_anomalies", 0),
+            "retries": self.retries,
+            "conflict_aborts": self.conflict_aborts,
+            "staleness_aborts": self.staleness_aborts,
+        }
+
+
+@dataclass
+class TxnSpec:
+    """Pre-sampled IO sequence: per-function list of ('r'|'w', key)."""
+
+    functions: List[List[Tuple[str, str]]]
+    write_set: Tuple[str, ...]
+
+
+def build_txn_spec(cfg: WorkloadConfig, sampler: ZipfSampler) -> TxnSpec:
+    functions: List[List[Tuple[str, str]]] = []
+    writes: List[str] = []
+    for _ in range(cfg.functions_per_txn):
+        ops: List[Tuple[str, str]] = []
+        for _ in range(cfg.reads_per_function):
+            ops.append(("r", sampler.key()))
+        for _ in range(cfg.writes_per_function):
+            key = sampler.key()
+            ops.append(("w", key))
+            writes.append(key)
+        functions.append(ops)
+    return TxnSpec(functions=functions, write_set=tuple(sorted(set(writes))))
+
+
+def _payload(uuid: str, counter: int, size: int) -> bytes:
+    head = f"{uuid}:{counter}|".encode()
+    return head + b"x" * max(0, size - len(head))
+
+
+# ---------------------------------------------------------------------------
+# AFT-mode execution
+# ---------------------------------------------------------------------------
+
+class _AftSession:
+    def __init__(self, cluster: AftCluster, uuid: Optional[str]):
+        self.client = cluster.client()
+        self.txid = self.client.start_transaction(uuid)
+        self.uuid = self.txid
+        self.node = self.client.node_of(self.txid)
+        self.observer = TransactionObserver()
+        self.counter = 0
+
+
+def run_aft_transaction(
+    cluster: AftCluster,
+    platform: LambdaPlatform,
+    spec: TxnSpec,
+    cfg: WorkloadConfig,
+    agg: AnomalyAggregator,
+) -> float:
+    def make_function(ops: Sequence[Tuple[str, str]]):
+        def body(session: _AftSession) -> None:
+            for op, key in ops:
+                platform.maybe_fail()  # fractional-execution hazard point
+                if op == "r":
+                    value, tid = session.node.get_versioned(session.txid, key)
+                    cowritten: Tuple[str, ...] = ()
+                    if tid is not None:
+                        record = session.node.cache.get(tid)
+                        if record is not None:
+                            cowritten = record.write_set
+                    session.observer.observe_read(key, value, tid, cowritten)
+                else:
+                    session.counter += 1
+                    value = _payload(session.uuid, session.counter, cfg.value_bytes)
+                    session.node.put(session.txid, key, value)
+                    session.observer.observe_write(key, value)
+        return body
+
+    t0 = time.perf_counter()
+
+    def begin(uuid: Optional[str]) -> _AftSession:
+        return _AftSession(cluster, uuid)
+
+    def finish(session: _AftSession):
+        session.client.commit_transaction(session.txid)
+        agg.record(session.observer)
+        return None
+
+    def on_failure(session: _AftSession) -> None:
+        try:
+            session.client.abort_transaction(session.txid)
+        except Exception:
+            pass
+
+    platform.run_request(
+        [make_function(ops) for ops in spec.functions],
+        begin=begin,
+        finish=finish,
+        on_failure=on_failure,
+    )
+    return (time.perf_counter() - t0) * 1e3
+
+
+# ---------------------------------------------------------------------------
+# plain-storage execution (§6.1.2 baselines)
+# ---------------------------------------------------------------------------
+
+class _PlainSession:
+    def __init__(self, storage: StorageEngine, spec: TxnSpec, clock: Clock):
+        self.storage = storage
+        self.uuid = fresh_uuid()
+        self.tid = TxnId(clock.now_ns(), self.uuid)
+        self.spec = spec
+        self.observer = TransactionObserver()
+        self.counter = 0
+
+
+_plain_clock = Clock()
+
+
+def run_plain_transaction(
+    storage: StorageEngine,
+    platform: LambdaPlatform,
+    spec: TxnSpec,
+    cfg: WorkloadConfig,
+    agg: AnomalyAggregator,
+) -> float:
+    """No shim: every write lands immediately, in place; reads see whatever
+    the engine returns.  Metadata embedded per §6.1.2."""
+
+    def make_function(ops: Sequence[Tuple[str, str]]):
+        def body(session: _PlainSession) -> None:
+            for op, key in ops:
+                platform.maybe_fail()
+                if op == "r":
+                    raw = session.storage.get(key)
+                    if raw is None:
+                        session.observer.observe_read(key, None, None)
+                        continue
+                    value, tid, cowritten = extract_metadata(raw)
+                    session.observer.observe_read(key, value, tid, cowritten)
+                else:
+                    session.counter += 1
+                    value = _payload(session.uuid, session.counter, cfg.value_bytes)
+                    session.storage.put(
+                        key,
+                        embed_metadata(value, session.tid, spec.write_set),
+                    )
+                    session.observer.observe_write(key, value)
+        return body
+
+    t0 = time.perf_counter()
+    platform.run_request(
+        [make_function(ops) for ops in spec.functions],
+        begin=lambda uuid: _PlainSession(storage, spec, _plain_clock),
+        finish=lambda s: agg.record(s.observer),
+        on_failure=lambda s: None,
+    )
+    return (time.perf_counter() - t0) * 1e3
+
+
+# ---------------------------------------------------------------------------
+# DynamoDB-transaction-mode execution (§6.1.2)
+# ---------------------------------------------------------------------------
+
+class _ConflictTable:
+    """Write-key reservations: DynamoDB's transaction mode proactively aborts
+    conflicting transactions; clients retry."""
+
+    def __init__(self) -> None:
+        self._held: Dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def try_acquire(self, keys: Sequence[str], owner: str) -> bool:
+        with self._lock:
+            if any(k in self._held for k in keys):
+                return False
+            for k in keys:
+                self._held[k] = owner
+            return True
+
+    def release(self, keys: Sequence[str], owner: str) -> None:
+        with self._lock:
+            for k in keys:
+                if self._held.get(k) == owner:
+                    del self._held[k]
+
+
+def run_dynamo_txn_transaction(
+    storage: StorageEngine,
+    platform: LambdaPlatform,
+    spec: TxnSpec,
+    cfg: WorkloadConfig,
+    agg: AnomalyAggregator,
+    conflicts: _ConflictTable,
+    stats: Dict[str, int],
+) -> float:
+    """§6.1.2's adapted workload: function i does a read-only transaction
+    (one atomic batch); the last function additionally issues one write-only
+    transaction containing *all* the request's writes."""
+    t0 = time.perf_counter()
+    session = _PlainSession(storage, spec, _plain_clock)
+
+    def read_batch(keys: Sequence[str]) -> None:
+        raws = storage.get_batch(list(keys))
+        for key in keys:
+            raw = raws.get(key)
+            if raw is None:
+                session.observer.observe_read(key, None, None)
+                continue
+            value, tid, cowritten = extract_metadata(raw)
+            session.observer.observe_read(key, value, tid, cowritten)
+
+    for i, ops in enumerate(spec.functions):
+        platform.invoke(lambda _=None: None)  # per-function overhead
+        read_batch([k for op, k in ops if op == "r"])
+    # single write-only transaction with conflict-abort/retry semantics
+    write_keys = list(spec.write_set)
+    if write_keys:
+        backoff = 2.0
+        while not conflicts.try_acquire(write_keys, session.uuid):
+            stats["conflict_aborts"] = stats.get("conflict_aborts", 0) + 1
+            time.sleep(backoff * cfg.faas.time_scale / 1e3)
+            backoff = min(backoff * 2, 64.0)
+        try:
+            batch = {}
+            counter = 0
+            for key in write_keys:
+                counter += 1
+                value = _payload(session.uuid, counter, cfg.value_bytes)
+                batch[key] = embed_metadata(value, session.tid, spec.write_set)
+                session.observer.observe_write(key, value)
+            storage.put_batch(batch)
+        finally:
+            conflicts.release(write_keys, session.uuid)
+    agg.record(session.observer)
+    return (time.perf_counter() - t0) * 1e3
+
+
+# ---------------------------------------------------------------------------
+# workload driver
+# ---------------------------------------------------------------------------
+
+def run_workload(
+    mode: str,
+    *,
+    cfg: WorkloadConfig,
+    clients: int,
+    txns_per_client: int,
+    cluster: Optional[AftCluster] = None,
+    storage: Optional[StorageEngine] = None,
+) -> WorkloadResult:
+    """Run ``clients`` synchronous closed-loop clients (§6.5: each client
+    invokes a transaction, waits, repeats) and tally latency + anomalies."""
+    sampler = ZipfSampler(cfg.num_keys, cfg.zipf, seed=cfg.seed)
+    platform = LambdaPlatform(cfg.faas)
+    agg = AnomalyAggregator(mode)
+    latencies: List[List[float]] = [[] for _ in range(clients)]
+    stats: Dict[str, int] = {}
+    spec_rng = random.Random(cfg.seed + 1)
+    conflicts = _ConflictTable()
+
+    if mode == "aft" and cluster is None:
+        raise ValueError("aft mode requires a cluster")
+    if mode in ("plain", "dynamo_txn") and storage is None:
+        raise ValueError(f"{mode} mode requires a storage engine")
+
+    def client_loop(ci: int) -> None:
+        local_sampler = ZipfSampler(cfg.num_keys, cfg.zipf, seed=cfg.seed + 97 * ci)
+        for _ in range(txns_per_client):
+            spec = build_txn_spec(cfg, local_sampler)
+            try:
+                if mode == "aft":
+                    ms = run_aft_transaction(cluster, platform, spec, cfg, agg)
+                elif mode == "plain":
+                    ms = run_plain_transaction(storage, platform, spec, cfg, agg)
+                elif mode == "dynamo_txn":
+                    ms = run_dynamo_txn_transaction(
+                        storage, platform, spec, cfg, agg, conflicts, stats
+                    )
+                else:
+                    raise ValueError(f"unknown mode {mode!r}")
+            except RuntimeError:
+                continue  # request exhausted its retries
+            latencies[ci].append(ms)
+
+    t0 = time.perf_counter()
+    platform.map(client_loop, clients)
+    wall = time.perf_counter() - t0
+    platform.shutdown()
+
+    flat = [ms for per_client in latencies for ms in per_client]
+    staleness = 0
+    if cluster is not None:
+        staleness = sum(n.stats["staleness_aborts"] for n in cluster.all_nodes())
+    return WorkloadResult(
+        mode=mode,
+        latencies_ms=flat,
+        anomalies=agg.summary(),
+        wall_s=wall,
+        committed=len(flat),
+        client_count=clients,
+        retries=platform.retries,
+        conflict_aborts=stats.get("conflict_aborts", 0),
+        staleness_aborts=staleness,
+    )

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``use_pallas`` in an ``ArchConfig`` routes the model's attention / SSD
+compute through these.  On CPU (this container) the kernels execute in
+``interpret=True`` mode; on real TPUs ``interpret=False`` compiles Mosaic.
+
+The attention wrapper exposes a custom VJP whose backward pass recomputes
+through the pure-jnp reference — flash-style forward memory behavior with a
+numerically-identical backward (kernelizing the backward is a further perf
+iteration; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import attention_ref, ssd_scan_ref
+from .ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=interp)
+
+
+def _attn_fwd(q, k, v, causal, window, softcap, interpret):
+    return attention(q, k, v, causal, window, softcap, interpret), (q, k, v)
+
+
+def _attn_bwd(causal, window, softcap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def ssd(x, da, b_mat, c_mat, *, chunk: int = 256,
+        interpret: Optional[bool] = None):
+    """Chunked SSD scan: (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return ssd_scan(x, da, b_mat, c_mat, chunk=chunk, interpret=interp)

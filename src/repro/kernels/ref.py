@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (CPU ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def attention_ref(
+    q: jax.Array,                 # (B, H, Sq, D)
+    k: jax.Array,                 # (B, KVH, Sk, D)
+    v: jax.Array,                 # (B, KVH, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_valid: Optional[int] = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bngqd,bnkd->bngqk", qg, kf) / math.sqrt(d)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if kv_valid is not None:
+        mask &= k_pos < kv_valid
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all-NEG_INF is uniform; zero them to
+    # match the kernel's exact-0 convention
+    any_valid = mask.any(axis=1)
+    o = jnp.einsum("bngqk,bnkd->bngqd", p, v.astype(jnp.float32))
+    o = jnp.where(any_valid[None, None, None, :, None], o, 0.0)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,       # (B, S, H, P) pre-scaled (x · Δt)
+    da: jax.Array,      # (B, S, H)    log decay (Δt · a)
+    b_mat: jax.Array,   # (B, S, N)
+    c_mat: jax.Array,   # (B, S, N)
+):
+    """Sequential recurrence oracle.  Returns (y, final_state)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    x = x.astype(jnp.float32)
+    da = da.astype(jnp.float32)
+    b_mat = b_mat.astype(jnp.float32)
+    c_mat = c_mat.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dat, bt, ct = t
+        state = state * jnp.exp(dat)[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (x.swapaxes(0, 1), da.swapaxes(0, 1), b_mat.swapaxes(0, 1),
+          c_mat.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,126 @@
+"""Pallas TPU chunked-SSD (Mamba-2) scan kernel.
+
+TPU-native adaptation of the SSD algorithm: the (batch, head) grid axes are
+parallel; the chunk axis is the innermost (sequential) grid dimension, and
+the inter-chunk recurrent state (P × N) lives in VMEM scratch across chunk
+steps — the sequential TPU grid replaces the GPU implementation's
+inter-block state-passing kernel.  Within a chunk everything is dense
+MXU-shaped matmuls:
+
+    y_intra = (L ⊙ (C Bᵀ)) · X            (chunk × chunk quadratic part)
+    y_inter = diag(exp(csum)) · C · state   (contribution of entering state)
+    state'  = exp(total)·state + Σ_k B_k (decay_k X_k)ᵀ
+
+Inputs are the pre-scaled tensors produced by the Mamba-2 block projection
+(see ``repro.models.ssm``): x·Δt, Δt·a (log-decay), B, C.  The final state
+is emitted as a second output (written every chunk step; the last write is
+the final state), which prefill uses to seed decoding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
+                chunk: int):
+    """One (b, h, ic) grid step.
+
+    x_ref: (1, chunk, 1, P) pre-scaled inputs (x·Δt); da_ref: (1, chunk, 1);
+    b_ref/c_ref: (1, chunk, N); y_ref: (1, chunk, 1, P);
+    st_ref: (1, 1, P, N) final-state output; state_scr: (P, N) f32 VMEM.
+    """
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # (chunk, P)
+    da = da_ref[0, :, 0].astype(jnp.float32)             # (chunk,)
+    bm = b_ref[0].astype(jnp.float32)                    # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)                    # (chunk, N)
+
+    csum = jnp.cumsum(da)                                # inclusive
+    total = csum[-1]
+
+    # L[q, k] = exp(csum_q − csum_k) for q ≥ k (decay from k to q)
+    seg = csum[:, None] - csum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(qi >= ki, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(lmat * scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: entering state contribution + state update
+    state = state_scr[...]                               # (P, N)
+    decay_from_start = jnp.exp(csum)                     # (chunk,)
+    y_inter = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + y_inter * decay_from_start[:, None]
+
+    decay_to_end = jnp.exp(total - csum)                 # (chunk,)
+    xw = x * decay_to_end[:, None]                       # (chunk, P)
+    new_contrib = jax.lax.dot_general(xw, bm, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total) + new_contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,       # (B, S, H, P) pre-scaled inputs (x · Δt)
+    da: jax.Array,      # (B, S, H)    per-step log decay (Δt · a)
+    b_mat: jax.Array,   # (B, S, N)
+    c_mat: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    grid = (bsz, h, nc)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, da, b_mat, c_mat)
+    return y, st

@@ -1,0 +1,147 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic, so
+we parse the optimized (post-SPMD, per-device) HLO and sum operand bytes of
+every collective op, bucketed by kind.  Ops inside ``while`` bodies appear
+once in the text — the roofline tool corrects trip counts via the
+instrumented-scan tree (see ``models/scan.py``/``roofline.py``).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+([\w\-]+)(?:\.\d+)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    """Per-op-kind operand bytes (per-device program => per-chip traffic)."""
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def add(self, other: "CollectiveStats", factor: int = 1) -> None:
+        for k, v in other.bytes_by_kind.items():
+            self.bytes_by_kind[k] = self.bytes_by_kind.get(k, 0) + v * factor
+        for k, v in other.count_by_kind.items():
+            self.count_by_kind[k] = self.count_by_kind.get(k, 0) + v * factor
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        out = CollectiveStats()
+        out.bytes_by_kind = {k: int(v * factor)
+                             for k, v in self.bytes_by_kind.items()}
+        out.count_by_kind = dict(self.count_by_kind)
+        return out
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))      # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 1
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-chip operand bytes of every collective instruction.
+
+    Operand shapes are not reliably printed for instructions inside nested
+    (e.g. shard_map manual) computations, so bytes derive from the RESULT
+    shape + replica-group size N:
+
+      all-reduce          operand = result
+      all-gather          operand = result / N        (the local shard)
+      reduce-scatter      operand = result · N        (the unreduced input)
+      all-to-all / *      operand = result            (bytes conserved)
+    """
+    stats = CollectiveStats()
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_ty, opcode = m.groups()
+        base = None
+        for k in COLLECTIVE_OPS:
+            if opcode == k or opcode.startswith(k + "-"):
+                base = k
+                break
+        if base is None:
+            continue
+        if opcode.endswith("-done"):      # start/done pairs: count start only
+            continue
+        result_bytes = sum(_shape_bytes(dt, dims)
+                           for dt, dims in _SHAPE_RE.findall(result_ty))
+        n = _group_size(line)
+        if base == "all-gather":
+            total = result_bytes // max(1, n)
+        elif base == "reduce-scatter":
+            total = result_bytes * n
+        else:
+            total = result_bytes
+        bytes_by[base] += total
+        count_by[base] += 1
+    stats.bytes_by_kind = dict(bytes_by)
+    stats.count_by_kind = dict(count_by)
+    return stats
+
+
+def flop_count(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def bytes_accessed(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def memory_stats(compiled) -> Dict[str, int]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        out[name] = int(getattr(ma, name, 0))
+    return out

@@ -1,0 +1,48 @@
+"""Production meshes.
+
+``make_production_mesh()`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real 1-CPU platform.
+
+Target hardware model (TPU v5e-class):
+  peak bf16 compute  : 197 TFLOP/s per chip
+  HBM bandwidth      : 819 GB/s per chip
+  ICI link bandwidth : ~50 GB/s per link (bidirectional per-axis budget)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+DCN_BW = 12.5e9            # bytes/s / host (cross-pod, 100 Gbps)
+HBM_BYTES = 16 * 2**30     # v5e HBM capacity
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist, as a (data, model) mesh with model=1."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+@dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    dcn_bw: float = DCN_BW
+    hbm_bytes: int = HBM_BYTES
+
+
+V5E = Hardware()

@@ -1,0 +1,429 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
+    os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=512"
+
+"""Roofline analysis from the compiled dry-run (no hardware required).
+
+Three terms per (arch × shape × mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_per_chip   / peak_FLOP/s
+    memory     = HLO_bytes_per_chip   / HBM_bw
+    collective = coll_bytes_per_chip  / link_bw
+
+**Scan correction.**  XLA's ``cost_analysis`` counts a while-loop body once
+regardless of trip count, so a scanned 80-layer model reports ~1 layer of
+FLOPs.  Every scan in the model stack goes through ``instrumented_scan``
+(models/scan.py), which records the body + abstract carry/x during a
+(cheap) ``eval_shape`` trace.  We lower each recorded body *separately*
+under the same mesh/rules and apply, recursively,
+
+    corrected(node) = cost(node) + Σ_child [ len(child)·corrected(child)
+                                             − cost(child) ]
+
+where cost(·) is the per-device compiled cost of a single body.  The
+subtraction removes the once-counted in-context copy; the residual
+mismatch (fusion differs slightly in/out of context) is second-order.
+
+MODEL_FLOPS (analytic 6·N·D for training, 2·N_active·tokens + cache reads
+for decode) is reported alongside, and the ratio MODEL_FLOPS/HLO_FLOPs
+flags remat/redundancy waste.
+"""
+
+import argparse
+import json
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.launch import hlo
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.shapes import SHAPES, ShapeSpec
+from repro.launch.steps import Cell, build_cell
+from repro.models import Model, get_config, list_configs
+from repro.models.config import ArchConfig, MOE
+from repro.models.params import count_params, is_def
+from repro.models.scan import ScanCollector, ScanRecord
+from repro.models.sharding import sharding_rules
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        coll = dict(self.coll)
+        for k, v in o.coll.items():
+            coll[k] = coll.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes, coll)
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _measure_compiled(compiled) -> Cost:
+    text = compiled.as_text()
+    st = hlo.collective_stats(text)
+    return Cost(hlo.flop_count(compiled), hlo.bytes_accessed(compiled),
+                {k: float(v) for k, v in st.bytes_by_kind.items()})
+
+
+def _ct_like(o):
+    import jax.numpy as jnp
+
+    if jnp.issubdtype(o.dtype, jnp.inexact):
+        return jnp.ones_like(o)
+    return np.zeros(o.shape, dtype=jax.dtypes.float0)
+
+
+def _lower_body(rec: ScanRecord, cell: Cell, with_grad: bool = False) -> Cost:
+    """Per-device compiled cost of one scan-body iteration, lowered with the
+    true input shardings (from the call site's recorded logical axes).
+
+    ``with_grad``: for training cells the compiled program contains the scan
+    body once in the forward while-loop *and* its transpose once in the
+    backward while-loop; the per-iteration cost that multiplies by the trip
+    count is therefore fwd+vjp of one body (remat included — the body
+    carries its own ``jax.checkpoint``).
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.models.sharding import Ax, logical_to_spec
+
+    if with_grad:
+        def wrapped(carry, x):
+            with sharding_rules(cell.rules, cell.mesh):
+                out, vjp = jax.vjp(lambda c, xx: rec.body(c, xx), carry, x)
+                cts = jax.tree.map(_ct_like, out)
+                return out, vjp(cts)
+    else:
+        def wrapped(carry, x):
+            with sharding_rules(cell.rules, cell.mesh):
+                return rec.body(carry, x)
+
+    args = (rec.carry_sds,) + ((rec.x_sds,)
+                               if rec.x_sds is not None else (None,))
+    in_sh = None
+    if rec.logical_axes is not None:
+        axis_size = dict(zip(cell.mesh.axis_names, cell.mesh.devices.shape))
+
+        with sharding_rules(cell.rules, cell.mesh):
+            def to_ns(axv, sds):
+                spec = logical_to_spec(axv.axes)
+                # drop entries whose dimension is not divisible by the mesh
+                # extent (e.g. 1500 audio frames over a 16-way axis) — the
+                # full program handles these with GSPMD padding, but jit
+                # in_shardings requires exact divisibility.
+                entries = list(spec) + [None] * (len(sds.shape) - len(spec))
+                fixed = []
+                for dim, entry in zip(sds.shape, entries):
+                    if entry is None:
+                        fixed.append(None)
+                        continue
+                    parts = entry if isinstance(entry, tuple) else (entry,)
+                    n = 1
+                    for p in parts:
+                        n *= axis_size.get(p, 1)
+                    fixed.append(entry if dim % n == 0 else None)
+                from jax.sharding import PartitionSpec as P
+
+                return NamedSharding(cell.mesh, P(*fixed))
+
+            carry_ax, x_ax = rec.logical_axes
+            in_sh = (jax.tree.map(to_ns, carry_ax, rec.carry_sds,
+                                  is_leaf=lambda v: isinstance(v, Ax)),)
+            if rec.x_sds is not None:
+                in_sh = in_sh + (jax.tree.map(
+                    to_ns, x_ax, rec.x_sds,
+                    is_leaf=lambda v: isinstance(v, Ax)),)
+            else:
+                in_sh = in_sh + (None,)
+    with cell.mesh:
+        jitted = (jax.jit(wrapped, in_shardings=in_sh)
+                  if in_sh is not None else jax.jit(wrapped))
+        compiled = jitted.lower(*args).compile()
+    return _measure_compiled(compiled)
+
+
+def _corrected(rec: ScanRecord, cell: Cell, cache: Dict[int, Cost],
+               with_grad: bool) -> Cost:
+    if id(rec) in cache:
+        return cache[id(rec)]
+    cost = _lower_body(rec, cell, with_grad)
+    for child in rec.children:
+        child_once = _lower_body(child, cell, with_grad)
+        cost = cost + _corrected(child, cell, cache,
+                                 with_grad).scaled(child.length) \
+            + child_once.scaled(-1.0)
+    cache[id(rec)] = cost
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: routed top-k + shared only)."""
+    model = Model(cfg)
+    defs = model.param_defs()
+    total = count_params(defs)
+    if not cfg.num_experts:
+        return total
+    # subtract inactive experts: each MoE block's expert tensors scale by
+    # (E − k)/E
+    from repro.models.moe import moe_defs
+
+    per_block = count_params(moe_defs(cfg)) - count_params(
+        {k: v for k, v in moe_defs(cfg).items() if k.startswith("shared")})
+    # router is tiny; treat all non-shared expert params as routed
+    n_moe_blocks = (list(cfg.pattern).count(MOE) * cfg.pattern_repeats
+                    + list(cfg.tail).count(MOE))
+    routed = per_block * n_moe_blocks
+    inactive_frac = 1.0 - cfg.experts_per_token / cfg.num_experts
+    return int(total - routed * inactive_frac)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # 6ND matmul + attention quadratic term (fwd 2·B·S²·H·hd·2, ×3 bwd)
+        attn_layers = sum(
+            1 for k in (list(cfg.pattern) * cfg.pattern_repeats
+                        + list(cfg.tail))
+            if k in ("attn", "local", "dense", "moe", "shared_attn", "cross"))
+        hd = cfg.resolved_head_dim
+        attn = 12 * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.num_heads * hd * attn_layers / 2  # /2: causal
+        return 6.0 * n_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        attn_layers = sum(
+            1 for k in (list(cfg.pattern) * cfg.pattern_repeats
+                        + list(cfg.tail))
+            if k in ("attn", "local", "dense", "moe", "shared_attn", "cross"))
+        hd = cfg.resolved_head_dim
+        attn = 4 * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.num_heads * hd * attn_layers / 2
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    attn_layers = sum(
+        1 for k in (list(cfg.pattern) * cfg.pattern_repeats + list(cfg.tail))
+        if k in ("attn", "local", "dense", "moe", "shared_attn", "cross"))
+    hd = cfg.resolved_head_dim
+    cache_reads = 4.0 * tokens * shape.seq_len * cfg.num_heads * hd \
+        * attn_layers
+    return 2.0 * n_active * tokens + cache_reads
+
+
+def model_bytes_per_chip(cfg: ArchConfig, shape: ShapeSpec, chips: int,
+                         tp: int) -> float:
+    """Analytic minimum HBM traffic per chip per step (bytes).
+
+    ``cost_analysis()['bytes accessed']`` counts every HLO operand — an
+    upper bound that ignores fusion (on the CPU backend, wildly so).  The
+    roofline memory term instead uses this explicit traffic model; the HLO
+    number is reported alongside as the unfused upper bound.
+
+    train   : params 3 reads (fwd, bwd, opt) + grad write/read + optimizer
+              moments read+write + residual-stream carries write+2·reads
+              + logits stream.
+    prefill : params once + KV-state write + activations once.
+    decode  : params once + whole decode state read + one-slot write (the
+              classic decode bound: state+weights stream per token).
+    """
+    model = Model(cfg)
+    pdefs = model.param_defs()
+    from repro.models.params import param_bytes
+
+    p_bytes = param_bytes(pdefs) / chips
+    d = cfg.d_model
+    if shape.kind == "train":
+        opt_bytes = 2 * 4 * (param_bytes(pdefs) // 2) / chips   # m+v fp32
+        acts = (cfg.num_layers * shape.global_batch * shape.seq_len * d * 2
+                / chips)                                        # bf16 carries
+        logits = shape.global_batch * shape.seq_len * cfg.vocab_size * 4 \
+            / chips
+        return 5 * p_bytes + 2 * opt_bytes + 3 * acts + 2 * logits
+    state_defs = model.decode_state_defs(shape.global_batch, shape.seq_len)
+    from repro.models.params import param_bytes as pb
+
+    state_bytes = pb(state_defs) / chips
+    if shape.kind == "prefill":
+        acts = (cfg.num_layers * shape.global_batch * shape.seq_len * d * 2
+                / chips)
+        return p_bytes + state_bytes + 2 * acts
+    # decode: stream weights + read the whole state once, write one slot
+    return p_bytes + state_bytes
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch: str, shape_name: str, *, mesh_kind: str = "single",
+                 hw=V5E, verbose: bool = True, overrides=None,
+                 rule_overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    cell = build_cell(arch, shape_name, mesh, overrides=overrides,
+                      rule_overrides=rule_overrides)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "entry": cell.entry,
+           "overrides": overrides or {}, "rule_overrides":
+           {k: str(v) for k, v in (rule_overrides or {}).items()}}
+    if cell.skipped:
+        rec["status"] = "skipped"
+        rec["reason"] = cell.skipped
+        return rec
+
+    # 1) scan tree from a cheap abstract trace
+    with ScanCollector() as col:
+        jax.eval_shape(cell.fn, *cell.args_abs)
+
+    # 2) whole-program compiled cost (bodies counted once)
+    with cell.mesh:
+        compiled = cell.lower().compile()
+    root = _measure_compiled(compiled)
+    mem = hlo.memory_stats(compiled)
+
+    # 3) scan-corrected totals (train: fwd+vjp per body — the compiled
+    # program holds body-once in the fwd loop and transpose-once in the bwd)
+    with_grad = cell.entry == "train_step"
+    cache: Dict[int, Cost] = {}
+    total = root
+    scans = []
+    for child in col.root.children:
+        once = _lower_body(child, cell, with_grad)
+        corr = _corrected(child, cell, cache, with_grad)
+        total = total + corr.scaled(child.length) + once.scaled(-1.0)
+        scans.append({"name": child.name, "length": child.length,
+                      "body_flops": once.flops,
+                      "children": len(child.children)})
+
+    cfg = cell.cfg                      # includes perf-variant overrides
+    shape = SHAPES[shape_name]
+    mf = model_flops(cfg, shape)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    mbytes = model_bytes_per_chip(cfg, shape, chips, tp)
+    compute_s = total.flops / hw.peak_flops
+    memory_s = mbytes / hw.hbm_bw
+    coll_s = total.coll_bytes / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu = (mf / chips / hw.peak_flops) / step_s if step_s > 0 else 0.0
+
+    rec.update(
+        status="ok",
+        hlo_flops_per_chip=total.flops,
+        hlo_bytes_per_chip=total.bytes,
+        model_bytes_per_chip=mbytes,
+        hlo_bytes_upper_bound_s=total.bytes / hw.hbm_bw,
+        coll_bytes_per_chip=total.coll_bytes,
+        coll_by_kind=total.coll,
+        uncorrected_flops=root.flops,
+        terms=terms,
+        dominant=dominant,
+        model_flops_total=mf,
+        model_flops_per_chip=mf / chips,
+        useful_ratio=(mf / chips) / total.flops if total.flops else 0.0,
+        roofline_fraction=mfu,
+        scans=scans,
+        memory=mem,
+    )
+    if verbose:
+        print(f"[roofline] {arch} × {shape_name} × {mesh_kind}: "
+              f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={coll_s*1e3:.2f}ms → {dominant.split('_')[0]}-bound; "
+              f"MODEL/HLO={rec['useful_ratio']:.2f} "
+              f"roofline-frac={mfu:.3f}")
+    return rec
+
+
+def load_results() -> dict:
+    f = RESULTS / "roofline.json"
+    return json.loads(f.read_text()) if f.exists() else {}
+
+
+def save_result(rec: dict, tag: str = "") -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    res = load_results()
+    key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+    if tag:
+        key += f"|{tag}"
+    res[key] = rec
+    (RESULTS / "roofline.json").write_text(json.dumps(res, indent=1))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="", help="variant tag (perf iterations)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override, e.g. --set moe_dispatch_groups=16")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule override, e.g. --rule expert_mlp=data"
+                         " (use 'none' for unsharded)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    def _cast(v: str):
+        for t in (int, float):
+            try:
+                return t(v)
+            except ValueError:
+                continue
+        return {"true": True, "false": False, "none": None}.get(v.lower(), v)
+
+    overrides = dict(kv.split("=", 1) for kv in args.set) or None
+    if overrides:
+        overrides = {k: _cast(v) for k, v in overrides.items()}
+    rule_overrides = dict(kv.split("=", 1) for kv in args.rule) or None
+    if rule_overrides:
+        rule_overrides = {k: _cast(v) for k, v in rule_overrides.items()}
+    archs = list_configs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    existing = load_results()
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            key = f"{arch}|{shape}|{args.mesh}" + (f"|{args.tag}" if args.tag
+                                                   else "")
+            if not args.force and existing.get(key, {}).get("status") == "ok":
+                print(f"[roofline] {key}: cached")
+                continue
+            try:
+                rec = analyze_cell(arch, shape, mesh_kind=args.mesh,
+                                   overrides=overrides,
+                                   rule_overrides=rule_overrides)
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc(limit=15)}
+                print(f"[roofline] {key}: FAIL {rec['error']}")
+                fails += 1
+            save_result(rec, args.tag)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

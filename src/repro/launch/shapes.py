@@ -1,0 +1,148 @@
+"""Assigned input shapes, per-cell applicability, and abstract input specs.
+
+Every (architecture × shape) cell lowers one of three entry points:
+
+  ``train_4k``    → train_step   (fwd + bwd + optimizer update)
+  ``prefill_32k`` → prefill_step (prompt pass emitting the decode state)
+  ``decode_32k``  → serve_step   (one token over a seq_len KV/SSM state)
+  ``long_500k``   → serve_step   (B=1, 512k state; sub-quadratic archs only)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no allocation;
+the dry-run lowers against them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models.config import ArchConfig
+from repro.models.params import abstract, is_def
+from repro.models.sharding import DEFAULT_RULES, Rules
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(applicable?, reason).  Per DESIGN.md §Arch-applicability."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention stack: O(seq) KV state at 524k "
+                       "exceeds sub-quadratic requirement; skipped per "
+                       "assignment note")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule resolution (divisibility-aware)
+# ---------------------------------------------------------------------------
+
+def resolve_rules(cfg: ArchConfig, shape: ShapeSpec, *,
+                  tp: int, dp: int, fsdp: bool = True) -> Rules:
+    """Concrete logical→physical rules for one (arch, shape, mesh) cell.
+
+    Baseline layout: batch → (pod, data); Megatron TP over "model" for
+    heads / kv / mlp / experts / vocab; sequence-parallel residual stream
+    for full-sequence passes; FSDP (params' ``embed`` axis → "data") for
+    training so optimizer state is fully sharded (ZeRO-3 style).
+
+    Divisibility fallbacks (checked against the actual arch dims):
+      * heads   % tp != 0  → heads unsharded, shard head_dim instead;
+      * kv_heads % tp != 0 → kv replicated, KV head_dim sharded (keeps the
+        decode KV cache distributed — the thing that must never replicate);
+      * vocab is padded to a multiple of 256 in the model, always divisible.
+    """
+    rules: Dict[str, object] = dict(DEFAULT_RULES)
+    hd = cfg.resolved_head_dim
+    heads_ok = cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads % tp == 0
+    hd_ok = hd % tp == 0
+
+    rules["heads"] = "model" if heads_ok else None
+    rules["kv_heads"] = "model" if kv_ok else None
+    if (not heads_ok or not kv_ok) and hd_ok:
+        rules["head_dim"] = "model"      # dedup keeps q/w_q consistent
+    if cfg.d_ff and cfg.d_ff % tp != 0:
+        rules["mlp"] = None
+    if cfg.num_experts and cfg.num_experts % tp != 0:
+        rules["experts"] = None
+    if cfg.num_experts and cfg.d_model % dp != 0:
+        rules["expert_embed"] = None
+    if cfg.ssm_state and cfg.ssm_heads % tp != 0:
+        rules["ssm_heads"] = None
+
+    if shape.kind in ("train", "prefill"):
+        # sequence-parallel residual stream (activations only; rides the
+        # "model" axis between blocks, re-gathered inside attention)
+        if shape.seq_len % tp == 0:
+            rules["seq"] = "model"
+    if shape.kind == "train" and fsdp:
+        rules["embed"] = "data"          # ZeRO-3: params+opt fully sharded
+
+    if shape.kind == "decode":
+        if shape.global_batch % dp != 0:
+            # long_500k: B=1 — shard the cache sequence instead of batch
+            rules["batch"] = None
+            rules["cache_batch"] = None
+            rules["cache_seq"] = "data"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _frontend_sds(cfg: ArchConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.is_encoder_decoder:
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.vision_seq:
+        return jax.ShapeDtypeStruct((batch, cfg.vision_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, object]:
+    """Abstract inputs for the cell's entry point (ShapeDtypeStructs)."""
+    i32 = jnp.dtype("int32")
+    if shape.kind == "train":
+        b, s = shape.global_batch, shape.seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        fe = _frontend_sds(cfg, b)
+        if fe is not None:
+            batch["frontend"] = fe
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        fe = _frontend_sds(cfg, b)
+        if fe is not None:
+            out["frontend"] = fe
+        return out
+    # decode
+    b, s = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    state = abstract(model.decode_state_defs(b, s))
+    return {
+        "state": state,
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "position": jax.ShapeDtypeStruct((), i32),
+    }

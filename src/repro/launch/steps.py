@@ -1,0 +1,175 @@
+"""Cell builder: (architecture × shape × mesh) → lowered step function.
+
+One cell = one jitted entry point with full in/out shardings, lowered against
+abstract inputs.  Used by the dry-run driver, the roofline tool, and the
+real train/serve drivers (which feed concrete arrays through the same path).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, get_config
+from repro.models.config import ArchConfig
+from repro.models.params import abstract, specs
+from repro.models.sharding import logical_to_spec, sharding_rules
+from repro.train.optim import Optimizer, get_optimizer
+
+from .shapes import SHAPES, ShapeSpec, cell_applicable, input_specs, resolve_rules
+
+# per-arch optimizer for the train cell.  kimi-k2 (≈1.03T params) uses
+# factored second moments: full AdamW state (8 bytes/param fp32) cannot fit a
+# single 256-chip v5e pod (see EXPERIMENTS.md §Dry-run notes).
+CELL_OPTIMIZER: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "adafactor",
+    "qwen1.5-110b": "adamw-bf16",
+}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    mesh: Mesh
+    cfg: ArchConfig
+    rules: Dict[str, Any]
+    entry: str                                  # train_step|prefill_step|serve_step
+    fn: Callable                                # the un-jitted step
+    args_abs: Tuple[Any, ...]                   # abstract args
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    skipped: str = ""                           # non-empty = inapplicable cell
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings)
+        with self.mesh:
+            return jitted.lower(*self.args_abs)
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _with_rules(fn, rules, mesh):
+    """Re-enter the sharding-rules context at *trace* time: ``constrain``
+    reads thread-local state, and jit traces the function lazily inside
+    ``.lower()`` — long after ``build_cell`` returned."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with sharding_rules(rules, mesh):
+            return fn(*args)
+
+    return wrapped
+
+
+def _scalar(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               optimizer: Optional[Optimizer] = None,
+               fsdp: bool = True,
+               overrides: Optional[Dict[str, Any]] = None,
+               rule_overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides).validate()
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis.get("model", 1)
+    dp = axis.get("data", 1) * axis.get("pod", 1)
+    rules = resolve_rules(cfg, shape, tp=tp, dp=dp, fsdp=fsdp)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    if not ok:
+        return Cell(arch, shape, mesh, cfg, rules, "", None, (), (), None,
+                    skipped=reason)
+
+    with sharding_rules(rules, mesh):
+        model = Model(cfg)
+        pdefs = model.param_defs()
+        params_abs, params_spec = abstract(pdefs), specs(pdefs)
+        params_sh = _ns(mesh, params_spec)
+        ins = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            opt = optimizer or get_optimizer(CELL_OPTIMIZER.get(arch, "adamw"))
+            sdefs = opt.state_defs(pdefs)
+            opt_abs, opt_spec = abstract(sdefs), specs(sdefs)
+            opt_sh = _ns(mesh, opt_spec)
+            batch_abs = ins["batch"]
+            batch_spec = {
+                "tokens": logical_to_spec(("batch", None)),
+                "labels": logical_to_spec(("batch", None)),
+            }
+            if "frontend" in batch_abs:
+                batch_spec["frontend"] = logical_to_spec(("batch", None, None))
+            batch_sh = _ns(mesh, batch_spec)
+            step_abs = jax.ShapeDtypeStruct((), jnp.dtype("int32"))
+
+            def train_step(params, opt_state, step, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, batch)
+                params, opt_state = opt.update(grads, opt_state, params, step)
+                metrics = dict(metrics, loss=loss)
+                return params, opt_state, metrics
+
+            metrics_sh = {k: _scalar(mesh)
+                          for k in ("ce", "aux", "ppl_log", "loss")}
+            return Cell(arch, shape, mesh, cfg, rules, "train_step",
+                        _with_rules(train_step, rules, mesh),
+                        (params_abs, opt_abs, step_abs, batch_abs),
+                        (params_sh, opt_sh, _scalar(mesh), batch_sh),
+                        (params_sh, opt_sh, metrics_sh))
+
+        if shape.kind == "prefill":
+            tokens_abs = ins["tokens"]
+            max_len = shape.seq_len
+            state_defs = model.decode_state_defs(shape.global_batch, max_len)
+            state_sh = _ns(mesh, specs(state_defs))
+            logits_sh = _ns(mesh, logical_to_spec(("batch", None, "vocab")))
+            args = [tokens_abs]
+            in_sh = [_ns(mesh, logical_to_spec(("batch", None)))]
+            if "frontend" in ins:
+                args.append(ins["frontend"])
+                in_sh.append(_ns(mesh, logical_to_spec(("batch", None, None))))
+
+                def prefill_step(params, tokens, frontend):
+                    return model.prefill(params, tokens, max_len, frontend)
+            else:
+                def prefill_step(params, tokens):
+                    return model.prefill(params, tokens, max_len)
+
+            return Cell(arch, shape, mesh, cfg, rules, "prefill_step",
+                        _with_rules(prefill_step, rules, mesh),
+                        (params_abs, *args),
+                        (params_sh, *in_sh), (logits_sh, state_sh))
+
+        # decode
+        state_abs = ins["state"]
+        state_defs = model.decode_state_defs(shape.global_batch, shape.seq_len)
+        state_sh = _ns(mesh, specs(state_defs))
+        tokens_sh = _ns(mesh, logical_to_spec(("batch", None)))
+        logits_sh = _ns(mesh, logical_to_spec(("batch", None, "vocab")))
+
+        def serve_step(params, state, tokens, position):
+            return model.decode_step(params, state, tokens, position)
+
+        return Cell(arch, shape, mesh, cfg, rules, "serve_step",
+                    _with_rules(serve_step, rules, mesh),
+                    (params_abs, state_abs, ins["tokens"], ins["position"]),
+                    (params_sh, state_sh, tokens_sh, _scalar(mesh)),
+                    (logits_sh, state_sh))

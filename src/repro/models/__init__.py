@@ -1,0 +1,12 @@
+"""Model substrate: composable blocks for the 10 assigned architectures.
+
+Pure-pytree parameter handling (``params.py``), logical-axis sharding
+(``sharding.py``), block library (``layers.py``, ``moe.py``, ``ssm.py``,
+``xlstm.py``), and the assembly (``model.py``).
+"""
+
+from .config import ArchConfig, get_config, list_configs, register
+from .model import Model, padded_vocab
+
+__all__ = ["ArchConfig", "Model", "get_config", "list_configs", "register",
+           "padded_vocab"]

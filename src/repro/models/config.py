@@ -1,0 +1,200 @@
+"""Architecture configuration.
+
+One ``ArchConfig`` describes any of the 10 assigned architectures (plus
+reduced smoke-test variants).  The layer stack is expressed as a repeating
+*pattern* of block kinds — scanning over pattern units keeps HLO size
+O(pattern) instead of O(layers) while preserving layer order, and gives the
+roofline tool natural per-block cost units.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# block kinds usable in a layer pattern
+ATTN = "attn"            # global self-attention + MLP
+LOCAL = "local"          # sliding-window self-attention + MLP
+MAMBA2 = "mamba2"        # Mamba-2 / SSD block
+SLSTM = "slstm"          # xLSTM scalar-memory block
+MLSTM = "mlstm"          # xLSTM matrix-memory block
+MOE = "moe"              # attention + MoE FFN
+DENSE = "dense"          # attention + dense FFN (used inside MoE archs)
+SHARED_ATTN = "shared_attn"  # zamba2 shared-weight attention block
+CROSS = "cross"          # self-attention + cross-attention + MLP (vlm/encdec)
+
+KNOWN_BLOCKS = {ATTN, LOCAL, MAMBA2, SLSTM, MLSTM, MOE, DENSE, SHARED_ATTN, CROSS}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|audio|vlm
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    # --- layer stack: `pattern` repeated `pattern_repeats` times, then
+    # `tail` (non-repeated) blocks.  len(pattern)*repeats + len(tail) = L.
+    pattern: Tuple[str, ...] = (ATTN,)
+    pattern_repeats: int = 1
+    tail: Tuple[str, ...] = ()
+    head_dim: Optional[int] = None    # default d_model // num_heads
+    qkv_bias: bool = False
+    # --- gemma2-style extras
+    attn_softcap: float = 0.0
+    logit_softcap: float = 0.0
+    sliding_window: int = 0           # for LOCAL blocks
+    post_block_norm: bool = False     # gemma2 sandwich norms
+    # --- MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden width
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01   # load-balance aux loss
+    # expert-parallel dispatch groups (perf knob): 0/1 = global top-C
+    # dispatch (GShard-style, baseline); g>1 = per-group routing with
+    # per-group capacity — groups align with the data axis so token
+    # gather/scatter stays shard-local and only the dispatched copies move
+    # (EP all-to-all).  See EXPERIMENTS.md §Perf (kimi-k2 iterations).
+    moe_dispatch_groups: int = 0
+    # --- SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256              # SSD chunk length
+    # --- xLSTM
+    xlstm_head_dim: int = 0           # default d_model // num_heads
+    # --- encoder-decoder (whisper-style)
+    encoder_layers: int = 0
+    encoder_seq: int = 0              # stub frontend tokens (audio frames)
+    # --- VLM cross-attention
+    vision_seq: int = 0               # stub patch-embedding tokens
+    # --- misc
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    dtype: str = "bfloat16"
+    # attention reference path: query-chunk size for memory-efficient attn
+    attn_q_chunk: int = 1024
+    # decode KV-cache dtype: "bfloat16" (baseline) or "int8" (per-token,
+    # per-head absmax quantization — halves decode HBM traffic; §Perf)
+    kv_cache_dtype: str = "bfloat16"
+    # remat policy for train: "none" | "block" | "dots"
+    remat: str = "block"
+    use_pallas: bool = False          # TPU kernels (XLA ref path when False)
+
+    # ------------------------------------------------------------------ api
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.pattern_repeats + len(self.tail)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff per-token decode state is o(seq): SSM/hybrid/linear-attn.
+
+        Hybrid archs still carry attention KV caches, but those shard over
+        the mesh; pure full-attention archs are skipped for ``long_500k``
+        (see DESIGN.md §Arch-applicability)."""
+        kinds = set(self.pattern) | set(self.tail)
+        return bool(kinds & {MAMBA2, SLSTM, MLSTM})
+
+    def validate(self) -> "ArchConfig":
+        kinds = set(self.pattern) | set(self.tail)
+        unknown = kinds - KNOWN_BLOCKS
+        if unknown:
+            raise ValueError(f"{self.name}: unknown block kinds {unknown}")
+        if self.num_heads % max(1, self.num_kv_heads):
+            raise ValueError(f"{self.name}: heads not divisible by kv heads")
+        if MOE in kinds and not (self.num_experts and self.experts_per_token):
+            raise ValueError(f"{self.name}: MoE blocks need expert config")
+        if MAMBA2 in kinds and not self.ssm_state:
+            raise ValueError(f"{self.name}: mamba2 blocks need ssm_state")
+        return self
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test-sized sibling of this architecture (same family,
+        same block pattern, tiny dims)."""
+        defaults = dict(
+            name=f"{self.name}-smoke",
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            d_ff=128,
+            vocab_size=256,
+            pattern=self.pattern,
+            pattern_repeats=min(self.pattern_repeats, 2),
+            tail=self.tail[: 2],
+            head_dim=16 if self.head_dim else None,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token
+            else 0,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            moe_d_ff=32 if self.moe_d_ff else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=16,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=24 if self.encoder_seq else 0,
+            vision_seq=24 if self.vision_seq else 0,
+            sliding_window=16 if self.sliding_window else 0,
+            attn_q_chunk=32,
+            dtype="float32",
+            remat="none",
+        )
+        defaults.update(overrides)
+        keep = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name not in defaults
+        }
+        return ArchConfig(**{**keep, **defaults}).validate()
+
+
+# global registry populated by repro.configs
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(config: ArchConfig) -> ArchConfig:
+    config.validate()
+    _REGISTRY[config.name] = config
+    return config
+
+
+def get_config(name: str) -> ArchConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; known: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_configs() -> Tuple[str, ...]:
+    import repro.configs  # noqa: F401
+
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,394 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full / sliding-window / cross),
+and gated MLPs.
+
+The attention *reference path* is a memory-efficient chunked implementation
+(scan over query chunks — flash-style memory behavior at the XLA level) so
+that 32k-token prefills fit HBM without a kernel; the Pallas flash kernel
+(``repro.kernels``) replaces it on real TPUs via ``cfg.use_pallas``.
+
+All activations carry logical-axis sharding constraints so that bodies lower
+identically whether inside the full model or standalone (roofline tool).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamDef
+from .scan import instrumented_scan
+from .sharding import AX0, Ax, constrain
+
+NEG_INF = -2.0**30  # large-but-finite: avoids NaN from all-masked rows
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(d: int, dtype: str) -> ParamDef:
+    return ParamDef(shape=(d,), axes=("embed",), dtype=dtype, init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention parameter defs
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ArchConfig, *, cross: bool = False) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.dtype
+    defs: Dict[str, ParamDef] = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), dt, init="zeros")
+        defs["bk"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), dt, init="zeros")
+        defs["bv"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), dt, init="zeros")
+    return defs
+
+
+def _project_qkv(
+    params: Dict[str, jax.Array],
+    xq: jax.Array,
+    xkv: jax.Array,
+    cfg: ArchConfig,
+    q_positions: jax.Array,
+    kv_positions: Optional[jax.Array],
+    *,
+    rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    # constrain BEFORE rope as well as after: otherwise GSPMD propagation
+    # invents partial shardings for the projection outputs and pays
+    # full-replication reshards at the rope split/concat ops.
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    if rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        if kv_positions is not None:
+            k = apply_rope(k, kv_positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+# ---------------------------------------------------------------------------
+# chunked (memory-efficient) attention — the XLA reference path
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(
+    q: jax.Array,          # (B, Cq, KV, G, hd) one query chunk, grouped
+    k: jax.Array,          # (B, S, KV, hd)
+    v: jax.Array,          # (B, S, KV, hd)
+    q_start: jax.Array,    # scalar: global position of the chunk's first query
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    kv_valid_len: Optional[jax.Array],
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqngk,bsnk->bngqs", q, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    s_len = k.shape[1]
+    q_pos = q_start + jnp.arange(q.shape[1])
+    k_pos = jnp.arange(s_len)
+    mask = jnp.ones((q.shape[1], s_len), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_valid_len is not None:
+        mask &= k_pos[None, :] < kv_valid_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bngqs,bsnk->bqngk", probs, v)
+
+
+def multi_head_attention(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    xkv: Optional[jax.Array] = None,
+    rope: bool = True,
+    q_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    GQA: queries grouped as (KV, G) so each KV head serves G query heads.
+    Scans over query chunks so peak score memory is O(q_chunk · S).
+    """
+    b, s, _ = x.shape
+    kv_src = xkv if xkv is not None else x
+    positions = jnp.arange(s)
+    kv_positions = None if xkv is not None else positions
+    q, k, v = _project_qkv(
+        params, x, kv_src, cfg, positions, kv_positions, rope=rope and xkv is None
+    )
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+
+    if cfg.use_pallas and xkv is None:
+        from repro.kernels.ops import attention as pallas_attention
+
+        qh = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        out = pallas_attention(qh, kh, vh, causal, window, cfg.attn_softcap)
+        out = out.transpose(0, 2, 1, 3)
+        out = constrain(out, "batch", "seq", "heads", "head_dim")
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return constrain(y, "batch", "seq", "embed")
+
+    chunk = min(q_chunk or cfg.attn_q_chunk, s)
+    softcap = cfg.attn_softcap
+    if s % chunk != 0:
+        chunk = s  # irregular sizes: single chunk (smoke tests)
+
+    if chunk == s:
+        out = _attend_chunk(
+            q, k, v, jnp.int32(0),
+            causal=causal, window=window, softcap=softcap, kv_valid_len=None,
+        )
+    else:
+        n_chunks = s // chunk
+        q_chunks = q.reshape(b, n_chunks, chunk, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+        def body(carry, xs):
+            k_, v_ = carry
+            idx, q_c = xs
+            o = _attend_chunk(
+                q_c, k_, v_, idx * chunk,
+                causal=causal, window=window, softcap=softcap, kv_valid_len=None,
+            )
+            return carry, o
+
+        kv_ax = Ax(("batch", "seq", "kv_heads", "head_dim"))
+        _, outs = instrumented_scan(
+            body,
+            (k, v),
+            (jnp.arange(n_chunks), q_chunks),
+            name="attn_q_chunks",
+            logical_axes=(
+                (kv_ax, kv_ax),
+                (AX0, Ax(("batch", None, "kv_heads", "q_per_kv",
+                          "head_dim"))),
+            ),
+        )
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, hd)
+
+    out = out.reshape(b, s, h, hd)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per token × head absmax)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., hd) float → (int8 values, f32 scale over the last axis)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode-step attention over a KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    params: Dict[str, jax.Array],
+    x: jax.Array,              # (B, 1, d)
+    cache_k: jax.Array,        # (B, S_max, KV, hd) — bf16 or int8
+    cache_v: jax.Array,
+    position: jax.Array,       # scalar int: index of the new token
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+    cross: bool = False,
+    k_scale: Optional[jax.Array] = None,   # (B, S_max, KV) — int8 caches
+    v_scale: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array,
+           Optional[jax.Array], Optional[jax.Array]]:
+    """One-token decode: append K/V at ``position`` (self-attention) and
+    attend over the valid prefix.  For cross-attention the cache is the
+    encoder/vision projection and is not updated.  With ``k_scale`` the
+    caches are int8 (per token × head absmax) and dequantized on read — on
+    TPU the dequant fuses into the attention matmul's cache stream."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), position, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if "bk" in params:
+            k_new = k_new + params["bk"]
+            v_new = v_new + params["bv"]
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        if k_scale is not None:
+            k8, ks_new = kv_quantize(k_new)
+            v8, vs_new = kv_quantize(v_new)
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k8, (0, position, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v8, (0, position, 0, 0))
+            k_scale = jax.lax.dynamic_update_slice(
+                k_scale, ks_new, (0, position, 0))
+            v_scale = jax.lax.dynamic_update_slice(
+                v_scale, vs_new, (0, position, 0))
+        else:
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k_new.astype(cache_k.dtype), (0, position, 0, 0)
+            )
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v_new.astype(cache_v.dtype), (0, position, 0, 0)
+            )
+        cache_k = constrain(cache_k, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+        cache_v = constrain(cache_v, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+        valid_len = position + 1
+    else:
+        valid_len = None
+
+    if k_scale is not None:
+        k_eff = kv_dequantize(cache_k, k_scale, x.dtype)
+        v_eff = kv_dequantize(cache_v, v_scale, x.dtype)
+    else:
+        k_eff, v_eff = cache_k, cache_v
+
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    q = q.reshape(b, 1, kvh, g, hd)
+    if not cross and window > 0:
+        # sliding window: positions ≤ pos−window are masked inside the chunk
+        out = _attend_chunk(
+            q, k_eff, v_eff, position,
+            causal=True, window=window, softcap=cfg.attn_softcap,
+            kv_valid_len=valid_len,
+        )
+    else:
+        out = _attend_chunk(
+            q, k_eff, v_eff, position if not cross else jnp.int32(0),
+            causal=not cross, window=0, softcap=cfg.attn_softcap,
+            kv_valid_len=valid_len,
+        )
+    out = out.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, "embed"), cache_k, cache_v, \
+        k_scale, v_scale
+
+
+def prefill_kv(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache_len: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Project K/V for a whole prompt into a fresh cache of ``cache_len``."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = apply_rope(k, positions, cfg.rope_theta)
+    pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d, f, dt = cfg.d_model, d_ff or cfg.d_ff, cfg.dtype
+    defs = {
+        "w1": ParamDef((d, f), ("embed", "mlp"), dt),
+        "w2": ParamDef((f, d), ("mlp", "embed"), dt),
+    }
+    if cfg.act in ("silu", "geglu"):  # gated variants need a third matrix
+        defs["w3"] = ParamDef((d, f), ("embed", "mlp"), dt)
+    return defs
+
+
+def _activate(x: jax.Array, act: str) -> jax.Array:
+    if act in ("silu",):
+        return jax.nn.silu(x)
+    if act in ("gelu", "geglu"):
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def mlp(params: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"])
+    h = _activate(h, act)
+    if "w3" in params:
+        h = h * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    h = constrain(h, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w2"])
+    return constrain(y, "batch", "seq", "embed")

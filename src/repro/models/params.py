@@ -1,0 +1,106 @@
+"""Parameter trees: declarative specs → abstract / sharded / materialized.
+
+Models declare parameters as trees of ``ParamDef`` (shape, dtype, logical
+axes, init scale).  From one spec tree we derive:
+
+* ``abstract(tree)``      — ShapeDtypeStructs (dry-run lowering, no memory);
+* ``specs(tree)``         — PartitionSpecs via the active sharding rules;
+* ``initialize(key, tree)`` — materialized arrays (smoke tests / examples).
+
+No Flax; pure pytrees, so everything composes with jax.jit/shard_map and the
+AFT checkpoint layer (which persists leaves as versioned storage keys).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import logical_to_spec
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "fan_in"      # fan_in | zeros | ones | normal | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        tree,
+        is_leaf=is_def,
+    )
+
+
+def specs(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda d: logical_to_spec(d.axes), tree, is_leaf=is_def)
+
+
+def axes_tree(tree: PyTree) -> PyTree:
+    """ParamDef tree → Ax tree (roofline body-input shardings)."""
+    from .sharding import Ax
+
+    return jax.tree.map(lambda d: Ax(d.axes), tree, is_leaf=is_def)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef) -> jax.Array:
+    dtype = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    if d.init == "embed":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    # fan_in (LeCun-ish): scale by the contracting dimension — for stacked
+    # layer params the leading "layers" axis is excluded from fan-in.
+    shape = d.shape
+    fan_axes = [s for s, a in zip(shape, d.axes) if a not in ("layers",)]
+    fan_in = fan_axes[0] if fan_axes else 1
+    std = d.scale / np.sqrt(max(1, fan_in))
+    return (std * jax.random.normal(key, d.shape)).astype(dtype)
+
+
+def initialize(key: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    out = []
+    for i, d in enumerate(leaves):
+        out.append(_init_leaf(jax.random.fold_in(key, i), d))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def param_bytes(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    total = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        itemsize = jnp.dtype(getattr(leaf, "dtype", "bfloat16")).itemsize
+        total += n * itemsize
+    return total

@@ -1,0 +1,98 @@
+"""Instrumented ``lax.scan`` for scan-aware roofline accounting.
+
+XLA's ``cost_analysis`` counts a while-loop body exactly once regardless of
+trip count.  Every scan in the model stack therefore goes through
+``instrumented_scan``: when a ``ScanCollector`` is active (roofline tracing),
+the wrapper records the body function plus the exact carry/x abstract values
+and trip count, building a tree of nested scans.  The roofline tool then
+lowers each body *separately* under the same mesh and applies
+
+    corrected(node) = cost(node) + Σ_child [ len(child)·corrected(child)
+                                             − cost(child) ]
+
+recursively (see launch/roofline.py), recovering true whole-program costs.
+
+Bodies must take all tensor inputs through ``carry``/``xs`` (no tracer
+closures) — model code threads shared/unstacked weights through the carry.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+@dataclass
+class ScanRecord:
+    name: str
+    body: Callable
+    carry_sds: Any
+    x_sds: Any          # one slice of xs (leading axis removed); None if no xs
+    length: int
+    children: List["ScanRecord"] = field(default_factory=list)
+    # logical sharding axes for (carry, x-slice): pytrees matching
+    # carry/x_sds whose leaves are tuples of logical axis names (() for
+    # replicated/scalar).  The roofline tool lowers bodies with the true
+    # per-chip input shardings derived from these.
+    logical_axes: Any = None
+
+
+class ScanCollector:
+    """Context manager that gathers the scan tree during a trace."""
+
+    def __init__(self) -> None:
+        self.root = ScanRecord("<root>", None, None, None, 1)
+
+    def __enter__(self) -> "ScanCollector":
+        _state.stack = [self.root]
+        return self
+
+    def __exit__(self, *exc) -> None:
+        del _state.stack
+
+
+def _sds(x: Any) -> Any:
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), x
+    )
+
+
+def instrumented_scan(
+    body: Callable,
+    carry: Any,
+    xs: Any = None,
+    *,
+    length: Optional[int] = None,
+    name: str = "scan",
+    unroll: int = 1,
+    logical_axes: Any = None,
+):
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        return jax.lax.scan(body, carry, xs, length=length, unroll=unroll)
+    if length is None:
+        leaves = jax.tree.leaves(xs)
+        if not leaves:
+            raise ValueError("instrumented_scan needs xs or length")
+        length = leaves[0].shape[0]
+    x_slice = (
+        None
+        if xs is None
+        else jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], jnp.result_type(a)), xs
+        )
+    )
+    rec = ScanRecord(name, body, _sds(carry), x_slice, length,
+                     logical_axes=logical_axes)
+    stack[-1].children.append(rec)
+    stack.append(rec)
+    try:
+        return jax.lax.scan(body, carry, xs, length=length, unroll=unroll)
+    finally:
+        stack.pop()

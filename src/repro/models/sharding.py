@@ -1,0 +1,155 @@
+"""Logical-axis sharding (MaxText-style logical→physical rules).
+
+Every parameter and activation is annotated with *logical* axis names; a rule
+table maps those to mesh axes.  The same model code then runs on the 1-device
+CPU mesh (everything maps to None), the single-pod ``(data, model)`` mesh, and
+the multi-pod ``(pod, data, model)`` mesh — only the rules change.
+
+Baseline layout (megatron TP + DP, the dry-run default):
+
+=============  =========================== =============
+logical axis    meaning                     physical
+=============  =========================== =============
+``batch``       global batch                ("pod","data")
+``seq``         sequence (activations)      None (SP: "model")
+``cache_seq``   KV-cache sequence           None (long-ctx: "data")
+``vocab``       embedding/logits vocab      "model"
+``heads``       attention heads             "model"
+``kv_heads``    KV heads                    "model"
+``mlp``         FFN hidden                  "model"
+``experts``     MoE experts                 "model"
+``embed``       d_model                     None
+``ssm_heads``   SSD heads                   "model"
+=============  =========================== =============
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+
+class Ax:
+    """Leaf marker carrying logical axis names for roofline body lowering.
+
+    A plain (unregistered) class, so jax.tree treats it as a leaf — axes
+    trees mirror value pytrees exactly.
+    """
+
+    __slots__ = ("axes",)
+
+    def __init__(self, axes: Sequence[Optional[str]]):
+        self.axes = tuple(axes)
+
+    def __repr__(self) -> str:
+        return f"Ax{self.axes}"
+
+
+def ax(*names: Optional[str]) -> Ax:
+    return Ax(names)
+
+
+AX0 = Ax(())  # scalar / replicated
+
+# default: megatron-style tensor parallel over "model", batch over pod+data
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "q_per_kv": None,
+    "head_dim": None,
+    "embed": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_embed": "data",   # expert tensors' d_model axis: 2-D (model×data)
+    "expert_mlp": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,       # stacked scanned params
+    "frames": None,       # stub modality tokens
+}
+
+_state = threading.local()
+
+
+def current_rules() -> Rules:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+def current_mesh() -> Optional[Mesh]:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is not None:
+        return mesh
+    env = jax.sharding.get_abstract_mesh()
+    return None if env is None or env.empty else None
+
+
+@contextmanager
+def sharding_rules(rules: Rules, mesh: Optional[Mesh] = None):
+    prev_rules = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules = {**DEFAULT_RULES, **rules}
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        if prev_rules is None:
+            del _state.rules
+        else:
+            _state.rules = prev_rules
+        _state.mesh = prev_mesh
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Optional[Rules] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules,
+    dropping mesh axes that do not exist in the active mesh."""
+    rules = rules or current_rules()
+    mesh = getattr(_state, "mesh", None)
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    out = []
+    used = set()
+    for ax in axes:
+        entry = rules.get(ax) if ax is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        parts = entry if isinstance(entry, tuple) else (entry,)
+        parts = tuple(
+            p for p in parts
+            if (mesh_axes is None or p in mesh_axes) and p not in used
+        )
+        used.update(parts)
+        if not parts:
+            out.append(None)
+        elif len(parts) == 1:
+            out.append(parts[0])
+        else:
+            out.append(parts)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes))

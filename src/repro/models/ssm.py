@@ -1,0 +1,246 @@
+"""Mamba-2 (SSD — state-space dual) blocks.
+
+Training/prefill uses the chunked SSD algorithm (Mamba-2 paper, Listing 1):
+intra-chunk quadratic attention-like term + inter-chunk linear recurrence
+over chunk states, with the inter-chunk scan instrumented for roofline
+accounting.  Decode is the O(1)-per-token state update.  The Pallas kernel
+(``repro.kernels.ssd_scan``) replaces the chunked reference on TPU.
+
+Shapes follow the paper: ``x`` split into heads (H, P=head_dim); scalar decay
+``A`` per head; shared ``B``/``C`` of state size N (single group).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamDef
+from .scan import instrumented_scan
+from .sharding import Ax, constrain
+
+
+def mamba2_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv = cfg.ssm_conv
+    # in_proj emits [z (gate), x, B, C, dt]
+    zxbcdt = 2 * di + 2 * n + h
+    return {
+        "in_proj": ParamDef((d, zxbcdt), ("embed", "mlp"), dt),
+        "conv_w": ParamDef((conv, di + 2 * n), ("conv", "mlp"), dt, scale=0.5),
+        "conv_b": ParamDef((di + 2 * n,), ("mlp",), dt, init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), "float32", init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), "float32", init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "float32", init="zeros"),
+        "norm": ParamDef((di,), ("mlp",), dt, init="ones"),
+        "out_proj": ParamDef((di, d), ("mlp", "embed"), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad,
+        w[:, None, :],  # (K, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum x[..., j+1..i] (i ≥ j)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) pre-scaled inputs
+    dt: jax.Array,     # (B, S, H)    softplus'd timestep
+    a: jax.Array,      # (H,)         negative decay rate
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    x = x.astype(jnp.float32)
+    da = dt * a[None, None, :]                     # (B, S, H) per-step log decay
+    xdt = x * dt[..., None]                        # input scaled by Δt
+
+    def split(t):  # (B, S, ...) -> (NC, B, chunk, ...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dac, bc, cc = split(xdt), split(da), split(b_mat), split(c_mat)
+
+    # ---- intra-chunk (quadratic within chunk, parallel over chunks) -------
+    # index legend: c=chunk idx, b=batch, q/k=positions, h=heads, p=head dim,
+    # j=state dim
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))   # (NC,B,H,chunk,chunk)
+    scores = jnp.einsum("cbqj,cbkj->cbqk", cc, bc)       # (NC,B,chunk,chunk)
+    y_intra = jnp.einsum(
+        "cbhqk,cbqk,cbkhp->cbqhp", lmat, scores, xc
+    )
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(
+        jnp.cumsum(dac, axis=2)[:, :, -1:, :] - jnp.cumsum(dac, axis=2)
+    )  # (NC,B,chunk,H): exp(sum_{r>t} da_r)
+    states = jnp.einsum("cbkj,cbkh,cbkhp->cbhpj", bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence (instrumented scan) ------------------------
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))          # (NC,B,H)
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def body(carry, inp):
+        state = carry
+        new_state, decay = inp
+        out_state = state  # state *entering* the chunk
+        state = state * decay[..., None, None] + new_state
+        return state, out_state
+
+    st_ax = Ax(("batch", "ssm_heads", None, None))
+    final_state, entry_states = instrumented_scan(
+        body, h0, (states, chunk_decay), name="ssd_interchunk",
+        logical_axes=(st_ax, (st_ax, Ax(("batch", "ssm_heads")))),
+    )
+
+    # ---- inter-chunk contribution ------------------------------------------
+    decay_from_start = jnp.exp(jnp.cumsum(dac, axis=2))   # (NC,B,chunk,H)
+    y_inter = jnp.einsum(
+        "cbqj,cbqh,cbhpj->cbqhp", cc, decay_from_start, entry_states
+    )
+
+    y = (y_intra + y_inter).swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def mamba2_forward(
+    params: Dict[str, jax.Array],
+    xin: jax.Array,    # (B, S, d_model)
+    cfg: ArchConfig,
+) -> jax.Array:
+    """Full-sequence Mamba-2 block (training / prefill)."""
+    y, _ = mamba2_sequence(params, xin, cfg, init_state=None)
+    return y
+
+
+def mamba2_sequence(
+    params: Dict[str, jax.Array],
+    xin: jax.Array,
+    cfg: ArchConfig,
+    init_state: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, _ = xin.shape
+    di, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", xin, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    x, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    x = constrain(x, "batch", "seq", "mlp")
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )  # (B, S, H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    xh = x.reshape(bsz, s, h, p)
+    if cfg.use_pallas and init_state is None:
+        from repro.kernels.ops import ssd as pallas_ssd
+
+        y, state = pallas_ssd(
+            (xh * dt[..., None]).astype(jnp.float32),
+            dt * a[None, None, :],
+            b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+            chunk=cfg.ssm_chunk,
+        )
+    else:
+        y, state = ssd_chunked(
+            xh, dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+            cfg.ssm_chunk, init_state,
+        )
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(xin.dtype)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(
+        xin.dtype
+    ) * params["norm"]
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return constrain(out, "batch", "seq", "embed"), state
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) per-token state update
+# ---------------------------------------------------------------------------
+
+def mamba2_decode_step(
+    params: Dict[str, jax.Array],
+    xin: jax.Array,            # (B, 1, d_model)
+    conv_state: jax.Array,     # (B, K-1, di + 2N) trailing inputs
+    ssm_state: jax.Array,      # (B, H, P, N)
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    bsz = xin.shape[0]
+    di, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", xin, params["in_proj"])[:, 0]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    # conv over the (K-1) stored inputs + current
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :]
+    x, b_mat, c_mat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])                                  # (B,H)
+    xh = x.reshape(bsz, h, p).astype(jnp.float32)
+    upd = jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, b_mat.astype(jnp.float32), dt
+    )
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c_mat.astype(jnp.float32))
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(
+        xin.dtype
+    ) * params["norm"]
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, new_conv_state, ssm_state
+
+
+def ssd_reference(
+    x: jax.Array, dt: jax.Array, a: jax.Array, b_mat: jax.Array, c_mat: jax.Array
+) -> jax.Array:
+    """O(S²) oracle: y_t = Σ_{s≤t} C_t·(∏_{r=s+1..t} exp(dt_r a)) B_s x_s dt_s."""
+    bsz, s, h, p = x.shape
+    da = (dt * a[None, None, :]).astype(jnp.float32)      # (B,S,H)
+    lmat = jnp.exp(_segsum(da.transpose(0, 2, 1)))        # (B,H,S,S)
+    scores = jnp.einsum("bqn,bkn->bqk", c_mat, b_mat)     # (B,S,S)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    return jnp.einsum("bhqk,bqk,bkhp->bqhp", lmat, scores, xdt)

@@ -1,0 +1,344 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, true recurrence).
+
+mLSTM is a gated linear-attention recurrence
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix state,  H × P × N)
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer,    H × N)
+    h_t = o_t ⊙ (C_t q_t) / max(|n_t·q_t|, 1)
+
+computed here in the *chunkwise-parallel stabilized* form (quadratic within a
+chunk, linear recurrence over chunk states — the same HBM-friendly structure
+as the SSD kernel; the inter-chunk scan is roofline-instrumented).  All gate
+math is fp32 with a running log-scale stabilizer ``m`` so exp() never
+overflows, exactly as in the xLSTM paper's Appendix.
+
+sLSTM keeps per-unit scalar state with *recurrent* gate connections
+(block-diagonal per head), which forces a sequential time scan — that scan is
+the architectural point of sLSTM (state tracking beyond what parallelizable
+forms can express), so we implement it faithfully with ``instrumented_scan``.
+
+Both give O(1)-per-token decode updates (``*_decode_step``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamDef
+from .scan import instrumented_scan
+from .sharding import Ax, constrain
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype
+    di = 2 * d                     # block expansion factor 2 (xLSTM paper)
+    h = cfg.num_heads
+    return {
+        "up_proj": ParamDef((d, 2 * di), ("embed", "mlp"), dt),
+        "wq": ParamDef((di, di), ("mlp", "heads"), dt),
+        "wk": ParamDef((di, di), ("mlp", "heads"), dt),
+        "wv": ParamDef((di, di), ("mlp", "heads"), dt),
+        "w_if": ParamDef((di, 2 * h), ("mlp", "heads"), "float32", scale=0.1),
+        "b_if": ParamDef((2 * h,), ("heads",), "float32", init="zeros"),
+        "wo": ParamDef((di, di), ("mlp", "heads"), dt),
+        "norm": ParamDef((di,), ("mlp",), dt, init="ones"),
+        "down_proj": ParamDef((di, d), ("mlp", "embed"), dt),
+    }
+
+
+def _mlstm_project(params, xin, cfg):
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    p = di // h
+    up = jnp.einsum("bsd,de->bse", xin, params["up_proj"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xm, params["wq"]).reshape(*xm.shape[:2], h, p)
+    k = jnp.einsum("bse,ef->bsf", xm, params["wk"]).reshape(*xm.shape[:2], h, p)
+    v = jnp.einsum("bse,ef->bsf", xm, params["wv"]).reshape(*xm.shape[:2], h, p)
+    k = k / jnp.sqrt(jnp.float32(p)).astype(k.dtype)
+    gates = (
+        jnp.einsum("bse,ef->bsf", xm.astype(jnp.float32), params["w_if"])
+        + params["b_if"]
+    )
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # (B,S,H) each
+    o_gate = jax.nn.sigmoid(
+        jnp.einsum("bse,ef->bsf", xm, params["wo"]).reshape(*xm.shape[:2], h, p)
+    )
+    return xm, z, q, k, v, i_raw, f_raw, o_gate
+
+
+def _mlstm_finish(params, htilde, o_gate, z, xin, cfg):
+    b, s = xin.shape[:2]
+    di = 2 * cfg.d_model
+    y = (htilde * o_gate.astype(jnp.float32)).reshape(b, s, di).astype(xin.dtype)
+    # group-norm per head is approximated with a full RMS norm over di
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(
+        xin.dtype
+    ) * params["norm"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mlstm_chunked(
+    q: jax.Array,       # (B, S, H, P) fp any
+    k: jax.Array,       # (B, S, H, P)
+    v: jax.Array,       # (B, S, H, P)
+    i_raw: jax.Array,   # (B, S, H) fp32 log input gate pre-activation
+    f_raw: jax.Array,   # (B, S, H) fp32 forget gate pre-activation
+    chunk: int,
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stabilized chunkwise mLSTM.  Returns (h̃ (B,S,H,P), (C, n, m)).
+
+    State convention: ``C``/``n`` are stored *descaled* — the true state is
+    ``C · exp(m)`` — so all stored magnitudes stay O(1).
+    """
+    bsz, s, h, p = q.shape
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    lf = jax.nn.log_sigmoid(f_raw)                    # (B,S,H)
+    li = i_raw
+
+    def split(t):  # (B,S,...) -> (NC, B, chunk, ...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lfc, lic = split(q), split(k), split(v), split(lf), split(li)
+
+    csum = jnp.cumsum(lfc, axis=2)                    # inclusive within chunk
+    total = csum[:, :, -1, :]                         # (NC,B,H)
+
+    # log weight of source position s seen from chunk end: li_s + Σ_{r>s} lf_r
+    w_src = lic + total[:, :, None, :] - csum         # (NC,B,chunk,H)
+    m_src = jnp.max(w_src, axis=2)                    # (NC,B,H)
+
+    # ---- inter-chunk recurrence over (C, n, m) -----------------------------
+    if state is None:
+        c0 = jnp.zeros((bsz, h, p, p), jnp.float32)
+        n0 = jnp.zeros((bsz, h, p), jnp.float32)
+        m0 = jnp.full((bsz, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    # per-chunk summaries entering the scan
+    def body(carry, inp):
+        c_in, n_in, m_in = carry
+        k_c, v_c, w_c, m_srcc, tot = inp              # chunk tensors
+        entry = (c_in, n_in, m_in)
+        m_out = jnp.maximum(m_in + tot, m_srcc)       # (B,H)
+        scale_old = jnp.exp(m_in + tot - m_out)       # (B,H)
+        w = jnp.exp(w_c - m_out[:, None, :])          # (B,chunk,H)
+        c_new = c_in * scale_old[..., None, None] + jnp.einsum(
+            "bsh,bshp,bshn->bhpn", w, v_c, k_c
+        )
+        n_new = n_in * scale_old[..., None] + jnp.einsum("bsh,bshn->bhn", w, k_c)
+        return (c_new, n_new, m_out), entry
+
+    bh = Ax(("batch", "heads"))
+    chp = Ax(("batch", None, "heads", None))
+    (c_fin, n_fin, m_fin), entries = instrumented_scan(
+        body, (c0, n0, m0), (kc, vc, w_src, m_src, total),
+        name="mlstm_interchunk",
+        logical_axes=(
+            (Ax(("batch", "heads", None, None)),
+             Ax(("batch", "heads", None)), bh),
+            (chp, chp, Ax(("batch", None, "heads")), bh, bh),
+        ),
+    )
+    c_entry, n_entry, m_entry = entries               # (NC,B,...) state *before* chunk
+
+    # ---- within-chunk quadratic part --------------------------------------
+    # D[t,s] = Σ_{r≤t} lf_r − Σ_{r≤s} lf_r + li_s  for s ≤ t
+    dmat = csum[:, :, :, None, :] - csum[:, :, None, :, :] + lic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), 0)[None, None, :, :, None]
+    dmat = jnp.where(tri, dmat, -jnp.inf)             # (NC,B,q,s,H)
+    m_intra = jnp.max(dmat, axis=3)                   # (NC,B,q,H)
+    # contribution of the entering state at each position t: m_entry + Σ_{r≤t} lf
+    w_inter_log = m_entry[:, :, None, :] + csum       # (NC,B,q,H)
+    m_tot = jnp.maximum(m_intra, w_inter_log)
+    m_tot = jnp.maximum(m_tot, -1e30)                 # keep finite
+    w_intra = jnp.exp(dmat - m_tot[:, :, :, None, :])     # (NC,B,q,s,H)
+    w_inter = jnp.exp(w_inter_log - m_tot)                # (NC,B,q,H)
+
+    scores = jnp.einsum("cbqhn,cbshn->cbqsh", qc, kc)
+    num = jnp.einsum("cbqsh,cbqsh,cbshp->cbqhp", w_intra, scores, vc)
+    num = num + jnp.einsum(
+        "cbqh,cbhpn,cbqhn->cbqhp", w_inter, c_entry, qc
+    )
+    den = jnp.einsum("cbqsh,cbqsh->cbqh", w_intra, scores)
+    den = den + jnp.einsum("cbqh,cbhn,cbqhn->cbqh", w_inter, n_entry, qc)
+    # stabilized max(|q·n|, 1):  1 in true scale = exp(−m) in stored scale
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))
+    htilde = num / den[..., None]
+    htilde = htilde.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return htilde, (c_fin, n_fin, m_fin)
+
+
+def mlstm_forward(params, xin, cfg: ArchConfig) -> jax.Array:
+    y, _ = mlstm_sequence(params, xin, cfg, state=None)
+    return y
+
+
+def mlstm_sequence(params, xin, cfg: ArchConfig, state):
+    xm, z, q, k, v, i_raw, f_raw, o_gate = _mlstm_project(params, xin, cfg)
+    chunk = cfg.ssm_chunk or 256
+    htilde, state = mlstm_chunked(q, k, v, i_raw, f_raw, chunk, state)
+    return _mlstm_finish(params, htilde, o_gate, z, xin, cfg), state
+
+
+def mlstm_decode_step(params, xin, state, cfg: ArchConfig):
+    """xin: (B,1,d); state: (C (B,H,P,P), n (B,H,P), m (B,H))."""
+    xm, z, q, k, v, i_raw, f_raw, o_gate = _mlstm_project(params, xin, cfg)
+    c_in, n_in, m_in = state
+    q1 = q[:, 0].astype(jnp.float32)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_raw[:, 0])              # (B,H)
+    li = i_raw[:, 0]
+    m_out = jnp.maximum(lf + m_in, li)
+    f_s = jnp.exp(lf + m_in - m_out)
+    i_s = jnp.exp(li - m_out)
+    c_new = c_in * f_s[..., None, None] + i_s[..., None, None] * jnp.einsum(
+        "bhp,bhn->bhpn", v1, k1
+    )
+    n_new = n_in * f_s[..., None] + i_s[..., None] * k1
+    num = jnp.einsum("bhpn,bhn->bhp", c_new, q1)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhn,bhn->bh", n_new, q1)), jnp.exp(-m_out)
+    )
+    htilde = (num / den[..., None])[:, None]          # (B,1,H,P)
+    out = _mlstm_finish(params, htilde, o_gate, z, xin, cfg)
+    return out, (c_new, n_new, m_out)
+
+
+def mlstm_reference(q, k, v, i_raw, f_raw) -> jax.Array:
+    """O(S·state) sequential oracle (tests only)."""
+    bsz, s, h, p = q.shape
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    c = jnp.zeros((bsz, h, p, p), jnp.float32)
+    n = jnp.zeros((bsz, h, p), jnp.float32)
+    m = jnp.full((bsz, h), -jnp.inf, jnp.float32)
+    outs = []
+    for t in range(s):
+        lf = jax.nn.log_sigmoid(f_raw[:, t])
+        li = i_raw[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        f_s = jnp.exp(lf + m - m_new)
+        i_s = jnp.exp(li - m_new)
+        c = c * f_s[..., None, None] + i_s[..., None, None] * jnp.einsum(
+            "bhp,bhn->bhpn", v[:, t], k[:, t]
+        )
+        n = n * f_s[..., None] + i_s[..., None] * k[:, t]
+        m = m_new
+        num = jnp.einsum("bhpn,bhn->bhp", c, q[:, t])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhn,bhn->bh", n, q[:, t])), jnp.exp(-m))
+        outs.append(num / den[..., None])
+    return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype
+    h = cfg.num_heads
+    p = d // h
+    return {
+        # input → 4 gate pre-activations (i, f, z, o), each (H, P)
+        "w_in": ParamDef((d, 4, h, p), ("embed", None, "heads", "head_dim"), "float32"),
+        "b_in": ParamDef((4, h, p), (None, "heads", "head_dim"), "float32", init="zeros"),
+        # recurrent block-diagonal per head: h_{t-1} (H,P) → gates (4,H,P)
+        "r_gate": ParamDef((4, h, p, p), (None, "heads", "head_dim", None), "float32", scale=0.5),
+        "norm": ParamDef((d,), ("embed",), dt, init="ones"),
+        "out_proj": ParamDef((d, d), ("embed", "embed"), dt),
+    }
+
+
+def _slstm_cell(pre, state):
+    """pre: (B,4,H,P) gate pre-activations (input + recurrent already summed);
+    state: (c, n, hprev, m) each (B,H,P)."""
+    c, n, _, m = state
+    i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, h_new, m_new
+
+
+def slstm_forward(params, xin, cfg: ArchConfig) -> jax.Array:
+    y, _ = slstm_sequence(params, xin, cfg, state=None)
+    return y
+
+
+def slstm_sequence(params, xin, cfg: ArchConfig, state):
+    b, s, d = xin.shape
+    h, p = cfg.num_heads, d // cfg.num_heads
+    pre_in = (
+        jnp.einsum("bsd,dghp->bsghp", xin.astype(jnp.float32), params["w_in"])
+        + params["b_in"]
+    )  # (B,S,4,H,P)
+    if state is None:
+        zeros = jnp.zeros((b, h, p), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, h, p), -jnp.inf, jnp.float32))
+
+    def body(carry, x_t):
+        st, r_gate = carry
+        rec = jnp.einsum("bhp,ghpq->bghq", st[2], r_gate)
+        st = _slstm_cell(x_t + rec, st)
+        return (st, r_gate), st[2]
+
+    st_ax = Ax(("batch", "heads", "head_dim"))
+    (state, _), hs = instrumented_scan(
+        body, (state, params["r_gate"]), pre_in.swapaxes(0, 1),
+        name="slstm_time",
+        logical_axes=(
+            ((st_ax, st_ax, st_ax, st_ax),
+             Ax((None, "heads", "head_dim", None))),
+            Ax(("batch", None, "heads", "head_dim")),
+        ),
+    )
+    y = hs.swapaxes(0, 1).reshape(b, s, d)            # (B,S,d) fp32
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps)).astype(xin.dtype) * params["norm"]
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return constrain(out, "batch", "seq", "embed"), state
+
+
+def slstm_decode_step(params, xin, state, cfg: ArchConfig):
+    b, _, d = xin.shape
+    pre = (
+        jnp.einsum("bsd,dghp->bsghp", xin.astype(jnp.float32), params["w_in"])[:, 0]
+        + params["b_in"]
+    )
+    rec = jnp.einsum("bhp,ghpq->bghq", state[2], params["r_gate"])
+    state = _slstm_cell(pre + rec, state)
+    y = state[2].reshape(b, 1, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps)).astype(xin.dtype) * params["norm"]
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, state

@@ -1,0 +1,5 @@
+"""Serving: batched decode engine with read-atomic weight refresh."""
+
+from .engine import ServeEngine, ServeConfig
+
+__all__ = ["ServeEngine", "ServeConfig"]

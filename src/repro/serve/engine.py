@@ -1,0 +1,142 @@
+"""Batched serving engine with AFT-backed atomic weight refresh.
+
+The serving-side instance of the paper's problem: a trainer (or fine-tuning
+job) publishes new weights as multi-key checkpoint transactions while
+replicas serve traffic.  Without atomic visibility a replica hot-swapping
+weights can assemble a *torn* parameter set — layer 7 from step 1000,
+layer 8 from step 900 (a fractured read, §2.1).  The engine's refresher
+restores inside one AFT read transaction, so read-atomic isolation makes
+the swap all-or-nothing; ``benchmarks/table2.py`` measures exactly this
+anomaly class on plain storage.
+
+Requests are batched per decode loop iteration (prompts bucketed by length;
+greedy or temperature sampling), and weights swap between iterations — the
+engine never mixes two weight versions inside one forward pass.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AftCheckpointer, CheckpointNotFound
+from repro.models import Model
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0          # 0 → greedy
+    refresh_every_s: float = 1.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, checkpointer: Optional[AftCheckpointer],
+                 config: ServeConfig = ServeConfig(),
+                 params: Optional[Any] = None):
+        self.model = model
+        self.ckpt = checkpointer
+        self.config = config
+        self._params = params
+        self._weights_step = -1
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._refresher: Optional[threading.Thread] = None
+        self.stats = {"refreshes": 0, "requests": 0, "tokens_out": 0}
+
+        max_len = config.max_len
+
+        def prefill(params, tokens):
+            return model.prefill(params, tokens, max_len)
+
+        def decode(params, state, tokens, position):
+            logits, state = model.decode_step(params, state, tokens, position)
+            return logits, state
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    # ------------------------------------------------------------- weights
+    def refresh_weights(self) -> bool:
+        """Atomically load the latest committed checkpoint.  Returns True if
+        a newer weight set was installed."""
+        if self.ckpt is None:
+            return False
+        try:
+            like = {"params": self.model.abstract_params()}
+            step, tree, _ = self.ckpt.restore(like=like)
+        except CheckpointNotFound:
+            return False
+        with self._lock:
+            if step <= self._weights_step:
+                return False
+            self._params = tree["params"]
+            self._weights_step = step
+            self.stats["refreshes"] += 1
+        return True
+
+    def start_refresher(self) -> None:
+        def loop():
+            while not self._stop.wait(self.config.refresh_every_s):
+                try:
+                    self.refresh_weights()
+                except Exception:
+                    pass  # storage blips are retried next round
+
+        self._refresher = threading.Thread(target=loop, daemon=True)
+        self._refresher.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._refresher is not None:
+            self._refresher.join(timeout=5)
+
+    @property
+    def weights_step(self) -> int:
+        return self._weights_step
+
+    # ------------------------------------------------------------- serving
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        t = self.config.temperature
+        if t <= 0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        return jax.random.categorical(key, logits[:, -1, :] / t, axis=-1)
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int,
+                 seed: int = 0) -> List[List[int]]:
+        """Batched generation.  Prompts in one call must share a length
+        (callers bucket by length — standard prefill bucketing)."""
+        assert prompts, "empty batch"
+        plen = len(prompts[0])
+        assert all(len(p) == plen for p in prompts), "bucket by length"
+        assert plen + max_new <= self.config.max_len
+        with self._lock:
+            params = self._params
+        assert params is not None, "no weights loaded"
+        self.stats["requests"] += len(prompts)
+
+        tokens = jnp.asarray(np.asarray(prompts, np.int32))
+        _, state = self._prefill(params, tokens)
+        # the last prompt token's logits come from decode of that token at
+        # its position: re-run the final position for the first new token
+        out = [[] for _ in prompts]
+        key = jax.random.key(seed)
+        cur = tokens[:, -1:]
+        position = plen - 1
+        for i in range(max_new):
+            key, sub = jax.random.split(key)
+            logits, state = self._decode(params, state, cur,
+                                         jnp.int32(position + i))
+            nxt = self._sample(logits, sub)
+            cur = nxt[:, None].astype(jnp.int32)
+            for b, tok in enumerate(np.asarray(nxt).tolist()):
+                out[b].append(int(tok))
+            self.stats["tokens_out"] += len(prompts)
+        return out

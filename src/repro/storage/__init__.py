@@ -1,0 +1,28 @@
+from .base import StorageEngine, StorageUnsupported
+from .localfs import LocalFSStorage
+from .memory import MemoryStorage
+from .sharded import ShardedStorage
+from .simulated import (
+    ENGINE_PRESETS,
+    LatencyModel,
+    SimulatedEngine,
+    dynamodb_like,
+    make_engine,
+    redis_like,
+    s3_like,
+)
+
+__all__ = [
+    "StorageEngine",
+    "StorageUnsupported",
+    "MemoryStorage",
+    "LocalFSStorage",
+    "ShardedStorage",
+    "SimulatedEngine",
+    "LatencyModel",
+    "ENGINE_PRESETS",
+    "make_engine",
+    "s3_like",
+    "dynamodb_like",
+    "redis_like",
+]

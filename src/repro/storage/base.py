@@ -1,0 +1,68 @@
+"""Storage engine interface.
+
+AFT's *only* requirement of the storage layer (§3.1): an update is durable
+once acknowledged.  No consistency, visibility, partitioning, or transactional
+guarantees are assumed — those are exactly what the shim provides above.
+
+One subtlety the protocols rely on (and that made AFT deployable over
+2020-era S3): AFT only ever writes **fresh keys** (a unique storage key per
+version, §3.3), so it needs read-after-write visibility for *new* keys only,
+never read-after-overwrite.  The eventually-consistent wrapper in
+``simulated.py`` models precisely that distinction, which is how the plain
+baselines of §6.1.2 exhibit anomalies while AFT, over the same engine, does
+not.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, Iterable, List, Optional
+
+
+class StorageUnsupported(Exception):
+    """Raised when an engine does not support an optional operation."""
+
+
+class StorageEngine(abc.ABC):
+    """A durable key → bytes store."""
+
+    #: whether ``put_batch`` persists many keys in one round trip (DynamoDB
+    #: ``BatchWriteItem`` style).  Engines without it still accept
+    #: ``put_batch`` but pay per-key latency (Redis-cluster style, §6.1.2).
+    supports_batch: bool = False
+
+    @abc.abstractmethod
+    def put(self, key: str, value: bytes) -> None:
+        """Durably persist ``value`` at ``key``.  Returns only once durable."""
+
+    @abc.abstractmethod
+    def get(self, key: str) -> Optional[bytes]:
+        """Fetch ``key``, or ``None`` if absent (or not yet visible)."""
+
+    @abc.abstractmethod
+    def delete(self, key: str) -> None:
+        ...
+
+    @abc.abstractmethod
+    def list_keys(self, prefix: str = "") -> List[str]:
+        """All keys with the given prefix, sorted lexicographically."""
+
+    # -- batched variants (default: loop) -----------------------------------
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        for k, v in items.items():
+            self.put(k, v)
+
+    def get_batch(self, keys: Iterable[str]) -> Dict[str, Optional[bytes]]:
+        return {k: self.get(k) for k in keys}
+
+    def delete_batch(self, keys: Iterable[str]) -> None:
+        for k in keys:
+            self.delete(k)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    # -- introspection (benchmark harness) -----------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {}

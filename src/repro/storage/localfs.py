@@ -1,0 +1,91 @@
+"""File-backed durable storage engine.
+
+One file per key beneath a root directory.  Writes go through a temp file +
+``os.replace`` so a crash never leaves a torn value — this is the engine's
+"durable once acknowledged" contract (§3.1); everything above it (atomic
+multi-key visibility) is AFT's job.  Survives process restarts, which the
+crash/resume training examples and tests rely on.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import urllib.parse
+from typing import Dict, List, Optional
+
+from .base import StorageEngine
+
+
+def _encode(key: str) -> str:
+    # '/' kept readable as directory separators; every other risky char quoted.
+    return "/".join(urllib.parse.quote(part, safe="") for part in key.split("/"))
+
+
+def _decode(path: str) -> str:
+    return "/".join(urllib.parse.unquote(part) for part in path.split("/"))
+
+
+class LocalFSStorage(StorageEngine):
+    supports_batch = True  # a batch is a loop of renames, but one fsync policy
+
+    def __init__(self, root: str, fsync: bool = False) -> None:
+        self.root = os.path.abspath(root)
+        self.fsync = fsync
+        os.makedirs(self.root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    # -- helpers -------------------------------------------------------------
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, _encode(key))
+
+    def _write_atomic(self, path: str, value: bytes) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(value)
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- StorageEngine -------------------------------------------------------
+    def put(self, key: str, value: bytes) -> None:
+        self._write_atomic(self._path(key), value)
+
+    def get(self, key: str) -> Optional[bytes]:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        for k, v in items.items():
+            self.put(k, v)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        out: List[str] = []
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for name in filenames:
+                if name.startswith(".tmp-"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, name), self.root)
+                key = _decode(rel.replace(os.sep, "/"))
+                if key.startswith(prefix):
+                    out.append(key)
+        return sorted(out)

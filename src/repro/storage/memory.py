@@ -1,0 +1,74 @@
+"""In-memory storage engine: the zero-latency substrate.
+
+Used directly for unit tests, and as the inner engine beneath the simulated
+cloud-engine wrappers (``simulated.py``) for benchmarks.
+"""
+
+from __future__ import annotations
+
+import threading
+from bisect import bisect_left
+from typing import Dict, List, Optional
+
+from .base import StorageEngine
+
+
+class MemoryStorage(StorageEngine):
+    supports_batch = True
+
+    def __init__(self) -> None:
+        self._data: Dict[str, bytes] = {}
+        # sorted key list for prefix scans; kept lazily in sync
+        self._keys: List[str] = []
+        self._keys_dirty = False
+        self._lock = threading.Lock()
+        self._puts = 0
+        self._gets = 0
+        self._deletes = 0
+
+    def put(self, key: str, value: bytes) -> None:
+        with self._lock:
+            if key not in self._data:
+                self._keys_dirty = True
+            self._data[key] = value
+            self._puts += 1
+
+    def get(self, key: str) -> Optional[bytes]:
+        with self._lock:
+            self._gets += 1
+            return self._data.get(key)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            if self._data.pop(key, None) is not None:
+                self._keys_dirty = True
+            self._deletes += 1
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        with self._lock:
+            for k, v in items.items():
+                if k not in self._data:
+                    self._keys_dirty = True
+                self._data[k] = v
+            self._puts += len(items)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            if self._keys_dirty:
+                self._keys = sorted(self._data)
+                self._keys_dirty = False
+            if not prefix:
+                return list(self._keys)
+            lo = bisect_left(self._keys, prefix)
+            hi = bisect_left(self._keys, prefix + "￿")
+            return self._keys[lo:hi]
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "puts": self._puts,
+                "gets": self._gets,
+                "deletes": self._deletes,
+                "keys": len(self._data),
+                "bytes": sum(len(v) for v in self._data.values()),
+            }

@@ -1,0 +1,74 @@
+"""Hash-sharded storage (Redis-cluster semantics).
+
+Each shard is independently linearizable but no guarantee spans shards; a
+multi-key write (``MSET``) can only batch keys that land on one shard
+(§6.1.2), so AFT "cannot consistently batch updates" over this engine — the
+put_batch below groups by shard and issues one call per shard touched.
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional
+
+from .base import StorageEngine
+
+
+class ShardedStorage(StorageEngine):
+    def __init__(self, shards: List[StorageEngine], name: str = "sharded") -> None:
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = shards
+        self.name = name
+        # batching helps only when all keys co-locate; callers shouldn't rely
+        # on a single round trip.
+        self.supports_batch = any(s.supports_batch for s in shards)
+
+    def _shard(self, key: str) -> StorageEngine:
+        return self.shards[zlib.crc32(key.encode()) % len(self.shards)]
+
+    def put(self, key: str, value: bytes) -> None:
+        self._shard(key).put(key, value)
+
+    def get(self, key: str) -> Optional[bytes]:
+        return self._shard(key).get(key)
+
+    def delete(self, key: str) -> None:
+        self._shard(key).delete(key)
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        groups: Dict[int, Dict[str, bytes]] = defaultdict(dict)
+        for k, v in items.items():
+            groups[zlib.crc32(k.encode()) % len(self.shards)][k] = v
+        for idx, group in groups.items():
+            self.shards[idx].put_batch(group)
+
+    def get_batch(self, keys: Iterable[str]) -> Dict[str, Optional[bytes]]:
+        groups: Dict[int, List[str]] = defaultdict(list)
+        for k in keys:
+            groups[zlib.crc32(k.encode()) % len(self.shards)].append(k)
+        out: Dict[str, Optional[bytes]] = {}
+        for idx, group in groups.items():
+            out.update(self.shards[idx].get_batch(group))
+        return out
+
+    def delete_batch(self, keys: Iterable[str]) -> None:
+        groups: Dict[int, List[str]] = defaultdict(list)
+        for k in keys:
+            groups[zlib.crc32(k.encode()) % len(self.shards)].append(k)
+        for idx, group in groups.items():
+            self.shards[idx].delete_batch(group)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        out: List[str] = []
+        for s in self.shards:
+            out.extend(s.list_keys(prefix))
+        return sorted(out)
+
+    def stats(self) -> Dict[str, int]:
+        agg: Dict[str, int] = defaultdict(int)
+        for s in self.shards:
+            for k, v in s.stats().items():
+                agg[k] += v
+        return dict(agg)

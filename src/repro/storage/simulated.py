@@ -1,0 +1,267 @@
+"""Simulated cloud storage engines.
+
+The paper evaluates AFT over AWS S3, AWS DynamoDB, and Redis (ElastiCache).
+This container has no cloud, so we reproduce each engine as a latency +
+consistency *model* wrapped around an in-process store.  Parameters are
+calibrated to the medians/tails reported in §6 (Fig 2, Fig 3):
+
+=============  ========  =========  ======================  =================
+engine         op median  tail       batching                consistency
+=============  ========  =========  ======================  =================
+S3-like        ~18 ms    heavy      none                    new keys RAW; in-
+                                                            place overwrites
+                                                            eventually visible
+DynamoDB-like  ~4 ms     moderate   BatchWriteItem-style    same as S3-like
+Redis-like     ~0.6 ms   light      MSET within one shard   per-shard
+                                                            linearizable
+=============  ========  =========  ======================  =================
+
+The consistency model captures the one property AFT actually exploits: 2020-era
+S3/DynamoDB gave read-after-write for **fresh keys** but only eventual
+consistency for overwrites.  AFT writes every version to a fresh key (§3.3), so
+it is immune; the "plain" baselines of §6.1.2 overwrite in place, which is the
+source of their RYW/FR anomalies (Table 2) together with non-atomic
+interleaving.
+
+``time_scale`` shrinks every sleep proportionally so the full benchmark suite
+fits in CI while preserving latency *ratios*; reported numbers are divided by
+the scale to recover engine-calibrated milliseconds.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+from .base import StorageEngine
+from .memory import MemoryStorage
+from .sharded import ShardedStorage
+
+
+@dataclass
+class LatencyModel:
+    """Lognormal-ish per-op latency: ``base + per_kb·size`` with a tail."""
+
+    base_ms: float
+    per_kb_ms: float = 0.0
+    sigma: float = 0.25          # lognormal shape; bigger ⇒ heavier tail
+    batch_base_ms: float = -1.0  # <0 ⇒ batching unsupported
+    batch_per_item_ms: float = 0.0
+
+    def sample(self, rng: random.Random, size_kb: float = 0.0) -> float:
+        mu = self.base_ms + self.per_kb_ms * size_kb
+        return mu * rng.lognormvariate(0.0, self.sigma)
+
+    def sample_batch(self, rng: random.Random, n: int, size_kb: float) -> float:
+        mu = self.batch_base_ms + self.batch_per_item_ms * n + self.per_kb_ms * size_kb
+        return mu * rng.lognormvariate(0.0, self.sigma)
+
+
+class SimulatedEngine(StorageEngine):
+    """Latency + consistency simulation over an inner engine."""
+
+    def __init__(
+        self,
+        inner: Optional[StorageEngine] = None,
+        *,
+        read: LatencyModel,
+        write: LatencyModel,
+        overwrite_visibility_lag_ms: float = 0.0,
+        time_scale: float = 1.0,
+        seed: int = 0,
+        name: str = "sim",
+    ) -> None:
+        self.inner = inner if inner is not None else MemoryStorage()
+        self.read_model = read
+        self.write_model = write
+        self.lag_ms = overwrite_visibility_lag_ms
+        self.time_scale = time_scale
+        self.name = name
+        self.supports_batch = write.batch_base_ms >= 0
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+        # overwrite consistency: key → (old value, visible_at) while the new
+        # value is still propagating.  Fresh keys are never entered here.
+        self._stale: Dict[str, tuple] = {}
+        self._stale_lock = threading.Lock()
+        self._op_ms_total = 0.0
+        self._ops = 0
+
+    # -- internals -----------------------------------------------------------
+    def _sleep(self, ms: float) -> None:
+        self._op_ms_total += ms
+        self._ops += 1
+        scaled = ms * self.time_scale / 1e3
+        if scaled > 0:
+            time.sleep(scaled)
+
+    def _sample(self, model_fn, *args) -> float:
+        with self._rng_lock:
+            return model_fn(self._rng, *args)
+
+    def _note_overwrite(self, key: str, old: Optional[bytes]) -> None:
+        if self.lag_ms <= 0 or old is None:
+            return
+        lag = self._sample(
+            LatencyModel(base_ms=self.lag_ms, sigma=0.6).sample
+        )
+        visible_at = time.monotonic() + lag * self.time_scale / 1e3
+        with self._stale_lock:
+            self._stale[key] = (old, visible_at)
+
+    def _maybe_stale(self, key: str, fresh: Optional[bytes]) -> Optional[bytes]:
+        if self.lag_ms <= 0:
+            return fresh
+        with self._stale_lock:
+            ent = self._stale.get(key)
+            if ent is None:
+                return fresh
+            old, visible_at = ent
+            if time.monotonic() >= visible_at:
+                del self._stale[key]
+                return fresh
+            return old
+
+    # -- StorageEngine -------------------------------------------------------
+    def put(self, key: str, value: bytes) -> None:
+        old = self.inner.get(key) if self.lag_ms > 0 else None
+        self._sleep(self._sample(self.write_model.sample, len(value) / 1024))
+        self.inner.put(key, value)
+        self._note_overwrite(key, old)
+
+    def get(self, key: str) -> Optional[bytes]:
+        self._sleep(self._sample(self.read_model.sample, 0.0))
+        fresh = self.inner.get(key)
+        return self._maybe_stale(key, fresh)
+
+    def delete(self, key: str) -> None:
+        self._sleep(self._sample(self.write_model.sample, 0.0))
+        self.inner.delete(key)
+        with self._stale_lock:
+            self._stale.pop(key, None)
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        if not items:
+            return
+        if not self.supports_batch:
+            for k, v in items.items():
+                self.put(k, v)
+            return
+        olds = (
+            {k: self.inner.get(k) for k in items} if self.lag_ms > 0 else {}
+        )
+        size_kb = sum(len(v) for v in items.values()) / 1024
+        self._sleep(self._sample(self.write_model.sample_batch, len(items), size_kb))
+        self.inner.put_batch(items)
+        for k, old in olds.items():
+            self._note_overwrite(k, old)
+
+    def get_batch(self, keys: Iterable[str]) -> Dict[str, Optional[bytes]]:
+        keys = list(keys)
+        if not keys:
+            return {}
+        if self.read_model.batch_base_ms >= 0:
+            self._sleep(self._sample(self.read_model.sample_batch, len(keys), 0.0))
+            return {k: self._maybe_stale(k, self.inner.get(k)) for k in keys}
+        return {k: self.get(k) for k in keys}
+
+    def delete_batch(self, keys: Iterable[str]) -> None:
+        keys = list(keys)
+        if not keys:
+            return
+        if self.supports_batch:
+            self._sleep(self._sample(self.write_model.sample_batch, len(keys), 0.0))
+            self.inner.delete_batch(keys)
+        else:
+            for k in keys:
+                self.delete(k)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        self._sleep(self._sample(self.read_model.sample, 0.0))
+        return self.inner.list_keys(prefix)
+
+    def stats(self) -> Dict[str, int]:
+        s = dict(self.inner.stats())
+        s["sim_ops"] = self._ops
+        s["sim_ms_total"] = int(self._op_ms_total)
+        return s
+
+
+# ---------------------------------------------------------------------------
+# presets calibrated against §6 (Fig 2 / Fig 3)
+# ---------------------------------------------------------------------------
+
+def s3_like(time_scale: float = 1.0, seed: int = 0) -> SimulatedEngine:
+    """Throughput-oriented object store: high base latency, heavy write tail,
+    no batching, poor small-object random IO (§6.1.2)."""
+    return SimulatedEngine(
+        read=LatencyModel(base_ms=11.0, per_kb_ms=0.05, sigma=0.45),
+        write=LatencyModel(base_ms=22.0, per_kb_ms=0.10, sigma=0.65),
+        overwrite_visibility_lag_ms=80.0,
+        time_scale=time_scale,
+        seed=seed,
+        name="s3",
+    )
+
+
+def dynamodb_like(time_scale: float = 1.0, seed: int = 0) -> SimulatedEngine:
+    """Cloud KVS: ~4 ms ops, BatchWriteItem-style batching (25 items/call)."""
+    return SimulatedEngine(
+        read=LatencyModel(base_ms=3.6, per_kb_ms=0.02, sigma=0.30),
+        write=LatencyModel(
+            base_ms=4.2,
+            per_kb_ms=0.02,
+            sigma=0.35,
+            batch_base_ms=5.5,
+            batch_per_item_ms=0.45,
+        ),
+        overwrite_visibility_lag_ms=25.0,
+        time_scale=time_scale,
+        seed=seed,
+        name="dynamodb",
+    )
+
+
+def redis_like(
+    time_scale: float = 1.0, seed: int = 0, shards: int = 2
+) -> ShardedStorage:
+    """Memory-speed KVS in cluster mode: per-shard linearizable, MSET only
+    within a shard (§6.1.2), so cross-shard batches degrade to per-key puts."""
+    def make_shard(i: int) -> SimulatedEngine:
+        return SimulatedEngine(
+            read=LatencyModel(base_ms=0.55, per_kb_ms=0.01, sigma=0.20),
+            write=LatencyModel(
+                base_ms=0.65,
+                per_kb_ms=0.01,
+                sigma=0.20,
+                batch_base_ms=0.8,
+                batch_per_item_ms=0.05,
+            ),
+            overwrite_visibility_lag_ms=0.0,  # linearizable per shard
+            time_scale=time_scale,
+            seed=seed * 1000 + i,
+            name=f"redis-shard{i}",
+        )
+
+    return ShardedStorage([make_shard(i) for i in range(shards)], name="redis")
+
+
+ENGINE_PRESETS = {
+    "s3": s3_like,
+    "dynamodb": dynamodb_like,
+    "redis": redis_like,
+    "memory": lambda time_scale=1.0, seed=0: MemoryStorage(),
+}
+
+
+def make_engine(name: str, time_scale: float = 1.0, seed: int = 0) -> StorageEngine:
+    try:
+        factory = ENGINE_PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; options: {sorted(ENGINE_PRESETS)}"
+        ) from None
+    return factory(time_scale=time_scale, seed=seed)

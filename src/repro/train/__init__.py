@@ -1,0 +1,13 @@
+"""Fault-tolerant training substrate.
+
+``optim.py``    — AdamW / Adafactor with declarative (ParamDef-mirrored)
+                  optimizer state so the dry-run can lower abstract states
+                  with correct shardings.
+``data.py``     — deterministic, stateless synthetic data pipeline whose
+                  cursor is part of the AFT-checkpointed training state
+                  (exactly-once sample accounting across restarts).
+``loop.py``     — the AFT-transactional training loop: every checkpoint is
+                  one atomic AFT transaction spanning all state leaves.
+"""
+
+from .optim import Optimizer, adafactor, adamw, get_optimizer

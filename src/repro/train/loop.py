@@ -1,0 +1,130 @@
+"""The AFT-transactional training loop.
+
+Fault model (matches the paper's retry-based FaaS model, §3.3.1): a training
+job is a sequence of *logical requests* — N optimizer steps followed by one
+checkpoint transaction.  Workers are stateless between checkpoints; any
+crash (preemption, OOM, host failure) is recovered by restarting from the
+last *committed* checkpoint transaction.  Guarantees:
+
+* **atomic visibility** — a checkpoint is one AFT transaction over all
+  state leaves (params, optimizer moments, step, data cursor, RNG); readers
+  (restarts, evaluators, serving) can never observe a torn mixture of steps;
+* **exactly-once step accounting** — the save transaction's UUID is derived
+  from (run_id, step): a crashed-then-retried save commits once; the data
+  pipeline is a pure function of the committed step, so no sample is
+  skipped or double-counted across restarts;
+* **elasticity** — checkpints are stored as full (unsharded) leaves, so a
+  restart may resume on a different device count / mesh shape.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AftCheckpointer, CheckpointNotFound
+from repro.models import Model
+from repro.train.data import SyntheticLM
+from repro.train.optim import Optimizer
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    seed: int = 0
+    # failure injection (tests / demos): crash the *process state* right
+    # after this step's update, before or during its checkpoint
+    crash_after_step: Optional[int] = None
+    crash_during_save: bool = False
+
+
+class CrashInjected(Exception):
+    pass
+
+
+class Trainer:
+    def __init__(self, model: Model, optimizer: Optimizer, data: SyntheticLM,
+                 checkpointer: Optional[AftCheckpointer],
+                 config: TrainerConfig = TrainerConfig()):
+        self.model = model
+        self.opt = optimizer
+        self.data = data
+        self.ckpt = checkpointer
+        self.config = config
+        self.history: List[Dict[str, float]] = []
+
+        def train_step(params, opt_state, step, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+            params, opt_state = optimizer.update(grads, opt_state, params,
+                                                 step)
+            return params, opt_state, dict(metrics, loss=loss)
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ lifecycle
+    def init_state(self):
+        params = self.model.init_params(jax.random.key(self.config.seed))
+        opt_state = self.opt.init(params)
+        return {"params": params, "opt": opt_state}, 0
+
+    def restore_or_init(self):
+        if self.ckpt is None:
+            return self.init_state()
+        like, _ = self.init_state()   # structure template (cheap at test scale)
+        try:
+            step, tree, extra = self.ckpt.restore(like=like)
+            return tree, int(extra.get("next_step", step + 1))
+        except CheckpointNotFound:
+            return like, 0
+
+    def save(self, step: int, state) -> None:
+        if self.ckpt is None:
+            return
+        failpoint = None
+        if (self.config.crash_during_save
+                and self.config.crash_after_step == step):
+            calls = {"n": 0}
+
+            def failpoint(path, ci):  # noqa: F811
+                calls["n"] += 1
+                if calls["n"] >= 3:
+                    raise CrashInjected(f"mid-save crash at step {step}")
+
+        self.ckpt.save(step, state, extra={"next_step": step + 1},
+                       failpoint=failpoint)
+
+    # ----------------------------------------------------------------- run
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+        """Run until ``total_steps`` (or ``steps`` more), checkpointing every
+        ``ckpt_every``.  Raises ``CrashInjected`` for failure-injection tests
+        — the caller restarts by constructing a fresh Trainer and calling
+        ``run`` again; recovery happens in ``restore_or_init``."""
+        cfg = self.config
+        state, start = self.restore_or_init()
+        end = cfg.total_steps if steps is None else min(
+            cfg.total_steps, start + steps)
+        t0 = time.time()
+        for step in range(start, end):
+            batch = self.data.batch_at(step)
+            params, opt, metrics = self._step_fn(
+                state["params"], state["opt"], jnp.int32(step), batch)
+            state = {"params": params, "opt": opt}
+            if step % cfg.log_every == 0 or step == end - 1:
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec["step"] = step
+                rec["wall_s"] = round(time.time() - t0, 3)
+                self.history.append(rec)
+            if (cfg.crash_after_step == step
+                    and not cfg.crash_during_save):
+                raise CrashInjected(f"crash after step {step}")
+            is_last = step == end - 1
+            if (step + 1) % cfg.ckpt_every == 0 or is_last:
+                self.save(step, state)
+        return self.history

@@ -1,0 +1,197 @@
+"""Optimizers with declarative state.
+
+Unlike optax-style opaque states, state *definitions* here mirror the model's
+``ParamDef`` tree, so the dry-run can derive abstract optimizer states and
+their PartitionSpecs exactly like parameters (same logical axes ⇒ same
+sharding ⇒ ZeRO-style fully sharded optimizer state under the FSDP rules).
+
+Two families:
+
+* ``adamw``     — classic AdamW; ``m``/``v`` in fp32 (or bf16 — a
+                  distributed-memory trick for the largest archs).
+* ``adafactor`` — factored second moment (row/col statistics) with optional
+                  momentum; the state for a (d_in, d_out) matrix is
+                  O(d_in + d_out).  Used for the 1T-param MoE cell where
+                  full AdamW state cannot fit a single pod.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, is_def
+
+PyTree = Any
+
+
+def _like(d: ParamDef, dtype: str) -> ParamDef:
+    return ParamDef(d.shape, d.axes, dtype, init="zeros")
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    state_defs: Callable[[PyTree], PyTree]
+    init: Callable[[PyTree], PyTree]
+    # update(grads, state, params, step) -> (new_params, new_state)
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    moment_dtype: str = "float32",
+    warmup_steps: int = 100,
+) -> Optimizer:
+    def state_defs(param_defs: PyTree) -> PyTree:
+        return {
+            "m": jax.tree.map(lambda d: _like(d, moment_dtype), param_defs,
+                              is_leaf=is_def),
+            "v": jax.tree.map(lambda d: _like(d, moment_dtype), param_defs,
+                              is_leaf=is_def),
+        }
+
+    def init(params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.dtype(moment_dtype))  # noqa
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def schedule(step: jax.Array) -> jax.Array:
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return lr * warm
+
+    def update(grads, state, params, step):
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12)) \
+            if grad_clip > 0 else 1.0
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = schedule(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def leaf(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(leaf, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", state_defs, init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory O(rows+cols) per matrix)
+# ---------------------------------------------------------------------------
+
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+    grad_clip: float = 1.0,
+    warmup_steps: int = 100,
+) -> Optimizer:
+    def _factored(d_or_p) -> bool:
+        return len(d_or_p.shape) >= 2
+
+    def state_defs(param_defs: PyTree) -> PyTree:
+        def leaf(d: ParamDef):
+            if _factored(d):
+                row = ParamDef(d.shape[:-1], d.axes[:-1], "float32",
+                               init="zeros")
+                col = ParamDef(d.shape[:-2] + d.shape[-1:],
+                               d.axes[:-2] + d.axes[-1:], "float32",
+                               init="zeros")
+                return {"vr": row, "vc": col}
+            return {"v": _like(d, "float32")}
+
+        return {"f": jax.tree.map(leaf, param_defs, is_leaf=is_def)}
+
+    def init(params: PyTree) -> PyTree:
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12)) \
+            if grad_clip > 0 else 1.0
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        lr_t = lr * warm
+
+        def leaf(p, g, s):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + eps
+            if _factored(p):
+                vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                )
+                upd = g / jnp.maximum(denom, 1e-12)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                upd = g / (jnp.sqrt(v) + 1e-12)
+                new_s = {"v": v}
+            # relative step-size clipping (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        outs = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_state = {"f": jax.tree.unflatten(treedef, [o[1] for o in outs])}
+        return new_params, new_state
+
+    return Optimizer("adafactor", state_defs, init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adamw-bf16":
+        return adamw(moment_dtype="bfloat16", **kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests on reduced configs (CPU).
+
+Every assigned arch: forward shapes + finiteness, one train step (loss
+decreases over a few steps on the synthetic grammar), and the
+prefill→decode consistency invariant — the logits for the next token after
+a prompt must agree between the full forward pass and the incremental
+decode path (KV caches / SSM states / xLSTM states all exercised).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model, get_config, list_configs
+from repro.models.model import padded_vocab
+from repro.train import get_optimizer
+from repro.train.data import data_for_model
+
+ARCHS = list(list_configs())
+
+
+def _frontend(cfg, batch, key):
+    if cfg.is_encoder_decoder:
+        return jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model),
+                                 jnp.float32)
+    if cfg.vision_seq:
+        return jax.random.normal(key, (batch, cfg.vision_seq, cfg.d_model),
+                                 jnp.float32)
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    fe = _frontend(cfg, B, jax.random.key(2))
+    logits, aux = model.forward(params, tokens, fe)
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    # padded vocab entries must be masked
+    if padded_vocab(cfg) != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size:].max()) < -1e29
+
+    batch = {"tokens": tokens, "labels": tokens}
+    if fe is not None:
+        batch["frontend"] = fe
+    opt = get_optimizer("adamw", lr=5e-3, warmup_steps=1)
+    state = opt.init(params)
+    loss0, _ = model.loss_fn(params, batch)
+
+    @jax.jit
+    def step(p, s, i):
+        (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, batch)
+        p, s = opt.update(g, s, p, i)
+        return p, s, l
+
+    for i in range(4):
+        params, state, loss = step(params, state, jnp.int32(i))
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) < float(loss0), f"{arch}: loss did not decrease"
+
+
+@pytest.mark.flaky(reruns=2)
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    # MoE: capacity is enforced over the *visible* tokens, so a token the
+    # full-prompt prefill drops may route fine in single-token decode —
+    # a real (documented) semantic of capacity-based MoE.  The consistency
+    # invariant is exact only in the drop-free regime: raise the capacity.
+    cfg = get_config(arch).reduced(capacity_factor=8.0)
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                cfg.vocab_size)
+    fe = _frontend(cfg, B, jax.random.key(2))
+
+    # ground truth: full forward over S+1 tokens; logits at position S
+    logits_full, _ = model.forward(params, tokens, fe)
+    want = logits_full[:, S, :]
+
+    # incremental: prefill S tokens, then decode token S at position S
+    _, state = model.prefill(params, tokens[:, :S], S + 4, fe)
+    got, _ = model.decode_step(params, state, tokens[:, S:S + 1],
+                               jnp.int32(S))
+    np.testing.assert_allclose(
+        np.asarray(got[:, 0, :cfg.vocab_size], np.float32),
+        np.asarray(want[:, :cfg.vocab_size], np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_chain_finite(arch):
+    """A few chained decode steps stay finite and update the state."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    fe = _frontend(cfg, B, jax.random.key(2))
+    logits, state = model.prefill(params, tokens, S + 8, fe)
+    cur = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for i in range(4):
+        logits, state = model.decode_step(params, state, cur,
+                                          jnp.int32(S + i))
+        assert bool(jnp.isfinite(logits).all()), f"{arch} step {i}"
+        cur = jnp.argmax(logits[:, -1:, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+
+
+def test_prefill_decode_consistency_int8_kv():
+    """int8 KV-cache decode stays close to the full-precision forward."""
+    cfg = get_config("tinyllama-1.1b").reduced(kv_cache_dtype="int8")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                cfg.vocab_size)
+    logits_full, _ = model.forward(params, tokens)
+    want = logits_full[:, S, :cfg.vocab_size]
+    _, state = model.prefill(params, tokens[:, :S], S + 4)
+    # int8 state carries quantization scales
+    leaf_paths = {p for p, _ in
+                  __import__("repro.checkpoint.serializer",
+                             fromlist=["tree_paths"]).tree_paths(state)}
+    assert any(p.endswith("/ks") for p in leaf_paths)
+    got, _ = model.decode_step(params, state, tokens[:, S:S + 1],
+                               jnp.int32(S))
+    err = float(jnp.abs(got[:, 0, :cfg.vocab_size] - want).max())
+    assert err < 0.3, f"int8 decode drift too large: {err}"
+
+
+def test_data_pipeline_is_deterministic():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    d1 = data_for_model(cfg, 4, 16, seed=7)
+    d2 = data_for_model(cfg, 4, 16, seed=7)
+    b1, b2 = d1.batch_at(123), d2.batch_at(123)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch_at(124)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])

@@ -1,0 +1,150 @@
+"""Algorithm 1 (§3.4) unit tests, including the paper's worked examples."""
+
+import pytest
+
+from repro.core import (
+    CommitSetCache,
+    ReadStatus,
+    TransactionRecord,
+    TxnId,
+    atomic_read_select,
+    is_atomic_readset,
+)
+
+
+def tid(i: int) -> TxnId:
+    return TxnId(i, f"uuid-{i:04d}")
+
+
+def commit(cache: CommitSetCache, i: int, *keys: str) -> TxnId:
+    t = tid(i)
+    cache.add(TransactionRecord(tid=t, write_set=tuple(sorted(keys))))
+    return t
+
+
+def test_read_latest_when_unconstrained():
+    cache = CommitSetCache()
+    commit(cache, 1, "k")
+    t2 = commit(cache, 2, "k")
+    sel = atomic_read_select("k", {}, cache)
+    assert sel.status is ReadStatus.OK and sel.tid == t2
+
+
+def test_null_read_when_key_never_written():
+    cache = CommitSetCache()
+    commit(cache, 1, "other")
+    sel = atomic_read_select("k", {}, cache)
+    assert sel.status is ReadStatus.NOT_FOUND
+
+
+def test_paper_example_section_3_2():
+    """T1:{l1}, T2:{k2,l2}; Tn reads k2 first ⇒ later read of l must be ≥ l2."""
+    cache = CommitSetCache()
+    t1 = commit(cache, 1, "l")
+    t2 = commit(cache, 2, "k", "l")
+    sel_k = atomic_read_select("k", {}, cache)
+    assert sel_k.tid == t2
+    R = {"k": t2}
+    sel_l = atomic_read_select("l", R, cache)
+    # returning l1 would violate Definition 1; must return l2
+    assert sel_l.status is ReadStatus.OK and sel_l.tid == t2
+
+
+def test_lower_bound_skips_older_versions():
+    """Case (1): cowritten sibling of a prior read forces newer-or-equal."""
+    cache = CommitSetCache()
+    commit(cache, 1, "k")
+    t5 = commit(cache, 5, "k", "l")
+    sel = atomic_read_select("k", {"l": t5}, cache)
+    assert sel.tid == t5  # k1 < lower bound t5 is not considered
+
+
+def test_case2_rejects_conflicting_candidate():
+    """§3.6 staleness: after reading l_i, k_j with l∈cowritten(k_j), j>i is
+    invalid; fall back to an older valid version of k."""
+    cache = CommitSetCache()
+    t1 = commit(cache, 1, "l")
+    t2 = commit(cache, 2, "k")        # old-but-valid version of k
+    t3 = commit(cache, 3, "k", "l")   # cowrites l at version 3 > 1 ⇒ invalid
+    sel = atomic_read_select("k", {"l": t1}, cache)
+    assert sel.status is ReadStatus.OK and sel.tid == t2
+
+
+def test_staleness_abort_when_only_conflicting_version_exists():
+    """§3.6: if k_j is the only version of k and it conflicts, return NULL —
+    'equivalent to reading from a fixed database snapshot'."""
+    cache = CommitSetCache()
+    t1 = commit(cache, 1, "l")
+    commit(cache, 3, "k", "l")
+    sel = atomic_read_select("k", {"l": t1}, cache)
+    assert sel.status is ReadStatus.NO_VALID_VERSION
+
+
+def test_gc_hole_example_section_5_2_1():
+    """Ta:{k_a}, Tb:{l_b}, Tc:{k_c,l_c}, a<b<c.  Tr reads k_a; if Tb's
+    metadata was GC'd, the read of l finds no valid version (l_c conflicts)."""
+    cache = CommitSetCache()
+    ta = commit(cache, 1, "k")
+    commit(cache, 3, "k", "l")  # Tc
+    # Tb was garbage collected: never added
+    sel = atomic_read_select("l", {"k": ta}, cache)
+    assert sel.status is ReadStatus.NO_VALID_VERSION
+
+    # ... and with Tb present, the read succeeds at l_b
+    tb = commit(cache, 2, "l")
+    sel2 = atomic_read_select("l", {"k": ta}, cache)
+    assert sel2.status is ReadStatus.OK and sel2.tid == tb
+
+
+def test_repeatable_read_emerges_from_algorithm():
+    """Corollary 1.1: re-running Algorithm 1 for a key already in R returns
+    the same version even after newer commits."""
+    cache = CommitSetCache()
+    t1 = commit(cache, 1, "k", "x")
+    sel1 = atomic_read_select("k", {}, cache)
+    assert sel1.tid == t1
+    R = {"k": t1}
+    commit(cache, 9, "k", "x")  # newer version arrives mid-transaction
+    sel2 = atomic_read_select("k", R, cache)
+    assert sel2.tid == t1  # same version: repeatable read
+
+
+def test_newer_nonconflicting_version_preferred():
+    cache = CommitSetCache()
+    t1 = commit(cache, 1, "a")
+    commit(cache, 2, "k")
+    t3 = commit(cache, 3, "k")  # no overlap with prior reads ⇒ newest wins
+    sel = atomic_read_select("k", {"a": t1}, cache)
+    assert sel.tid == t3
+
+
+def test_readset_checker_definition_1():
+    t1, t2 = tid(1), tid(2)
+    cow = {t1: frozenset({"l"}), t2: frozenset({"k", "l"})}
+    assert is_atomic_readset({"k": t2, "l": t2}, cow)
+    assert not is_atomic_readset({"k": t2, "l": t1}, cow)  # fractured
+    assert is_atomic_readset({"l": t1}, cow)
+
+
+def test_incremental_reads_always_form_atomic_readset():
+    """Theorem 1: grow R through Algorithm 1 and check Definition 1 directly
+    after every read."""
+    cache = CommitSetCache()
+    commits = [
+        (1, ("a", "b")),
+        (2, ("b", "c")),
+        (3, ("a", "c", "d")),
+        (4, ("d",)),
+        (5, ("a", "b", "c", "d", "e")),
+    ]
+    for i, keys in commits:
+        commit(cache, i, *keys)
+    cowritten_of = {
+        tid(i): frozenset(keys) for i, keys in commits
+    }
+    R = {}
+    for key in ["b", "a", "d", "c", "e", "a", "b"]:
+        sel = atomic_read_select(key, R, cache)
+        assert sel.status is ReadStatus.OK
+        R[key] = sel.tid
+        assert is_atomic_readset(R, cowritten_of)

@@ -1,0 +1,51 @@
+"""TxnId total order and serialization (§3.1)."""
+
+import pytest
+
+from repro.core import Clock, TxnId, fresh_uuid
+
+
+def test_order_by_timestamp_then_uuid():
+    a = TxnId(1, "bbbb")
+    b = TxnId(2, "aaaa")
+    c = TxnId(2, "bbbb")
+    assert a < b < c
+    assert not (b < a)
+    assert max(a, b, c) == c
+
+
+def test_ties_broken_lexicographically_without_coordination():
+    # identical timestamps on two nodes: UUIDs give a total order (§3.1)
+    a = TxnId(7, "0a")
+    b = TxnId(7, "0b")
+    assert a < b and b > a and a != b
+
+
+def test_encode_preserves_order():
+    ids = [TxnId(5, "x"), TxnId(40, "a"), TxnId(40, "b"), TxnId(1234567, "z")]
+    encoded = [t.encode() for t in ids]
+    assert sorted(encoded) == [t.encode() for t in sorted(ids)]
+    for t in ids:
+        assert TxnId.decode(t.encode()) == t
+
+
+def test_clock_strictly_monotonic():
+    clk = Clock()
+    seen = [clk.now_ns() for _ in range(1000)]
+    assert all(b > a for a, b in zip(seen, seen[1:]))
+
+
+def test_clock_skew_does_not_break_order_semantics():
+    # correctness never relies on synchronized clocks: IDs from skewed clocks
+    # still totally ordered
+    past = Clock(skew_ns=-10**12)
+    future = Clock(skew_ns=+10**12)
+    a = TxnId(past.now_ns(), fresh_uuid())
+    b = TxnId(future.now_ns(), fresh_uuid())
+    assert a < b or b < a
+
+
+def test_hash_and_equality():
+    t = TxnId(3, "u")
+    assert t == TxnId(3, "u")
+    assert len({t, TxnId(3, "u"), TxnId(4, "u")}) == 2

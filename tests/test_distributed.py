@@ -1,0 +1,239 @@
+"""Distributed AFT (§4): multicast + pruning, fault-manager liveness,
+two-phase global GC (§5.2), node replacement (§6.7)."""
+
+import pytest
+
+from repro.core import (
+    AftCluster,
+    AftNodeConfig,
+    ClusterConfig,
+    CommitSetCache,
+    FaultManagerConfig,
+    NodeFailed,
+    TransactionRecord,
+    TxnId,
+    is_superseded,
+)
+from repro.core.records import COMMIT_PREFIX, DATA_PREFIX
+from repro.storage import MemoryStorage
+
+
+def make_cluster(n=2, **node_kw):
+    cfg = ClusterConfig(
+        num_nodes=n,
+        node=AftNodeConfig(**node_kw),
+        start_background_threads=False,  # deterministic stepping
+    )
+    return AftCluster(MemoryStorage(), cfg)
+
+
+def put_commit(node, items, uuid=None):
+    tx = node.start_transaction(uuid)
+    for k, v in items.items():
+        node.put(tx, k, v)
+    return node.commit_transaction(tx)
+
+
+# ------------------------------------------------------------- supersedence
+def test_algorithm_2_supersedence():
+    cache = CommitSetCache()
+    t1 = TxnId(1, "a")
+    t2 = TxnId(2, "b")
+    cache.add(TransactionRecord(tid=t1, write_set=("k", "l")))
+    cache.add(TransactionRecord(tid=t2, write_set=("k",)))
+    # t1 not superseded: l has no newer version
+    assert not is_superseded(cache.get(t1), cache)
+    assert not is_superseded(cache.get(t2), cache)
+    t3 = TxnId(3, "c")
+    cache.add(TransactionRecord(tid=t3, write_set=("l",)))
+    assert is_superseded(cache.get(t1), cache)  # both k and l superseded
+    assert not is_superseded(cache.get(t3), cache)
+
+
+# ----------------------------------------------------------------- multicast
+def test_commits_propagate_between_nodes():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    put_commit(n0, {"k": b"v"})
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") is None  # not yet propagated
+    cluster.step_all()
+    tx2 = n1.start_transaction()
+    assert n1.get(tx2, "k") == b"v"
+
+
+def test_multicast_prunes_superseded(monkeypatch):
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    # two commits to the same key inside one multicast interval: the older is
+    # locally superseded and must be omitted from the broadcast (§4.1)
+    put_commit(n0, {"k": b"v1"})
+    put_commit(n0, {"k": b"v2"})
+    agent = cluster.agents[n0.node_id]
+    agent.step()
+    assert agent.pruned_total == 1
+    cluster.step_all()
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v2"
+
+
+def test_receiver_skips_superseded_on_merge():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    t_old = TxnId(1, "old")
+    t_new = put_commit(n1, {"k": b"new"})
+    assert t_old < t_new
+    merged = n1.merge_remote_commits(
+        [TransactionRecord(tid=t_old, write_set=("k",))]
+    )
+    assert merged == 0  # superseded by local knowledge (§4.1)
+    assert n1.stats["remote_skipped_superseded"] == 1
+
+
+# ---------------------------------------------------- fault manager liveness
+def test_fault_manager_recovers_unannounced_commit():
+    """§4.2: node commits, acks, dies before broadcasting — the fault manager
+    finds the commit record in storage and notifies everyone."""
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    put_commit(n0, {"k": b"v"})
+    n0.fail()  # dies with the fresh-commit queue undrained
+    cluster.fault_manager.step()
+    assert cluster.fault_manager.stats["recovered_commits"] >= 1
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v"
+
+
+def test_node_replacement_bootstraps_from_commit_set():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    put_commit(n0, {"k": b"v"})
+    cluster.step_all()
+    dead = cluster.kill_node(0)
+    cluster.fault_manager.check_heartbeats()
+    live = cluster.live_nodes()
+    assert len(live) == 2 and dead not in live
+    fresh = [n for n in live if n is not n1][0]
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "k") == b"v"  # warmed from the Commit Set (§3.1)
+
+
+def test_requests_to_dead_node_fail_but_cluster_serves():
+    cluster = make_cluster(2)
+    n0, _ = cluster.nodes
+    n0.fail()
+    with pytest.raises(NodeFailed):
+        n0.start_transaction()
+    client = cluster.client()
+    tx = client.start_transaction()
+    client.put(tx, "k", b"v")
+    client.commit_transaction(tx)
+
+
+# ------------------------------------------------------------- global GC
+def test_local_gc_requires_supersedence_and_no_readers():
+    cluster = make_cluster(1)
+    (n0,) = cluster.nodes
+    t1 = put_commit(n0, {"k": b"v1"})
+    # a running transaction reads k@t1: GC must spare t1 (§5.1)
+    tx = n0.start_transaction()
+    assert n0.get(tx, "k") == b"v1"
+    put_commit(n0, {"k": b"v2"})
+    assert n0.gc_sweep_local() == []
+    n0.abort_transaction(tx)
+    removed = n0.gc_sweep_local()
+    assert removed == [t1]
+    assert n0.cache.get(t1) is None
+
+
+def test_global_gc_deletes_only_after_all_nodes_ack():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    t1 = put_commit(n0, {"k": b"v1"})
+    put_commit(n0, {"k": b"v2"})
+    cluster.step_all()  # propagate both to n1 (older may be pruned en route)
+    fm = cluster.fault_manager
+    fm.ingest()
+    # a reader on n1 pins t1 if it read it; here no readers — GC may proceed
+    deleted = fm.gc_round()
+    fm.deleter.drain()
+    if deleted:
+        data_keys = cluster.storage.list_keys(DATA_PREFIX)
+        assert not any(t1.encode() in k for k in data_keys)
+        commit_keys = cluster.storage.list_keys(COMMIT_PREFIX)
+        assert not any(t1.encode() in k for k in commit_keys)
+    # storage still serves the newest version
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v2"
+
+
+def test_global_gc_blocked_by_remote_reader():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    t1 = put_commit(n0, {"k": b"v1"})
+    cluster.step_all()
+    # n1 has a running transaction that read k@t1
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v1"
+    put_commit(n0, {"k": b"v2"})
+    cluster.step_all()
+    fm = cluster.fault_manager
+    fm.ingest()
+    deleted = fm.gc_round()
+    assert deleted == 0  # n1's reader blocks the all-node ack
+    data_keys = cluster.storage.list_keys(DATA_PREFIX)
+    assert any(t1.encode() in k for k in data_keys)  # bytes survive
+    # after the reader finishes, GC completes
+    n1.commit_transaction(tx)
+    for n in (n0, n1):
+        n.gc_sweep_local()
+    assert fm.gc_round() >= 1
+
+
+def test_gc_then_fresh_node_never_sees_deleted_versions():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    put_commit(n0, {"k": b"v1"})
+    put_commit(n0, {"k": b"v2"})
+    cluster.step_all()
+    for n in (n0, n1):
+        n.gc_sweep_local()
+    cluster.fault_manager.ingest()
+    cluster.fault_manager.gc_round()
+    cluster.fault_manager.deleter.drain()
+    fresh = AftCluster(
+        cluster.storage,
+        ClusterConfig(num_nodes=1, start_background_threads=False),
+    ).nodes[0]
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "k") == b"v2"
+
+
+# ------------------------------------------------------------ orphan spills
+def test_orphan_spill_sweep():
+    cluster = make_cluster(1, write_buffer_max_bytes=32)
+    (n0,) = cluster.nodes
+    tx = n0.start_transaction()
+    n0.put(tx, "a", b"x" * 64)  # spills
+    n0.fail()  # crash pre-commit: spill orphaned
+    spills = [k for k in cluster.storage.list_keys(DATA_PREFIX) if "/.spill/" in k]
+    assert spills
+    fm = cluster.fault_manager
+    fm.config.orphan_spill_age_s = 0.0
+    assert fm.sweep_orphan_spills() == len(spills)
+    fm.deleter.drain()
+    assert [k for k in cluster.storage.list_keys(DATA_PREFIX) if "/.spill/" in k] == []
+
+
+def test_committed_spills_survive_orphan_sweep():
+    cluster = make_cluster(1, write_buffer_max_bytes=32)
+    (n0,) = cluster.nodes
+    tx = n0.start_transaction()
+    n0.put(tx, "a", b"x" * 64)
+    n0.commit_transaction(tx)
+    cluster.step_all()  # fault manager learns the commit (and its spill keys)
+    fm = cluster.fault_manager
+    fm.config.orphan_spill_age_s = 0.0
+    assert fm.sweep_orphan_spills() == 0
+    tx2 = n0.start_transaction()
+    assert n0.get(tx2, "a") == b"x" * 64

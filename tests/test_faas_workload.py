@@ -1,0 +1,113 @@
+"""End-to-end FaaS workload (§6.1.2 shape): AFT prevents anomalies that plain
+storage exhibits; retries with failure injection stay exactly-once."""
+
+import pytest
+
+from repro.core import AftCluster, AftNodeConfig, ClusterConfig
+from repro.faas import FaasConfig, WorkloadConfig, run_workload
+from repro.faas.workload import ZipfSampler, build_txn_spec
+from repro.storage import MemoryStorage, dynamodb_like
+
+
+def fast_faas(**kw):
+    return FaasConfig(warm_latency_ms=0.1, time_scale=0.05, **kw)
+
+
+def small_cfg(**kw):
+    base = dict(
+        num_keys=40,
+        zipf=1.0,
+        functions_per_txn=2,
+        reads_per_function=2,
+        writes_per_function=1,
+        value_bytes=128,
+        faas=fast_faas(),
+    )
+    base.update(kw)
+    return WorkloadConfig(**base)
+
+
+def test_zipf_sampler_skew():
+    s = ZipfSampler(100, 2.0, seed=1)
+    draws = [s.sample() for _ in range(2000)]
+    assert min(draws) == 0
+    # heavily skewed: top key dominates
+    assert draws.count(0) > 2000 * 0.4
+
+
+def test_txn_spec_shape():
+    cfg = small_cfg()
+    spec = build_txn_spec(cfg, ZipfSampler(10, 1.0))
+    assert len(spec.functions) == 2
+    assert all(len(ops) == 3 for ops in spec.functions)
+
+
+def test_aft_workload_zero_anomalies():
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(
+            num_nodes=2,
+            node=AftNodeConfig(multicast_interval_s=0.02, gc_interval_s=0.05),
+        ),
+    )
+    try:
+        res = run_workload(
+            "aft", cfg=small_cfg(), clients=8, txns_per_client=15, cluster=cluster
+        )
+    finally:
+        cluster.stop()
+    assert res.committed == 8 * 15
+    assert res.anomalies["ryw_anomalies"] == 0
+    assert res.anomalies["fr_anomalies"] == 0
+
+
+def test_plain_workload_exhibits_anomalies():
+    # eventually-consistent engine + in-place overwrites + contention
+    storage = dynamodb_like(time_scale=0.05)
+    res = run_workload(
+        "plain",
+        cfg=small_cfg(num_keys=10, zipf=1.5),
+        clients=12,
+        txns_per_client=15,
+        storage=storage,
+    )
+    assert res.committed == 12 * 15
+    total = res.anomalies["ryw_anomalies"] + res.anomalies["fr_anomalies"]
+    assert total > 0, "plain mode should leak anomalies under contention"
+
+
+def test_dynamo_txn_mode_avoids_ryw_but_not_fr():
+    storage = dynamodb_like(time_scale=0.05)
+    res = run_workload(
+        "dynamo_txn",
+        cfg=small_cfg(num_keys=10, zipf=1.5),
+        clients=12,
+        txns_per_client=15,
+        storage=storage,
+    )
+    assert res.anomalies["ryw_anomalies"] == 0  # single atomic write batch
+
+
+def test_exactly_once_under_failure_injection():
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(
+            num_nodes=1,
+            node=AftNodeConfig(multicast_interval_s=0.02),
+        ),
+    )
+    cfg = small_cfg(faas=fast_faas(failure_rate=0.15, max_retries=25))
+    try:
+        res = run_workload(
+            "aft", cfg=cfg, clients=4, txns_per_client=10, cluster=cluster
+        )
+        node_commits = sum(n.stats["commits"] for n in cluster.all_nodes())
+    finally:
+        cluster.stop()
+    assert res.committed == 40
+    assert res.anomalies["ryw_anomalies"] == 0
+    assert res.anomalies["fr_anomalies"] == 0
+    # exactly-once: every logical request commits exactly one transaction,
+    # no matter how many times its functions were retried
+    assert node_commits == 40
+    assert res.retries > 0, "failure injection should have caused retries"

@@ -1,0 +1,250 @@
+"""Property-based verification of AFT's isolation guarantees.
+
+A hypothesis state machine interleaves transactions (across multiple nodes of
+a cluster), commits, aborts, GC sweeps, multicast rounds, and node crashes —
+and validates *independently of the implementation* that every observation
+satisfies the paper's §3.2 guarantees:
+
+* no dirty reads — every returned version was committed;
+* no fractured reads — each transaction's accumulated read set is an Atomic
+  Readset per Definition 1, checked against a ground-truth cowritten map
+  maintained by the test itself;
+* read-your-writes — reads after an own write return the written bytes;
+* repeatable reads — re-reads (without intervening own writes) return the
+  same version;
+* value integrity — bytes returned match the bytes committed for the version.
+"""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import HealthCheck, settings
+from hypothesis.stateful import (
+    Bundle,
+    RuleBasedStateMachine,
+    consumes,
+    initialize,
+    invariant,
+    precondition,
+    rule,
+)
+
+from repro.core import (
+    AftCluster,
+    AftNodeConfig,
+    ClusterConfig,
+    NodeFailed,
+    ReadAbortError,
+    TransactionNotRunning,
+    UnknownTransaction,
+    is_atomic_readset,
+)
+from repro.storage import MemoryStorage
+
+KEYS = ["k0", "k1", "k2"]  # small key space ⇒ dense version histories
+
+
+class AftIsolationMachine(RuleBasedStateMachine):
+    txns = Bundle("txns")
+
+    @initialize(num_nodes=st.integers(1, 3))
+    def setup(self, num_nodes):
+        self.cluster = AftCluster(
+            MemoryStorage(),
+            ClusterConfig(
+                num_nodes=num_nodes,
+                node=AftNodeConfig(min_gc_age_s=0.0),
+                start_background_threads=False,
+            ),
+        )
+        self.counter = 0
+        # ground truth, maintained by the test alone:
+        self.committed_cowritten = {}   # tid -> frozenset(keys)
+        self.committed_values = {}      # (key, tid) -> bytes
+        self.live = {}                  # txid -> state dict
+
+    # ------------------------------------------------------------- lifecycle
+    @rule(target=txns)
+    def start_txn(self):
+        node = self.cluster.pick_node()
+        txid = node.start_transaction()
+        self.live[txid] = {
+            "node": node,
+            "reads": {},       # key -> tid observed
+            "writes": {},      # key -> bytes (latest own write)
+            "done": False,
+        }
+        return txid
+
+    @rule(txn=txns, key=st.sampled_from(KEYS), size=st.integers(1, 32))
+    def put(self, txn, key, size):
+        state = self.live[txn]
+        if state["done"] or not state["node"].alive:
+            return
+        self.counter += 1
+        value = f"{txn[:6]}:{self.counter}".encode() + b"#" * size
+        try:
+            state["node"].put(txn, key, value)
+        except (NodeFailed, TransactionNotRunning, UnknownTransaction):
+            state["done"] = True
+            return
+        state["writes"][key] = value
+
+    @rule(txn=txns, key=st.sampled_from(KEYS))
+    def get(self, txn, key):
+        state = self.live[txn]
+        if state["done"] or not state["node"].alive:
+            return
+        try:
+            value, tid = state["node"].get_versioned(txn, key)
+        except ReadAbortError:
+            # §3.6 staleness abort is a legal outcome; the client retries.
+            state["node"].abort_transaction(txn)
+            state["done"] = True
+            return
+        except (NodeFailed, TransactionNotRunning, UnknownTransaction):
+            state["done"] = True
+            return
+
+        if key in state["writes"]:
+            # read-your-writes (§3.5): must be our bytes, via the buffer
+            assert value == state["writes"][key], "RYW violation"
+            assert tid is None
+            return
+        if tid is None:
+            assert value is None, "NULL version carried a value"
+            return
+        # no dirty reads: the version must be a committed transaction
+        assert tid in self.committed_cowritten, f"dirty read of {key}@{tid}"
+        # value integrity
+        assert value == self.committed_values[key, tid], "wrong version bytes"
+        # repeatable read (Corollary 1.1)
+        prior = state["reads"].get(key)
+        if prior is not None:
+            assert tid == prior, "repeatable-read violation"
+        state["reads"][key] = tid
+        # no fractured reads: Definition 1 over ground-truth cowritten sets
+        assert is_atomic_readset(state["reads"], self.committed_cowritten), (
+            "fractured read set"
+        )
+
+    @rule(txn=consumes(txns))
+    def commit(self, txn):
+        state = self.live.pop(txn)
+        if state["done"] or not state["node"].alive:
+            return
+        try:
+            tid = state["node"].commit_transaction(txn)
+        except (NodeFailed, TransactionNotRunning, UnknownTransaction):
+            return
+        if state["writes"]:
+            self.committed_cowritten[tid] = frozenset(state["writes"])
+            for k, v in state["writes"].items():
+                self.committed_values[k, tid] = v
+
+    @rule(txn=consumes(txns))
+    def abort(self, txn):
+        state = self.live.pop(txn)
+        if state["done"] or not state["node"].alive:
+            return
+        try:
+            state["node"].abort_transaction(txn)
+        except (NodeFailed, TransactionNotRunning, UnknownTransaction):
+            pass
+
+    @rule(keys=st.sets(st.sampled_from(KEYS), min_size=1, max_size=3))
+    def whole_txn_commit(self, keys):
+        """A complete multi-key writer in one step.  This is what makes
+        fractured-read scenarios *reachable* for the random walk: a reader
+        holding an old version immediately faces a newer cowritten group."""
+        try:
+            node = self.cluster.pick_node()
+        except NodeFailed:
+            return
+        txid = node.start_transaction()
+        self.counter += 1
+        writes = {}
+        for k in keys:
+            value = f"W{self.counter}:{k}".encode()
+            node.put(txid, k, value)
+            writes[k] = value
+        tid = node.commit_transaction(txid)
+        node.release_transaction(txid)
+        self.committed_cowritten[tid] = frozenset(writes)
+        for k, v in writes.items():
+            self.committed_values[k, tid] = v
+
+    # ------------------------------------------------------- background ops
+    @rule()
+    def multicast_round(self):
+        for agent in list(self.cluster.agents.values()):
+            agent.step()
+        for agent in list(self.cluster.agents.values()):
+            agent.step()
+
+    @rule()
+    def local_gc(self):
+        for node in self.cluster.live_nodes():
+            node.gc_sweep_local()
+
+    @rule()
+    def global_gc(self):
+        fm = self.cluster.fault_manager
+        fm.ingest()
+        fm.scan_commit_set()
+        fm.gc_round()
+        fm.deleter.drain()
+
+    @rule()
+    def crash_and_replace_node(self):
+        if len(self.cluster.live_nodes()) <= 1:
+            return
+        dead = self.cluster.kill_node(0)
+        # transactions pinned to the dead node are lost (§3.3.1)
+        for state in self.live.values():
+            if state["node"] is dead:
+                state["done"] = True
+        self.cluster.fault_manager.check_heartbeats()
+
+    # ---------------------------------------------------------- invariants
+    @invariant()
+    def committed_data_remains_readable(self):
+        # every key's *latest* committed version must stay readable by a
+        # fresh transaction (GC must never delete live heads)
+        if not self.committed_cowritten:
+            return
+        latest = {}
+        for tid, keys in self.committed_cowritten.items():
+            for k in keys:
+                if k not in latest or tid > latest[k]:
+                    latest[k] = tid
+        try:
+            node = self.cluster.pick_node()
+        except NodeFailed:
+            return
+        tx = node.start_transaction()
+        try:
+            for k, expect_tid in latest.items():
+                try:
+                    value, tid = node.get_versioned(tx, k)
+                except ReadAbortError:
+                    raise AssertionError(f"latest head of {k} unreadable")
+                # node may not have heard of the newest commit yet (multicast
+                # is async); it must return *some* committed version
+                if tid is not None:
+                    assert tid in self.committed_cowritten
+                    assert value == self.committed_values[k, tid]
+        finally:
+            node.abort_transaction(tx)
+            node.release_transaction(tx)
+
+    def teardown(self):
+        self.cluster.stop()
+
+
+AftIsolationTest = AftIsolationMachine.TestCase
+AftIsolationTest.settings = settings(
+    max_examples=40,
+    stateful_step_count=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)

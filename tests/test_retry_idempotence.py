@@ -1,0 +1,70 @@
+"""Cross-node retry idempotence (§3.3.1): exactly-once even when the ack is
+lost and the retry lands on a different node before multicast propagates."""
+
+import pytest
+
+from repro.core import (
+    AftCluster,
+    AftNode,
+    AftNodeConfig,
+    ClusterConfig,
+)
+from repro.core.records import COMMIT_PREFIX
+from repro.storage import MemoryStorage
+
+
+def test_retry_on_fresh_node_finds_commit_in_storage():
+    storage = MemoryStorage()
+    n0 = AftNode(storage, AftNodeConfig(node_id="n0"))
+    tx = n0.start_transaction()
+    n0.put(tx, "k", b"v")
+    tid = n0.commit_transaction(tx)
+    # ack lost; n0 dies before broadcasting; retry lands on a brand-new node
+    # that has NOT bootstrapped this commit (bootstrap=False simulates the
+    # multicast race window)
+    n1 = AftNode(storage, AftNodeConfig(node_id="n1"), bootstrap=False)
+    tx2 = n1.start_transaction(tid.uuid)  # same UUID ⇒ retry
+    n1.put(tx2, "k", b"v")
+    tid2 = n1.commit_transaction(tx2)
+    assert tid2 == tid
+    assert len(storage.list_keys(COMMIT_PREFIX)) == 1  # exactly one commit
+
+
+def test_client_retry_sticks_to_owning_node():
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=3, start_background_threads=False),
+    )
+    client = cluster.client()
+    tx = client.start_transaction()
+    node = client.node_of(tx)
+    client.put(tx, "k", b"v")
+    client.commit_transaction(tx)
+    # a retry with the same UUID routes back to the same node
+    tx2 = client.start_transaction(tx)
+    assert client.node_of(tx2) is node
+    tid = client.commit_transaction(tx2)
+    assert tid is not None
+    assert len(cluster.storage.list_keys(COMMIT_PREFIX)) == 1
+
+
+def test_retry_after_owner_death_falls_back_to_scan():
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=2, start_background_threads=False),
+    )
+    client = cluster.client()
+    tx = client.start_transaction()
+    client.put(tx, "k", b"v")
+    tid = client.commit_transaction(tx)
+    # owner dies before multicast; retry must land elsewhere and still be
+    # idempotent via the Commit Set scan
+    owner = [n for n in cluster.nodes if n.committed_tid_for_uuid(tx)][0]
+    owner.fail()
+    tx2 = client.start_transaction(tx)
+    other = client.node_of(tx2)
+    assert other is not owner
+    client.put(tx2, "k", b"v")
+    tid2 = client.commit_transaction(tx2)
+    assert tid2 == tid
+    assert len(cluster.storage.list_keys(COMMIT_PREFIX)) == 1
