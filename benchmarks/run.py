@@ -27,6 +27,7 @@ MODULES = {
     "fig8": "benchmarks.fig8_distributed",
     "fig9": "benchmarks.fig9_gc",
     "fig10": "benchmarks.fig10_fault_tolerance",
+    "figw": "benchmarks.fig_workflow",
     "ckpt": "benchmarks.ckpt_bench",
 }
 

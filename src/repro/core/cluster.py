@@ -262,13 +262,7 @@ class AftClient:
             tid = node.committed_tid_for_uuid(uuid)
             if tid is not None:
                 return tid
-        from .records import COMMIT_PREFIX, TransactionRecord
+        from .records import lookup_committed_record
 
-        for key in self.cluster.storage.list_keys(COMMIT_PREFIX):
-            raw = self.cluster.storage.get(key)
-            if raw is None:
-                continue
-            record = TransactionRecord.decode(raw)
-            if record.tid.uuid == uuid:
-                return record.tid
-        return None
+        record = lookup_committed_record(self.cluster.storage, uuid)
+        return record.tid if record is not None else None

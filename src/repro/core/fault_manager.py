@@ -38,6 +38,7 @@ from .records import (
     DATA_PREFIX,
     TransactionRecord,
     commit_key,
+    uuid_key,
 )
 from .supersede import is_superseded
 
@@ -185,6 +186,9 @@ class FaultManager:
         for record in doomed:
             keys.extend(record.storage_key_for(k) for k in record.write_set)
             keys.append(commit_key(record.tid))
+            # the §3.3.1 uuid index travels with its commit record, else
+            # every GC'd transaction leaks one u/ key forever
+            keys.append(uuid_key(record.tid.uuid))
         self.deleter.submit(keys)
         for record in doomed:
             self.cache.remove(record.tid)

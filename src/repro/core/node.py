@@ -43,6 +43,8 @@ from .records import (
     TransactionRecord,
     commit_key,
     data_key,
+    lookup_committed_record,
+    uuid_key,
 )
 from .supersede import is_superseded
 from .write_buffer import TransactionWriteBuffer
@@ -84,6 +86,13 @@ class TransactionContext:
     started_at: float = field(default_factory=time.monotonic)
     committed_tid: Optional[TxnId] = None
     is_retry: bool = False  # client reopened with a prior UUID (§3.3.1)
+    # guards read_set: one session may be driven by many parallel branches of
+    # a workflow DAG (the buffer has its own lock)
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def read_set_snapshot(self) -> Dict[str, TxnId]:
+        with self.lock:
+            return dict(self.read_set)
 
 
 class AftNode:
@@ -212,23 +221,32 @@ class AftNode:
         # (2) repeatable-read short-circuit (optional; Corollary 1.1 proves
         # Algorithm 1 returns the same version anyway).
         if self.config.fast_repeatable_read:
-            prior = ctx.read_set.get(key)
+            with ctx.lock:
+                prior = ctx.read_set.get(key)
             if prior is not None:
                 return self._fetch(key, prior), prior
 
-        # (3) Algorithm 1.
-        sel = atomic_read_select(key, ctx.read_set, self.cache)
-        if sel.status is ReadStatus.NOT_FOUND:
-            return None, None
-        if sel.status is ReadStatus.NO_VALID_VERSION:
-            self.stats["staleness_aborts"] += 1
-            raise ReadAbortError(
-                f"no version of {key!r} joins the atomic readset of {txid}"
-            )
-        assert sel.tid is not None
-        value = self._fetch(key, sel.tid)
-        ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
-        return value, sel.tid
+        # (3) Algorithm 1 — selection and read-set insertion are ONE atomic
+        # step per session: parallel DAG branches selecting against stale
+        # snapshots could otherwise each pass Definition 1 individually yet
+        # insert disjoint keys that are jointly fractured (e.g. m@old and
+        # k@T with T cowriting {m, k}).  Lock order is ctx.lock → cache.lock
+        # (inside atomic_read_select); nothing takes them in reverse.  The
+        # storage fetch stays outside the lock.
+        with ctx.lock:
+            sel = atomic_read_select(key, ctx.read_set, self.cache)
+            if sel.status is ReadStatus.NOT_FOUND:
+                return None, None
+            if sel.status is ReadStatus.NO_VALID_VERSION:
+                self.stats["staleness_aborts"] += 1
+                raise ReadAbortError(
+                    f"no version of {key!r} joins the atomic readset of {txid}"
+                )
+            assert sel.tid is not None
+            ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
+            chosen = sel.tid
+        value = self._fetch(key, chosen)
+        return value, chosen
 
     def abort_transaction(self, txid: str) -> None:
         self._check_alive()
@@ -252,22 +270,21 @@ class AftNode:
         with self._lock:
             already = self._committed_uuids.get(ctx.uuid)
         if already is None and ctx.is_retry and self.config.verify_uuid_on_retry:
-            # Rare path: a retried request landed on a node that has not yet
-            # heard (via multicast/fault manager) whether the original commit
-            # succeeded.  The Commit Set in storage is the source of truth —
-            # commit-record keys embed ⟨timestamp, uuid⟩, so a suffix scan
-            # answers "did this UUID ever commit?" (§3.3.1, §4.2).
-            suffix = f".{ctx.uuid}"
-            for ck in self.storage.list_keys(COMMIT_PREFIX):
-                if ck.endswith(suffix):
-                    raw = self.storage.get(ck)
-                    if raw is not None:
-                        record = TransactionRecord.decode(raw)
-                        self.cache.add(record)
-                        with self._lock:
-                            self._committed_uuids[ctx.uuid] = record.tid
-                        already = record.tid
-                    break
+            # A retried request landed on a node that has not yet heard (via
+            # multicast/fault manager) whether the original commit succeeded.
+            # The Commit Set in storage is the source of truth; the ``u/``
+            # uuid → commit-key index makes the probe two point reads instead
+            # of a full commit-set scan (§3.3.1, §4.2).  Workflow sessions
+            # hit this path on *every* commit (deterministic UUIDs), so it
+            # must be cheap.  An index entry without its commit record is a
+            # crashed commit — treated as never committed, which is safe
+            # because the index is written before the record.
+            record = lookup_committed_record(self.storage, ctx.uuid)
+            if record is not None:
+                self.cache.add(record)
+                with self._lock:
+                    self._committed_uuids[ctx.uuid] = record.tid
+                already = record.tid
         if already is not None:  # §3.3.1 retry of a committed transaction
             ctx.state = TxnState.COMMITTED
             ctx.committed_tid = already
@@ -281,9 +298,12 @@ class AftNode:
 
         if write_set:
             # step 1: persist all data versions (batched when the engine
-            # supports it — AFT batches by default, §6.1.1)
-            if to_write:
-                self.storage.put_batch(to_write)
+            # supports it — AFT batches by default, §6.1.1), plus the
+            # uuid → commit-key index used by the §3.3.1 retry probe.  The
+            # index lands BEFORE the commit record: index ∧ record ⇔
+            # committed, so a crash between the two reads as "not committed".
+            to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
+            self.storage.put_batch(to_write)
             # step 2: persist the commit record — the *linearization point*
             # for durability; a crash before this line loses the txn (client
             # retries), a crash after it is a committed txn (§3.3.1).
@@ -370,8 +390,9 @@ class AftNode:
         with self._lock:
             active = [c for c in self._txns.values() if c.state is TxnState.RUNNING]
         for ctx in active:
+            snapshot = ctx.read_set_snapshot()
             for key in record.write_set:
-                if ctx.read_set.get(key) == record.tid:
+                if snapshot.get(key) == record.tid:
                     return True
         return False
 
@@ -433,7 +454,7 @@ class AftNode:
     def _has_active_readers_tid(self, tid: TxnId) -> bool:
         with self._lock:
             active = [c for c in self._txns.values() if c.state is TxnState.RUNNING]
-        return any(tid in ctx.read_set.values() for ctx in active)
+        return any(tid in ctx.read_set_snapshot().values() for ctx in active)
 
     def forget_deleted(self, tids: Iterable[TxnId]) -> None:
         """Global GC finished deleting these; shrink the locally-deleted log."""
@@ -475,4 +496,4 @@ class AftNode:
         return len(self.cache)
 
     def read_set_of(self, txid: str) -> Dict[str, TxnId]:
-        return dict(self._ctx(txid).read_set)
+        return self._ctx(txid).read_set_snapshot()

@@ -121,6 +121,21 @@ class VersionedValue:
     aborted: bool = False
 
 
+def lookup_committed_record(storage, uuid: str) -> Optional["TransactionRecord"]:
+    """Resolve uuid → committed record via the ``u/`` index: two point reads
+    instead of a commit-set scan (§3.3.1 retry probe).  An index entry whose
+    commit record is missing is a crashed (or GC'd) commit — reported as not
+    committed, which is safe because the index is written before the record
+    and deleted with it."""
+    ptr = storage.get(uuid_key(uuid))
+    if ptr is None:
+        return None
+    raw = storage.get(ptr.decode())
+    if raw is None:
+        return None
+    return TransactionRecord.decode(raw)
+
+
 def embed_metadata(value: bytes, tid: TxnId, cowritten: Iterable[str]) -> bytes:
     """Prefix a payload with AFT metadata.
 

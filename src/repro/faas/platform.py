@@ -20,9 +20,9 @@ from __future__ import annotations
 import random
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 
 class FunctionFailure(Exception):
@@ -35,6 +35,9 @@ class FaasConfig:
     latency_sigma: float = 0.3
     time_scale: float = 1.0
     failure_rate: float = 0.0         # probability a function dies mid-body
+    # restrict injection to named sites (prefix match, e.g. "step:shard");
+    # None ⇒ every maybe_fail() call is a candidate
+    failure_sites: Optional[Tuple[str, ...]] = None
     max_retries: int = 5
     retry_backoff_ms: float = 5.0
     reuse_uuid_on_retry: bool = True  # §3.3.1 continue-the-transaction
@@ -51,6 +54,11 @@ class LambdaPlatform:
         self.invocations = 0
         self.failures_injected = 0
         self.retries = 0
+        self.on_failure_errors = 0
+        self.last_on_failure_error: Optional[BaseException] = None
+        # counters are bumped from many pool threads at once (submit/map);
+        # bare += would drop updates
+        self._stats_lock = threading.Lock()
 
     # -- simulation hooks ------------------------------------------------
     def _sleep_ms(self, ms: float) -> None:
@@ -64,22 +72,39 @@ class LambdaPlatform:
                 0.0, self.config.latency_sigma
             )
 
-    def maybe_fail(self) -> None:
-        """Called by instrumented functions at their failure points."""
+    def maybe_fail(self, site: Optional[str] = None) -> None:
+        """Called by instrumented functions at their failure points.  When
+        ``failure_sites`` is configured, only calls whose ``site`` matches one
+        of the configured prefixes are candidates — this is how tests and
+        benchmarks target a crash at a specific step of a workflow DAG."""
         if self.config.failure_rate <= 0:
             return
+        sites = self.config.failure_sites
+        if sites is not None:
+            if site is None or not any(site.startswith(p) for p in sites):
+                return
         with self._rng_lock:
             die = self._rng.random() < self.config.failure_rate
         if die:
-            self.failures_injected += 1
-            raise FunctionFailure("injected mid-function crash")
+            with self._stats_lock:
+                self.failures_injected += 1
+            raise FunctionFailure(
+                f"injected mid-function crash at {site or 'anonymous site'}"
+            )
 
     # -- execution ---------------------------------------------------------
     def invoke(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
         """Invoke one function with warm-start overhead (no retry)."""
-        self.invocations += 1
+        with self._stats_lock:
+            self.invocations += 1
         self._sleep_ms(self._sample_overhead())
         return fn(*args, **kwargs)
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Future:
+        """Schedule one function invocation on the platform pool — the
+        parallel-branch primitive workflow executors fan out with.  The
+        invocation pays the same warm-start overhead as ``invoke``."""
+        return self._pool.submit(self.invoke, fn, *args, **kwargs)
 
     def run_request(
         self,
@@ -95,9 +120,11 @@ class LambdaPlatform:
         retries from scratch (the platform's retry-based model, §7)."""
         uuid: Optional[str] = None
         last_exc: Optional[BaseException] = None
-        for attempt in range(self.config.max_retries + 1):
+        attempts = self.config.max_retries + 1
+        for attempt in range(attempts):
             if attempt:
-                self.retries += 1
+                with self._stats_lock:
+                    self.retries += 1
                 self._sleep_ms(self.config.retry_backoff_ms * attempt)
             session = begin(uuid if self.config.reuse_uuid_on_retry else None)
             if self.config.reuse_uuid_on_retry and uuid is None:
@@ -110,10 +137,15 @@ class LambdaPlatform:
                 last_exc = exc
                 try:
                     on_failure(session)
-                except Exception:
-                    pass
+                except Exception as cleanup_exc:
+                    # cleanup is best-effort, but never silent: the node's
+                    # timeout sweep is the functional backstop
+                    with self._stats_lock:
+                        self.on_failure_errors += 1
+                        self.last_on_failure_error = cleanup_exc
         raise RuntimeError(
-            f"request failed after {self.config.max_retries} retries"
+            f"request failed after {attempts} attempts "
+            f"({self.config.max_retries} retries)"
         ) from last_exc
 
     def map(self, fn: Callable[[int], Any], n: int) -> List[Any]:

@@ -1,5 +1,27 @@
-"""Serving: batched decode engine with read-atomic weight refresh."""
+"""Serving: batched decode engine with read-atomic weight refresh.
 
-from .engine import ServeEngine, ServeConfig
+``refresh`` (workflow-driven atomic weight publication) is framework-free;
+the jax-backed ``ServeEngine`` is imported lazily so environments without
+jax can still drive publish/read workflows.
+"""
 
-__all__ = ["ServeEngine", "ServeConfig"]
+from .refresh import (
+    build_publish_workflow,
+    publish_weights,
+    read_weight_set,
+)
+
+__all__ = [
+    "ServeEngine",
+    "ServeConfig",
+    "build_publish_workflow",
+    "publish_weights",
+    "read_weight_set",
+]
+
+
+def __getattr__(name):
+    if name in ("ServeEngine", "ServeConfig"):
+        from .engine import ServeConfig, ServeEngine  # heavy: imports jax
+        return {"ServeEngine": ServeEngine, "ServeConfig": ServeConfig}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,128 @@
+"""Workflow-driven atomic weight publication for serving.
+
+The serving-side instance of the DAG problem: a publisher produces N weight
+shards *in parallel* (one FaaS function per shard — quantize, re-shard,
+fetch from a training host) and then flips a manifest.  Without a shim, a
+crash between shard writes — or a reader racing the publisher — assembles a
+torn weight set.  Here the whole publish DAG is one AFT transaction
+(``TxnScope.WORKFLOW``): shards fan out, the manifest fans in, and the
+commit is all-or-nothing with exactly-once semantics on retry (the publish
+UUID derives from ``(run_id, step)``, §3.3.1).
+
+``read_weight_set`` is the consumer half: one read transaction over the
+manifest and every shard, so read-atomic isolation (§3.4) guarantees the
+assembled set is from a single publish even while the next one is mid-commit.
+
+This module is deliberately framework-free (raw bytes per shard); the
+jax-facing ``ServeEngine.refresh_weights`` achieves the same guarantee for
+checkpoints via ``AftCheckpointer``.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from ..workflow import WorkflowExecutor, WorkflowResult, WorkflowSpec
+
+
+def shard_key(prefix: str, run_id: str, shard: str) -> str:
+    return f"{prefix}/{run_id}/shard/{shard}"
+
+def manifest_key(prefix: str, run_id: str) -> str:
+    return f"{prefix}/{run_id}/manifest"
+
+def publish_uuid(run_id: str, step: int) -> str:
+    return f"publish.{run_id}.{step}"
+
+
+def build_publish_workflow(
+    shard_names: Sequence[str],
+    produce: Callable[[str, int], bytes],
+    *,
+    run_id: str,
+    step: int,
+    prefix: str = "weights",
+) -> WorkflowSpec:
+    """Fan-out one step per shard (``produce(shard_name, step)`` → bytes),
+    fan-in a manifest naming every shard key and the step."""
+    spec = WorkflowSpec(f"publish-{run_id}-{step}")
+    names = list(shard_names)
+
+    def make_shard_step(shard: str):
+        def body(ctx) -> int:
+            ctx.maybe_fail()
+            data = produce(shard, step)
+            ctx.put(shard_key(prefix, run_id, shard), data)
+            return len(data)
+        return body
+
+    step_names = [
+        spec.step(f"shard:{shard}", make_shard_step(shard)) for shard in names
+    ]
+
+    def manifest(ctx) -> int:
+        ctx.maybe_fail()
+        ctx.put(
+            manifest_key(prefix, run_id),
+            json.dumps(
+                {
+                    "step": step,
+                    "shards": {s: shard_key(prefix, run_id, s) for s in names},
+                },
+                separators=(",", ":"),
+            ).encode(),
+        )
+        return step
+
+    spec.fan_in("manifest", manifest, step_names, allow_skipped_deps=False)
+    return spec
+
+
+def publish_weights(
+    executor: WorkflowExecutor,
+    shard_names: Sequence[str],
+    produce: Callable[[str, int], bytes],
+    *,
+    run_id: str,
+    step: int,
+    prefix: str = "weights",
+) -> WorkflowResult:
+    """Run the publish DAG with a deterministic UUID so a re-driven publish
+    of the same (run_id, step) commits exactly once."""
+    spec = build_publish_workflow(
+        shard_names, produce, run_id=run_id, step=step, prefix=prefix
+    )
+    return executor.run(spec, uuid=publish_uuid(run_id, step))
+
+
+def read_weight_set(
+    client,
+    *,
+    run_id: str,
+    prefix: str = "weights",
+) -> Optional[Tuple[int, Dict[str, bytes]]]:
+    """Assemble the latest published weight set in ONE read transaction.
+
+    Returns ``(step, {shard_name: bytes})`` or None if nothing is published.
+    Read-atomic isolation makes a torn result impossible: every shard joins
+    the manifest's Atomic Readset or the read aborts (§3.4/§3.6).
+    """
+    tx = client.start_transaction()
+    try:
+        raw = client.get(tx, manifest_key(prefix, run_id))
+        if raw is None:
+            return None
+        body = json.loads(raw)
+        shards: Dict[str, bytes] = {}
+        for shard, skey in body["shards"].items():
+            data = client.get(tx, skey)
+            if data is None:
+                raise LookupError(
+                    f"manifest names shard {shard!r} but {skey!r} read NULL "
+                    "(read-atomicity violated?)"
+                )
+            shards[shard] = data
+        return int(body["step"]), shards
+    finally:
+        client.abort_transaction(tx)  # read-only session

@@ -1,0 +1,45 @@
+"""Transactional workflow orchestration over AFT.
+
+DAG-composed FaaS requests with exactly-once semantics: declarative specs
+(``spec.py``), a parallel scheduler/executor on ``LambdaPlatform``
+(``executor.py``), and transaction scoping + memoized idempotent resume
+through AFT itself (``txn.py``).
+"""
+
+from .executor import (
+    StepContext,
+    StepFailure,
+    WorkflowConfig,
+    WorkflowError,
+    WorkflowExecutor,
+    WorkflowResult,
+)
+from .spec import Step, WorkflowSpec, WorkflowSpecError
+from .txn import (
+    MEMO_PREFIX,
+    MemoStore,
+    TxnScope,
+    WorkflowSession,
+    memo_key,
+    memo_txn_uuid,
+    step_txn_uuid,
+)
+
+__all__ = [
+    "Step",
+    "WorkflowSpec",
+    "WorkflowSpecError",
+    "WorkflowExecutor",
+    "WorkflowConfig",
+    "WorkflowResult",
+    "WorkflowError",
+    "StepContext",
+    "StepFailure",
+    "TxnScope",
+    "WorkflowSession",
+    "MemoStore",
+    "MEMO_PREFIX",
+    "memo_key",
+    "memo_txn_uuid",
+    "step_txn_uuid",
+]

@@ -1,0 +1,314 @@
+"""Workflow scheduler/executor: parallel DAG execution on the FaaS platform.
+
+The executor walks a :class:`~repro.workflow.spec.WorkflowSpec` in dependency
+order, submitting every *ready* step to the :class:`LambdaPlatform` pool so
+independent branches run concurrently (each submission pays the platform's
+warm-start overhead, like any other function invocation).  State access goes
+through the attempt's :class:`WorkflowSession` (see ``txn.py``), so the same
+DAG runs under whole-workflow, per-step, or no transaction scoping.
+
+Failure model — the platform's retry-based model (§2.2, §7) lifted to DAGs:
+
+* any step may die mid-body (``ctx.maybe_fail()`` failure points, or a real
+  exception); the attempt drains in-flight branches, rolls back the scope's
+  uncommitted state, and the **whole workflow retries** under the same
+  workflow UUID;
+* on retry, steps whose memo record exists are *not re-run*: their recorded
+  result feeds dependents and their recorded writes are replayed into the
+  fresh session (``TxnScope.WORKFLOW``) or are already durable
+  (``TxnScope.STEP``).  Memo commits are idempotent by deterministic UUID
+  (§3.3.1), so a step's effects survive into exactly one commit no matter
+  how many attempts raced over it;
+* the final workflow commit reuses the workflow UUID, so even a lost commit
+  acknowledgement cannot double-apply the DAG's write set.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, Future, wait
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Set, Tuple
+
+from ..core import AftCluster, TxnId
+from ..core.ids import fresh_uuid
+from ..faas.platform import LambdaPlatform
+from ..storage.base import StorageEngine
+from .spec import Step, WorkflowSpec
+from .txn import (
+    MemoStore,
+    TxnScope,
+    WorkflowSession,
+    encode_memo,
+    make_session,
+)
+
+
+class WorkflowError(RuntimeError):
+    """The workflow exhausted its attempts."""
+
+
+class StepFailure(RuntimeError):
+    def __init__(self, step_name: str, cause: BaseException):
+        super().__init__(f"step {step_name!r} failed: {cause!r}")
+        self.step_name = step_name
+        self.cause = cause
+
+
+@dataclass
+class WorkflowConfig:
+    scope: TxnScope = TxnScope.WORKFLOW
+    max_attempts: int = 6
+    retry_backoff_ms: float = 5.0
+    memoize: bool = True
+    # keys the workflow intends to write — the unscoped baseline embeds this
+    # as the cowritten set so auditors can score fractured states (§6.1.2)
+    declared_writes: Tuple[str, ...] = ()
+
+
+@dataclass
+class WorkflowResult:
+    workflow_uuid: str
+    results: Dict[str, Any]
+    skipped: Tuple[str, ...]
+    attempts: int
+    steps_run: int
+    steps_memoized: int
+    committed_tid: Optional[TxnId]
+    wall_ms: float
+    scope: str
+
+    @property
+    def resumed(self) -> bool:
+        return self.steps_memoized > 0
+
+
+class StepContext:
+    """What a step body sees: upstream results, scoped state access, and the
+    platform's failure-injection hook.  Writes are also recorded locally so
+    the step can be memoized and replayed without re-running."""
+
+    def __init__(
+        self,
+        step: Step,
+        session: WorkflowSession,
+        platform: LambdaPlatform,
+        inputs: Dict[str, Any],
+        args: Any,
+    ):
+        self._step = step
+        self._session = session
+        self._platform = platform
+        self.inputs = inputs
+        self.args = args
+        self.writes: Dict[str, bytes] = {}
+
+    @property
+    def step_name(self) -> str:
+        return self._step.name
+
+    @property
+    def branch(self) -> Optional[int]:
+        return self._step.branch
+
+    @property
+    def workflow_uuid(self) -> str:
+        return self._session.uuid
+
+    def get(self, key: str) -> Optional[bytes]:
+        return self._session.get(self._step.name, key)
+
+    def put(self, key: str, value: bytes) -> None:
+        self._session.put(self._step.name, key, value)
+        self.writes[key] = value
+
+    def maybe_fail(self, site: Optional[str] = None) -> None:
+        """Mid-body failure point (fractional-execution hazard, §1)."""
+        self._platform.maybe_fail(site=site or f"step:{self._step.name}")
+
+
+class WorkflowExecutor:
+    def __init__(
+        self,
+        platform: LambdaPlatform,
+        *,
+        cluster: Optional[AftCluster] = None,
+        storage: Optional[StorageEngine] = None,
+        config: Optional[WorkflowConfig] = None,
+    ):
+        self.platform = platform
+        self.cluster = cluster
+        self.storage = storage
+        self.config = config or WorkflowConfig()
+        self.stats = {
+            "workflows": 0,
+            "workflow_retries": 0,
+            "steps_run": 0,
+            "steps_memoized": 0,
+            "steps_skipped": 0,
+        }
+        self._memo = MemoStore(cluster) if cluster is not None else None
+
+    # ------------------------------------------------------------------ run
+    def run(
+        self,
+        spec: WorkflowSpec,
+        *,
+        uuid: Optional[str] = None,
+        args: Any = None,
+    ) -> WorkflowResult:
+        spec.validate()
+        cfg = self.config
+        # an explicit UUID is a cross-process resume/re-drive: consult memos
+        # from the very first attempt, not just after an in-process failure
+        resume_eligible = uuid is not None
+        workflow_uuid = uuid or fresh_uuid()
+        memoizing = (
+            cfg.memoize and cfg.scope is not TxnScope.NONE and self._memo is not None
+        )
+        t0 = time.perf_counter()
+        last_exc: Optional[BaseException] = None
+        for attempt in range(1, cfg.max_attempts + 1):
+            if attempt > 1:
+                self.stats["workflow_retries"] += 1
+                self.platform._sleep_ms(cfg.retry_backoff_ms * (attempt - 1))
+            session = make_session(
+                cfg.scope,
+                workflow_uuid,
+                cluster=self.cluster,
+                storage=self.storage,
+                cowritten_hint=cfg.declared_writes,
+            )
+            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
+            if memoizing and (attempt > 1 or resume_eligible):
+                memos, records = self._memo.load_all(
+                    workflow_uuid, spec.steps, scope=cfg.scope
+                )
+                session.recover(records)
+            try:
+                results, skipped, ran, memoized = self._run_attempt(
+                    spec, session, memos, args, memoizing
+                )
+                tid = session.finish()
+            except Exception as exc:
+                # retry every *failure*; KeyboardInterrupt/SystemExit must
+                # still interrupt the loop (BaseException stays fatal)
+                last_exc = exc
+                session.abandon()
+                continue
+            except BaseException:
+                session.abandon()  # release the txn before dying
+                raise
+            self.stats["workflows"] += 1
+            self.stats["steps_run"] += ran
+            self.stats["steps_memoized"] += memoized
+            self.stats["steps_skipped"] += len(skipped)
+            return WorkflowResult(
+                workflow_uuid=workflow_uuid,
+                results=results,
+                skipped=tuple(sorted(skipped)),
+                attempts=attempt,
+                steps_run=ran,
+                steps_memoized=memoized,
+                committed_tid=tid,
+                wall_ms=(time.perf_counter() - t0) * 1e3,
+                scope=cfg.scope.value,
+            )
+        raise WorkflowError(
+            f"workflow {spec.name!r} ({workflow_uuid}) failed after "
+            f"{cfg.max_attempts} attempts"
+        ) from last_exc
+
+    # -------------------------------------------------------------- attempt
+    def _run_attempt(
+        self,
+        spec: WorkflowSpec,
+        session: WorkflowSession,
+        memos: Dict[str, Tuple[Any, Dict[str, bytes]]],
+        args: Any,
+        memoizing: bool,
+    ) -> Tuple[Dict[str, Any], Set[str], int, int]:
+        indeg = {name: len(s.deps) for name, s in spec.steps.items()}
+        dependents = spec.dependents_of()
+        results: Dict[str, Any] = {}
+        skipped: Set[str] = set()
+        ran = 0
+        memoized = 0
+        ready = deque(n for n, d in indeg.items() if d == 0)
+        in_flight: Dict[Future, str] = {}
+
+        def resolve(name: str) -> None:
+            for m in dependents[name]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+
+        def launch(name: str) -> None:
+            nonlocal memoized
+            step = spec.steps[name]
+            missing = [d for d in step.deps if d in skipped]
+            if missing and not step.allow_skipped_deps:
+                skipped.add(name)
+                resolve(name)
+                return
+            inputs = {d: results[d] for d in step.deps if d not in skipped}
+            if step.when is not None and not step.when(inputs):
+                skipped.add(name)
+                resolve(name)
+                return
+            if name in memos:
+                # §3.3.1 extended to steps: the body already ran to
+                # completion in a prior attempt — feed its recorded result
+                # downstream and replay its writes into this session.
+                result, writes = memos[name]
+                session.replay(name, writes)
+                results[name] = result
+                memoized += 1
+                resolve(name)
+                return
+            fut = self.platform.submit(self._run_step, step, session, inputs, args, memoizing)
+            in_flight[fut] = name
+
+        while ready or in_flight:
+            while ready:
+                launch(ready.popleft())
+            if not in_flight:
+                break
+            done, _ = wait(set(in_flight), return_when=FIRST_COMPLETED)
+            failure: Optional[StepFailure] = None
+            for fut in done:
+                name = in_flight.pop(fut)
+                exc = fut.exception()
+                if exc is not None:
+                    failure = failure or StepFailure(name, exc)
+                    continue
+                results[name] = fut.result()
+                ran += 1
+                resolve(name)
+            if failure is not None:
+                # drain sibling branches before rolling back the attempt so
+                # abandon() can't race their in-flight get/put calls
+                wait(set(in_flight))
+                raise failure
+        return results, skipped, ran, memoized
+
+    def _run_step(
+        self,
+        step: Step,
+        session: WorkflowSession,
+        inputs: Dict[str, Any],
+        args: Any,
+        memoizing: bool,
+    ) -> Any:
+        session.step_begin(step.name)
+        ctx = StepContext(step, session, self.platform, inputs, args)
+        self.platform.maybe_fail(site=f"step:{step.name}:begin")
+        result = step.fn(ctx)
+        payload = encode_memo(result, ctx.writes) if memoizing else None
+        inline = bool(getattr(session, "inline_memo", False))
+        session.step_commit(step.name, payload if inline else None)
+        if memoizing and not inline:
+            assert self._memo is not None
+            self._memo.save(session.uuid, step.name, payload)
+        return result

@@ -1,0 +1,179 @@
+"""Declarative workflow specs: DAGs of named FaaS steps.
+
+AFT's request model (§2.2) is a *linear* composition of functions.  Real
+serverless applications (Beldi, Cloudburst — see PAPERS.md) compose functions
+into DAGs: fan-out over shards, fan-in aggregation, conditional routing.  A
+``WorkflowSpec`` captures that shape declaratively:
+
+* a **step** is a named function body taking a :class:`StepContext` (state
+  access routed through the workflow's transaction scope, upstream results,
+  failure-injection hook) and returning a JSON-serializable result;
+* **data dependencies** (``deps``) order steps; everything whose deps are
+  satisfied runs in parallel on the FaaS platform;
+* **conditional edges**: a step with ``when=`` is evaluated against its
+  upstream results and *skipped* when the predicate is false; skips propagate
+  to exclusive dependents (a fan-in step can opt in to partial inputs with
+  ``allow_skipped_deps``);
+* **fan-out/fan-in** helpers stamp out indexed parallel branches
+  (``shard[0..n)``) and their aggregation step.
+
+Specs are pure data + callables; execution semantics (parallelism,
+transaction scoping, retry, memoized resume) live in ``executor.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class WorkflowSpecError(ValueError):
+    """The spec is not a well-formed DAG (cycle, unknown dep, dup name)."""
+
+
+@dataclass
+class Step:
+    """One node of the DAG.
+
+    ``fn(ctx)`` receives a :class:`repro.workflow.executor.StepContext`.
+    ``when(results)`` — if present — sees a dict of the step's *upstream*
+    results (skipped deps absent) and gates execution.  ``branch`` is set on
+    fan-out clones so one body can serve every branch.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    deps: Tuple[str, ...] = ()
+    when: Optional[Callable[[Dict[str, Any]], bool]] = None
+    allow_skipped_deps: bool = False
+    branch: Optional[int] = None
+
+
+class WorkflowSpec:
+    def __init__(self, name: str):
+        self.name = name
+        self.steps: Dict[str, Step] = {}
+
+    # ------------------------------------------------------------ builders
+    def add(self, step: Step) -> str:
+        if step.name in self.steps:
+            raise WorkflowSpecError(f"duplicate step name {step.name!r}")
+        self.steps[step.name] = step
+        return step.name
+
+    def step(
+        self,
+        name: str,
+        fn: Callable[..., Any],
+        *,
+        deps: Sequence[str] = (),
+        when: Optional[Callable[[Dict[str, Any]], bool]] = None,
+        allow_skipped_deps: bool = False,
+    ) -> str:
+        return self.add(
+            Step(
+                name=name,
+                fn=fn,
+                deps=tuple(deps),
+                when=when,
+                allow_skipped_deps=allow_skipped_deps,
+            )
+        )
+
+    def fan_out(
+        self,
+        prefix: str,
+        fn: Callable[..., Any],
+        n: int,
+        *,
+        deps: Sequence[str] = (),
+        when: Optional[Callable[[Dict[str, Any]], bool]] = None,
+    ) -> List[str]:
+        """Stamp out ``n`` parallel branches ``prefix[i]`` sharing one body;
+        the body distinguishes branches via ``ctx.branch``."""
+        if n < 1:
+            raise WorkflowSpecError(f"fan_out needs n >= 1, got {n}")
+        names = []
+        for i in range(n):
+            names.append(
+                self.add(
+                    Step(
+                        name=f"{prefix}[{i}]",
+                        fn=fn,
+                        deps=tuple(deps),
+                        when=when,
+                        branch=i,
+                    )
+                )
+            )
+        return names
+
+    def fan_in(
+        self,
+        name: str,
+        fn: Callable[..., Any],
+        deps: Sequence[str],
+        *,
+        allow_skipped_deps: bool = True,
+    ) -> str:
+        """Aggregation step over parallel branches; by default tolerates
+        conditionally-skipped inputs (it sees only the results that exist)."""
+        return self.add(
+            Step(
+                name=name,
+                fn=fn,
+                deps=tuple(deps),
+                allow_skipped_deps=allow_skipped_deps,
+            )
+        )
+
+    # ---------------------------------------------------------- validation
+    def validate(self) -> None:
+        for step in self.steps.values():
+            for dep in step.deps:
+                if dep not in self.steps:
+                    raise WorkflowSpecError(
+                        f"step {step.name!r} depends on unknown step {dep!r}"
+                    )
+                if dep == step.name:
+                    raise WorkflowSpecError(f"step {step.name!r} depends on itself")
+        self.topological_order()  # raises on cycles
+
+    def topological_order(self) -> List[str]:
+        """Kahn's algorithm; deterministic (insertion-order tie-break)."""
+        indeg = {name: len(s.deps) for name, s in self.steps.items()}
+        dependents: Dict[str, List[str]] = {name: [] for name in self.steps}
+        for name, s in self.steps.items():
+            for dep in s.deps:
+                if dep in dependents:
+                    dependents[dep].append(name)
+        ready = [n for n, d in indeg.items() if d == 0]
+        order: List[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for m in dependents[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+        if len(order) != len(self.steps):
+            stuck = sorted(set(self.steps) - set(order))
+            raise WorkflowSpecError(f"cycle through steps {stuck}")
+        return order
+
+    # ------------------------------------------------------------- queries
+    def roots(self) -> List[str]:
+        return [n for n, s in self.steps.items() if not s.deps]
+
+    def dependents_of(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {name: [] for name in self.steps}
+        for name, s in self.steps.items():
+            for dep in s.deps:
+                out[dep].append(name)
+        return out
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.steps

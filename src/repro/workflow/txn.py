@@ -1,0 +1,361 @@
+"""Transaction scoping for workflows: how a DAG maps onto AFT transactions.
+
+Three scopes, chosen per run:
+
+* ``TxnScope.WORKFLOW`` — the whole DAG is **one** AFT transaction.  Every
+  branch's reads go through Algorithm 1 on the same session (read-atomic
+  across the fan-out) and every write is buffered until the single commit at
+  the end, so a crash anywhere in the DAG never persists a fractured subset
+  of updates.  The transaction UUID is the workflow UUID; a retried workflow
+  reopens it (§3.3.1) and the final commit is idempotent.
+
+* ``TxnScope.STEP`` — each step is its own AFT transaction whose UUID is
+  *derived deterministically* from (workflow UUID, step name), so a retried
+  step recommits exactly once even across nodes.  Steps are individually
+  atomic but the DAG as a whole is not (the Beldi-style middle ground).
+
+* ``TxnScope.NONE`` — the unshimmed baseline: writes land in place on the
+  storage engine immediately (with §6.1.2-style embedded metadata so anomaly
+  detectors can see what happened).  A mid-branch crash leaves a fractured
+  prefix visible, and a retry re-applies effects — this is the anomaly
+  source ``benchmarks/fig_workflow`` measures.
+
+The **memo store** rides on AFT itself: a completed step's result and write
+set are committed under a reserved key (``.wf/<uuid>/<step>``) by a separate
+transaction whose UUID derives from (workflow UUID, step name).  AFT's
+idempotent commit (§3.3.1) makes memoization exactly-once, and a retried
+workflow resumes by replaying memoized writes into its fresh session instead
+of re-running step bodies.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import threading
+from enum import Enum
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+from ..core import AftCluster, TxnId
+from ..core.ids import Clock, fresh_uuid
+from ..core.records import embed_metadata, extract_metadata
+from ..storage.base import StorageEngine
+
+MEMO_PREFIX = ".wf/"
+
+
+class TxnScope(Enum):
+    WORKFLOW = "workflow"
+    STEP = "step"
+    NONE = "none"
+
+
+def memo_key(workflow_uuid: str, step_name: str) -> str:
+    return f"{MEMO_PREFIX}{workflow_uuid}/{step_name}"
+
+
+def step_txn_uuid(workflow_uuid: str, step_name: str) -> str:
+    """Deterministic per-step transaction UUID (§3.3.1 idempotence unit)."""
+    return f"{workflow_uuid}.step.{step_name}"
+
+
+def memo_txn_uuid(workflow_uuid: str, step_name: str) -> str:
+    return f"{workflow_uuid}.memo.{step_name}"
+
+
+# ---------------------------------------------------------------------------
+# memo records
+# ---------------------------------------------------------------------------
+
+def encode_memo(result: Any, writes: Dict[str, bytes]) -> bytes:
+    try:
+        return json.dumps(
+            {
+                "result": result,
+                "writes": {
+                    k: base64.b64encode(v).decode("ascii")
+                    for k, v in writes.items()
+                },
+            },
+            separators=(",", ":"),
+        ).encode()
+    except (TypeError, ValueError) as exc:
+        raise TypeError(
+            "step results must be JSON-serializable to be memoized "
+            f"(got {type(result).__name__}); return plain data or disable "
+            "memoization"
+        ) from exc
+
+
+def decode_memo(raw: bytes) -> Tuple[Any, Dict[str, bytes]]:
+    body = json.loads(raw)
+    writes = {
+        k: base64.b64decode(v.encode("ascii"))
+        for k, v in body.get("writes", {}).items()
+    }
+    return body.get("result"), writes
+
+
+class MemoStore:
+    """Per-step result persistence *through* AFT (exactly-once by UUID)."""
+
+    def __init__(self, cluster: AftCluster):
+        self.cluster = cluster
+
+    def save(self, workflow_uuid: str, step_name: str, payload: bytes) -> None:
+        client = self.cluster.client()
+        tx = client.start_transaction(memo_txn_uuid(workflow_uuid, step_name))
+        client.put(tx, memo_key(workflow_uuid, step_name), payload)
+        client.commit_transaction(tx)
+
+    def load_all(
+        self,
+        workflow_uuid: str,
+        step_names: Iterable[str],
+        scope: Optional[TxnScope] = None,
+    ):
+        """Recover every memoized step from durable storage (§3.1) — not
+        through a node's metadata cache, because a retry may land before
+        multicast has propagated the memo commits (§3.3.1's rare-path
+        reasoning).  A missed memo is safe either way (the step re-runs and
+        recommits idempotently), but reading the source of truth makes
+        resume deterministic.  Cost is O(steps) point reads through the
+        ``u/`` uuid index.
+
+        Returns ``(memos, records)``: the decoded memo per step name, plus
+        the workflow's commit records so the caller can merge them into
+        whichever node the retry pins to (the §4.2 propagation multicast
+        would eventually perform, done eagerly) — without this, a resumed
+        step on a fresh node could read NULL for a sibling's committed write.
+        """
+        from ..core.records import lookup_committed_record
+
+        storage = self.cluster.storage
+        found: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
+        records = []
+        for name in step_names:
+            # a memo commit is either its own transaction (TxnScope.WORKFLOW)
+            # or rides inside the step's transaction (TxnScope.STEP); when
+            # the scope is known, probe only the UUID that can exist
+            if scope is TxnScope.WORKFLOW:
+                candidates = (memo_txn_uuid(workflow_uuid, name),)
+            elif scope is TxnScope.STEP:
+                candidates = (step_txn_uuid(workflow_uuid, name),)
+            else:
+                candidates = (
+                    memo_txn_uuid(workflow_uuid, name),
+                    step_txn_uuid(workflow_uuid, name),
+                )
+            record = None
+            for u in candidates:
+                record = lookup_committed_record(storage, u)
+                if record is not None:
+                    break
+            if record is None:
+                continue
+            records.append(record)
+            payload = storage.get(
+                record.storage_key_for(memo_key(workflow_uuid, name))
+            )
+            if payload is not None:
+                found[name] = decode_memo(payload)
+        return found, records
+
+
+# ---------------------------------------------------------------------------
+# scoped sessions
+# ---------------------------------------------------------------------------
+
+class WorkflowSession:
+    """State-access surface handed to steps, one per workflow *attempt*.
+
+    ``get``/``put`` are called concurrently from parallel branches; every
+    implementation below is safe for that (the AFT node itself is
+    thread-safe per session, the unscoped baseline writes through to the
+    engine).
+    """
+
+    uuid: str
+    # True ⇒ the memo payload rides inside the step's own transaction (so
+    # "memo exists" ⇔ "step committed"); False ⇒ the executor persists the
+    # memo as a separate idempotent transaction after the body returns.
+    inline_memo = False
+
+    def get(self, step_name: str, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def put(self, step_name: str, key: str, value: bytes) -> None:
+        raise NotImplementedError
+
+    def step_begin(self, step_name: str) -> None:
+        pass
+
+    def step_commit(self, step_name: str, memo_payload: Optional[bytes]) -> None:
+        """Called after a step body returns; per-step scopes commit here."""
+
+    def replay(self, step_name: str, writes: Dict[str, bytes]) -> None:
+        """Re-apply a memoized step's writes without re-running its body."""
+        for key, value in writes.items():
+            self.put(step_name, key, value)
+
+    def recover(self, records) -> None:
+        """Merge the workflow's prior commit records (from the durable
+        Commit Set) into this attempt's node, closing the multicast window."""
+
+    def finish(self) -> Optional[TxnId]:
+        """Commit whatever the scope holds open; idempotent on retry."""
+        return None
+
+    def abandon(self) -> None:
+        """Attempt failed: roll back anything uncommitted."""
+
+
+class WorkflowTxnSession(WorkflowSession):
+    """One AFT transaction spanning the whole DAG (``TxnScope.WORKFLOW``)."""
+
+    def __init__(self, cluster: AftCluster, workflow_uuid: str):
+        self.client = cluster.client()
+        self.txid = self.client.start_transaction(workflow_uuid)
+        self.uuid = self.txid
+        self.node = self.client.node_of(self.txid)
+
+    def get(self, step_name: str, key: str) -> Optional[bytes]:
+        return self.node.get(self.txid, key)
+
+    def put(self, step_name: str, key: str, value: bytes) -> None:
+        self.node.put(self.txid, key, value)
+
+    def recover(self, records) -> None:
+        if records:
+            self.node.merge_remote_commits(records)
+
+    def finish(self) -> Optional[TxnId]:
+        return self.client.commit_transaction(self.txid)
+
+    def abandon(self) -> None:
+        try:
+            self.client.abort_transaction(self.txid)
+        except Exception:
+            pass  # node may have died; timeout sweep is the backstop
+
+
+class StepTxnSession(WorkflowSession):
+    """One AFT transaction per step (``TxnScope.STEP``).
+
+    The memo record is written *inside* the step's transaction, so "step
+    committed" and "memo exists" are the same event — a retry that finds the
+    memo knows the step's writes are already durable and atomic.
+    """
+
+    inline_memo = True
+
+    def __init__(self, cluster: AftCluster, workflow_uuid: str):
+        self.cluster = cluster
+        self.uuid = workflow_uuid
+        # §3.1 extended to DAGs: every step transaction of one workflow pins
+        # to a single node, so a step's commit is locally visible to its
+        # dependents immediately — no multicast round in the critical path.
+        # If the node dies mid-workflow the attempt fails and the retry pins
+        # to a live node; deterministic UUIDs + the §3.3.1 commit-set verify
+        # keep recommits exactly-once across nodes.
+        self.node = cluster.pick_node()
+        self._txids: Dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def step_begin(self, step_name: str) -> None:
+        txid = self.node.start_transaction(step_txn_uuid(self.uuid, step_name))
+        with self._lock:
+            self._txids[step_name] = txid
+
+    def _txid(self, step_name: str) -> str:
+        with self._lock:
+            return self._txids[step_name]
+
+    def get(self, step_name: str, key: str) -> Optional[bytes]:
+        return self.node.get(self._txid(step_name), key)
+
+    def put(self, step_name: str, key: str, value: bytes) -> None:
+        self.node.put(self._txid(step_name), key, value)
+
+    def step_commit(self, step_name: str, memo_payload: Optional[bytes]) -> None:
+        txid = self._txid(step_name)
+        if memo_payload is not None:
+            self.node.put(txid, memo_key(self.uuid, step_name), memo_payload)
+        self.node.commit_transaction(txid)
+        self.node.release_transaction(txid)
+        with self._lock:
+            self._txids.pop(step_name, None)
+
+    def replay(self, step_name: str, writes: Dict[str, bytes]) -> None:
+        pass  # memo present ⇔ the step's transaction already committed
+
+    def recover(self, records) -> None:
+        if records:
+            self.node.merge_remote_commits(records)
+
+    def abandon(self) -> None:
+        with self._lock:
+            pending = list(self._txids.values())
+            self._txids.clear()
+        for txid in pending:
+            try:
+                self.node.abort_transaction(txid)
+                self.node.release_transaction(txid)
+            except Exception:
+                pass
+
+
+class UnscopedSession(WorkflowSession):
+    """No shim (``TxnScope.NONE``): in-place writes, immediately visible.
+
+    Embeds §6.1.2 metadata (timestamp, UUID, the workflow's declared
+    cowritten key set) in every value so external auditors can score the
+    fractured states this scope produces.  ``cowritten_hint`` is the set of
+    keys the workflow intends to write — the baseline equivalent of a commit
+    record's write set.
+    """
+
+    _clock = Clock()
+
+    def __init__(
+        self,
+        storage: StorageEngine,
+        workflow_uuid: str,
+        cowritten_hint: Sequence[str] = (),
+    ):
+        self.storage = storage
+        self.uuid = workflow_uuid
+        self.cowritten = tuple(sorted(cowritten_hint))
+        self.tid = TxnId(self._clock.now_ns(), fresh_uuid())
+
+    def get(self, step_name: str, key: str) -> Optional[bytes]:
+        raw = self.storage.get(key)
+        if raw is None:
+            return None
+        value, _tid, _cow = extract_metadata(raw)
+        return value
+
+    def put(self, step_name: str, key: str, value: bytes) -> None:
+        cow = self.cowritten or (key,)
+        self.storage.put(key, embed_metadata(value, self.tid, cow))
+
+
+def make_session(
+    scope: TxnScope,
+    workflow_uuid: str,
+    *,
+    cluster: Optional[AftCluster] = None,
+    storage: Optional[StorageEngine] = None,
+    cowritten_hint: Sequence[str] = (),
+) -> WorkflowSession:
+    if scope is TxnScope.WORKFLOW:
+        if cluster is None:
+            raise ValueError("TxnScope.WORKFLOW requires an AftCluster")
+        return WorkflowTxnSession(cluster, workflow_uuid)
+    if scope is TxnScope.STEP:
+        if cluster is None:
+            raise ValueError("TxnScope.STEP requires an AftCluster")
+        return StepTxnSession(cluster, workflow_uuid)
+    if storage is None:
+        raise ValueError("TxnScope.NONE requires a StorageEngine")
+    return UnscopedSession(storage, workflow_uuid, cowritten_hint)

@@ -1,0 +1,158 @@
+"""Thread-safety of ONE transaction session driven by parallel branches.
+
+A workflow DAG funnels every branch's get/put through a single AFT
+transaction context; these tests hammer `read_set`/`buffer` from many
+threads and assert the §3.2 session guarantees still hold: no internal
+errors (dict-mutation races), repeatable reads (one version per key per
+session), read-your-writes, and a commit containing every branch's write.
+"""
+
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core import AftNode, AftNodeConfig
+from repro.storage.memory import MemoryStorage
+
+THREADS = 16
+OPS = 60
+
+
+def make_node(**cfg) -> AftNode:
+    return AftNode(MemoryStorage(), AftNodeConfig(node_id="n0", **cfg))
+
+
+def seed_versions(node: AftNode, keys, versions=3):
+    for v in range(versions):
+        tx = node.start_transaction()
+        for k in keys:
+            node.put(tx, k, f"{k}@v{v}".encode())
+        node.commit_transaction(tx)
+        node.release_transaction(tx)
+
+
+def test_concurrent_reads_converge_on_one_version_per_key():
+    node = make_node()
+    keys = [f"k{i}" for i in range(8)]
+    seed_versions(node, keys)
+    tx = node.start_transaction()
+    observed = [dict() for _ in range(THREADS)]
+    errors = []
+
+    def branch(ti: int) -> None:
+        try:
+            for i in range(OPS):
+                k = keys[(ti + i) % len(keys)]
+                value, tid = node.get_versioned(tx, k)
+                assert value is not None
+                prev = observed[ti].get(k)
+                # repeatable reads within the session, across threads
+                assert prev is None or prev == tid, (k, prev, tid)
+                observed[ti][k] = tid
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    with ThreadPoolExecutor(THREADS) as pool:
+        list(pool.map(branch, range(THREADS)))
+    assert not errors, errors
+    # every thread saw the SAME version per key (session-wide convergence)
+    merged = {}
+    for per_thread in observed:
+        for k, tid in per_thread.items():
+            assert merged.setdefault(k, tid) == tid
+    # and the recorded read set matches what the threads saw
+    assert node.read_set_of(tx) == merged
+
+
+def test_concurrent_writes_all_land_in_one_commit():
+    node = make_node()
+    tx = node.start_transaction()
+    errors = []
+
+    def branch(ti: int) -> None:
+        try:
+            for i in range(OPS):
+                node.put(tx, f"w{ti}/{i}", json.dumps({"t": ti, "i": i}).encode())
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    with ThreadPoolExecutor(THREADS) as pool:
+        list(pool.map(branch, range(THREADS)))
+    assert not errors, errors
+    tid = node.commit_transaction(tx)
+    record = node.cache.get(tid)
+    assert record is not None
+    assert len(record.write_set) == THREADS * OPS
+    # read-back: every branch's write is visible post-commit
+    tx2 = node.start_transaction()
+    assert node.get(tx2, f"w0/0") == json.dumps({"t": 0, "i": 0}).encode()
+    assert node.get(tx2, f"w{THREADS-1}/{OPS-1}") is not None
+    node.abort_transaction(tx2)
+
+
+def test_concurrent_mixed_get_put_with_ryw():
+    """Interleaved reads+writes from parallel branches: reads of keys the
+    session wrote must return the session's bytes (read-your-writes, §3.5),
+    reads of foreign keys must stay repeatable."""
+    node = make_node()
+    shared = [f"s{i}" for i in range(4)]
+    seed_versions(node, shared, versions=2)
+    tx = node.start_transaction()
+    errors = []
+
+    def branch(ti: int) -> None:
+        try:
+            own = f"own{ti}"
+            node.put(tx, own, f"mine-{ti}".encode())
+            seen = {}
+            for i in range(OPS):
+                assert node.get(tx, own) == f"mine-{ti}".encode()
+                k = shared[i % len(shared)]
+                value, tid = node.get_versioned(tx, k)
+                assert seen.setdefault(k, tid) == tid
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    with ThreadPoolExecutor(THREADS) as pool:
+        list(pool.map(branch, range(THREADS)))
+    assert not errors, errors
+    tid = node.commit_transaction(tx)
+    assert len(node.cache.get(tid).write_set) == THREADS
+
+
+def test_concurrent_session_use_with_gc_sweeps():
+    """GC iterates active read sets while branches mutate them — the
+    historical dict-changed-size crash vector."""
+    node = make_node(min_gc_age_s=0.0)
+    keys = [f"g{i}" for i in range(6)]
+    seed_versions(node, keys, versions=4)
+    tx = node.start_transaction()
+    stop = threading.Event()
+    errors = []
+
+    def sweeper() -> None:
+        while not stop.is_set():
+            try:
+                node.gc_sweep_local()
+            except BaseException as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+
+    def branch(ti: int) -> None:
+        try:
+            for i in range(OPS):
+                node.get(tx, keys[(ti + i) % len(keys)])
+                node.put(tx, f"b{ti}/{i}", b"v")
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    gc_thread = threading.Thread(target=sweeper)
+    gc_thread.start()
+    with ThreadPoolExecutor(THREADS) as pool:
+        list(pool.map(branch, range(THREADS)))
+    stop.set()
+    gc_thread.join(timeout=10)
+    assert not errors, errors
+    node.commit_transaction(tx)

@@ -9,6 +9,8 @@ instance of the paper's atomic-visibility guarantee.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import AftCheckpointer, CheckpointNotFound

@@ -15,8 +15,10 @@ satisfies the paper's §3.2 guarantees:
 * value integrity — bytes returned match the bytes committed for the version.
 """
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import HealthCheck, settings
 from hypothesis.stateful import (
     Bundle,

@@ -1,0 +1,369 @@
+"""Workflow executor: parallel branches, transaction scoping, exactly-once
+resume under injected mid-branch crashes."""
+
+import json
+import threading
+
+import pytest
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.records import COMMIT_PREFIX, extract_metadata
+from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    TxnScope,
+    WorkflowConfig,
+    WorkflowError,
+    WorkflowExecutor,
+    WorkflowSpec,
+)
+
+BRANCHES = 8
+
+
+def make_cluster(nodes: int = 1) -> AftCluster:
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+    )
+
+
+def fast_platform(**kw) -> LambdaPlatform:
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def fanout_spec(epoch: int = 0) -> WorkflowSpec:
+    spec = WorkflowSpec("fanout")
+
+    def branch_fn(ctx):
+        key = f"k{ctx.branch}"
+        raw = ctx.get(key)
+        count = json.loads(raw)["count"] if raw else 0
+        ctx.maybe_fail()
+        ctx.put(key, json.dumps({"count": count + 1, "epoch": epoch}).encode())
+        return count + 1
+
+    names = spec.fan_out("branch", branch_fn, BRANCHES)
+
+    def summarize(ctx):
+        total = sum(ctx.inputs[n] for n in names)
+        ctx.put("summary", str(total).encode())
+        return total
+
+    spec.fan_in("summary", summarize, names)
+    return spec
+
+
+def read_all(cluster, keys):
+    node = cluster.live_nodes()[0]
+    tx = node.start_transaction()
+    out = {k: node.get(tx, k) for k in keys}
+    node.abort_transaction(tx)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# happy path
+# ---------------------------------------------------------------------------
+
+def test_parallel_branches_commit_atomically():
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(scope=TxnScope.WORKFLOW),
+    )
+    res = ex.run(fanout_spec())
+    assert res.attempts == 1
+    assert res.results["summary"] == BRANCHES
+    assert res.committed_tid is not None
+    values = read_all(cluster, [f"k{i}" for i in range(BRANCHES)] + ["summary"])
+    assert all(v is not None for v in values.values())
+    assert values["summary"] == str(BRANCHES).encode()
+
+
+def test_branches_actually_run_in_parallel():
+    """All fan-out branches must be in flight simultaneously."""
+    cluster = make_cluster()
+    barrier = threading.Barrier(BRANCHES, timeout=10)
+    spec = WorkflowSpec("sync")
+
+    def branch_fn(ctx):
+        barrier.wait()  # deadlocks unless every branch runs concurrently
+        return ctx.branch
+
+    spec.fan_out("branch", branch_fn, BRANCHES)
+    ex = WorkflowExecutor(fast_platform(), cluster=cluster)
+    res = ex.run(spec)
+    assert res.steps_run == BRANCHES
+
+
+def test_conditional_edges_and_skip_propagation():
+    cluster = make_cluster()
+    spec = WorkflowSpec("cond")
+    spec.step("a", lambda ctx: 1)
+    spec.step("never", lambda ctx: 2, deps=["a"], when=lambda r: r["a"] > 100)
+    spec.step("downstream", lambda ctx: 3, deps=["never"])  # skip propagates
+    spec.step(
+        "tolerant",
+        lambda ctx: sorted(ctx.inputs),
+        deps=["a", "never"],
+        allow_skipped_deps=True,
+    )
+    ex = WorkflowExecutor(fast_platform(), cluster=cluster)
+    res = ex.run(spec)
+    assert set(res.skipped) == {"never", "downstream"}
+    assert res.results["tolerant"] == ["a"]  # sees only non-skipped inputs
+
+
+def test_inputs_flow_along_edges():
+    cluster = make_cluster()
+    spec = WorkflowSpec("flow")
+    spec.step("a", lambda ctx: {"x": 2})
+    spec.step("b", lambda ctx: ctx.inputs["a"]["x"] * 21, deps=["a"])
+    ex = WorkflowExecutor(fast_platform(), cluster=cluster)
+    assert ex.run(spec).results["b"] == 42
+
+
+# ---------------------------------------------------------------------------
+# failure injection + retry + memoized resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scope", [TxnScope.WORKFLOW, TxnScope.STEP])
+def test_exactly_once_under_injected_crashes(scope):
+    cluster = make_cluster(nodes=2 if scope is TxnScope.STEP else 1)
+    platform = fast_platform(failure_rate=0.25, seed=5)
+    ex = WorkflowExecutor(
+        platform, cluster=cluster,
+        config=WorkflowConfig(scope=scope, max_attempts=40),
+    )
+    rounds = 3
+    for epoch in range(rounds):
+        res = ex.run(fanout_spec(epoch))
+        assert res.results["summary"] == BRANCHES * (epoch + 1)
+        # WITHIN a workflow, resume recovery closes the multicast window;
+        # ACROSS workflows visibility is eventual (§4) — deliver one
+        # deterministic multicast round so the next epoch reads fresh counts
+        cluster.step_all()
+    assert platform.failures_injected > 0  # the hazard actually fired
+    # exactly-once effects: each branch counter incremented once per round
+    values = read_all(cluster, [f"k{i}" for i in range(BRANCHES)])
+    counts = [json.loads(v)["count"] for v in values.values()]
+    assert counts == [rounds] * BRANCHES
+
+
+def test_memoized_steps_not_rerun_on_retry():
+    cluster = make_cluster()
+    ran = []
+    spec = WorkflowSpec("once")
+
+    def a(ctx):
+        ran.append("a")
+        ctx.put("ka", b"va")
+        return "A"
+
+    crashes = [True]
+
+    def b(ctx):
+        ran.append("b")
+        if crashes:
+            crashes.pop()
+            raise FunctionFailure("deliberate crash after a completed")
+        return ctx.inputs["a"] + "B"
+
+    spec.step("a", a)
+    spec.step("b", b, deps=["a"])
+    ex = WorkflowExecutor(fast_platform(), cluster=cluster)
+    res = ex.run(spec)
+    assert res.attempts == 2
+    assert res.results["b"] == "AB"
+    assert ran == ["a", "b", "b"]  # a ran exactly once, b retried
+    assert res.steps_memoized >= 1
+    # a's write still committed despite being replayed from the memo
+    assert read_all(cluster, ["ka"])["ka"] == b"va"
+
+
+def test_workflow_scope_never_persists_fractured_updates():
+    """Crash mid-DAG: either ALL the workflow's keys commit or none do."""
+    cluster = make_cluster()
+    platform = fast_platform(failure_rate=0.4, seed=9)
+    ex = WorkflowExecutor(
+        platform, cluster=cluster,
+        config=WorkflowConfig(scope=TxnScope.WORKFLOW, max_attempts=2),
+    )
+    keys = [f"k{i}" for i in range(BRANCHES)] + ["summary"]
+    for epoch in range(4):
+        try:
+            ex.run(fanout_spec(epoch))
+        except WorkflowError:
+            pass
+        values = read_all(cluster, keys)
+        present = [k for k, v in values.items() if v is not None]
+        assert present == [] or sorted(present) == sorted(keys), (
+            f"fractured commit: only {present} visible"
+        )
+
+
+def test_unscoped_baseline_exhibits_fractured_state():
+    """The control: without the shim a mid-DAG crash leaves a partial
+    prefix in place — the anomaly fig_workflow measures."""
+    storage = MemoryStorage()
+    spec = WorkflowSpec("torn")
+
+    def w(ctx):
+        ctx.put(f"t{ctx.branch}", b"x")
+        if ctx.branch == 2:
+            raise FunctionFailure("die after branches 0-2 wrote")
+        return ctx.branch
+
+    # serial chain so the crash point is deterministic
+    prev = []
+    for i in range(4):
+        step = spec.step(f"s{i}", w, deps=prev)
+        spec.steps[step].branch = i
+        prev = [step]
+
+    ex = WorkflowExecutor(
+        fast_platform(), storage=storage,
+        config=WorkflowConfig(scope=TxnScope.NONE, max_attempts=1),
+    )
+    with pytest.raises(WorkflowError):
+        ex.run(spec)
+    visible = [k for k in ("t0", "t1", "t2", "t3") if storage.get(k) is not None]
+    assert visible == ["t0", "t1", "t2"]  # fractured prefix persisted
+    value, _tid, cowritten = extract_metadata(storage.get("t0"))
+    assert value == b"x"  # §6.1.2 metadata embedded for the auditors
+
+
+def test_retry_commit_is_idempotent_per_workflow_uuid():
+    cluster = make_cluster()
+    ex = WorkflowExecutor(fast_platform(), cluster=cluster)
+    spec = WorkflowSpec("idem")
+    spec.step("a", lambda ctx: (ctx.put("ik", b"v"), "done")[1])
+    r1 = ex.run(spec, uuid="fixed-wf-uuid")
+    r2 = ex.run(spec, uuid="fixed-wf-uuid")  # re-driven whole workflow
+    assert r1.committed_tid == r2.committed_tid
+    commits = [
+        k for k in cluster.storage.list_keys(COMMIT_PREFIX)
+        if k.endswith(".fixed-wf-uuid")
+    ]
+    assert len(commits) == 1  # exactly one workflow commit record
+
+
+def test_cross_process_redrive_resumes_from_memo():
+    """An explicit UUID is the cross-process resume path: a second executor
+    (a fresh 'process') re-driving the same workflow UUID must consult memos
+    on its FIRST attempt — not re-run bodies and drift the results."""
+    cluster = make_cluster()
+    ran = []
+
+    def build():
+        spec = WorkflowSpec("redrive")
+
+        def a(ctx):
+            ran.append(1)
+            raw = ctx.get("c")
+            ctx.put("c", str(int(raw or 0) + 1).encode())
+            return int(raw or 0) + 1
+
+        spec.step("a", a)
+        return spec
+
+    r1 = WorkflowExecutor(fast_platform(), cluster=cluster).run(
+        build(), uuid="redrive-uuid"
+    )
+    r2 = WorkflowExecutor(fast_platform(), cluster=cluster).run(
+        build(), uuid="redrive-uuid"
+    )
+    assert len(ran) == 1  # the body ran exactly once across both drives
+    assert r1.results == r2.results == {"a": 1}
+    assert r2.steps_memoized == 1
+    assert r1.committed_tid == r2.committed_tid
+
+
+def test_exhausted_attempts_raise_workflow_error():
+    cluster = make_cluster()
+    spec = WorkflowSpec("doomed")
+
+    def always_dies(ctx):
+        raise FunctionFailure("unconditional")
+
+    spec.step("a", always_dies)
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=3),
+    )
+    with pytest.raises(WorkflowError, match="after 3 attempts"):
+        ex.run(spec)
+    assert ex.stats["workflow_retries"] == 2
+
+
+def test_non_serializable_result_is_a_clear_error():
+    cluster = make_cluster()
+    spec = WorkflowSpec("bad")
+    spec.step("a", lambda ctx: object())
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster, config=WorkflowConfig(max_attempts=1)
+    )
+    with pytest.raises(WorkflowError) as ei:
+        ex.run(spec)
+    assert "JSON-serializable" in repr(ei.value.__cause__)
+
+
+# ---------------------------------------------------------------------------
+# platform retry accounting (satellite)
+# ---------------------------------------------------------------------------
+
+def test_run_request_reports_attempts_accurately():
+    platform = LambdaPlatform(
+        FaasConfig(time_scale=0.0, max_retries=2)
+    )
+
+    calls = []
+
+    def fn(session):
+        calls.append(1)
+        raise FunctionFailure("always")
+
+    class S:
+        uuid = "u"
+
+    with pytest.raises(RuntimeError, match=r"3 attempts \(2 retries\)"):
+        platform.run_request(
+            [fn], begin=lambda u: S(), finish=lambda s: None,
+            on_failure=lambda s: None,
+        )
+    assert len(calls) == 3
+    assert platform.retries == 2
+
+
+def test_on_failure_errors_are_counted_not_swallowed():
+    platform = LambdaPlatform(FaasConfig(time_scale=0.0, max_retries=1))
+
+    def fn(session):
+        raise FunctionFailure("boom")
+
+    def bad_cleanup(session):
+        raise ValueError("cleanup died too")
+
+    class S:
+        uuid = "u"
+
+    with pytest.raises(RuntimeError):
+        platform.run_request(
+            [fn], begin=lambda u: S(), finish=lambda s: None,
+            on_failure=bad_cleanup,
+        )
+    assert platform.on_failure_errors == 2
+    assert isinstance(platform.last_on_failure_error, ValueError)
+
+
+def test_failure_sites_scope_injection():
+    platform = LambdaPlatform(
+        FaasConfig(time_scale=0.0, failure_rate=1.0,
+                   failure_sites=("step:shard",))
+    )
+    platform.maybe_fail()                      # anonymous: not a target
+    platform.maybe_fail(site="step:other")     # different site: not a target
+    with pytest.raises(FunctionFailure):
+        platform.maybe_fail(site="step:shard[3]")  # prefix match: dies
+    assert platform.failures_injected == 1

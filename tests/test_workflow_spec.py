@@ -1,0 +1,81 @@
+"""Workflow spec layer: DAG validation, topology, fan-out/fan-in builders."""
+
+import pytest
+
+from repro.workflow import WorkflowSpec, WorkflowSpecError
+
+
+def noop(ctx):
+    return None
+
+
+def test_topological_order_respects_deps():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop)
+    spec.step("b", noop, deps=["a"])
+    spec.step("c", noop, deps=["a"])
+    spec.step("d", noop, deps=["b", "c"])
+    order = spec.topological_order()
+    assert order.index("a") < order.index("b")
+    assert order.index("a") < order.index("c")
+    assert order.index("b") < order.index("d")
+    assert order.index("c") < order.index("d")
+    spec.validate()
+
+
+def test_cycle_detected():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop, deps=["b"])
+    spec.step("b", noop, deps=["a"])
+    with pytest.raises(WorkflowSpecError, match="cycle"):
+        spec.validate()
+
+
+def test_unknown_dep_rejected():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop, deps=["ghost"])
+    with pytest.raises(WorkflowSpecError, match="unknown step"):
+        spec.validate()
+
+
+def test_self_dep_rejected():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop, deps=["a"])
+    with pytest.raises(WorkflowSpecError, match="itself"):
+        spec.validate()
+
+
+def test_duplicate_name_rejected():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop)
+    with pytest.raises(WorkflowSpecError, match="duplicate"):
+        spec.step("a", noop)
+
+
+def test_fan_out_fan_in_shape():
+    spec = WorkflowSpec("wf")
+    spec.step("src", noop)
+    names = spec.fan_out("shard", noop, 4, deps=["src"])
+    assert names == ["shard[0]", "shard[1]", "shard[2]", "shard[3]"]
+    assert [spec.steps[n].branch for n in names] == [0, 1, 2, 3]
+    agg = spec.fan_in("agg", noop, names)
+    assert spec.steps[agg].deps == tuple(names)
+    assert spec.steps[agg].allow_skipped_deps  # tolerant by default
+    spec.validate()
+    assert len(spec) == 6
+    assert "shard[2]" in spec
+
+
+def test_fan_out_rejects_zero():
+    spec = WorkflowSpec("wf")
+    with pytest.raises(WorkflowSpecError):
+        spec.fan_out("s", noop, 0)
+
+
+def test_roots_and_dependents():
+    spec = WorkflowSpec("wf")
+    spec.step("a", noop)
+    spec.step("b", noop, deps=["a"])
+    spec.step("z", noop)
+    assert set(spec.roots()) == {"a", "z"}
+    assert spec.dependents_of()["a"] == ["b"]
