@@ -1,0 +1,262 @@
+"""fig_pool: batched workflow scheduling at scale (WorkflowPool vs. executor).
+
+Two claims, both prerequisites for the paper's "thousands of requests per
+second" (§6) when the requests are many small workflow DAGs:
+
+1. **throughput** — a sweep over concurrent-workflow count compares
+   per-workflow ``WorkflowExecutor.run()`` loops (each ready step pays its
+   own platform invocation) against one shared ``WorkflowPool`` (ready steps
+   from different workflows batched into single invocations).  The pool
+   sustains ≥ 1000 concurrent workflows with higher steps/sec and an order
+   of magnitude fewer platform invocations;
+
+2. **bounded storage** — the same pool stream run in waves, with and without
+   the finished-workflow GC sweep (``LocalGcAgent`` + fault-manager global
+   GC): without GC the ``.wf/`` memo records and ``u/`` index entries grow
+   monotonically with every workflow ever run; with GC the storage key count
+   plateaus.
+
+Each workflow is a 3-step DAG (fan-out-2 → fan-in) of small read-modify-write
+steps — the "thousands of concurrent small workflows" shape from ROADMAP.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+from repro.core.gc import LocalGcAgent
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.workflow import (
+    PoolConfig,
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+from .common import engine, make_cluster, save
+
+STEPS_PER_WORKFLOW = 3
+FAILURE_RATE = 0.02
+# Bounded logical keyspace: a high-throughput service hits the same entities
+# over and over, so old versions get superseded and the §5 GC can reclaim
+# them.  Each workflow RMWs the entity group (wf % KEYSPACE).
+KEYSPACE = 128
+# The platform grants a fixed number of concurrent function slots (Lambda
+# reserved-concurrency shape) and a warm start costs ~25 sim-ms.  Slots are
+# the scarce resource the pool's batching economizes: an executor loop burns
+# one warm start per step, the pool packs batch_max_steps steps per start.
+FUNCTION_SLOTS = 8
+WARM_LATENCY_MS = 25.0
+# This figure runs less compressed than the rest of the suite: at the global
+# QUICK_TIME_SCALE the simulated invoke/storage latencies shrink below the
+# Python interpreter's own per-step cost, and the quantity under study
+# (per-invocation overhead) disappears into CPU noise.
+POOL_TIME_SCALE = 0.15
+
+
+def build_spec(wf: int) -> WorkflowSpec:
+    spec = WorkflowSpec(f"small-{wf}")
+    entity = wf % KEYSPACE
+
+    def shard(ctx):
+        key = f"pool/{entity}/s{ctx.branch}"
+        raw = ctx.get(key)
+        count = int(raw) if raw else 0
+        ctx.maybe_fail()
+        ctx.put(key, str(count + 1).encode())
+        return count + 1
+
+    names = spec.fan_out("shard", shard, 2)
+
+    def agg(ctx):
+        total = sum(ctx.inputs[n] for n in names)
+        ctx.put(f"pool/{entity}/sum", str(total).encode())
+        return total
+
+    spec.fan_in("agg", agg, names, allow_skipped_deps=False)
+    return spec
+
+
+def _platform(ts: float, seed: int) -> LambdaPlatform:
+    return LambdaPlatform(
+        FaasConfig(time_scale=ts, failure_rate=FAILURE_RATE,
+                   warm_latency_ms=WARM_LATENCY_MS,
+                   max_workers=FUNCTION_SLOTS, seed=seed)
+    )
+
+
+# ---------------------------------------------------------------------------
+# throughput sweep: executor loop vs pool
+# ---------------------------------------------------------------------------
+
+def _run_executor_loop(n: int, ts: float, seed: int) -> Dict:
+    """Baseline: n concurrent clients each driving WorkflowExecutor.run()
+    (closed-loop, one invocation per step — the pre-pool shape)."""
+    store = engine("dynamodb", ts, seed=seed)
+    platform = _platform(ts, seed)
+    cluster = make_cluster(store, nodes=1, time_scale=ts)
+    ex = WorkflowExecutor(
+        platform, cluster=cluster,
+        config=WorkflowConfig(scope=TxnScope.WORKFLOW, max_attempts=25),
+    )
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=32) as drivers:
+        results = list(drivers.map(lambda i: ex.run(build_spec(i)), range(n)))
+    wall = time.perf_counter() - t0
+    steps = sum(r.steps_run for r in results)
+    out = {
+        "workflows": n,
+        "wall_s": round(wall, 3),
+        "steps_run": steps,
+        "steps_per_s": round(steps / wall, 1),
+        "workflows_per_s": round(n / wall, 1),
+        "invocations": platform.invocations,
+        "invocations_per_step": round(platform.invocations / steps, 3),
+    }
+    platform.shutdown()
+    cluster.stop()
+    return out
+
+
+def _run_pool(n: int, ts: float, seed: int) -> Dict:
+    store = engine("dynamodb", ts, seed=seed)
+    platform = _platform(ts, seed)
+    cluster = make_cluster(store, nodes=1, time_scale=ts)
+    cfg = PoolConfig(
+        scope=TxnScope.WORKFLOW, max_attempts=25,
+        batch_max_steps=16, max_inflight_steps=256,
+        max_admitted_workflows=4096,
+    )
+    t0 = time.perf_counter()
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [pool.submit(build_spec(i)) for i in range(n)]
+        results = [t.result(timeout=600) for t in tickets]
+    wall = time.perf_counter() - t0
+    steps = sum(r.steps_run for r in results)
+    out = {
+        "workflows": n,
+        "wall_s": round(wall, 3),
+        "steps_run": steps,
+        "steps_per_s": round(steps / wall, 1),
+        "workflows_per_s": round(n / wall, 1),
+        "invocations": platform.invocations,
+        "invocations_per_step": round(platform.invocations / steps, 3),
+        "batches": platform.batched_invocations,
+        "mean_batch_size": round(
+            platform.batched_steps / max(platform.batched_invocations, 1), 2
+        ),
+        "max_admitted": pool.stats["max_admitted"],
+    }
+    platform.shutdown()
+    cluster.stop()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# storage footprint: memo-record GC on vs off
+# ---------------------------------------------------------------------------
+
+def _run_footprint(waves: int, per_wave: int, ts: float, seed: int,
+                   gc: bool) -> Dict:
+    store = engine("dynamodb", ts, seed=seed)
+    platform = _platform(ts, seed)
+    cluster = make_cluster(store, nodes=1, time_scale=ts)
+    # single node: its agent sweeps immediately, so markers can retire at once
+    cluster.fault_manager.config.workflow_marker_ttl_s = 0.0
+    agent = LocalGcAgent(cluster.live_nodes()[0], workflow_gc_batch=100_000)
+    cfg = PoolConfig(
+        scope=TxnScope.WORKFLOW, max_attempts=25,
+        batch_max_steps=16, max_inflight_steps=256,
+        declare_finished=True,
+    )
+    sizes: List[int] = []
+    memo_keys: List[int] = []
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        for wave in range(waves):
+            base = wave * per_wave
+            tickets = [
+                pool.submit(build_spec(base + i)) for i in range(per_wave)
+            ]
+            for t in tickets:
+                t.result(timeout=600)
+            if gc:
+                agent.step()
+                cluster.fault_manager.step()
+                cluster.fault_manager.deleter.drain()
+            sizes.append(len(store.list_keys()))
+            memo_keys.append(len(store.list_keys("d/.wf/")))
+    platform.shutdown()
+    cluster.stop()
+    return {
+        "gc": gc,
+        "waves": waves,
+        "workflows_per_wave": per_wave,
+        "total_keys_per_wave": sizes,
+        "memo_keys_per_wave": memo_keys,
+        "final_keys": sizes[-1],
+        "plateaued": sizes[-1] <= sizes[0] * 1.5 if gc else False,
+    }
+
+
+def run(quick: bool = True) -> Dict:
+    ts = POOL_TIME_SCALE
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke:
+        sweep = [50, 200]
+        waves, per_wave = 3, 40
+    elif quick:
+        sweep = [100, 300, 1000]
+        waves, per_wave = 4, 150
+    else:
+        sweep = [100, 300, 1000, 3000]
+        waves, per_wave = 6, 400
+
+    throughput = []
+    for n in sweep:
+        loop = _run_executor_loop(n, ts, seed=n)
+        pool = _run_pool(n, ts, seed=n)
+        throughput.append({
+            "concurrent_workflows": n,
+            "executor_loop": loop,
+            "pool": pool,
+            "speedup_steps_per_s": round(
+                pool["steps_per_s"] / max(loop["steps_per_s"], 1e-9), 2
+            ),
+            "invocation_amortization": round(
+                loop["invocations"] / max(pool["invocations"], 1), 2
+            ),
+        })
+
+    no_gc = _run_footprint(waves, per_wave, ts, seed=1, gc=False)
+    with_gc = _run_footprint(waves, per_wave, ts, seed=1, gc=True)
+
+    biggest = throughput[-1]
+    out = {
+        "steps_per_workflow": STEPS_PER_WORKFLOW,
+        "failure_rate": FAILURE_RATE,
+        "throughput_sweep": throughput,
+        "footprint": {"no_gc": no_gc, "with_gc": with_gc},
+        "headline": {
+            "max_concurrent_workflows": biggest["concurrent_workflows"],
+            "pool_steps_per_s": biggest["pool"]["steps_per_s"],
+            "executor_steps_per_s": biggest["executor_loop"]["steps_per_s"],
+            "pool_faster": biggest["pool"]["steps_per_s"]
+            > biggest["executor_loop"]["steps_per_s"],
+            "mean_batch_size": biggest["pool"]["mean_batch_size"],
+            "final_keys_no_gc": no_gc["final_keys"],
+            "final_keys_with_gc": with_gc["final_keys"],
+            "storage_plateaus_with_gc": with_gc["plateaued"],
+        },
+    }
+    save("fig_pool", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run            # quick mode (minutes)
   PYTHONPATH=src python -m benchmarks.run --only fig3,fig9
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale counts
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: seconds, tiny counts
 
 Roofline/dry-run artifacts (benchmarks/results/{dryrun,roofline}.json) are
 produced by ``repro.launch.dryrun`` / ``repro.launch.roofline`` — see
@@ -28,8 +29,12 @@ MODULES = {
     "fig9": "benchmarks.fig9_gc",
     "fig10": "benchmarks.fig10_fault_tolerance",
     "figw": "benchmarks.fig_workflow",
+    "figp": "benchmarks.fig_pool",
     "ckpt": "benchmarks.ckpt_bench",
 }
+
+# fast, representative subset for CI smoke runs (seconds each)
+SMOKE_DEFAULT = ["fig2", "figw", "figp"]
 
 
 def main() -> int:
@@ -38,9 +43,15 @@ def main() -> int:
                     help="comma-separated subset, e.g. fig3,fig9")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale txn counts (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny counts, fast subset unless --only")
     args = ap.parse_args()
+    if args.smoke:
+        # modules that support it shrink their counts further than quick mode
+        import os
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     names = [n.strip() for n in args.only.split(",") if n.strip()] \
-        or list(MODULES)
+        or (SMOKE_DEFAULT if args.smoke else list(MODULES))
     failures = 0
     for name in names:
         mod = importlib.import_module(MODULES[name])

@@ -23,6 +23,7 @@ view by re-scanning the Commit Set (§4.2).
 
 from __future__ import annotations
 
+import json
 import threading
 import time
 from dataclasses import dataclass, field
@@ -37,6 +38,7 @@ from .records import (
     COMMIT_PREFIX,
     DATA_PREFIX,
     TransactionRecord,
+    WF_FINISH_PREFIX,
     commit_key,
     uuid_key,
 )
@@ -52,6 +54,13 @@ class FaultManagerConfig:
     orphan_spill_age_s: float = 120.0
     gc_batch: int = 512
     delete_batch: int = 256
+    # age before a cached record whose commit key vanished from storage is
+    # dropped from the aggregate view (eventual-consistency listing slack)
+    prune_grace_s: float = 5.0
+    # how long a w/<uuid> finish marker outlives the workflow before the
+    # fault manager retires it — every node's GC agent must get a chance to
+    # purge its own metadata cache within this window (core/gc.py)
+    workflow_marker_ttl_s: float = 30.0
 
 
 class DeletionExecutor:
@@ -137,6 +146,7 @@ class FaultManager:
         notify all nodes — the committed-then-died-pre-broadcast case."""
         self.ingest()
         keys = self.storage.list_keys(COMMIT_PREFIX)
+        self._prune_deleted(set(keys))
         missing = [k for k in keys if k not in self._seen_commit_keys]
         if not missing:
             return 0
@@ -156,6 +166,31 @@ class FaultManager:
                     node.merge_remote_commits(recovered)
             self.stats["recovered_commits"] += len(recovered)
         return len(recovered)
+
+    def _prune_deleted(self, present_commit_keys: Set[str]) -> int:
+        """Drop aggregate-view records whose commit record no longer exists
+        in storage — someone (global GC phase 2, or the finished-workflow
+        sweep in ``core/gc.py``) durably deleted them.  Write ordering makes
+        this sound: a record only enters this cache *after* its commit key
+        was durably persisted (§3.3), so absent-from-storage means deleted,
+        never not-yet-written.  A grace period absorbs eventually-consistent
+        listing lag for fresh commits.  Without this, memo-record GC would
+        bound every node's footprint but leave the fault manager's unpruned
+        view growing forever."""
+        cutoff_ns = time.time_ns() - int(self.config.prune_grace_s * 1e9)
+        pruned = 0
+        for record in self.cache.snapshot_records():
+            ck = commit_key(record.tid)
+            if ck in present_commit_keys or record.tid.timestamp > cutoff_ns:
+                continue
+            self.cache.remove(record.tid)
+            self._seen_commit_keys.discard(ck)
+            pruned += 1
+        if pruned:
+            self.stats["pruned_deleted"] = (
+                self.stats.get("pruned_deleted", 0) + pruned
+            )
+        return pruned
 
     # ------------------------------------------------------------- §5.2 GC
     def gc_round(self) -> int:
@@ -198,6 +233,40 @@ class FaultManager:
         self.stats["gc_deleted_txns"] += len(doomed)
         return len(doomed)
 
+    # ---------------------------------------------- finished-marker retiring
+    def sweep_finished_markers(self) -> int:
+        """Delete ``w/<uuid>`` workflow finish markers older than the TTL.
+
+        The marker is the GC license every node's local agent consumes
+        (storage sweep + own-cache purge, ``core/gc.py``); retiring it is
+        deliberately centralized and delayed so slower agents still see it.
+        A node whose agent never ran within the TTL keeps stale pure-memo
+        cache entries until it restarts (bootstrap reloads only what storage
+        still has) — the TTL trades that bounded staleness for not needing
+        per-node acknowledgements."""
+        cutoff_ns = time.time_ns() - int(self.config.workflow_marker_ttl_s * 1e9)
+        markers = self.storage.list_keys(WF_FINISH_PREFIX)
+        if not markers:
+            return 0
+        doomed: List[str] = []
+        raws = self.storage.get_batch(markers)
+        for marker in markers:
+            raw = raws.get(marker)
+            if raw is None:
+                continue
+            try:
+                finished_at = int(json.loads(raw)["finished_at_ns"])
+            except Exception:
+                finished_at = 0  # unparsable marker: treat as ancient
+            if finished_at <= cutoff_ns:
+                doomed.append(marker)
+        if doomed:
+            self.deleter.submit(doomed)
+            self.stats["finish_markers_retired"] = (
+                self.stats.get("finish_markers_retired", 0) + len(doomed)
+            )
+        return len(doomed)
+
     # ------------------------------------------------- orphaned spill sweep
     def sweep_orphan_spills(self) -> int:
         """Delete pre-commit buffer spills whose transaction never committed
@@ -234,6 +303,7 @@ class FaultManager:
         self.ingest()
         self.scan_commit_set()
         self.gc_round()
+        self.sweep_finished_markers()
         self.deleter.step()
         self.check_heartbeats()
 
@@ -248,6 +318,7 @@ class FaultManager:
                     self.ingest()
                     self.scan_commit_set()
                     self.gc_round()
+                    self.sweep_finished_markers()
                     self.check_heartbeats()
                 except Exception:
                     pass  # stateless: next round rebuilds what it needs

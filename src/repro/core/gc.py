@@ -1,4 +1,4 @@
-"""Local metadata garbage collection agent (§5.1).
+"""Local metadata garbage collection agent (§5.1) + finished-workflow sweep.
 
 Each node runs a background GC process that periodically sweeps the committed
 transaction metadata cache: a transaction is dropped locally when Algorithm 2
@@ -9,20 +9,65 @@ aggregates before deleting actual version bytes.
 
 The agent also performs the §3.3.1 duty of aborting RUNNING transactions that
 outlived the client timeout (their function died mid-request).
+
+Beyond the paper, the agent folds **workflow memo records** into the sweep.
+The workflow layer (``repro/workflow``) persists per-step memo records under
+the reserved ``.wf/<uuid>/<step>`` keys so a retried DAG resumes exactly-once
+(§3.3.1 extended to steps).  Each memo key is written once, so Algorithm 2
+never supersedes its transaction — without help, a long-running workflow
+pool's ``.wf/`` and ``u/`` footprint grows forever.  When a workflow is
+declared finished (a durable ``w/<uuid>`` marker, written by
+``WorkflowPool`` / ``WorkflowExecutor``), ``gc_finished_workflows`` deletes:
+
+* the memo version bytes (``d/.wf/<uuid>/...``),
+* the commit records of *pure-memo* transactions (``TxnScope.WORKFLOW``
+  memo commits, whose write set is entirely ``.wf/<uuid>/`` keys),
+* the ``u/<uuid>.step.*`` / ``u/<uuid>.memo.*`` idempotence-index entries,
+
+while purging the same transactions from this node's metadata cache.
+Mixed-write-set records (``TxnScope.STEP``, where the memo rides inside the
+step's transaction next to real data keys) keep their commit record — the
+real keys still need their cowritten metadata — and lose only the memo bytes
+and the index entry.  Unfinished workflows (no marker) are never touched, so
+an in-flight retry can always find its memos.
+
+The marker itself is NOT deleted here: every node's agent must get a chance
+to purge its own metadata cache (memo commits were multicast to all of
+them), and the storage keys may already be gone by the time a slower peer
+looks — which is why the cache purge (``AftNode.purge_workflow_metadata``)
+works from the node's local uuid → tid map, not from storage.  The fault
+manager retires markers after ``workflow_marker_ttl_s`` (§5.2's global role
+extended to workflow lifecycle).  See ``docs/WORKFLOWS.md``.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import List, Optional
+from typing import List, Optional, Set
 
 from .ids import TxnId
 from .node import AftNode
+from .records import (
+    DATA_PREFIX,
+    TransactionRecord,
+    WF_FINISH_PREFIX,
+    WF_MEMO_TXN_INFIX,
+    WF_STEP_TXN_INFIX,
+    WORKFLOW_MEMO_PREFIX,
+    uuid_key,
+)
 
 
 class LocalGcAgent:
-    def __init__(self, node: AftNode):
+    def __init__(self, node: AftNode, *, workflow_gc_batch: int = 64):
         self.node = node
+        # workflows reclaimed per step() — bounds the sweep's storage traffic
+        self.workflow_gc_batch = workflow_gc_batch
+        self.workflows_reclaimed = 0
+        self.memo_keys_deleted = 0
+        # markers this agent has already processed; markers persist until the
+        # fault manager's TTL sweep, and re-sweeping one is wasted listings
+        self._swept_markers: Set[str] = set()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -30,8 +75,80 @@ class LocalGcAgent:
         if not self.node.alive:
             return []
         self.node.sweep_timed_out_transactions()
-        return self.node.gc_sweep_local()
+        removed = self.node.gc_sweep_local()
+        self.gc_finished_workflows()
+        return removed
 
+    # ----------------------------------------------- finished-workflow sweep
+    def gc_finished_workflows(self, max_workflows: Optional[int] = None) -> int:
+        """Reclaim memo state of workflows bearing a ``w/`` finish marker.
+
+        Returns the number of workflows processed this call.  Safe to run
+        concurrently on many nodes: storage deletes are idempotent, and each
+        node's cache purge works from its own local view.
+        """
+        storage = self.node.storage
+        limit = max_workflows or self.workflow_gc_batch
+        markers = storage.list_keys(WF_FINISH_PREFIX)
+        self._swept_markers &= set(markers)  # TTL-retired markers drop out
+        if not markers:
+            return 0
+        # cache purge runs against EVERY live marker each pass (one local
+        # scan), not just unswept ones: a memo commit can arrive via
+        # multicast after this node's storage sweep already happened
+        self.node.purge_workflow_metadata(
+            {m[len(WF_FINISH_PREFIX):] for m in markers}
+        )
+        todo = [m for m in markers if m not in self._swept_markers][:limit]
+        for marker in todo:
+            wf_uuid = marker[len(WF_FINISH_PREFIX):]
+            self.memo_keys_deleted += self._reclaim_workflow(wf_uuid)
+            self._swept_markers.add(marker)
+        self.workflows_reclaimed += len(todo)
+        return len(todo)
+
+    def _reclaim_workflow(self, wf_uuid: str) -> int:
+        storage = self.node.storage
+        namespace = f"{WORKFLOW_MEMO_PREFIX}{wf_uuid}/"
+        doomed = set()
+        # A workflow's derived transaction UUIDs are "<uuid>.memo.<step>" /
+        # "<uuid>.step.<step>" (§3.3.1), so the ``u/`` index doubles as its
+        # transaction directory.  Listing by the full infix (never the bare
+        # "<uuid>." prefix) plus the write-set namespace check below keeps a
+        # *different* workflow whose user-supplied UUID textually extends
+        # this one (e.g. "job.1" vs "job.1.5") out of the blast radius.  The
+        # workflow's own commit (``u/<wf_uuid>``) is never matched: its
+        # record carries the DAG's real write set and stays until ordinary
+        # supersedence GC claims it.
+        for infix in (WF_MEMO_TXN_INFIX, WF_STEP_TXN_INFIX):
+            for u_key in storage.list_keys(uuid_key(wf_uuid + infix)):
+                ptr = storage.get(u_key)
+                if ptr is None:
+                    continue  # visibility lag or a racing peer; retried later
+                commit_k = ptr.decode()
+                raw = storage.get(commit_k)
+                if raw is None:
+                    continue  # crashed / in-flight commit — don't touch
+                record = TransactionRecord.decode(raw)
+                memo_writes = [
+                    k for k in record.write_set if k.startswith(namespace)
+                ]
+                if not memo_writes:
+                    continue  # not this workflow's transaction
+                doomed.update(record.storage_key_for(k) for k in memo_writes)
+                if len(memo_writes) == len(record.write_set):
+                    # pure memo transaction: the commit record exists only to
+                    # make the memo durable — it goes too
+                    doomed.add(commit_k)
+                doomed.add(u_key)
+        # straggler versions under the reserved prefix (e.g. spilled memo
+        # buffers from crashed attempts)
+        doomed.update(storage.list_keys(f"{DATA_PREFIX}{namespace}"))
+        if doomed:
+            storage.delete_batch(sorted(doomed))
+        return len(doomed)
+
+    # ------------------------------------------------------------- lifecycle
     def start(self) -> None:
         if self._thread is not None:
             return

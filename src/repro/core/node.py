@@ -41,6 +41,9 @@ from .ids import Clock, TxnHandle, TxnId, fresh_uuid
 from .records import (
     COMMIT_PREFIX,
     TransactionRecord,
+    WF_MEMO_TXN_INFIX,
+    WF_STEP_TXN_INFIX,
+    WORKFLOW_MEMO_PREFIX,
     commit_key,
     data_key,
     lookup_committed_record,
@@ -423,6 +426,61 @@ class AftNode:
             removed.append(tid)
         self.stats["gc_removed"] += len(removed)
         return removed
+
+    def forget_transaction(self, record: TransactionRecord) -> None:
+        """Purge a transaction's metadata from this node entirely — cache,
+        data cache, and the uuid → tid idempotence map.  Used by the
+        finished-workflow sweep (§5 extended to memo records), whose
+        transactions Algorithm 2 can never supersede: their keys are written
+        exactly once, so supersedence-based GC would retain them forever."""
+        self.cache.remove(record.tid)
+        self.data_cache.evict_transaction(record)
+        with self._lock:
+            if self._committed_uuids.get(record.tid.uuid) == record.tid:
+                del self._committed_uuids[record.tid.uuid]
+            self._locally_deleted.discard(record.tid)
+
+    def purge_workflow_metadata(self, finished_uuids: Set[str]) -> int:
+        """Forget every pure-memo transaction of the given finished
+        workflows from this node's *own* metadata view.
+
+        Works entirely from local state (the uuid → tid map filled by
+        commits and multicast merges), so every node can purge regardless of
+        which peer won the storage-side sweep — the storage keys may already
+        be gone by the time this node looks.  A transaction qualifies only
+        if its UUID carries a derived infix whose base is a finished
+        workflow AND its whole write set lives under that workflow's
+        ``.wf/<uuid>/`` namespace; user-supplied workflow UUIDs that merely
+        extend another's text (e.g. ``job.1`` vs ``job.1.5``) never
+        qualify.  Returns the number of transactions forgotten."""
+        if not finished_uuids:
+            return 0
+        with self._lock:
+            candidates = list(self._committed_uuids.items())
+        purged = 0
+        for uuid, tid in candidates:
+            bases = []
+            for infix in (WF_MEMO_TXN_INFIX, WF_STEP_TXN_INFIX):
+                head, sep, _ = uuid.rpartition(infix)
+                if sep and head in finished_uuids:
+                    bases.append(head)
+            if not bases:
+                continue
+            record = self.cache.get(tid)
+            if record is None:
+                with self._lock:
+                    if self._committed_uuids.get(uuid) == tid:
+                        del self._committed_uuids[uuid]
+                continue
+            for base in bases:
+                namespace = f"{WORKFLOW_MEMO_PREFIX}{base}/"
+                if record.write_set and all(
+                    k.startswith(namespace) for k in record.write_set
+                ):
+                    self.forget_transaction(record)
+                    purged += 1
+                    break
+        return purged
 
     def confirm_locally_deleted(self, tids: Iterable[TxnId]) -> List[TxnId]:
         """Global GC phase 1 (§5.2): which of these have we locally deleted?

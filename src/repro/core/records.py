@@ -12,7 +12,16 @@ storage key             contents
 ``d/<key>/<txnid>``     the bytes of version ``<key>_<txnid>``
 ``t/<txnid>``           commit record: write set + (key → storage key) map
 ``u/<uuid>``            uuid → committed txnid index (idempotent retry lookup)
+``w/<uuid>``            workflow finish marker: the workflow layer declares a
+                        DAG done, licensing GC of its ``.wf/`` memo records
 ======================  =====================================================
+
+The workflow layer reserves one *logical* key prefix, ``.wf/`` (so its memo
+versions live at ``d/.wf/...`` storage keys): per-step memo records written
+through AFT itself (see ``repro/workflow/txn.py``).  Memo keys are written
+exactly once per (workflow, step), so Algorithm 2 never supersedes them —
+they are instead reclaimed by the finished-workflow sweep in ``core/gc.py``
+once a ``w/<uuid>`` marker exists.
 
 ``t/``-prefixed keys form the **Transaction Commit Set** (§3.1); because
 ``TxnId.encode`` is order-preserving, a sorted listing of ``t/`` is a
@@ -35,6 +44,15 @@ from .ids import TxnId
 DATA_PREFIX = "d/"
 COMMIT_PREFIX = "t/"
 UUID_PREFIX = "u/"
+WF_FINISH_PREFIX = "w/"
+# logical-key namespace reserved for workflow memo records (storage keys for
+# these versions land under d/.wf/...)
+WORKFLOW_MEMO_PREFIX = ".wf/"
+# derived transaction UUIDs: a workflow's per-step transactions are
+# "<uuid>.step.<name>" and its memo commits "<uuid>.memo.<name>"
+# (repro/workflow/txn.py); the GC sweep keys off these infixes
+WF_MEMO_TXN_INFIX = ".memo."
+WF_STEP_TXN_INFIX = ".step."
 
 
 def data_key(key: str, tid: TxnId) -> str:
@@ -59,6 +77,21 @@ def commit_key(tid: TxnId) -> str:
 
 def uuid_key(uuid: str) -> str:
     return f"{UUID_PREFIX}{uuid}"
+
+
+def workflow_finish_key(workflow_uuid: str) -> str:
+    """Marker persisted when a workflow is declared finished.
+
+    Its presence is the GC license for the workflow's ``.wf/`` memo records
+    and the ``u/`` entries of its derived (``<uuid>.step.*`` /
+    ``<uuid>.memo.*``) transactions.  The caller promises no further re-drive
+    of this UUID will happen — see ``docs/WORKFLOWS.md``.
+    """
+    return f"{WF_FINISH_PREFIX}{workflow_uuid}"
+
+
+def is_workflow_memo_key(key: str) -> bool:
+    return key.startswith(WORKFLOW_MEMO_PREFIX)
 
 
 @dataclass(frozen=True)

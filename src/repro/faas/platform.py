@@ -52,6 +52,8 @@ class LambdaPlatform:
         self._rng_lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=self.config.max_workers)
         self.invocations = 0
+        self.batched_invocations = 0
+        self.batched_steps = 0
         self.failures_injected = 0
         self.retries = 0
         self.on_failure_errors = 0
@@ -105,6 +107,29 @@ class LambdaPlatform:
         parallel-branch primitive workflow executors fan out with.  The
         invocation pays the same warm-start overhead as ``invoke``."""
         return self._pool.submit(self.invoke, fn, *args, **kwargs)
+
+    def invoke_batch(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        """Run several pre-bound function bodies inside ONE invocation.
+
+        This is the scheduler-level batching primitive (`WorkflowPool`): many
+        compatible small steps — typically from *different* workflows — share
+        a single warm start, so the per-invocation overhead sampled above is
+        paid once for the whole batch instead of once per step.  Bodies run
+        sequentially, exactly as if a driver function called them in order;
+        exception isolation is the caller's job (pool thunks never raise —
+        they capture their own outcome and report it to the scheduler)."""
+        if not thunks:
+            return []
+        with self._stats_lock:
+            self.invocations += 1
+            self.batched_invocations += 1
+            self.batched_steps += len(thunks)
+        self._sleep_ms(self._sample_overhead())
+        return [thunk() for thunk in thunks]
+
+    def submit_batch(self, thunks: Sequence[Callable[[], Any]]) -> Future:
+        """Schedule one *batched* invocation on the platform pool."""
+        return self._pool.submit(self.invoke_batch, thunks)
 
     def run_request(
         self,

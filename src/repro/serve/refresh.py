@@ -9,6 +9,16 @@ torn weight set.  Here the whole publish DAG is one AFT transaction
 commit is all-or-nothing with exactly-once semantics on retry (the publish
 UUID derives from ``(run_id, step)``, §3.3.1).
 
+``publish_weights`` takes any workflow driver with a ``run(spec, uuid=)``
+surface.  A single publisher hands it a ``WorkflowExecutor``; a fleet
+publishing many runs/steps concurrently should instead ``submit`` the spec
+from :func:`build_publish_workflow` to a shared ``WorkflowPool``
+(``repro/workflow/pool.py``), which batches publish steps across runs into
+shared platform invocations and hands finished publishes to the memo-record
+GC.  Note the pool declares workflows finished by default — fine here, as a
+publish UUID is never re-driven after its ticket resolves.  See
+``docs/WORKFLOWS.md``.
+
 ``read_weight_set`` is the consumer half: one read transaction over the
 manifest and every shard, so read-atomic isolation (§3.4) guarantees the
 assembled set is from a single publish even while the next one is mid-commit.

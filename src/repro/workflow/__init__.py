@@ -1,9 +1,25 @@
 """Transactional workflow orchestration over AFT.
 
-DAG-composed FaaS requests with exactly-once semantics: declarative specs
-(``spec.py``), a parallel scheduler/executor on ``LambdaPlatform``
-(``executor.py``), and transaction scoping + memoized idempotent resume
-through AFT itself (``txn.py``).
+DAG-composed FaaS requests with exactly-once semantics, at two scales:
+
+* ``WorkflowExecutor`` (``executor.py``) — drive ONE workflow to completion:
+  walks a declarative :class:`WorkflowSpec` (``spec.py``), fans ready steps
+  out on :class:`LambdaPlatform`, and retries the whole DAG under the same
+  UUID with per-step memoized resume;
+* ``WorkflowPool`` (``pool.py``) — drive THOUSANDS of concurrent workflows:
+  ``submit()`` returns a ticket immediately, ready steps from different
+  workflows are batched into shared platform invocations (amortizing the
+  per-invoke overhead), with round-robin fairness, bounded in-flight
+  windows, and backpressure.  Completed workflows are declared *finished*,
+  which lets the §5 GC (``repro/core/gc.py``) reclaim their ``.wf/`` memo
+  records so a long-running pool's storage footprint stays bounded.
+
+Transaction scoping + the memo store both live in ``txn.py``: a DAG runs as
+one AFT transaction (``TxnScope.WORKFLOW``), one per step (``TxnScope.STEP``),
+or unshimmed (``TxnScope.NONE``, the anomaly baseline).
+
+Docs: ``docs/WORKFLOWS.md`` (DSL, scopes, exactly-once resume, pool tuning)
+and ``docs/ARCHITECTURE.md`` (how this layer maps onto the paper).
 """
 
 from .executor import (
@@ -13,7 +29,9 @@ from .executor import (
     WorkflowError,
     WorkflowExecutor,
     WorkflowResult,
+    execute_step,
 )
+from .pool import PoolClosed, PoolConfig, PoolTicket, WorkflowPool
 from .spec import Step, WorkflowSpec, WorkflowSpecError
 from .txn import (
     MEMO_PREFIX,
@@ -33,6 +51,10 @@ __all__ = [
     "WorkflowConfig",
     "WorkflowResult",
     "WorkflowError",
+    "WorkflowPool",
+    "PoolConfig",
+    "PoolTicket",
+    "PoolClosed",
     "StepContext",
     "StepFailure",
     "TxnScope",
@@ -42,4 +64,5 @@ __all__ = [
     "memo_key",
     "memo_txn_uuid",
     "step_txn_uuid",
+    "execute_step",
 ]

@@ -65,6 +65,12 @@ class WorkflowConfig:
     # keys the workflow intends to write — the unscoped baseline embeds this
     # as the cowritten set so auditors can score fractured states (§6.1.2)
     declared_writes: Tuple[str, ...] = ()
+    # write a ``w/<uuid>`` finish marker after a successful run, licensing
+    # GC of the workflow's memo records (core/gc.py).  Off by default here:
+    # declaring finished promises the UUID is never re-driven, and a bare
+    # executor cannot know that.  WorkflowPool, which owns workflow
+    # lifecycle, turns it on by default.
+    declare_finished: bool = False
 
 
 @dataclass
@@ -126,6 +132,34 @@ class StepContext:
     def maybe_fail(self, site: Optional[str] = None) -> None:
         """Mid-body failure point (fractional-execution hazard, §1)."""
         self._platform.maybe_fail(site=site or f"step:{self._step.name}")
+
+
+def execute_step(
+    step: Step,
+    session: WorkflowSession,
+    platform: LambdaPlatform,
+    inputs: Dict[str, Any],
+    args: Any,
+    *,
+    memoizing: bool,
+    memo_store: Optional[MemoStore],
+) -> Any:
+    """Run one step body under a session — the unit every workflow driver
+    shares.  ``WorkflowExecutor`` invokes it once per platform submission;
+    ``WorkflowPool`` folds many of these (across workflows) into a single
+    batched invocation.  Handles the begin-site failure point, memo encoding,
+    and the inline-vs-separate memo commit split (see ``txn.py``)."""
+    session.step_begin(step.name)
+    ctx = StepContext(step, session, platform, inputs, args)
+    platform.maybe_fail(site=f"step:{step.name}:begin")
+    result = step.fn(ctx)
+    payload = encode_memo(result, ctx.writes) if memoizing else None
+    inline = bool(getattr(session, "inline_memo", False))
+    session.step_commit(step.name, payload if inline else None)
+    if memoizing and not inline:
+        assert memo_store is not None
+        memo_store.save(session.uuid, step.name, payload)
+    return result
 
 
 class WorkflowExecutor:
@@ -204,6 +238,9 @@ class WorkflowExecutor:
             self.stats["steps_run"] += ran
             self.stats["steps_memoized"] += memoized
             self.stats["steps_skipped"] += len(skipped)
+            if memoizing and cfg.declare_finished:
+                assert self._memo is not None
+                self._memo.mark_finished(workflow_uuid)
             return WorkflowResult(
                 workflow_uuid=workflow_uuid,
                 results=results,
@@ -301,14 +338,7 @@ class WorkflowExecutor:
         args: Any,
         memoizing: bool,
     ) -> Any:
-        session.step_begin(step.name)
-        ctx = StepContext(step, session, self.platform, inputs, args)
-        self.platform.maybe_fail(site=f"step:{step.name}:begin")
-        result = step.fn(ctx)
-        payload = encode_memo(result, ctx.writes) if memoizing else None
-        inline = bool(getattr(session, "inline_memo", False))
-        session.step_commit(step.name, payload if inline else None)
-        if memoizing and not inline:
-            assert self._memo is not None
-            self._memo.save(session.uuid, step.name, payload)
-        return result
+        return execute_step(
+            step, session, self.platform, inputs, args,
+            memoizing=memoizing, memo_store=self._memo,
+        )

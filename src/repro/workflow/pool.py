@@ -1,0 +1,601 @@
+"""WorkflowPool — batched scheduling of thousands of concurrent workflows.
+
+``WorkflowExecutor`` drives ONE workflow per call: every ready step pays its
+own platform invocation (warm-start overhead, §6.1.2) and the caller blocks
+until the DAG commits.  That shape cannot sustain the paper's "thousands of
+requests per second" (§6) when the requests are many small DAGs.  The pool
+is the scheduler-level answer:
+
+* **submission** — ``submit(spec)`` enqueues a workflow and returns a
+  :class:`PoolTicket` immediately; thousands of logical workflows are in
+  flight at once, multiplexed over one shared :class:`LambdaPlatform`;
+* **batching** — ready steps from *different* workflows are folded into a
+  single platform invocation (``LambdaPlatform.invoke_batch``), so the
+  per-invoke overhead is paid once per ``batch_max_steps`` steps instead of
+  once per step.  A short linger (``batch_linger_ms``) lets partial batches
+  fill while other batches are in flight; an idle pool dispatches
+  immediately;
+* **fairness** — dispatch is round-robin across workflows (one step per
+  workflow per pass) with a per-workflow in-flight cap, so a wide DAG cannot
+  starve its neighbours;
+* **bounded windows & backpressure** — at most ``max_inflight_steps`` step
+  bodies execute at once, and ``submit`` blocks once
+  ``max_admitted_workflows`` tickets are unresolved, so a faster producer
+  cannot grow the pool's memory without bound;
+* **failure model** — identical to the executor's (§2.2/§3.3.1 lifted to
+  DAGs): a step failure drains the workflow's in-flight siblings, rolls back
+  the attempt, and retries the whole workflow under the same UUID with
+  memoized steps replayed, up to ``max_attempts``;
+* **GC integration** — a successfully committed workflow is *declared
+  finished* (``MemoStore.mark_finished``), which licenses the §5 GC
+  (``core/gc.py``) to reclaim its ``.wf/`` memo records and derived ``u/``
+  index entries, so a long-running pool's storage footprint plateaus instead
+  of growing monotonically.  See ``docs/WORKFLOWS.md`` for tuning.
+
+Internally one scheduler thread owns all bookkeeping (guarded by a single
+condition variable); step bodies run on the platform pool inside batched
+invocations, and session lifecycle I/O (memo loads, commit, abort) runs on a
+small finisher pool so the scheduler never blocks on storage.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
+
+from ..core import AftCluster
+from ..core.ids import fresh_uuid
+from ..faas.platform import LambdaPlatform
+from ..storage.base import StorageEngine
+from .executor import (
+    StepFailure,
+    WorkflowError,
+    WorkflowResult,
+    execute_step,
+)
+from .spec import WorkflowSpec
+from .txn import MemoStore, TxnScope, WorkflowSession, make_session
+
+
+@dataclass
+class PoolConfig:
+    # transaction semantics (same knobs as WorkflowConfig)
+    scope: TxnScope = TxnScope.WORKFLOW
+    max_attempts: int = 6
+    retry_backoff_ms: float = 5.0
+    memoize: bool = True
+    declared_writes: Tuple[str, ...] = ()
+    # the pool owns workflow lifecycle, so unlike the bare executor it
+    # declares workflows finished by default — committing a ticket is the
+    # promise that its UUID is never re-driven
+    declare_finished: bool = True
+    # scheduling
+    batch_max_steps: int = 8          # steps folded into one invocation
+    batch_linger_ms: float = 1.0      # wait for a partial batch to fill
+    max_inflight_steps: int = 128     # global step window
+    max_inflight_per_workflow: int = 4
+    max_admitted_workflows: int = 2048  # backpressure: submit() blocks
+
+
+class PoolClosed(RuntimeError):
+    """submit() after close()."""
+
+
+class PoolTicket:
+    """Handle for one submitted workflow; resolves to a WorkflowResult."""
+
+    def __init__(self, workflow_uuid: str):
+        self.workflow_uuid = workflow_uuid
+        self._future: "Future[WorkflowResult]" = Future()
+
+    def result(self, timeout: Optional[float] = None) -> WorkflowResult:
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        return self._future.exception(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+
+class _RunState(Enum):
+    STARTING = "starting"      # finisher is building session / loading memos
+    RUNNING = "running"        # steps dispatching
+    RETRY_WAIT = "retry-wait"  # backoff before next attempt
+    ABANDONING = "abandoning"  # finisher is rolling back the failed attempt
+    FINISHING = "finishing"    # finisher is committing
+    DONE = "done"
+
+
+@dataclass
+class _Run:
+    spec: WorkflowSpec
+    uuid: str
+    args: Any
+    ticket: PoolTicket
+    resume_eligible: bool
+    state: _RunState = _RunState.RETRY_WAIT
+    attempt: int = 0
+    retry_at: float = 0.0
+    t0: float = field(default_factory=time.perf_counter)
+    session: Optional[WorkflowSession] = None
+    memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = field(default_factory=dict)
+    indeg: Dict[str, int] = field(default_factory=dict)
+    dependents: Dict[str, List[str]] = field(default_factory=dict)
+    results: Dict[str, Any] = field(default_factory=dict)
+    skipped: Set[str] = field(default_factory=set)
+    ready: Deque[str] = field(default_factory=deque)
+    inflight: int = 0
+    ran: int = 0
+    memoized: int = 0
+    failure: Optional[StepFailure] = None
+    in_rr: bool = False  # membership flag for the fairness queue
+
+    @property
+    def done_steps(self) -> int:
+        return len(self.results) + len(self.skipped)
+
+
+class WorkflowPool:
+    def __init__(
+        self,
+        platform: LambdaPlatform,
+        *,
+        cluster: Optional[AftCluster] = None,
+        storage: Optional[StorageEngine] = None,
+        config: Optional[PoolConfig] = None,
+    ):
+        self.platform = platform
+        self.cluster = cluster
+        self.storage = storage
+        self.config = config or PoolConfig()
+        self._memo = MemoStore(cluster) if cluster is not None else None
+        self._memoizing = (
+            self.config.memoize
+            and self.config.scope is not TxnScope.NONE
+            and self._memo is not None
+        )
+        self.stats: Dict[str, int] = {
+            "workflows_submitted": 0,
+            "workflows_completed": 0,
+            "workflows_failed": 0,
+            "workflow_retries": 0,
+            "steps_run": 0,
+            "steps_memoized": 0,
+            "steps_skipped": 0,
+            "batches_dispatched": 0,
+            "batched_steps": 0,
+            "max_admitted": 0,
+        }
+        self._cond = threading.Condition()
+        self._events: Deque[Tuple] = deque()
+        self._rr: Deque[_Run] = deque()   # fairness queue: runs w/ ready steps
+        self._retry: List[_Run] = []      # RETRY_WAIT runs (small; linear scan)
+        self._admitted = 0
+        self._inflight_steps = 0
+        self._ready_total = 0
+        self._ready_since: Optional[float] = None
+        self._closed = False
+        self._stop = threading.Event()
+        self._finisher = ThreadPoolExecutor(
+            max_workers=4, thread_name_prefix="wfpool-io"
+        )
+        self._scheduler = threading.Thread(
+            target=self._loop, name="wfpool-scheduler", daemon=True
+        )
+        self._scheduler.start()
+
+    # ------------------------------------------------------------------ api
+    def submit(
+        self,
+        spec: WorkflowSpec,
+        *,
+        uuid: Optional[str] = None,
+        args: Any = None,
+    ) -> PoolTicket:
+        """Enqueue a workflow; blocks only for backpressure (admission)."""
+        spec.validate()
+        resume_eligible = uuid is not None
+        workflow_uuid = uuid or fresh_uuid()
+        ticket = PoolTicket(workflow_uuid)
+        run = _Run(
+            spec=spec,
+            uuid=workflow_uuid,
+            args=args,
+            ticket=ticket,
+            resume_eligible=resume_eligible,
+        )
+        with self._cond:
+            while (
+                not self._closed
+                and self._admitted >= self.config.max_admitted_workflows
+            ):
+                self._cond.wait()
+            if self._closed:
+                raise PoolClosed("WorkflowPool is closed")
+            self._admitted += 1
+            self.stats["workflows_submitted"] += 1
+            self.stats["max_admitted"] = max(
+                self.stats["max_admitted"], self._admitted
+            )
+            run.retry_at = 0.0  # start as soon as the scheduler sees it
+            self._retry.append(run)
+            self._cond.notify_all()
+        return ticket
+
+    def run_all(
+        self,
+        specs: List[WorkflowSpec],
+        *,
+        args: Any = None,
+        timeout: Optional[float] = None,
+    ) -> List[WorkflowResult]:
+        """Convenience: submit every spec, wait for all results (in order)."""
+        tickets = [self.submit(s, args=args) for s in specs]
+        return [t.result(timeout) for t in tickets]
+
+    def close(self, wait: bool = True) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+            if wait:
+                while self._admitted > 0:
+                    self._cond.wait()
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._scheduler.join(timeout=10)
+        self._finisher.shutdown(wait=True)
+
+    def __enter__(self) -> "WorkflowPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(wait=not any(exc))
+
+    # ------------------------------------------------------------ scheduler
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                while self._events:
+                    self._handle_event(self._events.popleft())
+                now = time.perf_counter()
+                self._start_due_attempts(now)
+                batches = self._build_batches(now)
+                timeout = self._wait_timeout(now)
+            for batch in batches:
+                self.platform.submit_batch(batch)
+            if batches:
+                continue  # new completions may already be queued
+            with self._cond:
+                if not self._events and not self._stop.is_set():
+                    self._cond.wait(timeout)
+
+    def _wait_timeout(self, now: float) -> float:
+        timeout = 0.05
+        for run in self._retry:
+            timeout = min(timeout, max(run.retry_at - now, 0.0))
+        # The linger deadline only matters when dispatch is actually waiting
+        # on it.  When the window is capacity-blocked the next dispatch is
+        # triggered by a completion event (which notifies the condition), so
+        # honoring the long-expired linger here would spin the scheduler at
+        # sub-millisecond wakeups exactly when the pool is busiest.
+        free = self.config.max_inflight_steps - self._inflight_steps
+        capacity_blocked = (
+            self._inflight_steps > 0 and free < self.config.batch_max_steps
+        )
+        if self._ready_since is not None and not capacity_blocked:
+            linger = self.config.batch_linger_ms / 1e3
+            timeout = min(timeout, max(self._ready_since + linger - now, 0.0))
+        return max(timeout, 1e-4)
+
+    # -- attempt lifecycle (finisher does the I/O) --------------------------
+    def _start_due_attempts(self, now: float) -> None:
+        due = [r for r in self._retry if r.retry_at <= now]
+        if not due:
+            return
+        self._retry = [r for r in self._retry if r.retry_at > now]
+        for run in due:
+            run.state = _RunState.STARTING
+            run.attempt += 1
+            if run.attempt > 1:
+                self.stats["workflow_retries"] += 1
+            self._finisher.submit(self._begin_attempt_io, run, run.attempt)
+
+    def _begin_attempt_io(self, run: _Run, epoch: int) -> None:
+        try:
+            session = make_session(
+                self.config.scope,
+                run.uuid,
+                cluster=self.cluster,
+                storage=self.storage,
+                cowritten_hint=self.config.declared_writes,
+            )
+            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
+            if self._memoizing and (run.attempt > 1 or run.resume_eligible):
+                memos, records = self._memo.load_all(
+                    run.uuid, run.spec.steps, scope=self.config.scope
+                )
+                session.recover(records)
+            self._emit(("attempt_ready", run, epoch, session, memos))
+        except BaseException as exc:  # noqa: BLE001 - surfaces via retry path
+            self._emit(("attempt_error", run, epoch, exc))
+
+    def _finish_io(self, run: _Run, epoch: int) -> None:
+        try:
+            tid = run.session.finish()
+        except BaseException as exc:  # noqa: BLE001
+            self._emit(("finish_error", run, epoch, exc))
+            return
+        if self._memoizing and self.config.declare_finished:
+            try:
+                self._memo.mark_finished(run.uuid)
+            except Exception:
+                pass  # advisory GC state; unmarked memos linger, nothing breaks
+        self._emit(("finished", run, epoch, tid))
+
+    def _abandon_io(self, run: _Run, epoch: int) -> None:
+        try:
+            run.session.abandon()
+        finally:
+            self._emit(("abandoned", run, epoch))
+
+    def _emit(self, event: Tuple) -> None:
+        with self._cond:
+            self._events.append(event)
+            self._cond.notify_all()
+
+    # -- event handling (always under self._cond) ---------------------------
+    def _handle_event(self, event: Tuple) -> None:
+        kind, run, epoch = event[0], event[1], event[2]
+        if epoch != run.attempt or run.state is _RunState.DONE:
+            return  # stale event from a superseded attempt
+        if kind == "attempt_ready":
+            _, _, _, session, memos = event
+            run.session = session
+            run.memos = memos
+            run.state = _RunState.RUNNING
+            run.failure = None
+            run.results.clear()
+            run.skipped.clear()
+            run.ready.clear()
+            run.inflight = 0
+            run.ran = 0
+            run.memoized = 0
+            run.indeg = {n: len(s.deps) for n, s in run.spec.steps.items()}
+            run.dependents = run.spec.dependents_of()
+            self._settle(run, [n for n, d in run.indeg.items() if d == 0])
+            self._after_progress(run)
+        elif kind == "step":
+            _, _, _, name, ok, val = event
+            run.inflight -= 1
+            self._inflight_steps -= 1
+            if ok and run.failure is None:
+                run.results[name] = val
+                run.ran += 1
+                self._settle(run, self._resolve(run, name))
+            elif not ok:
+                run.failure = run.failure or StepFailure(name, val)
+            self._after_progress(run)
+        elif kind == "attempt_error":
+            run.failure = run.failure or event[3]
+            self._schedule_retry_or_fail(run)
+        elif kind == "abandoned":
+            self._schedule_retry_or_fail(run)
+        elif kind == "finished":
+            self._complete(run, event[3])
+        elif kind == "finish_error":
+            run.failure = run.failure or event[3]
+            run.state = _RunState.ABANDONING
+            self._finisher.submit(self._abandon_io, run, run.attempt)
+
+    def _after_progress(self, run: _Run) -> None:
+        """Advance a RUNNING workflow after any state change."""
+        if run.state is not _RunState.RUNNING:
+            return
+        if run.failure is not None:
+            # drain in-flight siblings before rolling back, so abandon()
+            # cannot race their get/put calls (same rule as the executor)
+            self._drop_ready(run)
+            if run.inflight == 0:
+                run.state = _RunState.ABANDONING
+                self._finisher.submit(self._abandon_io, run, run.attempt)
+            return
+        if run.done_steps == len(run.spec.steps) and run.inflight == 0:
+            self._drop_ready(run)
+            run.state = _RunState.FINISHING
+            self._finisher.submit(self._finish_io, run, run.attempt)
+            return
+        self._enqueue_rr(run)
+
+    def _settle(self, run: _Run, newly_ready: List[str]) -> None:
+        """Resolve skips / conditional edges / memo hits eagerly so
+        ``run.ready`` only ever holds steps that truly need execution."""
+        work = deque(newly_ready)
+        while work:
+            name = work.popleft()
+            step = run.spec.steps[name]
+            missing = [d for d in step.deps if d in run.skipped]
+            if missing and not step.allow_skipped_deps:
+                run.skipped.add(name)
+                work.extend(self._resolve(run, name))
+                continue
+            inputs = {
+                d: run.results[d] for d in step.deps if d not in run.skipped
+            }
+            if step.when is not None and not step.when(inputs):
+                run.skipped.add(name)
+                work.extend(self._resolve(run, name))
+                continue
+            if name in run.memos:
+                # §3.3.1 extended to steps: already ran in a prior attempt —
+                # feed the recorded result downstream, replay its writes
+                result, writes = run.memos[name]
+                run.session.replay(name, writes)
+                run.results[name] = result
+                run.memoized += 1
+                work.extend(self._resolve(run, name))
+                continue
+            run.ready.append(name)
+            self._ready_total += 1
+            if self._ready_since is None:
+                self._ready_since = time.perf_counter()
+
+    def _resolve(self, run: _Run, name: str) -> List[str]:
+        out = []
+        for m in run.dependents[name]:
+            run.indeg[m] -= 1
+            if run.indeg[m] == 0:
+                out.append(m)
+        return out
+
+    def _drop_ready(self, run: _Run) -> None:
+        self._ready_total -= len(run.ready)
+        run.ready.clear()
+        if self._ready_total == 0:
+            self._ready_since = None
+
+    def _enqueue_rr(self, run: _Run) -> None:
+        if (
+            not run.in_rr
+            and run.ready
+            and run.inflight < self.config.max_inflight_per_workflow
+        ):
+            run.in_rr = True
+            self._rr.append(run)
+
+    def _schedule_retry_or_fail(self, run: _Run) -> None:
+        cfg = self.config
+        if run.attempt >= cfg.max_attempts:
+            run.state = _RunState.DONE
+            self._resolve_ticket(
+                run,
+                error=WorkflowError(
+                    f"workflow {run.spec.name!r} ({run.uuid}) failed after "
+                    f"{cfg.max_attempts} attempts"
+                ),
+                cause=run.failure,
+            )
+            return
+        backoff_s = (
+            cfg.retry_backoff_ms
+            * run.attempt
+            * self.platform.config.time_scale
+            / 1e3
+        )
+        run.state = _RunState.RETRY_WAIT
+        run.retry_at = time.perf_counter() + backoff_s
+        self._retry.append(run)
+
+    def _complete(self, run: _Run, tid) -> None:
+        run.state = _RunState.DONE
+        self.stats["workflows_completed"] += 1
+        self.stats["steps_run"] += run.ran
+        self.stats["steps_memoized"] += run.memoized
+        self.stats["steps_skipped"] += len(run.skipped)
+        result = WorkflowResult(
+            workflow_uuid=run.uuid,
+            results=dict(run.results),
+            skipped=tuple(sorted(run.skipped)),
+            attempts=run.attempt,
+            steps_run=run.ran,
+            steps_memoized=run.memoized,
+            committed_tid=tid,
+            wall_ms=(time.perf_counter() - run.t0) * 1e3,
+            scope=self.config.scope.value,
+        )
+        self._resolve_ticket(run, result=result)
+
+    def _resolve_ticket(
+        self,
+        run: _Run,
+        *,
+        result: Optional[WorkflowResult] = None,
+        error: Optional[BaseException] = None,
+        cause: Optional[BaseException] = None,
+    ) -> None:
+        self._admitted -= 1
+        if error is not None:
+            self.stats["workflows_failed"] += 1
+            if cause is not None:
+                error.__cause__ = cause
+            run.ticket._future.set_exception(error)
+        else:
+            run.ticket._future.set_result(result)
+        self._cond.notify_all()  # wake blocked submitters / close(wait=True)
+
+    # -- batch construction -------------------------------------------------
+    def _build_batches(self, now: float) -> List[List]:
+        cfg = self.config
+        if self._ready_total == 0:
+            return []
+        # When the window is saturated, dispatch in full-batch quanta:
+        # completions free capacity one step at a time, and dispatching each
+        # sliver immediately would degenerate into single-step batches
+        # exactly when the backlog is deepest.  Holding until a whole
+        # batch's worth of capacity is free keeps batches full under load;
+        # an idle pool (nothing in flight) still dispatches at once.
+        free = cfg.max_inflight_steps - self._inflight_steps
+        if free < cfg.batch_max_steps and self._inflight_steps > 0:
+            return []
+        # linger: let a partial batch fill while other work is in flight
+        if (
+            self._ready_total < cfg.batch_max_steps
+            and self._inflight_steps > 0
+            and self._ready_since is not None
+            and now - self._ready_since < cfg.batch_linger_ms / 1e3
+        ):
+            return []
+        batches: List[List] = []
+        batch: List = []
+        while self._rr and self._inflight_steps < cfg.max_inflight_steps:
+            run = self._rr.popleft()
+            run.in_rr = False
+            if (
+                run.state is not _RunState.RUNNING
+                or run.failure is not None
+                or not run.ready
+                or run.inflight >= cfg.max_inflight_per_workflow
+            ):
+                continue
+            name = run.ready.popleft()
+            self._ready_total -= 1
+            batch.append(self._make_thunk(run, run.attempt, name))
+            run.inflight += 1
+            self._inflight_steps += 1
+            self._enqueue_rr(run)  # round-robin: back of the queue
+            if len(batch) >= cfg.batch_max_steps:
+                batches.append(batch)
+                batch = []
+        if batch:
+            batches.append(batch)
+        if self._ready_total == 0:
+            self._ready_since = None
+        else:
+            self._ready_since = now
+        self.stats["batches_dispatched"] += len(batches)
+        self.stats["batched_steps"] += sum(len(b) for b in batches)
+        return batches
+
+    def _make_thunk(self, run: _Run, epoch: int, name: str):
+        step = run.spec.steps[name]
+        inputs = {d: run.results[d] for d in step.deps if d not in run.skipped}
+        session = run.session
+
+        def thunk() -> None:
+            try:
+                result = execute_step(
+                    step, session, self.platform, inputs, run.args,
+                    memoizing=self._memoizing, memo_store=self._memo,
+                )
+                outcome: Tuple[bool, Any] = (True, result)
+            except BaseException as exc:  # noqa: BLE001 - reported, not raised
+                outcome = (False, exc)
+            self._emit(("step", run, epoch, name, outcome[0], outcome[1]))
+
+        return thunk

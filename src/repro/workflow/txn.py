@@ -26,6 +26,14 @@ transaction whose UUID derives from (workflow UUID, step name).  AFT's
 idempotent commit (§3.3.1) makes memoization exactly-once, and a retried
 workflow resumes by replaying memoized writes into its fresh session instead
 of re-running step bodies.
+
+Memo records are write-once, so the §5 supersedence GC can never reclaim
+them.  Instead, when a driver (``WorkflowExecutor`` / ``WorkflowPool``)
+declares a workflow **finished**, ``MemoStore.mark_finished`` persists a
+``w/<uuid>`` marker; the finished-workflow sweep in ``core/gc.py`` then
+deletes the workflow's ``.wf/`` memo records and derived ``u/`` index
+entries.  Declaring finished is a promise that the UUID will never be
+re-driven — see ``docs/WORKFLOWS.md``.
 """
 
 from __future__ import annotations
@@ -33,15 +41,23 @@ from __future__ import annotations
 import base64
 import json
 import threading
+import time
 from enum import Enum
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
 from ..core import AftCluster, TxnId
 from ..core.ids import Clock, fresh_uuid
-from ..core.records import embed_metadata, extract_metadata
+from ..core.records import (
+    WF_MEMO_TXN_INFIX,
+    WF_STEP_TXN_INFIX,
+    WORKFLOW_MEMO_PREFIX,
+    embed_metadata,
+    extract_metadata,
+    workflow_finish_key,
+)
 from ..storage.base import StorageEngine
 
-MEMO_PREFIX = ".wf/"
+MEMO_PREFIX = WORKFLOW_MEMO_PREFIX
 
 
 class TxnScope(Enum):
@@ -56,11 +72,11 @@ def memo_key(workflow_uuid: str, step_name: str) -> str:
 
 def step_txn_uuid(workflow_uuid: str, step_name: str) -> str:
     """Deterministic per-step transaction UUID (§3.3.1 idempotence unit)."""
-    return f"{workflow_uuid}.step.{step_name}"
+    return f"{workflow_uuid}{WF_STEP_TXN_INFIX}{step_name}"
 
 
 def memo_txn_uuid(workflow_uuid: str, step_name: str) -> str:
-    return f"{workflow_uuid}.memo.{step_name}"
+    return f"{workflow_uuid}{WF_MEMO_TXN_INFIX}{step_name}"
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +123,17 @@ class MemoStore:
         tx = client.start_transaction(memo_txn_uuid(workflow_uuid, step_name))
         client.put(tx, memo_key(workflow_uuid, step_name), payload)
         client.commit_transaction(tx)
+
+    def mark_finished(self, workflow_uuid: str) -> None:
+        """Declare the workflow done: persist the ``w/<uuid>`` marker that
+        licenses the GC sweep (``LocalGcAgent.gc_finished_workflows``) to
+        reclaim this workflow's memo records and ``u/`` index entries.  A
+        plain storage put, not a transaction: the marker is advisory GC
+        state, and a crash before it lands merely defers reclamation."""
+        self.cluster.storage.put(
+            workflow_finish_key(workflow_uuid),
+            json.dumps({"finished_at_ns": time.time_ns()}).encode(),
+        )
 
     def load_all(
         self,

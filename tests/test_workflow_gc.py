@@ -1,0 +1,338 @@
+"""Memo-record GC: finished workflows' ``.wf/`` + derived ``u/`` keys are
+reclaimed by the §5 sweep, unfinished ones survive so resume still works."""
+
+import json
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.gc import LocalGcAgent
+from repro.core.node import AftNode, AftNodeConfig
+from repro.core.records import (
+    COMMIT_PREFIX,
+    DATA_PREFIX,
+    UUID_PREFIX,
+    WF_FINISH_PREFIX,
+)
+from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    MEMO_PREFIX,
+    PoolConfig,
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+
+def make_cluster(nodes: int = 1) -> AftCluster:
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+    )
+
+
+def fast_platform(**kw) -> LambdaPlatform:
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def crashy_chain(crashes: int = 1) -> WorkflowSpec:
+    """a → b where b dies ``crashes`` times before succeeding: attempt 1
+    memoizes a and crashes mid-workflow, the retry resumes a from its memo."""
+    spec = WorkflowSpec("crashy")
+    remaining = [crashes]
+
+    def a(ctx):
+        ctx.put("data/a", b"va")
+        return "a-done"
+
+    def b(ctx):
+        if remaining[0] > 0:
+            remaining[0] -= 1
+            raise FunctionFailure("injected mid-workflow crash")
+        ctx.put("data/b", b"vb")
+        return "b-done"
+
+    spec.step("a", a)
+    spec.step("b", b, deps=["a"])
+    return spec
+
+
+def memo_keys(storage, uuid):
+    return {
+        "wf_data": storage.list_keys(f"{DATA_PREFIX}{MEMO_PREFIX}{uuid}/"),
+        "derived_u": storage.list_keys(f"{UUID_PREFIX}{uuid}."),
+        "marker": storage.list_keys(f"{WF_FINISH_PREFIX}{uuid}"),
+    }
+
+
+def test_crash_resume_finish_then_gc_reclaims_memo_state():
+    """The satellite scenario end to end: crash mid-workflow, resume from
+    memo, finish, run LocalGcAgent.step() — every ``.wf/`` and derived
+    ``u/`` key is gone, while the workflow's own commit survives."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=5, declare_finished=True),
+    )
+    r = ex.run(crashy_chain(crashes=1), uuid="gc-wf")
+    assert r.attempts == 2 and r.steps_memoized == 1  # crash → memo resume
+
+    storage = cluster.storage
+    before = memo_keys(storage, "gc-wf")
+    assert len(before["wf_data"]) == 2      # memo versions for a and b
+    assert len(before["derived_u"]) == 2    # u/gc-wf.memo.{a,b}
+    assert len(before["marker"]) == 1       # declared finished
+
+    agent = LocalGcAgent(cluster.live_nodes()[0])
+    agent.step()
+
+    after = memo_keys(storage, "gc-wf")
+    assert after["wf_data"] == []
+    assert after["derived_u"] == []
+    # the marker outlives the sweep (peers' cache purges need it) until the
+    # fault manager retires it after the TTL
+    assert len(after["marker"]) == 1
+    cluster.fault_manager.config.workflow_marker_ttl_s = 0.0
+    cluster.fault_manager.sweep_finished_markers()
+    cluster.fault_manager.deleter.drain()
+    assert memo_keys(storage, "gc-wf")["marker"] == []
+    assert agent.workflows_reclaimed == 1
+    # pure-memo commit records are gone; the workflow's own commit survives
+    commits = storage.list_keys(COMMIT_PREFIX)
+    assert len([k for k in commits if ".memo." in k]) == 0
+    assert len([k for k in commits if k.endswith(".gc-wf")]) == 1
+    # the workflow's own u/ entry (final-commit idempotence) survives
+    assert storage.get(f"{UUID_PREFIX}gc-wf") is not None
+    # and its data is still readable from a fresh bootstrapped node
+    fresh = AftNode(storage, AftNodeConfig(node_id="fresh"))
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "data/a") == b"va"
+    assert fresh.get(tx, "data/b") == b"vb"
+    fresh.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_unfinished_workflow_memos_survive_gc_and_still_resume():
+    """No finish marker ⇒ the sweep must not touch the workflow: a crashed
+    workflow's memos survive GC and a later re-drive resumes from them."""
+    cluster = make_cluster()
+    spec = crashy_chain(crashes=10)  # more crashes than attempts → fails
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=2, declare_finished=True),
+    )
+    try:
+        ex.run(spec, uuid="unfinished-wf")
+    except Exception:
+        pass
+    storage = cluster.storage
+    assert len(memo_keys(storage, "unfinished-wf")["wf_data"]) == 1  # a's memo
+    assert memo_keys(storage, "unfinished-wf")["marker"] == []
+
+    agent = LocalGcAgent(cluster.live_nodes()[0])
+    agent.step()
+    # unfinished: everything still there
+    assert len(memo_keys(storage, "unfinished-wf")["wf_data"]) == 1
+    assert len(memo_keys(storage, "unfinished-wf")["derived_u"]) == 1
+
+    # the re-drive resumes from the surviving memo instead of re-running a
+    spec2 = crashy_chain(crashes=0)
+    r = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=5),
+    ).run(spec2, uuid="unfinished-wf")
+    assert r.steps_memoized == 1
+    assert r.results == {"a": "a-done", "b": "b-done"}
+    cluster.stop()
+
+
+def test_finished_and_unfinished_coexist():
+    """One sweep over a mixed population deletes exactly the finished half."""
+    cluster = make_cluster()
+    storage = cluster.storage
+    cfg_fin = WorkflowConfig(declare_finished=True)
+    cfg_not = WorkflowConfig(declare_finished=False)
+    for i in range(4):
+        cfg = cfg_fin if i % 2 == 0 else cfg_not
+        ex = WorkflowExecutor(fast_platform(), cluster=cluster, config=cfg)
+        ex.run(crashy_chain(crashes=0), uuid=f"mix-{i}")
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    for i in range(4):
+        keys = memo_keys(storage, f"mix-{i}")
+        if i % 2 == 0:
+            assert keys["wf_data"] == [] and keys["derived_u"] == []
+        else:
+            assert len(keys["wf_data"]) == 2 and len(keys["derived_u"]) == 2
+    cluster.stop()
+
+
+def test_step_scope_gc_keeps_real_data_commit_records():
+    """TxnScope.STEP memos ride inside the step's own transaction (mixed
+    write set): the sweep deletes memo bytes + u/ entries but must keep the
+    commit records that carry the real keys' cowritten metadata."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(
+            scope=TxnScope.STEP, max_attempts=5, declare_finished=True
+        ),
+    )
+    ex.run(crashy_chain(crashes=1), uuid="step-wf")
+    storage = cluster.storage
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    keys = memo_keys(storage, "step-wf")
+    assert keys["wf_data"] == [] and keys["derived_u"] == []
+    # step transactions wrote real data → their commit records survive
+    step_commits = [
+        k for k in storage.list_keys(COMMIT_PREFIX) if ".step." in k
+    ]
+    assert len(step_commits) == 2
+    fresh = AftNode(storage, AftNodeConfig(node_id="fresh-step"))
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "data/a") == b"va"
+    assert fresh.get(tx, "data/b") == b"vb"
+    fresh.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_pool_plus_gc_bounds_storage_footprint():
+    """A pool stream with a GC agent interleaved keeps total key count
+    bounded; the same stream without GC grows monotonically."""
+    def run_stream(gc: bool) -> list:
+        cluster = make_cluster()
+        platform = fast_platform()
+        agent = LocalGcAgent(cluster.live_nodes()[0], workflow_gc_batch=1000)
+        sizes = []
+        with WorkflowPool(platform, cluster=cluster) as pool:
+            for wave in range(4):
+                specs = []
+                for i in range(25):
+                    spec = WorkflowSpec(f"w{wave}-{i}")
+                    spec.step(
+                        "only",
+                        lambda ctx, k=f"key/{i}": ctx.put(k, b"x") or k,
+                    )
+                    specs.append(spec)
+                pool.run_all(specs, timeout=60)
+                if gc:
+                    cluster.fault_manager.config.workflow_marker_ttl_s = 0.0
+                    agent.step()
+                    cluster.fault_manager.step()  # supersedence GC + markers
+                    cluster.fault_manager.deleter.drain()
+                sizes.append(len(cluster.storage.list_keys()))
+        cluster.stop()
+        return sizes
+
+    with_gc = run_stream(gc=True)
+    without = run_stream(gc=False)
+    assert without[-1] > without[0]            # leak without GC
+    assert with_gc[-1] < without[-1] / 2       # GC reclaims the bulk
+    # plateau: the GC'd footprint stops growing after the first wave
+    assert with_gc[-1] <= with_gc[1] + 5
+
+
+def test_gc_spares_workflows_whose_uuid_extends_a_finished_one():
+    """Regression: user-supplied UUIDs can be textual extensions of each
+    other (serve/refresh.py builds ``publish.<run_id>.<step>``).  Finishing
+    ``job.1`` must not destroy the memos or idempotence index of the
+    still-running ``job.1.5`` — its exactly-once resume depends on them."""
+    cluster = make_cluster()
+    storage = cluster.storage
+    ex_fin = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex_fin.run(crashy_chain(crashes=0), uuid="job.1")
+    # a *different* workflow that crashes mid-flight and stays unfinished
+    ex_live = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=2, declare_finished=True),
+    )
+    try:
+        ex_live.run(crashy_chain(crashes=10), uuid="job.1.5")
+    except Exception:
+        pass
+    assert len(memo_keys(storage, "job.1.5")["wf_data"]) == 1  # a's memo
+
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+
+    # finished workflow reclaimed ... (its u/ prefix also matches job.1.5's
+    # keys, so probe its own derived entries exactly)
+    assert memo_keys(storage, "job.1")["wf_data"] == []
+    assert storage.get(f"{UUID_PREFIX}job.1.memo.a") is None
+    assert storage.get(f"{UUID_PREFIX}job.1.memo.b") is None
+    # ... the unfinished extension untouched
+    assert len(memo_keys(storage, "job.1.5")["wf_data"]) == 1
+    assert len(memo_keys(storage, "job.1.5")["derived_u"]) == 1
+    assert storage.get(f"{UUID_PREFIX}job.1.5") is None  # never committed
+
+    # and it still resumes from its surviving memo
+    r = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=5),
+    ).run(crashy_chain(crashes=0), uuid="job.1.5")
+    assert r.steps_memoized == 1
+    cluster.stop()
+
+
+def test_multi_node_caches_purge_memo_records():
+    """Regression: every node's cache must shed a finished workflow's
+    pure-memo records, not just the node whose agent swept storage first —
+    the marker outlives the sweep so slower peers still see it."""
+    cluster = make_cluster(nodes=2)
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(crashy_chain(crashes=0), uuid="mn-wf")
+    # propagate the memo commits to both nodes' caches
+    cluster.step_all()
+
+    def memo_cached(node):
+        return [
+            tid for tid in node.cache.all_tids()
+            if (node.cache.get(tid) is not None
+                and all(k.startswith(MEMO_PREFIX)
+                        for k in node.cache.get(tid).write_set))
+        ]
+
+    # both agents sweep, in either order; the second one finds storage
+    # already clean but must still purge its own cache
+    for node in cluster.live_nodes():
+        LocalGcAgent(node).step()
+    for node in cluster.live_nodes():
+        assert memo_cached(node) == []
+        assert node.committed_tid_for_uuid("mn-wf.memo.a") is None
+    cluster.stop()
+
+
+def test_fault_manager_prunes_deleted_memo_records():
+    """After the node-side sweep deletes memo commit records from storage,
+    the fault manager's aggregate (unpruned) view drops them too — otherwise
+    its memory grows forever even though storage is bounded."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(crashy_chain(crashes=0), uuid="fm-wf")
+    # multicast the commits to the fault manager (without running GC agents)
+    for agent in cluster.agents.values():
+        agent.step()
+    fm = cluster.fault_manager
+    fm.ingest()
+    memo_records = [
+        r for r in fm.cache.snapshot_records()
+        if all(k.startswith(MEMO_PREFIX) for k in r.write_set)
+    ]
+    assert len(memo_records) == 2
+    LocalGcAgent(cluster.live_nodes()[0]).step()  # deletes them from storage
+    fm.config.prune_grace_s = 0.0
+    fm.scan_commit_set()
+    memo_records = [
+        r for r in fm.cache.snapshot_records()
+        if all(k.startswith(MEMO_PREFIX) for k in r.write_set)
+    ]
+    assert memo_records == []
+    cluster.stop()

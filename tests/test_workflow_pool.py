@@ -1,0 +1,344 @@
+"""WorkflowPool: batched scheduling of many concurrent workflows —
+multiplexing, fairness windows, backpressure, exactly-once under injected
+crashes, and finish-marker handoff to GC."""
+
+import json
+import threading
+
+import pytest
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.records import WF_FINISH_PREFIX
+from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    PoolClosed,
+    PoolConfig,
+    TxnScope,
+    WorkflowError,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+
+def make_cluster(nodes: int = 1) -> AftCluster:
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+    )
+
+
+def fast_platform(**kw) -> LambdaPlatform:
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def chain_spec(i: int, length: int = 3) -> WorkflowSpec:
+    """A small linear workflow: each step doubles the previous result."""
+    spec = WorkflowSpec(f"chain{i}")
+
+    def first(ctx):
+        ctx.maybe_fail()
+        ctx.put(f"c/{i}/0", str(i).encode())
+        return i
+
+    prev = spec.step("s0", first)
+    for j in range(1, length):
+        def body(ctx, j=j):
+            val = ctx.inputs[f"s{j-1}"] * 2
+            ctx.put(f"c/{i}/{j}", str(val).encode())
+            return val
+        prev = spec.step(f"s{j}", body, deps=[prev])
+    return spec
+
+
+def counter_spec(i: int) -> WorkflowSpec:
+    """Read-modify-write of a per-workflow counter — the exactly-once probe:
+    any double-applied attempt shows up as count > 1."""
+    spec = WorkflowSpec(f"count{i}")
+
+    def bump(ctx):
+        raw = ctx.get(f"cnt/{i}")
+        count = json.loads(raw)["count"] if raw else 0
+        ctx.maybe_fail()
+        ctx.put(f"cnt/{i}", json.dumps({"count": count + 1}).encode())
+        return count + 1
+
+    spec.step("bump", bump)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# basic multiplexing + batching
+# ---------------------------------------------------------------------------
+
+def test_pool_runs_many_concurrent_workflows():
+    cluster = make_cluster()
+    platform = fast_platform()
+    with WorkflowPool(platform, cluster=cluster) as pool:
+        tickets = [pool.submit(chain_spec(i)) for i in range(300)]
+        results = [t.result(timeout=60) for t in tickets]
+    for i, r in enumerate(results):
+        assert r.results["s2"] == i * 4
+        assert r.attempts == 1
+    cluster.stop()
+
+
+def test_pool_batches_steps_into_shared_invocations():
+    """The whole point of the pool: far fewer platform invocations than
+    steps, because compatible ready steps share one warm start."""
+    cluster = make_cluster()
+    platform = fast_platform()
+    n = 200
+    with WorkflowPool(
+        platform, cluster=cluster, config=PoolConfig(batch_max_steps=16)
+    ) as pool:
+        results = pool.run_all([chain_spec(i) for i in range(n)], timeout=60)
+    steps = sum(r.steps_run for r in results)
+    assert steps == n * 3
+    assert platform.batched_invocations == platform.invocations
+    assert platform.batched_steps == steps
+    # amortization: strictly fewer invocations than steps (usually ~steps/16)
+    assert platform.invocations < steps / 2
+    cluster.stop()
+
+
+def test_pool_exactly_once_under_injected_crashes():
+    cluster = make_cluster()
+    platform = fast_platform(failure_rate=0.15, seed=13)
+    n = 120
+    with WorkflowPool(
+        platform, cluster=cluster, config=PoolConfig(max_attempts=25)
+    ) as pool:
+        results = pool.run_all([counter_spec(i) for i in range(n)], timeout=120)
+    assert platform.failures_injected > 0  # the hazard actually fired
+    assert any(r.attempts > 1 for r in results)
+    # each workflow's counter incremented exactly once despite retries
+    node = cluster.live_nodes()[0]
+    tx = node.start_transaction()
+    for i in range(n):
+        assert json.loads(node.get(tx, f"cnt/{i}"))["count"] == 1
+    node.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_pool_step_scope_and_unscoped_modes():
+    cluster = make_cluster()
+    with WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(scope=TxnScope.STEP),
+    ) as pool:
+        results = pool.run_all([chain_spec(i) for i in range(20)], timeout=60)
+    assert all(r.results["s2"] == i * 4 for i, r in enumerate(results))
+    storage = MemoryStorage()
+    with WorkflowPool(
+        fast_platform(), storage=storage,
+        config=PoolConfig(scope=TxnScope.NONE),
+    ) as pool:
+        results = pool.run_all([chain_spec(i) for i in range(20)], timeout=60)
+    assert all(r.results["s2"] == i * 4 for i, r in enumerate(results))
+    cluster.stop()
+
+
+def test_pool_conditional_skips_match_executor_semantics():
+    cluster = make_cluster()
+    spec = WorkflowSpec("cond")
+    spec.step("root", lambda ctx: 1)
+    spec.step("taken", lambda ctx: 2, deps=["root"],
+              when=lambda r: r["root"] == 1)
+    spec.step("not_taken", lambda ctx: 3, deps=["root"],
+              when=lambda r: r["root"] == 99)
+    spec.step("downstream", lambda ctx: 4, deps=["not_taken"])  # skip ripples
+    spec.fan_in("agg", lambda ctx: sorted(ctx.inputs), ["taken", "not_taken"])
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        r = pool.submit(spec).result(timeout=30)
+    assert r.results["agg"] == ["taken"]
+    assert set(r.skipped) == {"not_taken", "downstream"}
+    cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# windows, fairness, backpressure
+# ---------------------------------------------------------------------------
+
+def test_pool_respects_global_inflight_window():
+    cluster = make_cluster()
+    platform = fast_platform()
+    peak = 0
+    active = 0
+    lock = threading.Lock()
+
+    def body(ctx):
+        nonlocal peak, active
+        with lock:
+            active += 1
+            peak = max(peak, active)
+        try:
+            return 1
+        finally:
+            with lock:
+                active -= 1
+
+    def spec(i):
+        s = WorkflowSpec(f"w{i}")
+        s.step("only", body)
+        return s
+
+    with WorkflowPool(
+        platform, cluster=cluster,
+        config=PoolConfig(max_inflight_steps=8, batch_max_steps=4),
+    ) as pool:
+        pool.run_all([spec(i) for i in range(100)], timeout=60)
+    assert peak <= 8
+    cluster.stop()
+
+
+def test_pool_per_workflow_window_preserves_fairness():
+    """A 32-branch fan-out workflow must not monopolize the pool: with a
+    per-workflow cap of 2, singleton workflows submitted after it still
+    finish long before the wide DAG's last branch."""
+    cluster = make_cluster()
+    order = []
+    lock = threading.Lock()
+
+    wide = WorkflowSpec("wide")
+    def branch(ctx):
+        with lock:
+            order.append("wide")
+        return ctx.branch
+    names = wide.fan_out("b", branch, 32)
+    wide.fan_in("agg", lambda ctx: len(ctx.inputs), names)
+
+    def small(i):
+        s = WorkflowSpec(f"small{i}")
+        def body(ctx):
+            with lock:
+                order.append(f"small{i}")
+            return i
+        s.step("only", body)
+        return s
+
+    with WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(
+            max_inflight_per_workflow=2, batch_max_steps=4,
+            max_inflight_steps=8,
+        ),
+    ) as pool:
+        t_wide = pool.submit(wide)
+        t_small = [pool.submit(small(i)) for i in range(8)]
+        for t in t_small:
+            t.result(timeout=60)
+        t_wide.result(timeout=60)
+    assert order.count("wide") == 32
+    # round-robin + per-workflow cap: every singleton body ran before the
+    # wide DAG's last branch — the wide workflow could not starve them
+    last_small = max(i for i, x in enumerate(order) if x.startswith("small"))
+    last_wide = max(i for i, x in enumerate(order) if x == "wide")
+    assert last_small < last_wide
+    cluster.stop()
+
+
+def test_pool_backpressure_blocks_submit():
+    cluster = make_cluster()
+    gate = threading.Event()
+
+    def spec(i):
+        s = WorkflowSpec(f"g{i}")
+        def body(ctx):
+            gate.wait(timeout=30)
+            return i
+        s.step("only", body)
+        return s
+
+    pool = WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(max_admitted_workflows=4),
+    )
+    tickets = [pool.submit(spec(i)) for i in range(4)]  # fills the window
+
+    blocked_done = threading.Event()
+    extra = {}
+
+    def submitter():
+        extra["t"] = pool.submit(spec(99))
+        blocked_done.set()
+
+    th = threading.Thread(target=submitter, daemon=True)
+    th.start()
+    assert not blocked_done.wait(timeout=0.3)  # admission window full
+    gate.set()  # drain the pool
+    assert blocked_done.wait(timeout=30)
+    for t in tickets + [extra["t"]]:
+        t.result(timeout=30)
+    pool.close()
+    cluster.stop()
+
+
+def test_pool_submit_after_close_raises():
+    cluster = make_cluster()
+    pool = WorkflowPool(fast_platform(), cluster=cluster)
+    pool.close()
+    with pytest.raises(PoolClosed):
+        pool.submit(chain_spec(0))
+    cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# failure exhaustion + resume
+# ---------------------------------------------------------------------------
+
+def test_pool_exhausted_attempts_fail_only_that_ticket():
+    cluster = make_cluster()
+    doomed = WorkflowSpec("doomed")
+
+    def dies(ctx):
+        raise FunctionFailure("always")
+
+    doomed.step("a", dies)
+    with WorkflowPool(
+        fast_platform(), cluster=cluster, config=PoolConfig(max_attempts=3)
+    ) as pool:
+        bad = pool.submit(doomed)
+        good = [pool.submit(chain_spec(i)) for i in range(10)]
+        with pytest.raises(WorkflowError):
+            bad.result(timeout=30)
+        for i, t in enumerate(good):
+            assert t.result(timeout=30).results["s2"] == i * 4
+    cluster.stop()
+
+
+def test_pool_resumes_cross_process_redrive_from_memos():
+    """Same contract as the executor: an explicit UUID consults memos on the
+    first attempt, so a re-driven workflow does not re-run bodies."""
+    cluster = make_cluster()
+    ran = []
+
+    def build():
+        spec = WorkflowSpec("redrive")
+        def a(ctx):
+            ran.append(1)
+            return 7
+        spec.step("a", a)
+        return spec
+
+    cfg = PoolConfig(declare_finished=False)  # keep memos for the re-drive
+    with WorkflowPool(fast_platform(), cluster=cluster, config=cfg) as pool:
+        r1 = pool.submit(build(), uuid="pool-redrive").result(timeout=30)
+    with WorkflowPool(fast_platform(), cluster=cluster, config=cfg) as pool:
+        r2 = pool.submit(build(), uuid="pool-redrive").result(timeout=30)
+    assert len(ran) == 1
+    assert r1.results == r2.results == {"a": 7}
+    assert r2.steps_memoized == 1
+    assert r1.committed_tid == r2.committed_tid
+    cluster.stop()
+
+
+def test_pool_declares_finished_workflows():
+    cluster = make_cluster()
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        results = pool.run_all([chain_spec(i) for i in range(5)], timeout=30)
+    markers = cluster.storage.list_keys(WF_FINISH_PREFIX)
+    assert len(markers) == 5
+    uuids = {m[len(WF_FINISH_PREFIX):] for m in markers}
+    assert uuids == {r.workflow_uuid for r in results}
+    cluster.stop()
