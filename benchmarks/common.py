@@ -35,7 +35,9 @@ def save(name: str, payload: Dict) -> pathlib.Path:
 def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
                  standby: int = 0, time_scale: float = QUICK_TIME_SCALE,
                  gc_interval_s: float = 0.2,
-                 fast_failover: bool = False) -> AftCluster:
+                 fast_failover: bool = False,
+                 router=None,
+                 data_cache_bytes: Optional[int] = None) -> AftCluster:
     from repro.core import FaultManagerConfig
 
     node_cfg = AftNodeConfig(
@@ -44,12 +46,15 @@ def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
         gc_interval_s=gc_interval_s,
         txn_timeout_s=30.0,
     )
+    if data_cache_bytes is not None:
+        node_cfg.data_cache_bytes = data_cache_bytes
     fm = FaultManagerConfig(scan_interval_s=0.1, gc_interval_s=0.15,
                             heartbeat_interval_s=0.3 if fast_failover else 1.0,
                             heartbeat_misses=3)
     cfg = ClusterConfig(num_nodes=nodes, standby_nodes=standby, node=node_cfg,
                         fault_manager=fm,
-                        replacement_delay_s=1.0 * time_scale * 33)
+                        replacement_delay_s=1.0 * time_scale * 33,
+                        routing=router)
     cluster = AftCluster(engine, cfg)
     cluster.start()
     return cluster

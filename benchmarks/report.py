@@ -1,7 +1,8 @@
 """Render the EXPERIMENTS.md §Dry-run and §Roofline tables from
-benchmarks/results/{dryrun,roofline}.json.
+benchmarks/results/{dryrun,roofline}.json, plus the routing-policy /
+per-node AftNode.stats() table from fig_routing.json.
 
-  PYTHONPATH=src python -m benchmarks.report [--md]
+  PYTHONPATH=src python -m benchmarks.report [--section routing]
 """
 
 from __future__ import annotations
@@ -73,10 +74,44 @@ def roofline_table(tagged: bool = False) -> str:
     return "\n".join(rows)
 
 
+def routing_table() -> str:
+    """Policy comparison + per-node AftNode.stats() gauges from figr."""
+    res = json.loads((RESULTS / "fig_routing.json").read_text())
+    rr = next(p for p in res["policies"] if p["policy"] == "round_robin")
+    rows = ["| policy | steps/s | vs round-robin | cluster hit rate | "
+            "load imbalance |",
+            "|---|---|---|---|---|"]
+    for p in res["policies"]:
+        speedup = p["steps_per_s"] / max(rr["steps_per_s"], 1e-9)
+        rows.append(
+            f"| {p['policy']} | {p['steps_per_s']:.0f} | {speedup:.2f}× | "
+            f"{p['cluster_cache_hit_rate']:.3f} | {p['load_imbalance']:.2f} |")
+    rows.append("")
+    rows.append("| policy | node | commits | reads | cache hits | misses | "
+                "hit rate |")
+    rows.append("|---|---|---|---|---|---|---|")
+    for p in res["policies"]:
+        for n in p["nodes"]:
+            rows.append(
+                f"| {p['policy']} | {n['node']} | {n['commits']} | "
+                f"{n['reads']} | {n['cache_hits']} | {n['cache_misses']} | "
+                f"{n['cache_hit_rate']:.3f} |")
+    kill = res["kill_midstream"]
+    rows.append("")
+    rows.append(
+        f"kill-mid-stream ({kill['policy']}): {kill['completed']}/"
+        f"{kill['workflows']} completed, {kill['workflows_retried']} retried "
+        f"({kill['steps_memo_resumed']} memoized steps resumed), "
+        f"standby promoted: {kill['standby_promoted']}, duplicates: "
+        f"{kill['duplicate_effects']}, anomalies: {kill['anomalies']}")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "variants"])
+                    choices=["all", "dryrun", "roofline", "variants",
+                             "routing"])
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -89,6 +124,14 @@ def main() -> None:
     if args.section in ("all", "variants"):
         print("### Perf-iteration variants\n")
         print(roofline_table(tagged=True))
+        print()
+    if args.section in ("all", "routing"):
+        try:
+            table = routing_table()
+        except FileNotFoundError:
+            table = "(run `python -m benchmarks.run --only figr` first)"
+        print("### Routing policies (figr: 4 nodes, Zipf entities)\n")
+        print(table)
 
 
 if __name__ == "__main__":

@@ -30,11 +30,12 @@ MODULES = {
     "fig10": "benchmarks.fig10_fault_tolerance",
     "figw": "benchmarks.fig_workflow",
     "figp": "benchmarks.fig_pool",
+    "figr": "benchmarks.fig_routing",
     "ckpt": "benchmarks.ckpt_bench",
 }
 
 # fast, representative subset for CI smoke runs (seconds each)
-SMOKE_DEFAULT = ["fig2", "figw", "figp"]
+SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr"]
 
 
 def main() -> int:

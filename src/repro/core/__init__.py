@@ -37,6 +37,15 @@ from .records import (
     embed_metadata,
     extract_metadata,
 )
+from .routing import (
+    CacheAwareConfig,
+    CacheAwareRouter,
+    ConsistentHashRouter,
+    PlacementHint,
+    RoundRobinRouter,
+    Router,
+    make_router,
+)
 from .supersede import is_superseded, superseded_subset
 from .write_buffer import TransactionWriteBuffer
 
@@ -83,4 +92,11 @@ __all__ = [
     "extract_metadata",
     "COMMIT_PREFIX",
     "DATA_PREFIX",
+    "Router",
+    "RoundRobinRouter",
+    "ConsistentHashRouter",
+    "CacheAwareRouter",
+    "CacheAwareConfig",
+    "PlacementHint",
+    "make_router",
 ]

@@ -1,16 +1,19 @@
 """Cluster deployment harness (§4.3, §6.7).
 
-Plays the role Kubernetes plays in the paper: membership, a stateless
-round-robin load balancer, a standby-node pool for fast replacement, and the
-wiring between nodes, the multicast bus, local GC agents, and the fault
-manager.  Autoscaling policy is pluggable (§4.3 leaves it out of scope; we
-provide a simple load-based policy as a beyond-paper extension in
-``autoscale.py``).
+Plays the role Kubernetes plays in the paper: membership, a pluggable
+request router (``core/routing.py`` — stateless round-robin by default,
+exactly the paper's §6 load balancer), a standby-node pool for fast
+replacement, and the wiring between nodes, the multicast bus, local GC
+agents, and the fault manager.  Autoscaling policy is pluggable (§4.3
+leaves it out of scope; we provide a simple load-based policy as a
+beyond-paper extension in ``autoscale.py``).
 
 ``AftClient`` is the application-facing handle: a logical request (possibly
 spanning many FaaS functions / trainer hosts) opens a session pinned to one
 AFT node (§3.1: "each transaction sends all operations to a single AFT node")
-and drives the Table-1 API through it.
+and drives the Table-1 API through it.  ``start_transaction`` accepts an
+optional :class:`PlacementHint` (declared read set / workflow uuid) that
+locality-aware routers use to place the session near cached data.
 """
 
 from __future__ import annotations
@@ -18,7 +21,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 from ..storage.base import StorageEngine
 from .errors import NodeFailed
@@ -27,6 +30,7 @@ from .gc import LocalGcAgent
 from .ids import TxnId
 from .multicast import MulticastAgent, MulticastBus
 from .node import AftNode, AftNodeConfig
+from .routing import PlacementHint, Router, make_router
 
 
 @dataclass
@@ -39,6 +43,10 @@ class ClusterConfig:
     # cache warm-up).  Simulated; scaled by the storage time_scale in benches.
     replacement_delay_s: float = 0.0
     start_background_threads: bool = True
+    # placement policy: a core/routing.py policy name ("round_robin",
+    # "consistent_hash", "cache_aware") or a Router instance; None keeps the
+    # paper's stateless round-robin LB, decision-for-decision.
+    routing: Union[str, Router, None] = None
 
 
 class AftCluster:
@@ -50,7 +58,7 @@ class AftCluster:
         self.agents: Dict[str, MulticastAgent] = {}
         self.gc_agents: Dict[str, LocalGcAgent] = {}
         self.standbys: List[AftNode] = []
-        self._rr = 0
+        self.router = make_router(self.config.routing)
         self._node_seq = 0
         self._lock = threading.RLock()
         self.fault_manager = FaultManager(
@@ -82,6 +90,7 @@ class AftCluster:
             self.nodes.append(node)
             self.agents[node.node_id] = agent
             self.gc_agents[node.node_id] = gc_agent
+        self._sync_router()
         if self.config.start_background_threads:
             agent.start()
             gc_agent.start()
@@ -100,6 +109,9 @@ class AftCluster:
             agent = self.agents.pop(dead.node_id, None)
             gc_agent = self.gc_agents.pop(dead.node_id, None)
             standby = self.standbys.pop(0) if self.standbys else None
+        # resync BEFORE the replacement delay: during the cold-start window
+        # the router must already have forgotten the dead node's ring arc
+        self._sync_router()
         if agent is not None:
             agent.stop()
         if gc_agent is not None:
@@ -136,6 +148,7 @@ class AftCluster:
                 self.nodes.remove(node)
             agent = self.agents.pop(node.node_id, None)
             gc_agent = self.gc_agents.pop(node.node_id, None)
+        self._sync_router()
         # drain its fresh commits into the bus before detaching
         if agent is not None:
             agent.step()
@@ -147,18 +160,30 @@ class AftCluster:
         """Failure injection (§6.7): hard-kill a live node."""
         node = self.live_nodes()[index]
         node.fail()
+        self._sync_router()
         return node
 
     # ---------------------------------------------------------- load balance
-    def pick_node(self) -> AftNode:
-        """Stateless round-robin LB (§6: 'simple stateless load balancer')."""
-        nodes = self.live_nodes()
-        if not nodes:
-            raise NodeFailed("no live AFT nodes")
-        with self._lock:
-            node = nodes[self._rr % len(nodes)]
-            self._rr += 1
-        return node
+    def _sync_router(self) -> None:
+        """Membership changed (add/remove/kill/replace): rebuild routing
+        state (the hash ring) from the current live set."""
+        self.router.sync(self.live_nodes())
+
+    def pick_node(self, hint: Optional[PlacementHint] = None) -> AftNode:
+        """Route a new session through the configured placement policy
+        (``core/routing.py``; default is the paper's §6 stateless
+        round-robin LB).  Never returns a node already known dead: the
+        live-list snapshot is re-validated after the policy chooses,
+        closing the ``kill_node`` → ``_replace_node`` race window."""
+        for _ in range(4):
+            nodes = self.live_nodes()
+            if not nodes:
+                raise NodeFailed("no live AFT nodes")
+            node = self.router.route(nodes, hint)
+            if node.alive:
+                return node
+            self._sync_router()  # raced a death the policy hadn't seen
+        raise NodeFailed("routing kept selecting dead nodes")
 
     def client(self) -> "AftClient":
         return AftClient(self)
@@ -205,7 +230,12 @@ class AftClient:
         self._lock = threading.Lock()
 
     # -- Table 1 --------------------------------------------------------------
-    def start_transaction(self, uuid: Optional[str] = None) -> str:
+    def start_transaction(
+        self,
+        uuid: Optional[str] = None,
+        *,
+        hint: Optional[PlacementHint] = None,
+    ) -> str:
         node: Optional[AftNode] = None
         if uuid is not None:
             # §3.3.1: a retry continues the transaction — stick to the node
@@ -216,7 +246,12 @@ class AftClient:
             if prior is not None and prior.alive:
                 node = prior
         if node is None:
-            node = self.cluster.pick_node()
+            if hint is None and uuid is not None:
+                # a bare retried uuid is still a placement identity: hash-
+                # keyed routers send it back to the node that served the
+                # original even when this client never saw it
+                hint = PlacementHint(uuid=uuid)
+            node = self.cluster.pick_node(hint)
         txid = node.start_transaction(uuid)
         with self._lock:
             self._sessions[txid] = node

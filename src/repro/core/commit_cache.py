@@ -121,6 +121,9 @@ class DataCache:
         self._order: List[tuple] = []  # LRU approximation: move-to-end
         self._size = 0
         self._lock = threading.Lock()
+        # key → number of cached versions, so routers can probe "does this
+        # node have ANY version of k cached?" in O(1) (core/routing.py)
+        self._key_counts: Dict[str, int] = {}
         self.hits = 0
         self.misses = 0
 
@@ -142,6 +145,7 @@ class DataCache:
                 self._size -= len(self._data[ent])
             else:
                 self._order.append(ent)
+                self._key_counts[key] = self._key_counts.get(key, 0) + 1
             self._data[ent] = value
             self._size += len(value)
             while self._size > self.max_bytes and self._order:
@@ -149,6 +153,7 @@ class DataCache:
                 v = self._data.pop(old, None)
                 if v is not None:
                     self._size -= len(v)
+                    self._drop_key_count(old[0])
 
     def evict_transaction(self, record: TransactionRecord) -> None:
         """Drop any cached data written by ``record`` (GC eviction, §5.1)."""
@@ -157,6 +162,23 @@ class DataCache:
                 v = self._data.pop((key, record.tid), None)
                 if v is not None:
                     self._size -= len(v)
+                    self._drop_key_count(key)
+
+    def _drop_key_count(self, key: str) -> None:
+        # caller holds self._lock; entry removal from _data already happened
+        # (the stale _order slot for evict_transaction is harmless: pop(old,
+        # None) misses and nothing double-counts)
+        n = self._key_counts.get(key, 0) - 1
+        if n > 0:
+            self._key_counts[key] = n
+        else:
+            self._key_counts.pop(key, None)
+
+    def contains_key(self, key: str) -> bool:
+        """Is ANY committed version of ``key`` cached here?  O(1); used by
+        cache-aware routing to score read-set affinity."""
+        with self._lock:
+            return key in self._key_counts
 
     def stats(self) -> Dict[str, int]:
         with self._lock:

@@ -80,6 +80,24 @@ class TxnState(Enum):
     ABORTED = "aborted"
 
 
+class NodeStats(dict):
+    """Counter map that is also callable.
+
+    Dict access (``node.stats["commits"]``) keeps the historical counter
+    surface; calling it (``node.stats()``) returns a *thread-safe snapshot*
+    with derived gauges — open sessions, in-flight ops, data-cache hit
+    rate — taken under the node lock.  The snapshot is what routing
+    policies (``core/routing.py``) and benchmark reports consume: a copy,
+    never a live view, so a scorer iterating it cannot race the node."""
+
+    def __init__(self, counters: Dict[str, int], snapshot_fn) -> None:
+        super().__init__(counters)
+        self._snapshot_fn = snapshot_fn
+
+    def __call__(self) -> Dict[str, float]:
+        return self._snapshot_fn()
+
+
 @dataclass
 class TransactionContext:
     uuid: str
@@ -117,18 +135,22 @@ class AftNode:
         self._locally_deleted: Set[TxnId] = set()
         self._lock = threading.RLock()
         self._alive = True
-        self.stats: Dict[str, int] = {
-            "reads": 0,
-            "read_cache_hits": 0,
-            "ryw_hits": 0,
-            "writes": 0,
-            "commits": 0,
-            "aborts": 0,
-            "staleness_aborts": 0,
-            "remote_merges": 0,
-            "remote_skipped_superseded": 0,
-            "gc_removed": 0,
-        }
+        self._inflight_ops = 0  # get/put/commit currently executing
+        self.stats: NodeStats = NodeStats(
+            {
+                "reads": 0,
+                "read_cache_hits": 0,
+                "ryw_hits": 0,
+                "writes": 0,
+                "commits": 0,
+                "aborts": 0,
+                "staleness_aborts": 0,
+                "remote_merges": 0,
+                "remote_skipped_superseded": 0,
+                "gc_removed": 0,
+            },
+            self._stats_snapshot,
+        )
         if bootstrap:
             self.bootstrap()
 
@@ -154,6 +176,34 @@ class AftNode:
         if ctx is None:
             raise UnknownTransaction(txid)
         return ctx
+
+    def _op_begin(self) -> None:
+        with self._lock:
+            self._inflight_ops += 1
+
+    def _op_end(self) -> None:
+        with self._lock:
+            self._inflight_ops -= 1
+
+    def _stats_snapshot(self) -> Dict[str, float]:
+        """Thread-safe point-in-time view: counters + derived gauges.
+        This is ``node.stats()`` — see :class:`NodeStats`."""
+        with self._lock:
+            snap: Dict[str, float] = dict(self.stats)
+            snap["open_sessions"] = sum(
+                1 for c in self._txns.values() if c.state is TxnState.RUNNING
+            )
+            snap["inflight_ops"] = self._inflight_ops
+            snap["metadata_records"] = len(self.cache)
+            snap["alive"] = 1 if self._alive else 0
+        dc = self.data_cache.stats()
+        snap["data_cache_hits"] = dc["hits"]
+        snap["data_cache_misses"] = dc["misses"]
+        snap["data_cache_entries"] = dc["entries"]
+        snap["data_cache_bytes"] = dc["bytes"]
+        lookups = dc["hits"] + dc["misses"]
+        snap["data_cache_hit_rate"] = dc["hits"] / lookups if lookups else 0.0
+        return snap
 
     # ------------------------------------------------------------- bootstrap
     def bootstrap(self) -> int:
@@ -198,7 +248,11 @@ class AftNode:
         ctx = self._ctx(txid)
         if ctx.state is not TxnState.RUNNING:
             raise TransactionNotRunning(txid)
-        ctx.buffer.put(key, value)
+        self._op_begin()
+        try:
+            ctx.buffer.put(key, value)
+        finally:
+            self._op_end()
         self.stats["writes"] += 1
 
     def get(self, txid: str, key: str) -> Optional[bytes]:
@@ -213,43 +267,46 @@ class AftNode:
         if ctx.state is not TxnState.RUNNING:
             raise TransactionNotRunning(txid)
         self.stats["reads"] += 1
+        self._op_begin()
+        try:
+            # (1) read-your-writes takes precedence (§3.5) — buffered versions
+            # have no commit timestamp yet, so they live outside Algorithm 1.
+            hit, value = ctx.buffer.get(key)
+            if hit:
+                self.stats["ryw_hits"] += 1
+                return value, None
 
-        # (1) read-your-writes takes precedence (§3.5) — buffered versions
-        # have no commit timestamp yet, so they live outside Algorithm 1.
-        hit, value = ctx.buffer.get(key)
-        if hit:
-            self.stats["ryw_hits"] += 1
-            return value, None
+            # (2) repeatable-read short-circuit (optional; Corollary 1.1 proves
+            # Algorithm 1 returns the same version anyway).
+            if self.config.fast_repeatable_read:
+                with ctx.lock:
+                    prior = ctx.read_set.get(key)
+                if prior is not None:
+                    return self._fetch(key, prior), prior
 
-        # (2) repeatable-read short-circuit (optional; Corollary 1.1 proves
-        # Algorithm 1 returns the same version anyway).
-        if self.config.fast_repeatable_read:
+            # (3) Algorithm 1 — selection and read-set insertion are ONE atomic
+            # step per session: parallel DAG branches selecting against stale
+            # snapshots could otherwise each pass Definition 1 individually yet
+            # insert disjoint keys that are jointly fractured (e.g. m@old and
+            # k@T with T cowriting {m, k}).  Lock order is ctx.lock → cache.lock
+            # (inside atomic_read_select); nothing takes them in reverse.  The
+            # storage fetch stays outside the lock.
             with ctx.lock:
-                prior = ctx.read_set.get(key)
-            if prior is not None:
-                return self._fetch(key, prior), prior
-
-        # (3) Algorithm 1 — selection and read-set insertion are ONE atomic
-        # step per session: parallel DAG branches selecting against stale
-        # snapshots could otherwise each pass Definition 1 individually yet
-        # insert disjoint keys that are jointly fractured (e.g. m@old and
-        # k@T with T cowriting {m, k}).  Lock order is ctx.lock → cache.lock
-        # (inside atomic_read_select); nothing takes them in reverse.  The
-        # storage fetch stays outside the lock.
-        with ctx.lock:
-            sel = atomic_read_select(key, ctx.read_set, self.cache)
-            if sel.status is ReadStatus.NOT_FOUND:
-                return None, None
-            if sel.status is ReadStatus.NO_VALID_VERSION:
-                self.stats["staleness_aborts"] += 1
-                raise ReadAbortError(
-                    f"no version of {key!r} joins the atomic readset of {txid}"
-                )
-            assert sel.tid is not None
-            ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
-            chosen = sel.tid
-        value = self._fetch(key, chosen)
-        return value, chosen
+                sel = atomic_read_select(key, ctx.read_set, self.cache)
+                if sel.status is ReadStatus.NOT_FOUND:
+                    return None, None
+                if sel.status is ReadStatus.NO_VALID_VERSION:
+                    self.stats["staleness_aborts"] += 1
+                    raise ReadAbortError(
+                        f"no version of {key!r} joins the atomic readset of {txid}"
+                    )
+                assert sel.tid is not None
+                ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
+                chosen = sel.tid
+            value = self._fetch(key, chosen)
+            return value, chosen
+        finally:
+            self._op_end()
 
     def abort_transaction(self, txid: str) -> None:
         self._check_alive()
@@ -269,6 +326,13 @@ class AftNode:
         """CommitTransaction(txid): persist updates, then the commit record,
         only then acknowledge + make visible (§3.3).  Idempotent per UUID."""
         self._check_alive()
+        self._op_begin()
+        try:
+            return self._commit_transaction(txid)
+        finally:
+            self._op_end()
+
+    def _commit_transaction(self, txid: str) -> TxnId:
         ctx = self._ctx(txid)
         with self._lock:
             already = self._committed_uuids.get(ctx.uuid)

@@ -1,0 +1,298 @@
+"""Placement-aware request routing: which AFT node serves a session/step.
+
+The paper runs a "simple stateless load balancer" in front of the shim
+nodes (§6) — round-robin, no locality.  That is the right baseline, but a
+multi-node cluster leaves two kinds of performance on the table:
+
+* **metadata/idempotence locality** — a retried request that lands on the
+  node that served the original finds the §3.3.1 uuid → tid map and the
+  Commit Set Cache already warm, instead of paying the durable-storage
+  probe;
+* **data-cache locality** — Cloudburst-style scheduling (Sreekanti et al.,
+  2020): a transaction whose read set is already in some node's data cache
+  is storage-bound anywhere else and cache-bound there.
+
+This module extracts the placement decision out of ``AftCluster``/
+``AftClient``/``WorkflowPool`` into pluggable policies:
+
+* :class:`RoundRobinRouter` — the paper's stateless LB (default; hints are
+  ignored, behavior is identical to the historical ``AftCluster.pick_node``);
+* :class:`ConsistentHashRouter` — a virtual-node hash ring over live node
+  ids.  Requests carrying the same :class:`PlacementHint` (workflow uuid or
+  primary key) deterministically rehit the same node across clients and
+  retries, and node death/scale moves only the dead node's arc;
+* :class:`CacheAwareRouter` — scores every live node from its
+  ``AftNode.stats()`` snapshot: declared-read-set presence in the data
+  cache, the node's cache hit rate, and its current load (open sessions +
+  in-flight ops).  The consistent-hash owner gets an anchor bonus so cold
+  keys converge to a home node instead of scattering, but a hot node under
+  load spills to its neighbours (which then cache the hot keys too).
+
+Correctness note: placement is *pure policy*.  Any node can serve any
+transaction — commit records are durable and multicast (§4), retried UUIDs
+are verified against the Commit Set (§3.3.1) — so a "wrong" routing
+decision costs latency, never consistency.  The one hard rule lives in
+:meth:`Router.route`: never hand out a node that is already known dead
+(the ``kill_node`` → ``_replace_node`` race window).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from bisect import bisect_right
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .errors import NodeFailed
+from .node import AftNode
+
+
+@dataclass(frozen=True)
+class PlacementHint:
+    """What the caller knows about a request before routing it.
+
+    ``uuid`` — the logical transaction / workflow uuid (stable across
+    retries, so uuid-keyed policies re-route retries to the same node);
+    ``keys`` — the declared read set, most-important key first (locality-
+    keyed policies anchor on ``keys[0]`` and score the rest).
+    """
+
+    uuid: Optional[str] = None
+    keys: Tuple[str, ...] = ()
+
+    @property
+    def ring_key(self) -> Optional[str]:
+        """The identity a hash ring places this request by: the primary
+        declared key when there is one (data locality), else the uuid
+        (retry locality)."""
+        return self.keys[0] if self.keys else self.uuid
+
+
+def _stable_hash(s: str) -> int:
+    """Deterministic across processes/runs (unlike builtin ``hash``)."""
+    return int.from_bytes(
+        hashlib.blake2b(s.encode("utf-8"), digest_size=8).digest(), "big"
+    )
+
+
+class Router:
+    """A placement policy.  Stateless callers pass the current live-node
+    list on every :meth:`route`; stateful policies (the hash ring) also get
+    :meth:`sync` callbacks from the cluster on membership events (node
+    death, replacement, scale) and self-heal lazily if an event was missed.
+    """
+
+    name = "router"
+
+    def route(
+        self, nodes: Sequence[AftNode], hint: Optional[PlacementHint] = None
+    ) -> AftNode:
+        raise NotImplementedError
+
+    def sync(self, nodes: Sequence[AftNode]) -> None:
+        """Membership changed; rebuild any derived state (e.g. the ring)."""
+
+    # -- shared guards -------------------------------------------------------
+    @staticmethod
+    def _alive(nodes: Sequence[AftNode]) -> List[AftNode]:
+        """Filter to nodes not already known dead.  The caller's list is a
+        snapshot; a node may have been failed (``kill_node``) after it was
+        taken but before we choose — re-checking here closes that window."""
+        live = [n for n in nodes if n.alive]
+        if not live:
+            raise NodeFailed("no live AFT nodes to route to")
+        return live
+
+
+class RoundRobinRouter(Router):
+    """The paper's stateless LB (§6).  Ignores hints; identical decision
+    sequence to the historical ``AftCluster.pick_node`` counter."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    def route(
+        self, nodes: Sequence[AftNode], hint: Optional[PlacementHint] = None
+    ) -> AftNode:
+        live = self._alive(nodes)
+        with self._lock:
+            i = self._rr
+            self._rr += 1
+        return live[i % len(live)]
+
+
+class ConsistentHashRouter(Router):
+    """Virtual-node hash ring keyed by ``PlacementHint.ring_key``.
+
+    ``vnodes`` virtual points per node smooth the arc sizes; node death or
+    scale moves only the affected arcs (tested: ≲ 2/n of keys move when the
+    membership changes by one node).  Hints without a ring key fall back to
+    round-robin — a ring is only useful when there is an identity to hash.
+    """
+
+    name = "consistent_hash"
+
+    def __init__(self, vnodes: int = 64) -> None:
+        self.vnodes = vnodes
+        self._lock = threading.Lock()
+        self._hashes: List[int] = []
+        self._ring_ids: List[str] = []   # node_id per ring point, hash-sorted
+        self._by_id: Dict[str, AftNode] = {}
+        self._fallback = RoundRobinRouter()
+
+    def sync(self, nodes: Sequence[AftNode]) -> None:
+        points = []
+        by_id = {}
+        for node in nodes:
+            if not node.alive:
+                continue
+            by_id[node.node_id] = node
+            for v in range(self.vnodes):
+                points.append((_stable_hash(f"{node.node_id}#{v}"), node.node_id))
+        points.sort()
+        with self._lock:
+            self._hashes = [h for h, _ in points]
+            self._ring_ids = [nid for _, nid in points]
+            self._by_id = by_id
+
+    def _maybe_self_heal(self, live: Sequence[AftNode]) -> None:
+        with self._lock:
+            known = set(self._by_id)
+        if known != {n.node_id for n in live}:
+            self.sync(live)  # a membership event was missed; rebuild
+
+    def owner_id(self, ring_key: str) -> Optional[str]:
+        """Ring owner of a key among currently-synced nodes (for tests and
+        the cache-aware anchor)."""
+        with self._lock:
+            if not self._hashes:
+                return None
+            i = bisect_right(self._hashes, _stable_hash(ring_key))
+            return self._ring_ids[i % len(self._ring_ids)]
+
+    def route(
+        self, nodes: Sequence[AftNode], hint: Optional[PlacementHint] = None
+    ) -> AftNode:
+        live = self._alive(nodes)
+        key = hint.ring_key if hint is not None else None
+        if key is None:
+            return self._fallback.route(live, hint)
+        self._maybe_self_heal(live)
+        live_ids = {n.node_id: n for n in live}
+        with self._lock:
+            ring_ids, hashes = self._ring_ids, self._hashes
+            if not ring_ids:
+                return self._fallback.route(live, hint)
+            i = bisect_right(hashes, _stable_hash(key))
+            # walk clockwise past points whose node died after the last sync
+            for off in range(len(ring_ids)):
+                node = live_ids.get(ring_ids[(i + off) % len(ring_ids)])
+                if node is not None and node.alive:
+                    return node
+        return self._fallback.route(live, hint)
+
+
+@dataclass
+class CacheAwareConfig:
+    """Scoring weights.  Scores are dimensionless; only ratios matter.
+
+    ``affinity_weight`` — per unit *fraction of hint keys present* in a
+    node's data cache (the dominant term: a full read-set hit should beat
+    anything but a badly overloaded node);
+    ``hit_rate_weight`` — per unit node-lifetime data-cache hit rate (a
+    weak prior that separates warm nodes from cold replacements);
+    ``load_weight / load_scale`` — penalty per ``load_scale`` units of
+    (open sessions + in-flight ops): the spill valve that stops a hot
+    ring owner from saturating while its neighbours idle;
+    ``anchor_bonus`` — added to the consistent-hash owner so *cold* keys
+    converge to a home node instead of scattering on load noise.
+    """
+
+    affinity_weight: float = 3.0
+    hit_rate_weight: float = 0.5
+    load_weight: float = 1.0
+    load_scale: float = 8.0
+    anchor_bonus: float = 0.75
+
+
+class CacheAwareRouter(Router):
+    """Cloudburst-style locality + load scheduling over ``AftNode.stats()``.
+
+    For every live node: ``score = affinity·W_a + hit_rate·W_h − load/S·W_l
+    (+ anchor bonus for the ring owner)``; route to the argmax.  Without a
+    hint, degrades to least-loaded.
+    """
+
+    name = "cache_aware"
+
+    def __init__(self, config: Optional[CacheAwareConfig] = None) -> None:
+        self.config = config or CacheAwareConfig()
+        self._anchor = ConsistentHashRouter()
+
+    def sync(self, nodes: Sequence[AftNode]) -> None:
+        self._anchor.sync(nodes)
+
+    def _score(self, node: AftNode, hint: Optional[PlacementHint],
+               anchor_id: Optional[str]) -> float:
+        cfg = self.config
+        snap = node.stats()
+        affinity = 0.0
+        if hint is not None and hint.keys:
+            present = sum(
+                1 for k in hint.keys if node.data_cache.contains_key(k)
+            )
+            affinity = present / len(hint.keys)
+        load = snap["open_sessions"] + snap["inflight_ops"]
+        score = (
+            cfg.affinity_weight * affinity
+            + cfg.hit_rate_weight * snap["data_cache_hit_rate"]
+            - cfg.load_weight * (load / cfg.load_scale)
+        )
+        if anchor_id is not None and node.node_id == anchor_id:
+            score += cfg.anchor_bonus
+        return score
+
+    def route(
+        self, nodes: Sequence[AftNode], hint: Optional[PlacementHint] = None
+    ) -> AftNode:
+        live = self._alive(nodes)
+        if len(live) == 1:
+            return live[0]
+        anchor_id: Optional[str] = None
+        ring_key = hint.ring_key if hint is not None else None
+        if ring_key is not None:
+            self._anchor._maybe_self_heal(live)
+            anchor_id = self._anchor.owner_id(ring_key)
+        best = live[0]
+        best_score = self._score(best, hint, anchor_id)
+        for node in live[1:]:
+            score = self._score(node, hint, anchor_id)
+            if score > best_score:
+                best, best_score = node, score
+        return best
+
+
+ROUTER_POLICIES = {
+    "round_robin": RoundRobinRouter,
+    "consistent_hash": ConsistentHashRouter,
+    "cache_aware": CacheAwareRouter,
+}
+
+
+def make_router(policy: Union[str, Router, None]) -> Router:
+    """Resolve a policy name (or pass through a Router instance)."""
+    if policy is None:
+        return RoundRobinRouter()
+    if isinstance(policy, Router):
+        return policy
+    try:
+        return ROUTER_POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown routing policy {policy!r}; options: "
+            f"{sorted(ROUTER_POLICIES)}"
+        ) from None

@@ -31,7 +31,7 @@ from .executor import (
     WorkflowResult,
     execute_step,
 )
-from .pool import PoolClosed, PoolConfig, PoolTicket, WorkflowPool
+from .pool import AdaptiveBatcher, PoolClosed, PoolConfig, PoolTicket, WorkflowPool
 from .spec import Step, WorkflowSpec, WorkflowSpecError
 from .txn import (
     MEMO_PREFIX,
@@ -55,6 +55,7 @@ __all__ = [
     "PoolConfig",
     "PoolTicket",
     "PoolClosed",
+    "AdaptiveBatcher",
     "StepContext",
     "StepFailure",
     "TxnScope",

@@ -31,7 +31,7 @@ from concurrent.futures import FIRST_COMPLETED, Future, wait
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Set, Tuple
 
-from ..core import AftCluster, TxnId
+from ..core import AftCluster, PlacementHint, TxnId
 from ..core.ids import fresh_uuid
 from ..faas.platform import LambdaPlatform
 from ..storage.base import StorageEngine
@@ -71,6 +71,10 @@ class WorkflowConfig:
     # executor cannot know that.  WorkflowPool, which owns workflow
     # lifecycle, turns it on by default.
     declare_finished: bool = False
+    # STEP scope only: place every step's transaction independently at the
+    # node the router scores best for its declared reads, instead of pinning
+    # the whole workflow to one node (see workflow/txn.py StepTxnSession)
+    place_steps: bool = False
 
 
 @dataclass
@@ -149,7 +153,7 @@ def execute_step(
     ``WorkflowPool`` folds many of these (across workflows) into a single
     batched invocation.  Handles the begin-site failure point, memo encoding,
     and the inline-vs-separate memo commit split (see ``txn.py``)."""
-    session.step_begin(step.name)
+    session.step_begin(step.name, step.reads)
     ctx = StepContext(step, session, platform, inputs, args)
     platform.maybe_fail(site=f"step:{step.name}:begin")
     result = step.fn(ctx)
@@ -213,6 +217,10 @@ class WorkflowExecutor:
                 cluster=self.cluster,
                 storage=self.storage,
                 cowritten_hint=cfg.declared_writes,
+                hint=PlacementHint(
+                    uuid=workflow_uuid, keys=spec.declared_reads()
+                ),
+                place_steps=cfg.place_steps,
             )
             memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
             if memoizing and (attempt > 1 or resume_eligible):

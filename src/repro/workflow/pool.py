@@ -11,10 +11,16 @@ is the scheduler-level answer:
   flight at once, multiplexed over one shared :class:`LambdaPlatform`;
 * **batching** — ready steps from *different* workflows are folded into a
   single platform invocation (``LambdaPlatform.invoke_batch``), so the
-  per-invoke overhead is paid once per ``batch_max_steps`` steps instead of
-  once per step.  A short linger (``batch_linger_ms``) lets partial batches
-  fill while other batches are in flight; an idle pool dispatches
-  immediately;
+  per-invoke overhead is paid once per batch instead of once per step.  The
+  batch size is adaptive by default (:class:`AdaptiveBatcher`: EWMA of
+  observed step latency vs. measured invoke overhead); an explicit
+  ``batch_max_steps`` is a static override.  A short linger
+  (``batch_linger_ms``) lets partial batches fill while other batches are
+  in flight; an idle pool dispatches immediately;
+* **placement** — every workflow carries a ``PlacementHint`` (uuid +
+  declared read set), so a multi-node cluster's routing policy
+  (``core/routing.py``) shards workflows by locality; STEP scope with
+  ``place_steps=True`` places each step independently;
 * **fairness** — dispatch is round-robin across workflows (one step per
   workflow per pass) with a per-workflow in-flight cap, so a wide DAG cannot
   starve its neighbours;
@@ -48,7 +54,7 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
-from ..core import AftCluster
+from ..core import AftCluster, PlacementHint
 from ..core.ids import fresh_uuid
 from ..faas.platform import LambdaPlatform
 from ..storage.base import StorageEngine
@@ -74,16 +80,91 @@ class PoolConfig:
     # declares workflows finished by default — committing a ticket is the
     # promise that its UUID is never re-driven
     declare_finished: bool = True
-    # scheduling
-    batch_max_steps: int = 8          # steps folded into one invocation
+    # placement (see core/routing.py): STEP scope may place each step's
+    # transaction independently at the node scored best for its declared
+    # reads; WORKFLOW scope always stays pinned per §3.1 but the pin itself
+    # is routed by the workflow's hint
+    place_steps: bool = False
+    # scheduling.  batch_max_steps=None (default) sizes batches adaptively
+    # from an EWMA of observed step latency vs. invoke overhead; an explicit
+    # integer is a static override (the historical knob).
+    batch_max_steps: Optional[int] = None
     batch_linger_ms: float = 1.0      # wait for a partial batch to fill
     max_inflight_steps: int = 128     # global step window
     max_inflight_per_workflow: int = 4
     max_admitted_workflows: int = 2048  # backpressure: submit() blocks
+    # adaptive-batching model: pick the batch size where the (amortized)
+    # per-step share of one invocation's overhead stays under this fraction
+    # of a step's own latency; clamped to [min, max]
+    adaptive_overhead_frac: float = 0.25
+    adaptive_batch_min: int = 2
+    adaptive_batch_max: int = 64
+    adaptive_ewma_alpha: float = 0.2
 
 
 class PoolClosed(RuntimeError):
     """submit() after close()."""
+
+
+class AdaptiveBatcher:
+    """Batch-size model: big enough to amortize the invoke overhead, small
+    enough not to serialize long step bodies behind one another.
+
+    One batched invocation pays the platform's warm-start overhead ``o``
+    once for ``b`` steps of mean latency ``s``; the per-step overhead share
+    is ``o / (b·s)``.  The target is the smallest ``b`` that keeps that
+    share under ``adaptive_overhead_frac`` — i.e. ``b = o / (frac·s)`` —
+    clamped to ``[adaptive_batch_min, adaptive_batch_max]``.  Both ``o``
+    (measured dispatch → first-body-start lead time, which also absorbs
+    platform queueing) and ``s`` (measured body wall time) are EWMAs, so
+    the pool tracks drifting workloads.  An explicit
+    ``PoolConfig.batch_max_steps`` bypasses the model entirely (static
+    override, the historical knob).
+    """
+
+    _INITIAL = 8  # the old static default, until measurements arrive
+
+    def __init__(self, config: PoolConfig):
+        self.config = config
+        self._step_s: Optional[float] = None
+        self._overhead_s: Optional[float] = None
+        self._target = min(
+            max(self._INITIAL, config.adaptive_batch_min),
+            config.adaptive_batch_max,
+        )
+
+    @property
+    def cap(self) -> int:
+        """Current steps-per-invocation target (static override wins).
+        The adaptive target never exceeds the in-flight window: the
+        dispatch gates hold until a whole batch's capacity is free, so a
+        cap above the window would stall dispatch whenever work is in
+        flight."""
+        if self.config.batch_max_steps is not None:
+            return self.config.batch_max_steps
+        return min(self._target, self.config.max_inflight_steps)
+
+    def observe(self, body_s: Optional[float], lead_s: Optional[float]) -> None:
+        if self.config.batch_max_steps is not None:
+            return  # static override: nothing to learn
+        a = self.config.adaptive_ewma_alpha
+
+        def ewma(old: Optional[float], new: float) -> float:
+            return new if old is None else (1.0 - a) * old + a * new
+
+        if body_s is not None:
+            self._step_s = ewma(self._step_s, max(body_s, 0.0))
+        if lead_s is not None:
+            self._overhead_s = ewma(self._overhead_s, max(lead_s, 0.0))
+        if self._step_s is None or self._overhead_s is None:
+            return
+        cfg = self.config
+        # sub-µs bodies make the ratio explode; the clamp is the answer
+        denom = max(cfg.adaptive_overhead_frac * self._step_s, 1e-9)
+        raw = self._overhead_s / denom
+        self._target = int(
+            min(max(raw, cfg.adaptive_batch_min), cfg.adaptive_batch_max)
+        )
 
 
 class PoolTicket:
@@ -171,7 +252,10 @@ class WorkflowPool:
             "batches_dispatched": 0,
             "batched_steps": 0,
             "max_admitted": 0,
+            "batch_target": 0,  # gauge: current adaptive (or static) cap
         }
+        self._batcher = AdaptiveBatcher(self.config)
+        self.stats["batch_target"] = self._batcher.cap
         self._cond = threading.Condition()
         self._events: Deque[Tuple] = deque()
         self._rr: Deque[_Run] = deque()   # fairness queue: runs w/ ready steps
@@ -287,7 +371,7 @@ class WorkflowPool:
         # sub-millisecond wakeups exactly when the pool is busiest.
         free = self.config.max_inflight_steps - self._inflight_steps
         capacity_blocked = (
-            self._inflight_steps > 0 and free < self.config.batch_max_steps
+            self._inflight_steps > 0 and free < self._batcher.cap
         )
         if self._ready_since is not None and not capacity_blocked:
             linger = self.config.batch_linger_ms / 1e3
@@ -315,6 +399,10 @@ class WorkflowPool:
                 cluster=self.cluster,
                 storage=self.storage,
                 cowritten_hint=self.config.declared_writes,
+                hint=PlacementHint(
+                    uuid=run.uuid, keys=run.spec.declared_reads()
+                ),
+                place_steps=self.config.place_steps,
             )
             memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
             if self._memoizing and (run.attempt > 1 or run.resume_eligible):
@@ -372,7 +460,13 @@ class WorkflowPool:
             self._settle(run, [n for n, d in run.indeg.items() if d == 0])
             self._after_progress(run)
         elif kind == "step":
-            _, _, _, name, ok, val = event
+            _, _, _, name, ok, val, body_s, lead_s = event
+            # failed bodies die fast (e.g. a dead node raising immediately):
+            # feeding their near-zero latency into the EWMA would inflate
+            # the batch target during exactly the bursts where over-batching
+            # hurts — only successful bodies are step-latency samples
+            self._batcher.observe(body_s if ok else None, lead_s)
+            self.stats["batch_target"] = self._batcher.cap
             run.inflight -= 1
             self._inflight_steps -= 1
             if ok and run.failure is None:
@@ -532,6 +626,7 @@ class WorkflowPool:
     # -- batch construction -------------------------------------------------
     def _build_batches(self, now: float) -> List[List]:
         cfg = self.config
+        batch_cap = self._batcher.cap
         if self._ready_total == 0:
             return []
         # When the window is saturated, dispatch in full-batch quanta:
@@ -541,11 +636,11 @@ class WorkflowPool:
         # batch's worth of capacity is free keeps batches full under load;
         # an idle pool (nothing in flight) still dispatches at once.
         free = cfg.max_inflight_steps - self._inflight_steps
-        if free < cfg.batch_max_steps and self._inflight_steps > 0:
+        if free < batch_cap and self._inflight_steps > 0:
             return []
         # linger: let a partial batch fill while other work is in flight
         if (
-            self._ready_total < cfg.batch_max_steps
+            self._ready_total < batch_cap
             and self._inflight_steps > 0
             and self._ready_since is not None
             and now - self._ready_since < cfg.batch_linger_ms / 1e3
@@ -553,6 +648,7 @@ class WorkflowPool:
             return []
         batches: List[List] = []
         batch: List = []
+        batch_meta = {"dispatched": now}  # adaptive model: overhead probe
         while self._rr and self._inflight_steps < cfg.max_inflight_steps:
             run = self._rr.popleft()
             run.in_rr = False
@@ -565,13 +661,14 @@ class WorkflowPool:
                 continue
             name = run.ready.popleft()
             self._ready_total -= 1
-            batch.append(self._make_thunk(run, run.attempt, name))
+            batch.append(self._make_thunk(run, run.attempt, name, batch_meta))
             run.inflight += 1
             self._inflight_steps += 1
             self._enqueue_rr(run)  # round-robin: back of the queue
-            if len(batch) >= cfg.batch_max_steps:
+            if len(batch) >= batch_cap:
                 batches.append(batch)
                 batch = []
+                batch_meta = {"dispatched": now}
         if batch:
             batches.append(batch)
         if self._ready_total == 0:
@@ -582,12 +679,20 @@ class WorkflowPool:
         self.stats["batched_steps"] += sum(len(b) for b in batches)
         return batches
 
-    def _make_thunk(self, run: _Run, epoch: int, name: str):
+    def _make_thunk(self, run: _Run, epoch: int, name: str, batch_meta: Dict):
         step = run.spec.steps[name]
         inputs = {d: run.results[d] for d in step.deps if d not in run.skipped}
         session = run.session
 
         def thunk() -> None:
+            # bodies in one batch run sequentially inside invoke_batch, so
+            # only the batch's FIRST body measures the dispatch → start lead
+            # (the invocation overhead + queueing the whole batch paid once)
+            t0 = time.perf_counter()
+            lead_s = None
+            if "lead_taken" not in batch_meta:
+                batch_meta["lead_taken"] = True
+                lead_s = t0 - batch_meta["dispatched"]
             try:
                 result = execute_step(
                     step, session, self.platform, inputs, run.args,
@@ -596,6 +701,10 @@ class WorkflowPool:
                 outcome: Tuple[bool, Any] = (True, result)
             except BaseException as exc:  # noqa: BLE001 - reported, not raised
                 outcome = (False, exc)
-            self._emit(("step", run, epoch, name, outcome[0], outcome[1]))
+            body_s = time.perf_counter() - t0
+            self._emit(
+                ("step", run, epoch, name, outcome[0], outcome[1],
+                 body_s, lead_s)
+            )
 
         return thunk

@@ -38,7 +38,11 @@ class Step:
     ``fn(ctx)`` receives a :class:`repro.workflow.executor.StepContext`.
     ``when(results)`` — if present — sees a dict of the step's *upstream*
     results (skipped deps absent) and gates execution.  ``branch`` is set on
-    fan-out clones so one body can serve every branch.
+    fan-out clones so one body can serve every branch.  ``reads`` is the
+    step's *declared* read set — advisory placement metadata (most-important
+    key first) that locality-aware routing (``core/routing.py``) uses to
+    schedule the step near cached data; it never constrains what the body
+    may actually read.
     """
 
     name: str
@@ -47,6 +51,7 @@ class Step:
     when: Optional[Callable[[Dict[str, Any]], bool]] = None
     allow_skipped_deps: bool = False
     branch: Optional[int] = None
+    reads: Tuple[str, ...] = ()
 
 
 class WorkflowSpec:
@@ -69,6 +74,7 @@ class WorkflowSpec:
         deps: Sequence[str] = (),
         when: Optional[Callable[[Dict[str, Any]], bool]] = None,
         allow_skipped_deps: bool = False,
+        reads: Sequence[str] = (),
     ) -> str:
         return self.add(
             Step(
@@ -77,6 +83,7 @@ class WorkflowSpec:
                 deps=tuple(deps),
                 when=when,
                 allow_skipped_deps=allow_skipped_deps,
+                reads=tuple(reads),
             )
         )
 
@@ -88,9 +95,11 @@ class WorkflowSpec:
         *,
         deps: Sequence[str] = (),
         when: Optional[Callable[[Dict[str, Any]], bool]] = None,
+        reads: Optional[Callable[[int], Sequence[str]]] = None,
     ) -> List[str]:
         """Stamp out ``n`` parallel branches ``prefix[i]`` sharing one body;
-        the body distinguishes branches via ``ctx.branch``."""
+        the body distinguishes branches via ``ctx.branch``.  ``reads(i)``
+        optionally declares branch ``i``'s read set for placement."""
         if n < 1:
             raise WorkflowSpecError(f"fan_out needs n >= 1, got {n}")
         names = []
@@ -103,6 +112,7 @@ class WorkflowSpec:
                         deps=tuple(deps),
                         when=when,
                         branch=i,
+                        reads=tuple(reads(i)) if reads is not None else (),
                     )
                 )
             )
@@ -115,6 +125,7 @@ class WorkflowSpec:
         deps: Sequence[str],
         *,
         allow_skipped_deps: bool = True,
+        reads: Sequence[str] = (),
     ) -> str:
         """Aggregation step over parallel branches; by default tolerates
         conditionally-skipped inputs (it sees only the results that exist)."""
@@ -124,6 +135,7 @@ class WorkflowSpec:
                 fn=fn,
                 deps=tuple(deps),
                 allow_skipped_deps=allow_skipped_deps,
+                reads=tuple(reads),
             )
         )
 
@@ -164,6 +176,17 @@ class WorkflowSpec:
     # ------------------------------------------------------------- queries
     def roots(self) -> List[str]:
         return [n for n, s in self.steps.items() if not s.deps]
+
+    def declared_reads(self) -> Tuple[str, ...]:
+        """Union of every step's declared read set, first-declared first
+        (deduped).  The workflow-level placement hint: under WORKFLOW scope
+        the whole DAG runs on one node, so the session is routed by what the
+        DAG as a whole intends to read."""
+        seen: Dict[str, None] = {}
+        for step in self.steps.values():
+            for key in step.reads:
+                seen.setdefault(key, None)
+        return tuple(seen)
 
     def dependents_of(self) -> Dict[str, List[str]]:
         out: Dict[str, List[str]] = {name: [] for name in self.steps}

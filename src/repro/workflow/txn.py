@@ -45,7 +45,7 @@ import time
 from enum import Enum
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
-from ..core import AftCluster, TxnId
+from ..core import AftCluster, PlacementHint, TxnId
 from ..core.ids import Clock, fresh_uuid
 from ..core.records import (
     WF_MEMO_TXN_INFIX,
@@ -214,8 +214,10 @@ class WorkflowSession:
     def put(self, step_name: str, key: str, value: bytes) -> None:
         raise NotImplementedError
 
-    def step_begin(self, step_name: str) -> None:
-        pass
+    def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
+        """Called before a step body runs.  ``reads`` is the step's declared
+        read set — per-step scopes may use it to place the step's
+        transaction near cached data (``core/routing.py``)."""
 
     def step_commit(self, step_name: str, memo_payload: Optional[bytes]) -> None:
         """Called after a step body returns; per-step scopes commit here."""
@@ -238,11 +240,22 @@ class WorkflowSession:
 
 
 class WorkflowTxnSession(WorkflowSession):
-    """One AFT transaction spanning the whole DAG (``TxnScope.WORKFLOW``)."""
+    """One AFT transaction spanning the whole DAG (``TxnScope.WORKFLOW``).
 
-    def __init__(self, cluster: AftCluster, workflow_uuid: str):
+    The whole workflow stays pinned to one node per §3.1, but *which* node
+    is a routing decision: the placement hint (workflow uuid + declared
+    read set) lets locality-aware policies pick the node whose cache
+    already holds the DAG's reads.
+    """
+
+    def __init__(
+        self,
+        cluster: AftCluster,
+        workflow_uuid: str,
+        hint: Optional[PlacementHint] = None,
+    ):
         self.client = cluster.client()
-        self.txid = self.client.start_transaction(workflow_uuid)
+        self.txid = self.client.start_transaction(workflow_uuid, hint=hint)
         self.uuid = self.txid
         self.node = self.client.node_of(self.txid)
 
@@ -272,62 +285,109 @@ class StepTxnSession(WorkflowSession):
     The memo record is written *inside* the step's transaction, so "step
     committed" and "memo exists" are the same event — a retry that finds the
     memo knows the step's writes are already durable and atomic.
+
+    Placement: by default (§3.1 extended to DAGs) every step transaction of
+    one workflow pins to a single node, so a step's commit is locally
+    visible to its dependents immediately — no multicast round in the
+    critical path.  With ``place_steps=True`` each step is instead routed
+    *independently* by its declared read set (Cloudburst-style locality,
+    ``core/routing.py``); dependent-visibility is preserved by eagerly
+    merging the workflow's earlier commit records into each step's node
+    (the §4.2 propagation done synchronously for just this workflow), so a
+    dependent scheduled on a different node still reads its upstream's
+    committed writes.  Either way, if a node dies mid-workflow the attempt
+    fails and the retry routes to live nodes; deterministic UUIDs + the
+    §3.3.1 commit-set verify keep recommits exactly-once across nodes.
     """
 
     inline_memo = True
 
-    def __init__(self, cluster: AftCluster, workflow_uuid: str):
+    def __init__(
+        self,
+        cluster: AftCluster,
+        workflow_uuid: str,
+        hint: Optional[PlacementHint] = None,
+        place_steps: bool = False,
+    ):
         self.cluster = cluster
         self.uuid = workflow_uuid
-        # §3.1 extended to DAGs: every step transaction of one workflow pins
-        # to a single node, so a step's commit is locally visible to its
-        # dependents immediately — no multicast round in the critical path.
-        # If the node dies mid-workflow the attempt fails and the retry pins
-        # to a live node; deterministic UUIDs + the §3.3.1 commit-set verify
-        # keep recommits exactly-once across nodes.
-        self.node = cluster.pick_node()
-        self._txids: Dict[str, str] = {}
+        self.place_steps = place_steps
         self._lock = threading.Lock()
+        self._txids: Dict[str, str] = {}
+        self._nodes: Dict[str, "object"] = {}  # step_name → AftNode
+        self._records: list = []  # this workflow's commit records so far
+        self.node = None if place_steps else cluster.pick_node(hint)
 
-    def step_begin(self, step_name: str) -> None:
-        txid = self.node.start_transaction(step_txn_uuid(self.uuid, step_name))
+    def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
+        if self.place_steps:
+            node = self.cluster.pick_node(
+                PlacementHint(
+                    uuid=step_txn_uuid(self.uuid, step_name),
+                    keys=tuple(reads),
+                )
+            )
+            with self._lock:
+                records = list(self._records)
+            if records:
+                # close the multicast window for THIS workflow: the chosen
+                # node may not have heard siblings'/upstreams' commits yet
+                node.merge_remote_commits(records)
+        else:
+            node = self.node
+        txid = node.start_transaction(step_txn_uuid(self.uuid, step_name))
         with self._lock:
             self._txids[step_name] = txid
+            self._nodes[step_name] = node
 
-    def _txid(self, step_name: str) -> str:
+    def _bound(self, step_name: str):
         with self._lock:
-            return self._txids[step_name]
+            return self._nodes[step_name], self._txids[step_name]
 
     def get(self, step_name: str, key: str) -> Optional[bytes]:
-        return self.node.get(self._txid(step_name), key)
+        node, txid = self._bound(step_name)
+        return node.get(txid, key)
 
     def put(self, step_name: str, key: str, value: bytes) -> None:
-        self.node.put(self._txid(step_name), key, value)
+        node, txid = self._bound(step_name)
+        node.put(txid, key, value)
 
     def step_commit(self, step_name: str, memo_payload: Optional[bytes]) -> None:
-        txid = self._txid(step_name)
+        node, txid = self._bound(step_name)
         if memo_payload is not None:
-            self.node.put(txid, memo_key(self.uuid, step_name), memo_payload)
-        self.node.commit_transaction(txid)
-        self.node.release_transaction(txid)
+            node.put(txid, memo_key(self.uuid, step_name), memo_payload)
+        tid = node.commit_transaction(txid)
+        if self.place_steps:
+            record = node.cache.get(tid)  # None for read-only steps
+            if record is not None:
+                with self._lock:
+                    self._records.append(record)
+        node.release_transaction(txid)
         with self._lock:
             self._txids.pop(step_name, None)
+            self._nodes.pop(step_name, None)
 
     def replay(self, step_name: str, writes: Dict[str, bytes]) -> None:
         pass  # memo present ⇔ the step's transaction already committed
 
     def recover(self, records) -> None:
-        if records:
+        with self._lock:
+            self._records.extend(records)
+        if not self.place_steps and records:
             self.node.merge_remote_commits(records)
 
     def abandon(self) -> None:
         with self._lock:
-            pending = list(self._txids.values())
+            pending = [
+                (self._nodes[name], txid)
+                for name, txid in self._txids.items()
+                if name in self._nodes
+            ]
             self._txids.clear()
-        for txid in pending:
+            self._nodes.clear()
+        for node, txid in pending:
             try:
-                self.node.abort_transaction(txid)
-                self.node.release_transaction(txid)
+                node.abort_transaction(txid)
+                node.release_transaction(txid)
             except Exception:
                 pass
 
@@ -374,15 +434,23 @@ def make_session(
     cluster: Optional[AftCluster] = None,
     storage: Optional[StorageEngine] = None,
     cowritten_hint: Sequence[str] = (),
+    hint: Optional[PlacementHint] = None,
+    place_steps: bool = False,
 ) -> WorkflowSession:
+    """``hint`` routes the session's node(s) (``core/routing.py``);
+    ``place_steps`` additionally lets STEP scope place every step's
+    transaction independently by its declared reads (ignored by the other
+    scopes, which are single-node by construction)."""
     if scope is TxnScope.WORKFLOW:
         if cluster is None:
             raise ValueError("TxnScope.WORKFLOW requires an AftCluster")
-        return WorkflowTxnSession(cluster, workflow_uuid)
+        return WorkflowTxnSession(cluster, workflow_uuid, hint=hint)
     if scope is TxnScope.STEP:
         if cluster is None:
             raise ValueError("TxnScope.STEP requires an AftCluster")
-        return StepTxnSession(cluster, workflow_uuid)
+        return StepTxnSession(
+            cluster, workflow_uuid, hint=hint, place_steps=place_steps
+        )
     if storage is None:
         raise ValueError("TxnScope.NONE requires a StorageEngine")
     return UnscopedSession(storage, workflow_uuid, cowritten_hint)

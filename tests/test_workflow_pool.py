@@ -1,6 +1,7 @@
 """WorkflowPool: batched scheduling of many concurrent workflows —
 multiplexing, fairness windows, backpressure, exactly-once under injected
-crashes, and finish-marker handoff to GC."""
+crashes, adaptive batch sizing, node-kill rerouting, and finish-marker
+handoff to GC."""
 
 import json
 import threading
@@ -12,6 +13,7 @@ from repro.core.records import WF_FINISH_PREFIX
 from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
 from repro.storage.memory import MemoryStorage
 from repro.workflow import (
+    AdaptiveBatcher,
     PoolClosed,
     PoolConfig,
     TxnScope,
@@ -21,10 +23,12 @@ from repro.workflow import (
 )
 
 
-def make_cluster(nodes: int = 1) -> AftCluster:
+def make_cluster(nodes: int = 1, routing=None) -> AftCluster:
     return AftCluster(
         MemoryStorage(),
-        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+        ClusterConfig(
+            num_nodes=nodes, start_background_threads=False, routing=routing
+        ),
     )
 
 
@@ -330,6 +334,141 @@ def test_pool_resumes_cross_process_redrive_from_memos():
     assert r1.results == r2.results == {"a": 7}
     assert r2.steps_memoized == 1
     assert r1.committed_tid == r2.committed_tid
+    cluster.stop()
+
+
+def test_pool_reroutes_retry_after_node_kill_with_memoized_resume():
+    """A node dies mid-workflow: the retry must route to a live node, replay
+    the memoized first step (not re-run it), and commit exactly once."""
+    cluster = make_cluster(nodes=2, routing="consistent_hash")
+    ran = {"a": 0, "b": 0}
+    lock = threading.Lock()
+    killed = threading.Event()
+
+    spec = WorkflowSpec("kill-mid")
+
+    def step_a(ctx):
+        with lock:
+            ran["a"] += 1
+        raw = ctx.get("km/cnt")
+        count = json.loads(raw)["count"] if raw else 0
+        ctx.put("km/cnt", json.dumps({"count": count + 1}).encode())
+        return count + 1
+
+    def step_b(ctx):
+        with lock:
+            ran["b"] += 1
+        if not killed.is_set():
+            killed.set()
+            # hard-kill whichever node serves this workflow's session
+            for node in cluster.all_nodes():
+                if node.active_transaction_count() > 0:
+                    node.fail()
+            cluster._sync_router()
+            raise FunctionFailure("node died under this step")
+        return ctx.inputs["a"] * 10
+
+    spec.step("a", step_a)
+    spec.step("b", step_b, deps=["a"])
+
+    with WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(scope=TxnScope.STEP, max_attempts=6),
+    ) as pool:
+        result = pool.submit(spec, uuid="kill-mid-wf").result(timeout=60)
+
+    assert result.attempts == 2
+    assert result.results == {"a": 1, "b": 10}
+    assert ran["a"] == 1  # memoized resume: step a's body never re-ran
+    assert result.steps_memoized == 1
+    # exactly-once effect despite the reroute: counter bumped once, read
+    # from durable state via the surviving node
+    node = next(n for n in cluster.live_nodes())
+    tx = node.start_transaction()
+    assert json.loads(node.get(tx, "km/cnt"))["count"] == 1
+    node.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_pool_place_steps_spreads_and_preserves_dataflow():
+    """STEP scope + place_steps: steps of one workflow land on different
+    nodes by their declared reads, yet a dependent still observes its
+    upstream's committed write (eager record merge)."""
+    cluster = make_cluster(nodes=3, routing="consistent_hash")
+    spec = WorkflowSpec("spread")
+
+    def writer(ctx):
+        ctx.put("ps/x", b"41")
+        return 41
+
+    def reader(ctx):
+        raw = ctx.get("ps/x")
+        assert raw == b"41", f"dependent lost upstream write: {raw!r}"
+        return int(raw) + 1
+
+    spec.step("w", writer, reads=("ps/seed",))
+    spec.step("r", reader, deps=["w"], reads=("ps/x",))
+
+    with WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(scope=TxnScope.STEP, place_steps=True),
+    ) as pool:
+        results = pool.run_all(
+            [spec] + [chain_spec(i) for i in range(20)], timeout=60
+        )
+    assert results[0].results == {"w": 41, "r": 42}
+    # placement actually used more than one node for step transactions
+    assert sum(1 for n in cluster.live_nodes() if n.stats["commits"] > 0) >= 2
+    cluster.stop()
+
+
+def test_adaptive_batcher_sizes_from_overhead_vs_step_latency():
+    cfg = PoolConfig()  # batch_max_steps=None ⇒ adaptive
+    b = AdaptiveBatcher(cfg)
+    assert b.cap == 8  # historical default until measurements arrive
+    # expensive invocations + cheap steps ⇒ batch big (clamped at max)
+    for _ in range(20):
+        b.observe(body_s=0.001, lead_s=0.1)
+    assert b.cap == cfg.adaptive_batch_max
+    # cheap invocations + slow steps ⇒ batch small (clamped at min)
+    for _ in range(40):
+        b.observe(body_s=0.1, lead_s=0.0001)
+    assert b.cap == cfg.adaptive_batch_min
+    # mid ground: 10ms overhead, 5ms steps, 25% tolerated share ⇒ b = 8
+    b2 = AdaptiveBatcher(cfg)
+    for _ in range(40):
+        b2.observe(body_s=0.005, lead_s=0.010)
+    assert b2.cap == 8
+
+
+def test_adaptive_batcher_never_exceeds_inflight_window():
+    """A target above max_inflight_steps would deadlock the full-batch
+    dispatch gates; the cap clamps to the window."""
+    cfg = PoolConfig(max_inflight_steps=8)
+    b = AdaptiveBatcher(cfg)
+    for _ in range(20):
+        b.observe(body_s=0.001, lead_s=0.5)  # raw target ≫ window
+    assert b.cap == 8
+
+
+def test_adaptive_batcher_static_override_never_moves():
+    cfg = PoolConfig(batch_max_steps=16)
+    b = AdaptiveBatcher(cfg)
+    for _ in range(20):
+        b.observe(body_s=0.1, lead_s=0.0001)  # would shrink if adaptive
+    assert b.cap == 16
+
+
+def test_pool_adaptive_default_reports_batch_target_gauge():
+    cluster = make_cluster()
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        pool.run_all([chain_spec(i) for i in range(50)], timeout=60)
+        cfg = pool.config
+        assert (
+            cfg.adaptive_batch_min
+            <= pool.stats["batch_target"]
+            <= cfg.adaptive_batch_max
+        )
     cluster.stop()
 
 
