@@ -1,0 +1,278 @@
+"""fig_chain (figc): durable cross-workflow chaining under kill-mid-handoff.
+
+The claim (workflow/chain.py): an N-deep chain of workflows — each level's
+commit durably triggering the next through the AFT-backed ``q/`` queue —
+completes with **zero dropped and zero duplicated triggers** even when the
+handoff (the window between claiming a trigger and starting its child) is
+killed repeatedly.  The §3.3.1 machinery does all the work: the enqueue
+rides the parent's commit record, the claim is a deterministic-UUID
+transaction, and the child's UUID *is* the queue entry, so every replay
+recommits instead of re-firing.
+
+The baseline is the **unscoped handoff** every ad-hoc pipeline starts with:
+effects applied in place, the trigger enqueued by a separate non-idempotent
+put, an at-least-once consumer with bounded redelivery.  Killed deliveries
+re-run entire children (duplicate effects), and entries that exhaust their
+redelivery budget truncate the chain (dropped triggers) — both counted by
+the same effect-application audit.
+
+Metric: *effect applications per chain level*.  Each level writes one
+logical effect key; AFT-scoped counts committed versions of it (exactly one
+⇔ exactly-once), the baseline counts the distinct physical keys its
+re-executions scattered.  dropped = levels with 0 applications, duplicates
+= levels with > 1.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.gc import LocalGcAgent
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    ChainConsumerConfig,
+    PoolConfig,
+    Trigger,
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+from .common import save
+
+DEPTH = 8            # acceptance: an 8-deep chain survives kill-mid-handoff
+HANDOFF_KILL_RATE = 0.3
+BASELINE_MAX_DELIVERIES = 2  # bounded redelivery (SQS-style) for the baseline
+
+
+def _link_spec(chain: int, level: int, unscoped: bool = False) -> WorkflowSpec:
+    """One chain link: write this level's effect, trigger the next level."""
+    spec = WorkflowSpec("link")
+
+    def body(ctx, chain=chain, level=level):
+        if unscoped:
+            # distinct physical key per execution: the audit counts how many
+            # times this level's effect was (re)applied
+            from repro.core.ids import fresh_uuid
+
+            ctx.put(f"chain/eff/{chain}/{level}/{fresh_uuid()}", b"x")
+        else:
+            ctx.put(f"chain/eff/{chain}/{level}", b"x")
+        # the effects-applied-but-trigger-not-yet-staged hazard: unscoped,
+        # this either duplicates the level (redelivery) or truncates the
+        # chain (budget exhausted); AFT-scoped it is just another retry
+        ctx.maybe_fail(site="chain:stage")
+        return {"chain": chain, "level": level + 1}
+
+    spec.step("apply", body)
+    if level + 1 < DEPTH:
+        spec.trigger(Trigger("link", args_from="apply"))
+    return spec
+
+
+def _effect_counts(storage, chains: int, aft: bool) -> Dict:
+    dropped = duplicates = 0
+    per_level = []
+    for c in range(chains):
+        counts = []
+        for level in range(DEPTH):
+            if aft:
+                n = len(storage.list_keys(f"d/chain/eff/{c}/{level}/"))
+            else:
+                n = len(storage.list_keys(f"chain/eff/{c}/{level}/"))
+            counts.append(n)
+            if n == 0:
+                dropped += 1
+            elif n > 1:
+                duplicates += n - 1
+        per_level.append(counts)
+    return {
+        "dropped_triggers": dropped,
+        "duplicate_effects": duplicates,
+        "effect_counts": per_level,
+    }
+
+
+# ---------------------------------------------------------------------------
+# AFT-scoped: the durable queue through the commit protocol
+# ---------------------------------------------------------------------------
+
+def run_aft(chains: int, seed: int) -> Dict:
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=1, start_background_threads=False),
+    )
+    platform = LambdaPlatform(FaasConfig(
+        time_scale=0.0,
+        failure_rate=HANDOFF_KILL_RATE,
+        failure_sites=("chain:handoff", "chain:claim", "chain:stage"),
+        seed=seed,
+    ))
+
+    def link_factory(args):
+        args = args or {}
+        return _link_spec(args.get("chain", 0), args.get("level", 0))
+
+    t0 = time.perf_counter()
+    # max_attempts high enough that a child cannot exhaust its retries at
+    # the 30% in-body kill rate (0.3^25 ≈ 1e-13) — the figure measures the
+    # HANDOFF protocol, not retry-budget exhaustion
+    cfg = PoolConfig(max_attempts=25)
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"link": link_factory},
+            ChainConsumerConfig(reclaim_after_s=0.0, poll_interval_s=0.002),
+            start=False,
+        )
+        for c in range(chains):
+            pool.submit(_link_spec(c, 0), uuid=f"figc-{c}")
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            consumer.step()
+            done = sum(
+                1 for c in range(chains)
+                if cluster.storage.list_keys(f"d/chain/eff/{c}/{DEPTH-1}/")
+            )
+            if done == chains and consumer.pending() == 0:
+                break
+            time.sleep(0.001)
+        stats = dict(consumer.stats)
+    wall = time.perf_counter() - t0
+
+    audit = _effect_counts(cluster.storage, chains, aft=True)
+    # GC rider: consumed entries + finished children are reclaimed together
+    queue_keys_before = len(cluster.storage.list_keys("d/q/"))
+    agent = LocalGcAgent(cluster.live_nodes()[0], workflow_gc_batch=100_000)
+    agent.step()
+    cluster.fault_manager.config.workflow_marker_ttl_s = 0.0
+    cluster.fault_manager.sweep_finished_markers()
+    cluster.fault_manager.deleter.drain()
+    queue_keys_after = len(cluster.storage.list_keys("d/q/"))
+    cluster.stop()
+    platform.shutdown()
+    return {
+        "mode": "aft_queue",
+        "chains": chains,
+        "depth": DEPTH,
+        "wall_s": round(wall, 3),
+        "handoff_crashes": stats["handoff_crashes"],
+        "claims_taken_over": stats["claims_taken_over"],
+        "children_started": stats["children_started"],
+        "already_finished_skips": stats["already_finished_skips"],
+        "queue_keys_before_gc": queue_keys_before,
+        "queue_keys_after_gc": queue_keys_after,
+        **audit,
+    }
+
+
+# ---------------------------------------------------------------------------
+# baseline: unscoped effects + non-idempotent handoff, bounded redelivery
+# ---------------------------------------------------------------------------
+
+def run_baseline(chains: int, seed: int) -> Dict:
+    storage = MemoryStorage()
+    platform = LambdaPlatform(FaasConfig(
+        time_scale=0.0,
+        failure_rate=HANDOFF_KILL_RATE,
+        failure_sites=("chain:handoff", "chain:stage"),
+        seed=seed,
+    ))
+    ex = WorkflowExecutor(
+        platform, storage=storage,
+        config=WorkflowConfig(scope=TxnScope.NONE, memoize=False,
+                              max_attempts=1),
+    )
+    t0 = time.perf_counter()
+    stats = {"handoff_crashes": 0, "lost_entries": 0}
+
+    def drive(args) -> None:
+        """One delivery: run the child (effects land in place, the next
+        trigger staged non-atomically), then the completion ack the
+        injected kill also targets."""
+        args = args or {}
+        ex.run(_link_spec(args.get("chain", 0), args.get("level", 0),
+                          unscoped=True))
+        platform.maybe_fail(site="chain:handoff")  # crash before ack'ing
+
+    def deliver(args) -> None:
+        """At-least-once with bounded redelivery: a crashed delivery
+        re-runs the WHOLE child (duplicate effects); an exhausted budget
+        abandons the entry (its staged-but-never-driven successors are the
+        dropped triggers)."""
+        for _delivery in range(BASELINE_MAX_DELIVERIES):
+            try:
+                drive(args)
+                return
+            except Exception:
+                stats["handoff_crashes"] += 1
+        stats["lost_entries"] += 1
+
+    for c in range(chains):
+        deliver({"chain": c, "level": 0})  # the seed requests
+    done = set()
+    progress = True
+    while progress:
+        progress = False
+        for raw_key in storage.list_keys("q/"):
+            if raw_key in done:
+                continue
+            done.add(raw_key)
+            progress = True
+            payload = json.loads(storage.get(raw_key))
+            deliver(payload.get("args"))
+    wall = time.perf_counter() - t0
+    platform.shutdown()
+    return {
+        "mode": "unscoped_handoff",
+        "chains": chains,
+        "depth": DEPTH,
+        "wall_s": round(wall, 3),
+        "handoff_crashes": stats["handoff_crashes"],
+        "entries_lost_to_redelivery_budget": stats["lost_entries"],
+        **_effect_counts(storage, chains, aft=False),
+    }
+
+
+def run(quick: bool = True) -> Dict:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    chains = 2 if smoke else (6 if quick else 20)
+    aft = run_aft(chains, seed=11)
+    baseline = run_baseline(chains, seed=11)
+    out = {
+        "depth": DEPTH,
+        "chains": chains,
+        "handoff_kill_rate": HANDOFF_KILL_RATE,
+        "aft": aft,
+        "baseline": baseline,
+        "headline": {
+            "aft_dropped": aft["dropped_triggers"],
+            "aft_duplicates": aft["duplicate_effects"],
+            "aft_exactly_once": (
+                aft["dropped_triggers"] == 0
+                and aft["duplicate_effects"] == 0
+            ),
+            "aft_handoff_crashes_survived": aft["handoff_crashes"],
+            "baseline_dropped": baseline["dropped_triggers"],
+            "baseline_duplicates": baseline["duplicate_effects"],
+            "baseline_anomalous": (
+                baseline["dropped_triggers"] > 0
+                or baseline["duplicate_effects"] > 0
+            ),
+            "queue_reclaimed_by_gc": (
+                aft["queue_keys_after_gc"] < aft["queue_keys_before_gc"]
+            ),
+        },
+    }
+    save("fig_chain", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -107,11 +107,32 @@ def routing_table() -> str:
     return "\n".join(rows)
 
 
+def chain_table() -> str:
+    """Kill-mid-handoff chaining audit (figc): AFT queue vs unscoped."""
+    res = json.loads((RESULTS / "fig_chain.json").read_text())
+    rows = ["| mode | chains×depth | handoff crashes | dropped triggers | "
+            "duplicate effects | exactly-once |",
+            "|---|---|---|---|---|---|"]
+    for r in (res["aft"], res["baseline"]):
+        ok = r["dropped_triggers"] == 0 and r["duplicate_effects"] == 0
+        rows.append(
+            f"| {r['mode']} | {r['chains']}×{r['depth']} | "
+            f"{r['handoff_crashes']} | {r['dropped_triggers']} | "
+            f"{r['duplicate_effects']} | {'yes' if ok else 'NO'} |")
+    aft = res["aft"]
+    rows.append("")
+    rows.append(
+        f"queue GC: {aft['queue_keys_before_gc']} q/ storage keys before "
+        f"sweep → {aft['queue_keys_after_gc']} after (consumed entries ride "
+        f"the w/ marker sweep)")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "variants",
-                             "routing"])
+                             "routing", "chain"])
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -131,6 +152,14 @@ def main() -> None:
         except FileNotFoundError:
             table = "(run `python -m benchmarks.run --only figr` first)"
         print("### Routing policies (figr: 4 nodes, Zipf entities)\n")
+        print(table)
+        print()
+    if args.section in ("all", "chain"):
+        try:
+            table = chain_table()
+        except FileNotFoundError:
+            table = "(run `python -m benchmarks.run --only figc` first)"
+        print("### Cross-workflow chaining (figc: kill-mid-handoff)\n")
         print(table)
 
 

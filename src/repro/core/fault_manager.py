@@ -58,9 +58,20 @@ class FaultManagerConfig:
     # dropped from the aggregate view (eventual-consistency listing slack)
     prune_grace_s: float = 5.0
     # how long a w/<uuid> finish marker outlives the workflow before the
-    # fault manager retires it — every node's GC agent must get a chance to
-    # purge its own metadata cache within this window (core/gc.py)
+    # fault manager MAY retire it — every node's GC agent must get a chance
+    # to purge its own metadata cache (core/gc.py).  Age alone is not
+    # sufficient: retirement additionally requires every live node to have
+    # ACKED the marker (AftNode.ack_workflow_marker), because deleting a
+    # marker some node never swept orphans that node's .wf/ memo records
+    # forever (the sweep is licensed exclusively by the marker).
     workflow_marker_ttl_s: float = 30.0
+    # liveness backstop: a node whose GC agent never runs must not pin
+    # markers indefinitely — ADDITIONAL grace beyond workflow_marker_ttl_s
+    # after which a marker retires regardless of acks, accepting the
+    # bounded staleness the old TTL-only policy had.  Measured from the
+    # soft TTL so that raising workflow_marker_ttl_s can never overtake the
+    # backstop and silently disable ack gating.
+    workflow_marker_max_ttl_s: float = 600.0
 
 
 class DeletionExecutor:
@@ -235,19 +246,43 @@ class FaultManager:
 
     # ---------------------------------------------- finished-marker retiring
     def sweep_finished_markers(self) -> int:
-        """Delete ``w/<uuid>`` workflow finish markers older than the TTL.
+        """Retire ``w/<uuid>`` workflow finish markers the cluster is done
+        with.
 
         The marker is the GC license every node's local agent consumes
-        (storage sweep + own-cache purge, ``core/gc.py``); retiring it is
-        deliberately centralized and delayed so slower agents still see it.
-        A node whose agent never ran within the TTL keeps stale pure-memo
-        cache entries until it restarts (bootstrap reloads only what storage
-        still has) — the TTL trades that bounded staleness for not needing
-        per-node acknowledgements."""
-        cutoff_ns = time.time_ns() - int(self.config.workflow_marker_ttl_s * 1e9)
+        (storage sweep + own-cache purge, ``core/gc.py``), so retirement is
+        gated on BOTH: (1) age past ``workflow_marker_ttl_s``, and (2) every
+        live node having acked the marker (``AftNode.ack_workflow_marker``,
+        set by its ``LocalGcAgent``).  TTL alone — the historical policy —
+        raced slow agents: deleting a marker no agent had consumed orphaned
+        that workflow's ``.wf/`` memo records *forever*, because the marker
+        is the only thing that licenses their reclamation.  Past
+        ``workflow_marker_max_ttl_s`` the marker retires regardless (a node
+        whose agent never runs must not pin storage), restoring the old
+        bounded-staleness behavior as a liveness backstop.
+
+        Unparsable markers are **quarantined**, not deleted: the payload is
+        re-stamped with a fresh timestamp (plus a ``quarantined`` breadcrumb)
+        so the marker keeps its GC-license role — agents key off the marker
+        *key*, not its payload — and ages toward ack-gated retirement like
+        any other.  The old treat-as-ancient rule deleted them immediately,
+        which was the same orphaning race with certainty instead of chance."""
+        now_ns = time.time_ns()
+        cutoff_ns = now_ns - int(self.config.workflow_marker_ttl_s * 1e9)
+        # the backstop is ADDITIONAL grace past the soft TTL: an absolute
+        # age would let an operator who raises workflow_marker_ttl_s past
+        # it silently disable ack gating (every marker old enough for the
+        # ack check would already satisfy the hard cutoff)
+        hard_cutoff_ns = now_ns - int(
+            (
+                self.config.workflow_marker_ttl_s
+                + self.config.workflow_marker_max_ttl_s
+            ) * 1e9
+        )
         markers = self.storage.list_keys(WF_FINISH_PREFIX)
         if not markers:
             return 0
+        live = [n for n in self.membership() if n.alive]
         doomed: List[str] = []
         raws = self.storage.get_batch(markers)
         for marker in markers:
@@ -257,8 +292,26 @@ class FaultManager:
             try:
                 finished_at = int(json.loads(raw)["finished_at_ns"])
             except Exception:
-                finished_at = 0  # unparsable marker: treat as ancient
-            if finished_at <= cutoff_ns:
+                self.storage.put(
+                    marker,
+                    json.dumps(
+                        {"finished_at_ns": now_ns, "quarantined": True}
+                    ).encode(),
+                )
+                self.stats["finish_markers_quarantined"] = (
+                    self.stats.get("finish_markers_quarantined", 0) + 1
+                )
+                continue
+            if finished_at > cutoff_ns:
+                continue  # too young even for ack-gated retirement
+            wf_uuid = marker[len(WF_FINISH_PREFIX):]
+            # an empty live set (all nodes dead mid-replacement) must NOT
+            # satisfy the gate vacuously: the promoted replacement's agent
+            # still needs the marker, so only the hard cutoff applies
+            all_acked = bool(live) and all(
+                node.workflow_marker_acked(wf_uuid) for node in live
+            )
+            if all_acked or finished_at <= hard_cutoff_ns:
                 doomed.append(marker)
         if doomed:
             self.deleter.submit(doomed)

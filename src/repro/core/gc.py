@@ -31,17 +31,27 @@ real keys still need their cowritten metadata — and lose only the memo bytes
 and the index entry.  Unfinished workflows (no marker) are never touched, so
 an in-flight retry can always find its memos.
 
+A workflow that was chain-triggered (``repro/workflow/chain.py``) carries
+its trigger-queue provenance in the marker payload; the sweep then also
+reclaims the consumed ``q/`` entry, its claim versions, and the claim/
+enqueue bookkeeping transactions — the queue footprint plateaus with the
+memo footprint.
+
 The marker itself is NOT deleted here: every node's agent must get a chance
 to purge its own metadata cache (memo commits were multicast to all of
 them), and the storage keys may already be gone by the time a slower peer
 looks — which is why the cache purge (``AftNode.purge_workflow_metadata``)
-works from the node's local uuid → tid map, not from storage.  The fault
-manager retires markers after ``workflow_marker_ttl_s`` (§5.2's global role
-extended to workflow lifecycle).  See ``docs/WORKFLOWS.md``.
+works from the node's local uuid → tid map, not from storage.  After a full
+pass this agent ACKS each consumed marker on its node; the fault manager
+retires a marker only once it is older than ``workflow_marker_ttl_s`` AND
+every live node has acked it (with ``workflow_marker_max_ttl_s`` as the
+liveness backstop) — §5.2's global role extended to workflow lifecycle.
+See ``docs/WORKFLOWS.md``.
 """
 
 from __future__ import annotations
 
+import json
 import threading
 from typing import List, Optional, Set
 
@@ -49,11 +59,18 @@ from .ids import TxnId
 from .node import AftNode
 from .records import (
     DATA_PREFIX,
+    TRIGGER_PREFIX,
     TransactionRecord,
+    WF_CHAIN_INFIX,
     WF_FINISH_PREFIX,
     WF_MEMO_TXN_INFIX,
     WF_STEP_TXN_INFIX,
     WORKFLOW_MEMO_PREFIX,
+    claim_txn_uuid,
+    commit_key,
+    enqueue_txn_uuid,
+    lookup_committed_record,
+    trigger_key,
     uuid_key,
 )
 
@@ -68,6 +85,10 @@ class LocalGcAgent:
         # markers this agent has already processed; markers persist until the
         # fault manager's TTL sweep, and re-sweeping one is wasted listings
         self._swept_markers: Set[str] = set()
+        # per-marker chain-provenance resolution cache (incl. negative
+        # results) so a provenance-less (quarantined) chain marker does not
+        # rescan the whole q/ version space on every pass of its lifetime
+        self._chain_probe: dict = {}
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -90,22 +111,113 @@ class LocalGcAgent:
         storage = self.node.storage
         limit = max_workflows or self.workflow_gc_batch
         markers = storage.list_keys(WF_FINISH_PREFIX)
-        self._swept_markers &= set(markers)  # TTL-retired markers drop out
+        self._swept_markers &= set(markers)  # retired markers drop out
+        live_uuids = {m[len(WF_FINISH_PREFIX):] for m in markers}
+        self.node.retain_marker_acks(live_uuids)
         if not markers:
             return 0
         # cache purge runs against EVERY live marker each pass (one local
         # scan), not just unswept ones: a memo commit can arrive via
         # multicast after this node's storage sweep already happened
-        self.node.purge_workflow_metadata(
-            {m[len(WF_FINISH_PREFIX):] for m in markers}
-        )
+        self.node.purge_workflow_metadata(live_uuids)
         todo = [m for m in markers if m not in self._swept_markers][:limit]
         for marker in todo:
             wf_uuid = marker[len(WF_FINISH_PREFIX):]
             self.memo_keys_deleted += self._reclaim_workflow(wf_uuid)
             self._swept_markers.add(marker)
+        # Chain reclamation runs for EVERY live chain marker each pass, not
+        # just unswept ones: a consumer's claim can commit concurrently with
+        # the first sweep (its list snapshot predating the claim), and a
+        # one-shot sweep would leak that claim's versions + bookkeeping
+        # forever.  Re-sweeping is idempotent and cheap once empty.
+        self._chain_probe = {
+            m: v for m, v in self._chain_probe.items() if m in live_uuids
+        }
+        for marker in markers:
+            if marker not in self._swept_markers:
+                continue  # its turn comes in a later batch
+            wf_uuid = marker[len(WF_FINISH_PREFIX):]
+            if wf_uuid in self._chain_probe:
+                chain = self._chain_probe[wf_uuid]
+            else:
+                # the {queue, entry} provenance normally rides the marker
+                # payload; a quarantined (bit-rotted) marker lost it, so
+                # fall back to locating the entry by the child uuid it IS.
+                # Either way the resolution (incl. "not a chain child") is
+                # cached for the marker's remaining lifetime.
+                chain = self._marker_chain_info(storage.get(marker))
+                if chain is None and WF_CHAIN_INFIX in wf_uuid:
+                    chain = self._find_entry_for_child(wf_uuid)
+                self._chain_probe[wf_uuid] = chain
+            if chain is not None:
+                self.memo_keys_deleted += self._reclaim_chain_entry(
+                    chain["queue"], chain["entry"]
+                )
+        # ack AFTER the storage sweep + cache purge: the fault manager
+        # retires a marker only once every live node has acked it, closing
+        # the retire-before-sweep race that orphaned memo records
+        for marker in markers:
+            if marker in self._swept_markers:
+                self.node.ack_workflow_marker(marker[len(WF_FINISH_PREFIX):])
         self.workflows_reclaimed += len(todo)
         return len(todo)
+
+    def _find_entry_for_child(self, wf_uuid: str) -> Optional[dict]:
+        """Locate a finished chain child's queue entry without marker
+        provenance: the entry id IS the child uuid, so one listing of the
+        ``q/`` version space recovers {queue, entry}.  Queue and entry ids
+        are validated slash-free, so the match is unambiguous."""
+        prefix = f"{DATA_PREFIX}{TRIGGER_PREFIX}"
+        needle = f"/{wf_uuid}/"
+        for skey in self.node.storage.list_keys(prefix):
+            queue, sep, _ = skey[len(prefix):].partition(needle)
+            if sep and "/" not in queue:
+                return {"queue": queue, "entry": wf_uuid}
+        return None
+
+    @staticmethod
+    def _marker_chain_info(raw: Optional[bytes]) -> Optional[dict]:
+        if raw is None:
+            return None
+        try:
+            chain = json.loads(raw).get("chain")
+        except Exception:
+            return None  # quarantined/unparsable marker: memo sweep only
+        if (
+            isinstance(chain, dict)
+            and isinstance(chain.get("queue"), str)
+            and isinstance(chain.get("entry"), str)
+        ):
+            return chain
+        return None
+
+    def _reclaim_chain_entry(self, queue: str, entry_id: str) -> int:
+        """Reclaim a consumed trigger-queue entry (chaining, workflow/chain.py).
+
+        Deletes every version under the entry's logical prefix — the entry
+        itself, its ``/claim``, stray spills — plus the claim/enqueue
+        bookkeeping transactions' commit records and ``u/`` entries (their
+        write sets live entirely under ``q/``, so like pure-memo commits
+        they exist only to make the handoff durable).  A WORKFLOW-scope
+        parent's commit record is untouched: it carries the DAG's real
+        write set; only the entry's version bytes go (the STEP-scope memo
+        rule applied to queue entries)."""
+        storage = self.node.storage
+        doomed = set(
+            storage.list_keys(f"{DATA_PREFIX}{trigger_key(queue, entry_id)}/")
+        )
+        for uuid in (claim_txn_uuid(entry_id), enqueue_txn_uuid(entry_id)):
+            record = lookup_committed_record(storage, uuid)
+            if record is None:
+                continue
+            if record.write_set and all(
+                k.startswith(TRIGGER_PREFIX) for k in record.write_set
+            ):
+                doomed.add(commit_key(record.tid))
+                doomed.add(uuid_key(uuid))
+        if doomed:
+            storage.delete_batch(sorted(doomed))
+        return len(doomed)
 
     def _reclaim_workflow(self, wf_uuid: str) -> int:
         storage = self.node.storage

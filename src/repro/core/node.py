@@ -39,7 +39,10 @@ from .errors import (
 )
 from .ids import Clock, TxnHandle, TxnId, fresh_uuid
 from .records import (
+    CHAIN_CLAIM_SUFFIX,
+    CHAIN_ENQ_SUFFIX,
     COMMIT_PREFIX,
+    TRIGGER_PREFIX,
     TransactionRecord,
     WF_MEMO_TXN_INFIX,
     WF_STEP_TXN_INFIX,
@@ -133,6 +136,10 @@ class AftNode:
         self._txns: Dict[str, TransactionContext] = {}
         self._committed_uuids: Dict[str, TxnId] = {}
         self._locally_deleted: Set[TxnId] = set()
+        # w/<uuid> finish markers this node's GC agent has fully consumed
+        # (storage sweep + own-cache purge); the fault manager gates marker
+        # retirement on every live node having acked (core/fault_manager.py)
+        self._acked_markers: Set[str] = set()
         self._lock = threading.RLock()
         self._alive = True
         self._inflight_ops = 0  # get/put/commit currently executing
@@ -307,6 +314,45 @@ class AftNode:
             return value, chosen
         finally:
             self._op_end()
+
+    def claim_queue_entry(
+        self, txid: str, entry_key: str, claim_key: str, claim_payload: bytes
+    ) -> Tuple[Optional[bytes], Optional[bytes], bool]:
+        """Trigger-queue claim: SELECT the entry + any prior claim and INSERT
+        this session's claim, as Algorithm-1 reads and a buffered write on
+        ONE session (chaining, ``repro/workflow/chain.py``).
+
+        The atomicity story is the per-session lock: claim transactions use
+        the *deterministic* UUID ``<entry>.claim``, so two consumers racing
+        for the same entry land in the SAME transaction context here
+        (``start_transaction`` reuses a RUNNING uuid) and their select+insert
+        steps serialize on ``ctx.lock`` inside ``get``/``put``.  Read-your-
+        writes then surfaces a sharer's buffered claim as ``prior``, and the
+        eventual commit is idempotent (§3.3.1) — across nodes, the durable
+        ``u/<entry>.claim`` probe resolves the race instead.
+
+        Returns ``(entry_bytes, prior_claim_bytes, prior_is_buffered)``; the
+        claim is buffered only when the entry exists and no prior claim was
+        visible.  ``prior_is_buffered`` distinguishes a co-located sharer's
+        not-yet-committed claim (surfaced by read-your-writes; the caller
+        must leave the shared context alone — aborting it would kill the
+        sharer's in-flight commit) from a durably committed one (safe to
+        abort this context: a racing sharer's commit still resolves through
+        the §3.3.1 already-committed probe).  Claims are an ownership
+        *hint*: correctness of chaining never depends on them (the child
+        UUID is deterministic), so a lost race costs a redundant —
+        idempotent — drive, never a duplicate effect.
+        """
+        entry = self.get(txid, entry_key)
+        if entry is None:
+            return None, None, False
+        prior, prior_tid = self.get_versioned(txid, claim_key)
+        if prior is None:
+            self.put(txid, claim_key, claim_payload)
+            return entry, None, False
+        # a buffered (tid-less) prior means a sharer of this very context
+        # wrote it between our two reads — it is theirs to commit
+        return entry, prior, prior_tid is None
 
     def abort_transaction(self, txid: str) -> None:
         self._check_alive()
@@ -516,19 +562,25 @@ class AftNode:
         workflow AND its whole write set lives under that workflow's
         ``.wf/<uuid>/`` namespace; user-supplied workflow UUIDs that merely
         extend another's text (e.g. ``job.1`` vs ``job.1.5``) never
-        qualify.  Returns the number of transactions forgotten."""
+        qualify.  Chain bookkeeping transactions — the ``<entry>.claim`` /
+        ``<entry>.enq`` writers of a finished triggered child, whose write
+        sets live entirely under ``q/`` — are purged by the same rule.
+        Returns the number of transactions forgotten."""
         if not finished_uuids:
             return 0
         with self._lock:
             candidates = list(self._committed_uuids.items())
         purged = 0
         for uuid, tid in candidates:
-            bases = []
+            namespaces = []
             for infix in (WF_MEMO_TXN_INFIX, WF_STEP_TXN_INFIX):
                 head, sep, _ = uuid.rpartition(infix)
                 if sep and head in finished_uuids:
-                    bases.append(head)
-            if not bases:
+                    namespaces.append(f"{WORKFLOW_MEMO_PREFIX}{head}/")
+            for suffix in (CHAIN_CLAIM_SUFFIX, CHAIN_ENQ_SUFFIX):
+                if uuid.endswith(suffix) and uuid[: -len(suffix)] in finished_uuids:
+                    namespaces.append(TRIGGER_PREFIX)
+            if not namespaces:
                 continue
             record = self.cache.get(tid)
             if record is None:
@@ -536,8 +588,7 @@ class AftNode:
                     if self._committed_uuids.get(uuid) == tid:
                         del self._committed_uuids[uuid]
                 continue
-            for base in bases:
-                namespace = f"{WORKFLOW_MEMO_PREFIX}{base}/"
+            for namespace in namespaces:
                 if record.write_set and all(
                     k.startswith(namespace) for k in record.write_set
                 ):
@@ -545,6 +596,25 @@ class AftNode:
                     purged += 1
                     break
         return purged
+
+    # ------------------------------------------------- finish-marker acks
+    def ack_workflow_marker(self, wf_uuid: str) -> None:
+        """This node's GC agent fully consumed the ``w/<wf_uuid>`` marker
+        (storage sweep + own-cache purge).  The fault manager retires a
+        marker only once every live node has acked it — deleting earlier
+        would orphan the ``.wf/`` memo records of any node that had not yet
+        swept (``FaultManager.sweep_finished_markers``)."""
+        with self._lock:
+            self._acked_markers.add(wf_uuid)
+
+    def workflow_marker_acked(self, wf_uuid: str) -> bool:
+        with self._lock:
+            return wf_uuid in self._acked_markers
+
+    def retain_marker_acks(self, live_uuids: Set[str]) -> None:
+        """Drop acks for markers that no longer exist (retired)."""
+        with self._lock:
+            self._acked_markers &= live_uuids
 
     def confirm_locally_deleted(self, tids: Iterable[TxnId]) -> List[TxnId]:
         """Global GC phase 1 (§5.2): which of these have we locally deleted?

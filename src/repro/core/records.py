@@ -14,6 +14,10 @@ storage key             contents
 ``u/<uuid>``            uuid → committed txnid index (idempotent retry lookup)
 ``w/<uuid>``            workflow finish marker: the workflow layer declares a
                         DAG done, licensing GC of its ``.wf/`` memo records
+``q/<queue>/<seq>``     durable cross-workflow trigger queue (chaining): a
+                        committed workflow's ``on_commit`` edges enqueue
+                        trigger entries *inside* its own commit record, so a
+                        trigger exists iff its parent committed
 ======================  =====================================================
 
 The workflow layer reserves one *logical* key prefix, ``.wf/`` (so its memo
@@ -31,6 +35,21 @@ bootstrap (§3.1) scan.
 A version's *cowritten set* is simply its transaction's write set (§3.2):
 ``k_i.cowritten == T_i.writeset``, so commit records are the only metadata
 needed by Algorithm 1.
+
+Trigger-queue layout (chaining, ``repro/workflow/chain.py``)
+------------------------------------------------------------
+A trigger entry is an ordinary *logical* key ``q/<queue>/<seq>`` with
+``<seq> = <parent_uuid>.chain.<edge>`` — deterministic, so a retried parent
+commit (§3.3.1) enqueues it exactly once.  Entries carry NO delivery-order
+guarantee: ``<seq>`` sorts by parent-uuid text, not commit time, and
+consumers may interleave queues arbitrarily.  A consumer's *claim* is the
+logical key ``q/<queue>/<seq>/claim`` written by a transaction whose UUID is
+``<seq>.claim`` — also deterministic, so racing claimants collapse into one
+idempotent commit.  The triggered child workflow runs under UUID ``<seq>``
+itself: no matter how many times a crashed handoff is replayed, every drive
+recommits the same transactions and the child's effects survive exactly
+once.  Entries and claims are reclaimed by the finished-workflow sweep once
+the child's ``w/<seq>`` marker exists (``core/gc.py``).
 """
 
 from __future__ import annotations
@@ -48,11 +67,21 @@ WF_FINISH_PREFIX = "w/"
 # logical-key namespace reserved for workflow memo records (storage keys for
 # these versions land under d/.wf/...)
 WORKFLOW_MEMO_PREFIX = ".wf/"
+# logical-key namespace for the durable cross-workflow trigger queue
+# (storage keys for entry/claim versions land under d/q/...)
+TRIGGER_PREFIX = "q/"
 # derived transaction UUIDs: a workflow's per-step transactions are
 # "<uuid>.step.<name>" and its memo commits "<uuid>.memo.<name>"
 # (repro/workflow/txn.py); the GC sweep keys off these infixes
 WF_MEMO_TXN_INFIX = ".memo."
 WF_STEP_TXN_INFIX = ".step."
+# chaining (repro/workflow/chain.py): a trigger entry id — which doubles as
+# the child workflow's UUID — is "<parent_uuid>.chain.<edge>"; its claim
+# transaction is "<entry>.claim" and a STEP/NONE-scope parent's standalone
+# enqueue transaction is "<entry>.enq"
+WF_CHAIN_INFIX = ".chain."
+CHAIN_CLAIM_SUFFIX = ".claim"
+CHAIN_ENQ_SUFFIX = ".enq"
 
 
 def data_key(key: str, tid: TxnId) -> str:
@@ -92,6 +121,37 @@ def workflow_finish_key(workflow_uuid: str) -> str:
 
 def is_workflow_memo_key(key: str) -> bool:
     return key.startswith(WORKFLOW_MEMO_PREFIX)
+
+
+# -- trigger queue (cross-workflow chaining) --------------------------------
+
+def trigger_entry_id(parent_uuid: str, edge: str) -> str:
+    """Deterministic queue sequence id for one ``on_commit`` edge.  It is
+    also the triggered child workflow's UUID, which is what makes replayed
+    handoffs idempotent end to end (§3.3.1 lifted to chaining)."""
+    return f"{parent_uuid}{WF_CHAIN_INFIX}{edge}"
+
+
+def trigger_key(queue: str, entry_id: str) -> str:
+    """Logical key of a trigger-queue entry (``q/<queue>/<seq>``)."""
+    return f"{TRIGGER_PREFIX}{queue}/{entry_id}"
+
+
+def trigger_claim_key(queue: str, entry_id: str) -> str:
+    """Logical key of an entry's consumer claim."""
+    return f"{TRIGGER_PREFIX}{queue}/{entry_id}/claim"
+
+
+def claim_txn_uuid(entry_id: str) -> str:
+    """Deterministic claim-transaction UUID: racing claimants share one
+    logical transaction, so the claim commits exactly once."""
+    return f"{entry_id}{CHAIN_CLAIM_SUFFIX}"
+
+
+def enqueue_txn_uuid(entry_id: str) -> str:
+    """Deterministic standalone-enqueue UUID (STEP-scope parents, whose DAG
+    has no single commit to fold the entry into)."""
+    return f"{entry_id}{CHAIN_ENQ_SUFFIX}"
 
 
 @dataclass(frozen=True)

@@ -96,9 +96,16 @@ class LambdaPlatform:
 
     # -- execution ---------------------------------------------------------
     def invoke(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
-        """Invoke one function with warm-start overhead (no retry)."""
+        """Invoke one function with warm-start overhead (no retry).
+
+        When ``failure_sites`` is configured, the invocation itself is a
+        failure point (site ``invoke:single``): the Lambda instance can die
+        before the body runs.  Only evaluated under site-scoped injection so
+        historical anonymous-rate configs keep their exact semantics."""
         with self._stats_lock:
             self.invocations += 1
+        if self.config.failure_sites is not None:
+            self.maybe_fail(site="invoke:single")
         self._sleep_ms(self._sample_overhead())
         return fn(*args, **kwargs)
 
@@ -117,7 +124,16 @@ class LambdaPlatform:
         paid once for the whole batch instead of once per step.  Bodies run
         sequentially, exactly as if a driver function called them in order;
         exception isolation is the caller's job (pool thunks never raise —
-        they capture their own outcome and report it to the scheduler)."""
+        they capture their own outcome and report it to the scheduler).
+
+        Site-scoped fault injection is evaluated **per thunk** (site
+        ``invoke:batch``), mirroring ``invoke``'s ``invoke:single``: without
+        this, batched execution would silently dodge invocation-level kills
+        and benchmarks would overstate batched-mode robustness.  An injected
+        kill takes out exactly the thunk it landed on — delivered through
+        the thunk's ``report_failure`` hook when it has one (the pool's
+        thunks do, keeping retry/error accounting exact) — and the rest of
+        the batch still runs, like a per-slot crash in a shared container."""
         if not thunks:
             return []
         with self._stats_lock:
@@ -125,7 +141,19 @@ class LambdaPlatform:
             self.batched_invocations += 1
             self.batched_steps += len(thunks)
         self._sleep_ms(self._sample_overhead())
-        return [thunk() for thunk in thunks]
+        out: List[Any] = []
+        for thunk in thunks:
+            if self.config.failure_sites is not None:
+                try:
+                    self.maybe_fail(site="invoke:batch")
+                except FunctionFailure as exc:
+                    reporter = getattr(thunk, "report_failure", None)
+                    if reporter is not None:
+                        reporter(exc)
+                    out.append(exc)
+                    continue
+            out.append(thunk())
+        return out
 
     def submit_batch(self, thunks: Sequence[Callable[[], Any]]) -> Future:
         """Schedule one *batched* invocation on the platform pool."""

@@ -18,10 +18,23 @@ Transaction scoping + the memo store both live in ``txn.py``: a DAG runs as
 one AFT transaction (``TxnScope.WORKFLOW``), one per step (``TxnScope.STEP``),
 or unshimmed (``TxnScope.NONE``, the anomaly baseline).
 
+Workflows chain: ``chain.py`` adds ``on_commit`` :class:`Trigger` edges — a
+committed workflow durably enqueues its successor through the AFT-backed
+``q/`` trigger queue (the entry rides the parent's commit record), and a
+:class:`ChainConsumer` claims entries with §3.3.1 UUID-reuse dedup so a
+crashed handoff replays without dropping or double-firing the child.
+
 Docs: ``docs/WORKFLOWS.md`` (DSL, scopes, exactly-once resume, pool tuning)
 and ``docs/ARCHITECTURE.md`` (how this layer maps onto the paper).
 """
 
+from .chain import (
+    ChainConsumer,
+    ChainConsumerConfig,
+    Trigger,
+    build_entries,
+    list_queue_entries,
+)
 from .executor import (
     StepContext,
     StepFailure,
@@ -44,6 +57,11 @@ from .txn import (
 )
 
 __all__ = [
+    "ChainConsumer",
+    "ChainConsumerConfig",
+    "Trigger",
+    "build_entries",
+    "list_queue_entries",
     "Step",
     "WorkflowSpec",
     "WorkflowSpecError",

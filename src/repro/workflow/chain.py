@@ -1,0 +1,581 @@
+"""Durable cross-workflow chaining: exactly-once triggers through AFT.
+
+AFT (§3.3.1) makes ONE request atomic and idempotent.  Real serverless
+applications chain requests: a committed workflow's result should durably
+start the next workflow — pipelines, sagas, cron fan-out (Beldi's logged
+intent tables, Cloudburst's compositional pipelines; see PAPERS.md).  The
+hard part is the *handoff*: a node that commits workflow A and then dies
+before enqueueing the trigger for B silently drops the chain, and a node
+that enqueues and dies before recording that it did double-fires on retry.
+
+This module gets exactly-once handoff with **no new infrastructure**, by
+threading the trigger queue through AFT's own commit protocol:
+
+* **enqueue is the parent's commit** — a :class:`Trigger` edge declared via
+  ``WorkflowSpec.trigger(...)`` materializes as an ordinary write to the
+  logical key ``q/<queue>/<seq>`` *inside the parent's WORKFLOW-scope
+  transaction* (``WorkflowSession.stage_triggers``).  The entry is durable
+  iff the parent's effects are: no commit, no trigger; retried commit, same
+  deterministic entry (§3.3.1), still one trigger.  STEP-scope parents fall
+  back to a standalone deterministic-UUID enqueue transaction (exactly-once
+  but not atomic with the DAG — STEP scope never was); the unscoped
+  baseline enqueues with a *fresh* suffix per attempt, which is precisely
+  the lose/duplicate anomaly ``benchmarks/fig_chain.py`` measures;
+
+* **claim is §3.3.1 UUID reuse** — a :class:`ChainConsumer` claims an entry
+  by committing ``q/<queue>/<seq>/claim`` under the deterministic UUID
+  ``<seq>.claim`` (``AftNode.claim_queue_entry``: select+insert under the
+  per-session lock).  Racing claimants collapse into one idempotent
+  transaction; a claimant that dies mid-handoff leaves a claim any consumer
+  may take over after ``reclaim_after_s``;
+
+* **drive is idempotent by construction** — the child workflow's UUID *is*
+  the entry id, so a replayed trigger (crash between commit and
+  enqueue-visible, between claim and child-start, or a pool restart)
+  resubmits the same logical workflow: memoized steps replay, the final
+  commit recommits, and the child's effects land exactly once.  A consumer
+  that finds the child's ``w/<seq>`` finish marker (or committed record)
+  skips the drive entirely, honoring the marker's never-re-driven promise;
+
+* **GC rides the ``w/`` marker sweep** — a finished child's marker carries
+  its ``{queue, entry}`` provenance, and ``core/gc.py`` reclaims the entry
+  + claim versions and their bookkeeping transactions alongside the child's
+  memo records, so a long-running chain's queue footprint plateaus.
+
+See ``docs/WORKFLOWS.md`` ("Chaining") for the DSL and the dedup contract.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core import PlacementHint
+from ..core.ids import fresh_uuid
+from ..core.records import (
+    DATA_PREFIX,
+    TRIGGER_PREFIX,
+    WF_CHAIN_INFIX,
+    claim_txn_uuid,
+    enqueue_txn_uuid,
+    lookup_committed_record,
+    trigger_claim_key,
+    trigger_entry_id,
+    trigger_key,
+    workflow_finish_key,
+)
+from .spec import WorkflowSpec, WorkflowSpecError
+
+
+@dataclass(frozen=True)
+class Trigger:
+    """One ``on_commit`` chaining edge of a :class:`WorkflowSpec`.
+
+    ``workflow`` — the child: a :class:`WorkflowSpec` (its ``name`` is
+    recorded; the consumer still resolves it through its registry, because a
+    replaying consumer in a fresh process only has the durable name) or a
+    bare spec name.  ``args_from`` — a parent step whose *result* becomes
+    the child's ``args`` (resolved at commit time); ``args`` is a literal
+    fallback.  ``queue`` namespaces independent consumers.  ``name`` is the
+    edge label (defaults to the child name) — it keys the deterministic
+    entry id, so two edges of one parent must use distinct names.
+    """
+
+    workflow: Any  # WorkflowSpec | str
+    queue: str = "default"
+    args_from: Optional[str] = None
+    args: Any = None
+    name: Optional[str] = None
+
+    def spec_name(self) -> str:
+        return getattr(self.workflow, "name", self.workflow)
+
+    def edge_name(self) -> str:
+        return self.name or self.spec_name()
+
+    def resolve_args(self, results: Dict[str, Any]) -> Any:
+        if self.args_from is not None:
+            return results.get(self.args_from)
+        return self.args
+
+
+def validate_triggers(spec: "WorkflowSpec") -> None:
+    """Spec-validation hook: edge names must be unique, slash-free (they
+    embed into storage keys), and ``args_from`` must name a real step."""
+    seen: Set[str] = set()
+    for trigger in spec.on_commit:
+        edge = trigger.edge_name()
+        if not edge or "/" in edge:
+            raise WorkflowSpecError(
+                f"trigger edge name {edge!r} must be non-empty and slash-free"
+            )
+        if WF_CHAIN_INFIX in edge:
+            # the entry id is parsed back as <parent>.chain.<edge> (spill
+            # fallback, GC): an edge embedding the infix breaks the parse
+            raise WorkflowSpecError(
+                f"trigger edge name {edge!r} must not contain "
+                f"{WF_CHAIN_INFIX!r}"
+            )
+        if not trigger.queue or "/" in trigger.queue:
+            # queue names delimit the q/<queue>/<entry> key layout; a slash
+            # would make one queue's entries parse as another's
+            raise WorkflowSpecError(
+                f"trigger queue {trigger.queue!r} must be non-empty and "
+                "slash-free"
+            )
+        if edge in seen:
+            raise WorkflowSpecError(f"duplicate trigger edge {edge!r}")
+        seen.add(edge)
+        if trigger.args_from is not None and trigger.args_from not in spec.steps:
+            raise WorkflowSpecError(
+                f"trigger {edge!r} takes args from unknown step "
+                f"{trigger.args_from!r}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# entry payloads
+# ---------------------------------------------------------------------------
+
+def encode_entry(
+    parent_uuid: str, trigger: Trigger, results: Dict[str, Any]
+) -> bytes:
+    entry_id = trigger_entry_id(parent_uuid, trigger.edge_name())
+    try:
+        return json.dumps(
+            {
+                "workflow": trigger.spec_name(),
+                "queue": trigger.queue,
+                "edge": trigger.edge_name(),
+                "parent": parent_uuid,
+                "child_uuid": entry_id,
+                "args": trigger.resolve_args(results),
+            },
+            separators=(",", ":"),
+        ).encode()
+    except (TypeError, ValueError) as exc:
+        raise TypeError(
+            f"trigger args for edge {trigger.edge_name()!r} must be "
+            "JSON-serializable to ride the commit record"
+        ) from exc
+
+
+def decode_entry(raw: bytes) -> Dict[str, Any]:
+    return json.loads(raw)
+
+
+def build_entries(
+    parent_uuid: str, triggers: Sequence[Trigger], results: Dict[str, Any]
+) -> List[Tuple[str, str, bytes]]:
+    """Resolve every ``on_commit`` edge at commit time.
+
+    Returns ``(entry_id, entry_logical_key, payload)`` triples — what the
+    scope-specific ``stage_triggers`` implementations in ``txn.py`` write.
+    """
+    out = []
+    for trigger in triggers:
+        entry_id = trigger_entry_id(parent_uuid, trigger.edge_name())
+        out.append(
+            (
+                entry_id,
+                trigger_key(trigger.queue, entry_id),
+                encode_entry(parent_uuid, trigger, results),
+            )
+        )
+    return out
+
+
+def list_queue_entries(storage, queue: str) -> List[str]:
+    """Entry ids (logical keys) currently durable in ``q/<queue>/``.
+
+    Versioned storage makes discovery a prefix listing of version bytes:
+    an entry exists iff some transaction persisted it, and it stops
+    existing when the finished-child sweep deletes its versions.  A
+    saturated parent's write buffer may have SPILLED the entry bytes to
+    ``<entry>/.spill/<uuid>/<n>`` (§3.3; the commit record's storage-key
+    map addresses them) — those count as evidence too, or a spilling
+    parent's committed trigger would silently vanish from discovery.
+    Uncommitted (orphan) spills are filtered later: ``read_entry`` resolves
+    payloads only through committed records, and the claim's Algorithm-1
+    read returns nothing for an uncommitted entry.  Claims are skipped.
+    """
+    prefix = f"{DATA_PREFIX}{TRIGGER_PREFIX}{queue}/"
+    seen: Dict[str, None] = {}
+    for skey in storage.list_keys(prefix):
+        rest = skey[len(prefix):]  # <entry_id>[/claim]/<txnid> | + /.spill/…
+        if "/.spill/" in rest:
+            logical = rest.split("/.spill/", 1)[0]
+        else:
+            logical, _, _tid = rest.rpartition("/")
+        if not logical or logical.endswith("/claim"):
+            continue
+        seen.setdefault(logical, None)
+    return list(seen)
+
+
+def read_entry(storage, queue: str, entry_id: str) -> Optional[Dict[str, Any]]:
+    """Fetch + decode an entry's payload from durable storage.
+
+    Fast path: any default-keyed version (deterministic enqueue means all
+    versions are identical).  Fallback: resolve through the enqueueing
+    transaction's commit record — a saturated parent may have spilled the
+    entry bytes to a uuid-derived key only the record's storage-key map
+    addresses (§3.3)."""
+    prefix = f"{DATA_PREFIX}{trigger_key(queue, entry_id)}/"
+    for skey in storage.list_keys(prefix):
+        rest = skey[len(prefix):]
+        if "/" in rest:  # claim/spill versions live deeper
+            continue
+        raw = storage.get(skey)
+        if raw is not None:
+            try:
+                return decode_entry(raw)
+            except (ValueError, UnicodeDecodeError):
+                return None
+    # spilled (or listing-lagged) entry: go through the committed record
+    parent_uuid, sep, _ = entry_id.rpartition(WF_CHAIN_INFIX)
+    entry_key = trigger_key(queue, entry_id)
+    for uuid in ((parent_uuid,) if sep else ()) + (enqueue_txn_uuid(entry_id),):
+        record = lookup_committed_record(storage, uuid)
+        if record is None or entry_key not in record.write_set:
+            continue
+        raw = storage.get(record.storage_key_for(entry_key))
+        if raw is not None:
+            try:
+                return decode_entry(raw)
+            except (ValueError, UnicodeDecodeError):
+                return None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the consumer loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChainConsumerConfig:
+    queues: Tuple[str, ...] = ("default",)
+    poll_interval_s: float = 0.05
+    # take over another consumer's unfinished claim after this long — the
+    # crash-recovery knob (a dead claimant's children must still run).  The
+    # takeover drive is safe at any setting; the wait only limits redundant
+    # (idempotent) double-drives while the claimant is merely slow.  The
+    # durable claim timestamp is write-once, so the same knob also paces
+    # each consumer's REPEAT takeovers of a still-unfinished entry.
+    reclaim_after_s: float = 5.0
+    consumer_id: str = field(default_factory=fresh_uuid)
+    # re-drive children whose previous drive exhausted its attempts (off by
+    # default: a deterministically-failing child would hot-loop forever)
+    redrive_failed: bool = False
+
+
+class ChainConsumer:
+    """Claims trigger-queue entries and drives their child workflows.
+
+    One consumer serves a :class:`~repro.workflow.pool.WorkflowPool`; the
+    ``registry`` maps durable spec names to a :class:`WorkflowSpec` or a
+    ``factory(args) -> WorkflowSpec`` (the replay path runs in a process
+    that only has the entry's JSON payload, so specs are resolved by name).
+    ``step()`` is one deterministic poll pass — tests drive it directly;
+    ``start()`` runs it on a daemon thread.
+
+    Exactly-once contract (see module docstring): discovery is at-least-once
+    (entries persist until the child's finish marker licenses their GC),
+    claims dedup concurrent consumers via §3.3.1 UUID reuse, and drives are
+    idempotent because the child UUID is the entry id.
+    """
+
+    def __init__(
+        self,
+        pool,
+        registry: Dict[str, Any],
+        config: Optional[ChainConsumerConfig] = None,
+    ):
+        if pool.cluster is None:
+            raise ValueError("ChainConsumer requires a cluster-backed pool")
+        self.pool = pool
+        self.cluster = pool.cluster
+        self.platform = pool.platform
+        self.registry = dict(registry)
+        self.config = config or ChainConsumerConfig()
+        self.stats: Dict[str, int] = {
+            "polls": 0,
+            "entries_seen": 0,
+            "already_finished_skips": 0,
+            "claims_committed": 0,
+            "claims_deferred": 0,
+            "claims_taken_over": 0,
+            "children_started": 0,
+            "children_completed": 0,
+            "children_failed": 0,
+            "handoff_crashes": 0,
+            "unknown_workflows": 0,
+        }
+        self._inflight: Dict[str, Any] = {}   # entry_id → PoolTicket
+        self._done: Set[str] = set()
+        self._failed: Set[str] = set()
+        self._unknown: Set[str] = set()  # unresolvable specs: parked
+        # last takeover per entry: the claim's write-once timestamp can
+        # never be refreshed (deterministic UUID ⇒ re-commit is a no-op),
+        # so each consumer rate-limits its own takeovers instead — without
+        # this, every drive longer than reclaim_after_s would be re-driven
+        # on every poll pass by every other consumer
+        self._takeover_at: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------- one pass
+    def step(self) -> int:
+        """Poll every queue once; returns the number of children started."""
+        from ..faas.platform import FunctionFailure
+
+        self.stats["polls"] += 1
+        started = 0
+        live: Set[str] = set()
+        for queue in self.config.queues:
+            for entry_id in list_queue_entries(self.cluster.storage, queue):
+                live.add(entry_id)
+                try:
+                    if self._drive_entry(queue, entry_id):
+                        started += 1
+                except FunctionFailure:
+                    # injected kill-mid-handoff: this pass abandons the
+                    # entry; the claim (if committed) plus the entry's
+                    # durability guarantee a later pass replays it
+                    self.stats["handoff_crashes"] += 1
+                except Exception:
+                    # a dying node mid-claim etc.; the entry stays durable
+                    # and the next pass retries against live nodes
+                    self.stats["handoff_crashes"] += 1
+        # bookkeeping stays bounded by the LIVE queue: once the GC sweep
+        # reclaims a consumed entry it stops being listed, and remembering
+        # it further would grow consumer memory forever (the same pruning
+        # rule LocalGcAgent applies to its swept-marker set)
+        with self._lock:
+            self._done &= live
+            self._failed &= live
+            self._unknown &= live
+            for entry_id in list(self._takeover_at):
+                if entry_id not in live:
+                    del self._takeover_at[entry_id]
+        return started
+
+    def _drive_entry(self, queue: str, entry_id: str) -> bool:
+        with self._lock:
+            if entry_id in self._inflight or entry_id in self._done:
+                return False
+            if entry_id in self._unknown:
+                return False  # parked: registry lacked its spec
+            if entry_id in self._failed and not self.config.redrive_failed:
+                return False
+        self.stats["entries_seen"] += 1
+        storage = self.cluster.storage
+        # never-re-driven promise: a finished (or durably committed) child
+        # must not be resubmitted — its memo records may already be GC'd
+        if storage.get(workflow_finish_key(entry_id)) is not None:
+            self.stats["already_finished_skips"] += 1
+            with self._lock:
+                self._done.add(entry_id)
+            return False
+        payload = read_entry(storage, queue, entry_id)
+        if payload is None:
+            return False  # discovery raced the finished-child sweep
+        # resolve the spec BEFORE claiming: an unresolvable entry must not
+        # burn a claim transaction per poll pass forever — park it (a
+        # consumer restart, with a presumably fixed registry, retries).  A
+        # raising factory is just as unresolvable as a missing name.
+        try:
+            spec = self._resolve_spec(payload)
+        except Exception:
+            spec = None
+        if spec is None:
+            self.stats["unknown_workflows"] += 1
+            with self._lock:
+                self._unknown.add(entry_id)
+            return False
+        if not self._claim(queue, entry_id, payload):
+            return False
+        # the kill-mid-handoff window: claimed, child not yet submitted.
+        # Like the invoke:* sites, consumer-loop sites are opt-in by name:
+        # an anonymous failure_rate targets function bodies, and letting it
+        # also crash the client-side poll loop would change historical
+        # semantics (and stall chains at rate 1.0).
+        if self.platform.config.failure_sites is not None:
+            self.platform.maybe_fail(site=f"chain:handoff:{queue}")
+        # re-check the finish marker right before submitting: a rival drive
+        # may have finished the child while we were claiming (the pool
+        # repeats this check at every attempt start, closing the remaining
+        # check-then-act window against the GC sweep)
+        if storage.get(workflow_finish_key(entry_id)) is not None:
+            self.stats["already_finished_skips"] += 1
+            with self._lock:
+                self._done.add(entry_id)
+            return False
+        ticket = self.pool.submit(
+            spec,
+            uuid=entry_id,
+            args=payload.get("args"),
+            chain_entry={"queue": queue, "entry": entry_id},
+        )
+        with self._lock:
+            self._inflight[entry_id] = ticket
+            self._failed.discard(entry_id)
+        self.stats["children_started"] += 1
+        ticket.add_done_callback(
+            lambda fut, eid=entry_id: self._on_child_done(eid, fut)
+        )
+        return True
+
+    def _claim(self, queue: str, entry_id: str, payload: Dict[str, Any]) -> bool:
+        """Commit (or adopt) the entry's claim; False defers to its owner."""
+        # the injected claim-crash fires BEFORE the transaction opens: a
+        # consumer killed here has touched nothing, so the failure path
+        # below never has to abort a context a co-located rival might be
+        # sharing (the deterministic claim UUID makes contexts shared).
+        # Opt-in by site name, like every consumer-loop/invoke-level site.
+        if self.platform.config.failure_sites is not None:
+            self.platform.maybe_fail(site=f"chain:claim:{queue}")
+        client = self.cluster.client()
+        txid = client.start_transaction(
+            claim_txn_uuid(entry_id), hint=PlacementHint(uuid=entry_id)
+        )
+        node = client.node_of(txid)
+        # close the multicast window for the enqueueing commit: the claim's
+        # node may not have heard it yet (the §4.2 propagation done eagerly,
+        # same as MemoStore.load_all's recover step)
+        for enq_uuid in (payload.get("parent"), enqueue_txn_uuid(entry_id)):
+            if not enq_uuid:
+                continue
+            record = lookup_committed_record(self.cluster.storage, enq_uuid)
+            if record is not None and any(
+                k.startswith(TRIGGER_PREFIX) for k in record.write_set
+            ):
+                node.merge_remote_commits([record])
+        try:
+            entry, prior, prior_buffered = node.claim_queue_entry(
+                txid,
+                trigger_key(queue, entry_id),
+                trigger_claim_key(queue, entry_id),
+                json.dumps(
+                    {"consumer": self.config.consumer_id, "ts": time.time()}
+                ).encode(),
+            )
+            if entry is None:
+                client.abort_transaction(txid)
+                return False  # swept (or not yet visible) — nothing to drive
+            if prior is not None:
+                if prior_buffered:
+                    # a co-located sharer of this very transaction context
+                    # buffered the claim between our reads: the context is
+                    # THEIRS to commit — touching it (abort) would kill
+                    # their in-flight claim.  Defer; their drive covers it.
+                    self.stats["claims_deferred"] += 1
+                    return False
+                try:
+                    claim = json.loads(prior)
+                except ValueError:
+                    claim = {}
+                mine = claim.get("consumer") == self.config.consumer_id
+                stale = (
+                    time.time() - float(claim.get("ts", 0.0))
+                    >= self.config.reclaim_after_s
+                )
+                # the prior claim is durably committed, so aborting this
+                # context is safe even against a racing sharer: their
+                # commit resolves through the §3.3.1 already-committed probe
+                client.abort_transaction(txid)
+                if mine:
+                    return True
+                if stale:
+                    now = time.time()
+                    with self._lock:
+                        recently = (
+                            now - self._takeover_at.get(entry_id, -1e18)
+                            < self.config.reclaim_after_s
+                        )
+                        if not recently:
+                            self._takeover_at[entry_id] = now
+                    if recently:
+                        self.stats["claims_deferred"] += 1
+                        return False
+                    self.stats["claims_taken_over"] += 1
+                    return True
+                self.stats["claims_deferred"] += 1
+                return False
+            client.commit_transaction(txid)
+            self.stats["claims_committed"] += 1
+            return True
+        except BaseException:
+            try:
+                client.abort_transaction(txid)
+            except Exception:
+                pass
+            raise
+
+    def _resolve_spec(self, payload: Dict[str, Any]) -> Optional[WorkflowSpec]:
+        entry = self.registry.get(payload.get("workflow"))
+        if entry is None:
+            return None
+        if isinstance(entry, WorkflowSpec):
+            return entry
+        return entry(payload.get("args"))  # factory(args) → spec
+
+    def _on_child_done(self, entry_id: str, fut) -> None:
+        with self._lock:
+            self._inflight.pop(entry_id, None)
+            if fut.exception() is None:
+                self._done.add(entry_id)
+            else:
+                self._failed.add(entry_id)
+        if fut.exception() is None:
+            self.stats["children_completed"] += 1
+        else:
+            self.stats["children_failed"] += 1
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ChainConsumer":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                try:
+                    self.step()
+                except Exception:
+                    pass  # next poll rebuilds everything it needs
+                self._stop.wait(self.config.poll_interval_s)
+
+        self._thread = threading.Thread(
+            target=loop, name="chain-consumer", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            if self._thread.is_alive():
+                return  # keep the handle: start() must not double-spawn
+            self._thread = None
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def drain(self, timeout_s: float = 30.0, poll_s: float = 0.005) -> bool:
+        """Step until the queue is quiescent: nothing new to drive and no
+        children in flight.  Deterministic alternative to ``start()`` for
+        tests and benchmarks; returns False on timeout."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            started = self.step()
+            if started == 0 and self.pending() == 0 and self.step() == 0:
+                return True
+            time.sleep(poll_s)
+        return False

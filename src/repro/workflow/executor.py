@@ -88,6 +88,11 @@ class WorkflowResult:
     committed_tid: Optional[TxnId]
     wall_ms: float
     scope: str
+    # True when a re-driven uuid was resolved from its finish marker alone
+    # (a rival drive already completed it): the workflow DID succeed, but
+    # its memos may be GC'd, so ``results`` can be empty — callers needing
+    # step outputs must persist them through AFT, not the ticket
+    deduped: bool = False
 
     @property
     def resumed(self) -> bool:
@@ -232,6 +237,10 @@ class WorkflowExecutor:
                 results, skipped, ran, memoized = self._run_attempt(
                     spec, session, memos, args, memoizing
                 )
+                if spec.on_commit:
+                    # chaining: trigger entries join the scope's commit
+                    # story (atomic under WORKFLOW scope — see chain.py)
+                    session.stage_triggers(spec.on_commit, results)
                 tid = session.finish()
             except Exception as exc:
                 # retry every *failure*; KeyboardInterrupt/SystemExit must

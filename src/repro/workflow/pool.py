@@ -56,6 +56,7 @@ from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 from ..core import AftCluster, PlacementHint
 from ..core.ids import fresh_uuid
+from ..core.records import lookup_committed_record, workflow_finish_key
 from ..faas.platform import LambdaPlatform
 from ..storage.base import StorageEngine
 from .executor import (
@@ -183,6 +184,11 @@ class PoolTicket:
     def done(self) -> bool:
         return self._future.done()
 
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(future)`` when the ticket resolves (success or failure);
+        the chain consumer uses this for completion bookkeeping."""
+        self._future.add_done_callback(fn)
+
 
 class _RunState(Enum):
     STARTING = "starting"      # finisher is building session / loading memos
@@ -200,6 +206,10 @@ class _Run:
     args: Any
     ticket: PoolTicket
     resume_eligible: bool
+    # {"queue": ..., "entry": ...} when this run was started by a chain
+    # trigger; recorded in the finish marker so GC can reclaim the entry
+    chain_entry: Optional[Dict[str, str]] = None
+    deduped: bool = False  # resolved from the finish marker, nothing ran
     state: _RunState = _RunState.RETRY_WAIT
     attempt: int = 0
     retry_at: float = 0.0
@@ -253,6 +263,9 @@ class WorkflowPool:
             "batched_steps": 0,
             "max_admitted": 0,
             "batch_target": 0,  # gauge: current adaptive (or static) cap
+            "chain_triggers_staged": 0,
+            "late_memo_hits": 0,  # rival memo found at dispatch, body skipped
+            "already_finished_dedups": 0,  # finish marker found at attempt start
         }
         self._batcher = AdaptiveBatcher(self.config)
         self.stats["batch_target"] = self._batcher.cap
@@ -265,6 +278,7 @@ class WorkflowPool:
         self._ready_total = 0
         self._ready_since: Optional[float] = None
         self._closed = False
+        self._chain_consumers: List = []  # ChainConsumers bound to this pool
         self._stop = threading.Event()
         self._finisher = ThreadPoolExecutor(
             max_workers=4, thread_name_prefix="wfpool-io"
@@ -281,8 +295,12 @@ class WorkflowPool:
         *,
         uuid: Optional[str] = None,
         args: Any = None,
+        chain_entry: Optional[Dict[str, str]] = None,
     ) -> PoolTicket:
-        """Enqueue a workflow; blocks only for backpressure (admission)."""
+        """Enqueue a workflow; blocks only for backpressure (admission).
+        ``chain_entry`` marks a run driven from the trigger queue
+        (``ChainConsumer``): its provenance rides the finish marker so the
+        GC sweep reclaims the queue entry with the workflow."""
         spec.validate()
         resume_eligible = uuid is not None
         workflow_uuid = uuid or fresh_uuid()
@@ -293,6 +311,7 @@ class WorkflowPool:
             args=args,
             ticket=ticket,
             resume_eligible=resume_eligible,
+            chain_entry=chain_entry,
         )
         with self._cond:
             while (
@@ -323,10 +342,30 @@ class WorkflowPool:
         tickets = [self.submit(s, args=args) for s in specs]
         return [t.result(timeout) for t in tickets]
 
+    def attach_chain_consumer(self, registry, config=None, *, start=True):
+        """Create (and by default start) a trigger-queue consumer loop bound
+        to this pool: it claims ``q/`` entries with §3.3.1 UUID-reuse dedup
+        and submits their child workflows here (``workflow/chain.py``).
+        Stopped automatically by ``close()``."""
+        from .chain import ChainConsumer
+
+        consumer = ChainConsumer(self, registry, config)
+        self._chain_consumers.append(consumer)
+        if start:
+            consumer.start()
+        return consumer
+
     def close(self, wait: bool = True) -> None:
+        # flip _closed BEFORE stopping consumers: a consumer thread blocked
+        # in submit()'s admission wait is only woken by this notify — the
+        # (caught, counted) PoolClosed it then sees is what lets stop()'s
+        # join succeed instead of timing out against a stuck poll loop
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+        for consumer in self._chain_consumers:
+            consumer.stop()
+        with self._cond:
             if wait:
                 while self._admitted > 0:
                     self._cond.wait()
@@ -393,6 +432,23 @@ class WorkflowPool:
 
     def _begin_attempt_io(self, run: _Run, epoch: int) -> None:
         try:
+            if run.resume_eligible and self.cluster is not None:
+                # last-moment dedup for re-driven uuids (replayed chain
+                # triggers, crashed clients resubmitting): a rival drive may
+                # have finished this workflow — and the GC sweep may already
+                # have reclaimed its memos and derived u/ entries — between
+                # the caller's decision to submit and this attempt.
+                # Re-running bodies then would re-commit under STEP scope
+                # (the §3.3.1 probe finds nothing), so honor the marker's
+                # never-re-driven promise here, on every attempt.
+                storage = self.cluster.storage
+                if storage.get(workflow_finish_key(run.uuid)) is not None:
+                    record = lookup_committed_record(storage, run.uuid)
+                    self._emit((
+                        "already_finished", run, epoch,
+                        record.tid if record else None,
+                    ))
+                    return
             session = make_session(
                 self.config.scope,
                 run.uuid,
@@ -416,13 +472,21 @@ class WorkflowPool:
 
     def _finish_io(self, run: _Run, epoch: int) -> None:
         try:
+            if run.spec.on_commit:
+                # chaining: resolve on_commit edges against the completed
+                # results and hand them to the scope — under WORKFLOW scope
+                # the entries ride inside the commit below (atomic handoff)
+                run.session.stage_triggers(run.spec.on_commit, run.results)
             tid = run.session.finish()
         except BaseException as exc:  # noqa: BLE001
             self._emit(("finish_error", run, epoch, exc))
             return
         if self._memoizing and self.config.declare_finished:
             try:
-                self._memo.mark_finished(run.uuid)
+                extra = (
+                    {"chain": run.chain_entry} if run.chain_entry else None
+                )
+                self._memo.mark_finished(run.uuid, extra)
             except Exception:
                 pass  # advisory GC state; unmarked memos linger, nothing breaks
         self._emit(("finished", run, epoch, tid))
@@ -460,22 +524,40 @@ class WorkflowPool:
             self._settle(run, [n for n, d in run.indeg.items() if d == 0])
             self._after_progress(run)
         elif kind == "step":
-            _, _, _, name, ok, val, body_s, lead_s = event
-            # failed bodies die fast (e.g. a dead node raising immediately):
-            # feeding their near-zero latency into the EWMA would inflate
-            # the batch target during exactly the bursts where over-batching
-            # hurts — only successful bodies are step-latency samples
-            self._batcher.observe(body_s if ok else None, lead_s)
+            _, _, _, name, ok, val, body_s, lead_s, memo_hit = event
+            # Two kinds of dispatched step are NOT step-latency samples:
+            # failed bodies die fast (a dead node raising immediately), and
+            # memoized-resume hits (a rival attempt's memo found at dispatch
+            # — see _make_thunk) return in microseconds without running the
+            # body.  Feeding either near-zero reading into the EWMA during a
+            # crash/resume burst drags the modeled step latency toward zero
+            # and pins batch_target at adaptive_batch_max — over-batching
+            # exactly when real bodies are about to run again.  Only
+            # successful, actually-executed bodies update the model.
+            self._batcher.observe(body_s if ok and not memo_hit else None, lead_s)
             self.stats["batch_target"] = self._batcher.cap
             run.inflight -= 1
             self._inflight_steps -= 1
             if ok and run.failure is None:
                 run.results[name] = val
-                run.ran += 1
+                if memo_hit:
+                    run.memoized += 1
+                    self.stats["late_memo_hits"] += 1
+                else:
+                    run.ran += 1
                 self._settle(run, self._resolve(run, name))
             elif not ok:
                 run.failure = run.failure or StepFailure(name, val)
             self._after_progress(run)
+        elif kind == "already_finished":
+            # a rival drive of this uuid already committed + marked
+            # finished; resolve the ticket without running anything.  A
+            # prior attempt's session (if any) staged nothing that this
+            # completion should account for.
+            run.session = None
+            run.deduped = True
+            self.stats["already_finished_dedups"] += 1
+            self._complete(run, event[3])
         elif kind == "attempt_error":
             run.failure = run.failure or event[3]
             self._schedule_retry_or_fail(run)
@@ -589,6 +671,8 @@ class WorkflowPool:
     def _complete(self, run: _Run, tid) -> None:
         run.state = _RunState.DONE
         self.stats["workflows_completed"] += 1
+        if run.session is not None:  # deduped runs never staged anything
+            self.stats["chain_triggers_staged"] += len(run.spec.on_commit)
         self.stats["steps_run"] += run.ran
         self.stats["steps_memoized"] += run.memoized
         self.stats["steps_skipped"] += len(run.skipped)
@@ -602,6 +686,7 @@ class WorkflowPool:
             committed_tid=tid,
             wall_ms=(time.perf_counter() - run.t0) * 1e3,
             scope=self.config.scope.value,
+            deduped=run.deduped,
         )
         self._resolve_ticket(run, result=result)
 
@@ -683,6 +768,11 @@ class WorkflowPool:
         step = run.spec.steps[name]
         inputs = {d: run.results[d] for d in step.deps if d not in run.skipped}
         session = run.session
+        # resumed runs can race a rival driving the SAME uuid (a replayed
+        # chain trigger, a crashed consumer's double drive): the rival may
+        # commit this step's memo after our attempt's load_all.  Worth a
+        # late probe at dispatch; fresh first attempts cannot race this way.
+        probe_memo = self._memoizing and (run.attempt > 1 or run.resume_eligible)
 
         def thunk() -> None:
             # bodies in one batch run sequentially inside invoke_batch, so
@@ -693,18 +783,41 @@ class WorkflowPool:
             if "lead_taken" not in batch_meta:
                 batch_meta["lead_taken"] = True
                 lead_s = t0 - batch_meta["dispatched"]
+            memo_hit = False
             try:
-                result = execute_step(
-                    step, session, self.platform, inputs, run.args,
-                    memoizing=self._memoizing, memo_store=self._memo,
+                probe = (
+                    self._memo.probe(session.uuid, name, self.config.scope)
+                    if probe_memo else None
                 )
+                if probe is not None:
+                    # §3.3.1: the step already committed under a rival
+                    # attempt — recover its commit records into this
+                    # session's node(s), replay its writes, never re-run
+                    # the body
+                    memo, records = probe
+                    session.recover(records)
+                    result, writes = memo
+                    session.replay(name, writes)
+                    memo_hit = True
+                else:
+                    result = execute_step(
+                        step, session, self.platform, inputs, run.args,
+                        memoizing=self._memoizing, memo_store=self._memo,
+                    )
                 outcome: Tuple[bool, Any] = (True, result)
             except BaseException as exc:  # noqa: BLE001 - reported, not raised
                 outcome = (False, exc)
             body_s = time.perf_counter() - t0
             self._emit(
                 ("step", run, epoch, name, outcome[0], outcome[1],
-                 body_s, lead_s)
+                 body_s, lead_s, memo_hit)
             )
 
+        def report_failure(exc: BaseException) -> None:
+            # the platform killed this thunk's invocation slot before the
+            # body ran (site-scoped injection inside invoke_batch): surface
+            # it as a normal step failure so retry accounting stays exact
+            self._emit(("step", run, epoch, name, False, exc, None, None, False))
+
+        thunk.report_failure = report_failure
         return thunk

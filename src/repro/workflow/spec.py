@@ -58,6 +58,10 @@ class WorkflowSpec:
     def __init__(self, name: str):
         self.name = name
         self.steps: Dict[str, Step] = {}
+        # cross-workflow chaining edges (``repro.workflow.chain.Trigger``):
+        # fired atomically with the workflow's commit — the trigger entry is
+        # folded into the commit record, so it exists iff the DAG committed
+        self.on_commit: List[Any] = []
 
     # ------------------------------------------------------------ builders
     def add(self, step: Step) -> str:
@@ -139,8 +143,20 @@ class WorkflowSpec:
             )
         )
 
+    def trigger(self, trigger: Any) -> Any:
+        """Declare an ``on_commit`` chaining edge: when this workflow
+        commits, the given :class:`repro.workflow.chain.Trigger` durably
+        enqueues its child workflow, exactly once, through AFT's own commit
+        protocol (see ``chain.py``).  Returns the trigger for chaining."""
+        self.on_commit.append(trigger)
+        return trigger
+
     # ---------------------------------------------------------- validation
     def validate(self) -> None:
+        if self.on_commit:
+            from .chain import validate_triggers
+
+            validate_triggers(self)
         for step in self.steps.values():
             for dep in step.deps:
                 if dep not in self.steps:

@@ -52,6 +52,7 @@ from ..core.records import (
     WF_STEP_TXN_INFIX,
     WORKFLOW_MEMO_PREFIX,
     embed_metadata,
+    enqueue_txn_uuid,
     extract_metadata,
     workflow_finish_key,
 )
@@ -124,16 +125,46 @@ class MemoStore:
         client.put(tx, memo_key(workflow_uuid, step_name), payload)
         client.commit_transaction(tx)
 
-    def mark_finished(self, workflow_uuid: str) -> None:
+    def mark_finished(
+        self, workflow_uuid: str, extra: Optional[Dict[str, Any]] = None
+    ) -> None:
         """Declare the workflow done: persist the ``w/<uuid>`` marker that
         licenses the GC sweep (``LocalGcAgent.gc_finished_workflows``) to
         reclaim this workflow's memo records and ``u/`` index entries.  A
         plain storage put, not a transaction: the marker is advisory GC
-        state, and a crash before it lands merely defers reclamation."""
+        state, and a crash before it lands merely defers reclamation.
+        ``extra`` extends the marker payload — chaining records the
+        ``{"chain": {"queue", "entry"}}`` provenance here so the sweep can
+        reclaim the trigger-queue entry that spawned the workflow."""
+        body = {"finished_at_ns": time.time_ns()}
+        if extra:
+            body.update(extra)
         self.cluster.storage.put(
             workflow_finish_key(workflow_uuid),
-            json.dumps({"finished_at_ns": time.time_ns()}).encode(),
+            json.dumps(body).encode(),
         )
+
+    def probe(
+        self,
+        workflow_uuid: str,
+        step_name: str,
+        scope: Optional[TxnScope] = None,
+    ):
+        """Late memo re-check for ONE step: did a rival attempt commit this
+        step's memo after our ``load_all``?  Two-to-three point reads
+        through the ``u/`` index.  The pool probes this just before running
+        a resumed step's body, closing the window a replayed chain trigger
+        (or any concurrent re-drive of the same UUID) opens between memo
+        load and dispatch.  Returns ``((result, writes), records)`` —
+        the rival's commit records MUST be recovered into the session
+        (``WorkflowSession.recover``) like load_all's, or a dependent step
+        placed on another node could read NULL for the rival-committed
+        write — or ``None`` when no memo exists."""
+        found, records = self.load_all(workflow_uuid, [step_name], scope)
+        memo = found.get(step_name)
+        if memo is None:
+            return None
+        return memo, records
 
     def load_all(
         self,
@@ -231,6 +262,16 @@ class WorkflowSession:
         """Merge the workflow's prior commit records (from the durable
         Commit Set) into this attempt's node, closing the multicast window."""
 
+    def stage_triggers(self, triggers, results: Dict[str, Any]) -> None:
+        """Resolve the spec's ``on_commit`` edges against the completed
+        results and make their trigger-queue entries part of this scope's
+        commit story (``repro/workflow/chain.py``).  Called by the driver
+        after the DAG's last step, before ``finish()``.  Scope determines
+        the handoff guarantee: WORKFLOW folds entries into the single
+        atomic commit, STEP enqueues via standalone deterministic
+        transactions at finish, NONE is the lose/duplicate baseline."""
+        raise NotImplementedError
+
     def finish(self) -> Optional[TxnId]:
         """Commit whatever the scope holds open; idempotent on retry."""
         return None
@@ -268,6 +309,18 @@ class WorkflowTxnSession(WorkflowSession):
     def recover(self, records) -> None:
         if records:
             self.node.merge_remote_commits(records)
+
+    def stage_triggers(self, triggers, results: Dict[str, Any]) -> None:
+        # the exactly-once handoff (§3.3.1 extended to chaining): entries
+        # are ordinary buffered writes of THIS transaction, so they become
+        # durable atomically with the DAG's effects at commit — no commit,
+        # no trigger; retried commit, same entries, still one trigger
+        from .chain import build_entries
+
+        for _entry_id, entry_key, payload in build_entries(
+            self.uuid, triggers, results
+        ):
+            self.node.put(self.txid, entry_key, payload)
 
     def finish(self) -> Optional[TxnId]:
         return self.client.commit_transaction(self.txid)
@@ -316,6 +369,7 @@ class StepTxnSession(WorkflowSession):
         self._txids: Dict[str, str] = {}
         self._nodes: Dict[str, "object"] = {}  # step_name → AftNode
         self._records: list = []  # this workflow's commit records so far
+        self._staged_triggers: list = []  # (entry_id, key, payload) at finish
         self.node = None if place_steps else cluster.pick_node(hint)
 
     def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
@@ -375,6 +429,27 @@ class StepTxnSession(WorkflowSession):
         if not self.place_steps and records:
             self.node.merge_remote_commits(records)
 
+    def stage_triggers(self, triggers, results: Dict[str, Any]) -> None:
+        from .chain import build_entries
+
+        self._staged_triggers = build_entries(self.uuid, triggers, results)
+
+    def finish(self) -> Optional[TxnId]:
+        # STEP scope has no single DAG commit to fold entries into; each
+        # entry gets its own *deterministic* enqueue transaction
+        # ("<entry>.enq"), so a retried finish recommits idempotently
+        # (§3.3.1) — exactly-once, though not atomic with the step writes
+        # (the DAG as a whole never was under this scope).
+        for entry_id, entry_key, payload in self._staged_triggers:
+            node = self.node or self.cluster.pick_node(
+                PlacementHint(uuid=entry_id)
+            )
+            txid = node.start_transaction(enqueue_txn_uuid(entry_id))
+            node.put(txid, entry_key, payload)
+            node.commit_transaction(txid)
+            node.release_transaction(txid)
+        return None
+
     def abandon(self) -> None:
         with self._lock:
             pending = [
@@ -425,6 +500,24 @@ class UnscopedSession(WorkflowSession):
     def put(self, step_name: str, key: str, value: bytes) -> None:
         cow = self.cowritten or (key,)
         self.storage.put(key, embed_metadata(value, self.tid, cow))
+
+    def stage_triggers(self, triggers, results: Dict[str, Any]) -> None:
+        # the anomaly baseline: the handoff is a separate, non-atomic,
+        # non-idempotent put to a RAW ``q/...`` key (no ``d/`` version
+        # namespace — unscoped writes never have one, so ``ChainConsumer``'s
+        # versioned discovery deliberately cannot see these; a baseline
+        # consumer lists the raw prefix, as benchmarks/fig_chain.py does).
+        # A crash between the DAG's effects and this write LOSES the
+        # trigger; a retried attempt enqueues ANOTHER entry (fresh suffix —
+        # nothing dedups it), so a baseline consumer double-fires.  That
+        # lose/duplicate pair is what fig_chain quantifies against the
+        # AFT-scoped queue.
+        from .chain import build_entries
+
+        for _entry_id, entry_key, payload in build_entries(
+            self.uuid, triggers, results
+        ):
+            self.storage.put(f"{entry_key}/{fresh_uuid()}", payload)
 
 
 def make_session(

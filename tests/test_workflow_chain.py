@@ -1,0 +1,653 @@
+"""Durable cross-workflow chaining: exactly-once trigger queue through AFT.
+
+The contract under test (workflow/chain.py): a committed workflow's
+``on_commit`` triggers durably start their child workflows exactly once —
+no drops, no double-fires — even when the handoff crashes between commit
+and enqueue-visible, between claim and child-start, or across a pool
+restart.  The unscoped baseline demonstrably violates both halves.
+"""
+
+import json
+import threading
+
+import pytest
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.gc import LocalGcAgent
+from repro.core.records import (
+    COMMIT_PREFIX,
+    UUID_PREFIX,
+    claim_txn_uuid,
+    trigger_entry_id,
+    trigger_key,
+    workflow_finish_key,
+)
+from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    ChainConsumer,
+    ChainConsumerConfig,
+    PoolConfig,
+    Trigger,
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowPool,
+    WorkflowSpec,
+    WorkflowSpecError,
+    list_queue_entries,
+)
+
+
+def make_cluster(nodes: int = 1) -> AftCluster:
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+    )
+
+
+def fast_platform(**kw) -> LambdaPlatform:
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def consumer_cfg(**kw) -> ChainConsumerConfig:
+    kw.setdefault("reclaim_after_s", 0.0)  # tests recover immediately
+    return ChainConsumerConfig(**kw)
+
+
+def parent_spec(child: WorkflowSpec, **trigger_kw) -> WorkflowSpec:
+    spec = WorkflowSpec("parent")
+
+    def produce(ctx):
+        ctx.put("chain/parent-effect", b"done")
+        return {"payload": 41}
+
+    spec.step("produce", produce)
+    trigger_kw.setdefault("args_from", "produce")
+    spec.trigger(Trigger(child, **trigger_kw))
+    return spec
+
+
+def child_spec(ran_counter) -> WorkflowSpec:
+    spec = WorkflowSpec("child")
+
+    def consume(ctx):
+        ran_counter.append(ctx.args)
+        ctx.put("chain/child-effect", json.dumps(ctx.args).encode())
+        return ctx.args
+
+    spec.step("consume", consume)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# DSL + staging semantics
+# ---------------------------------------------------------------------------
+
+def test_trigger_validation_rejects_bad_edges():
+    spec = WorkflowSpec("bad")
+    spec.step("a", lambda ctx: 1)
+    spec.trigger(Trigger("x"))
+    spec.trigger(Trigger("x"))  # duplicate edge name
+    with pytest.raises(WorkflowSpecError):
+        spec.validate()
+
+    spec2 = WorkflowSpec("bad2")
+    spec2.step("a", lambda ctx: 1)
+    spec2.trigger(Trigger("x", name="sl/ash"))
+    with pytest.raises(WorkflowSpecError):
+        spec2.validate()
+
+    spec3 = WorkflowSpec("bad3")
+    spec3.step("a", lambda ctx: 1)
+    spec3.trigger(Trigger("x", args_from="nope"))
+    with pytest.raises(WorkflowSpecError):
+        spec3.validate()
+
+
+def test_trigger_enqueue_is_atomic_with_parent_commit():
+    """WORKFLOW scope: the entry exists iff the parent committed — a parent
+    that exhausts its attempts leaves no trigger (and no effects)."""
+    cluster = make_cluster()
+    ran = []
+    ok = parent_spec(child_spec(ran))
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=3),
+    )
+    ex.run(ok, uuid="atomic-ok")
+    assert list_queue_entries(cluster.storage, "default") == [
+        trigger_entry_id("atomic-ok", "child")
+    ]
+
+    doomed = parent_spec(child_spec(ran))
+    doomed.step("dies", lambda ctx: (_ for _ in ()).throw(
+        FunctionFailure("always")), deps=["produce"])
+    with pytest.raises(Exception):
+        ex.run(doomed, uuid="atomic-doomed")
+    # no entry for the aborted parent — the trigger rides the commit record
+    assert [
+        e for e in list_queue_entries(cluster.storage, "default")
+        if e.startswith("atomic-doomed")
+    ] == []
+    cluster.stop()
+
+
+def test_retried_parent_commit_enqueues_exactly_one_entry():
+    """§3.3.1: the parent crashes mid-DAG and retries under the same UUID —
+    the deterministic entry id means ONE durable trigger, not one per
+    attempt."""
+    cluster = make_cluster()
+    ran = []
+    spec = parent_spec(child_spec(ran))
+    remaining = [2]
+
+    def flaky(ctx):
+        if remaining[0] > 0:
+            remaining[0] -= 1
+            raise FunctionFailure("mid-DAG crash")
+        return "ok"
+
+    spec.step("flaky", flaky, deps=["produce"])
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(max_attempts=6),
+    )
+    r = ex.run(spec, uuid="retry-parent")
+    assert r.attempts == 3
+    entries = list_queue_entries(cluster.storage, "default")
+    assert entries == [trigger_entry_id("retry-parent", "child")]
+    # exactly one committed version of the entry key
+    versions = cluster.storage.list_keys(
+        f"d/{trigger_key('default', entries[0])}/"
+    )
+    assert len(versions) == 1
+    cluster.stop()
+
+
+def test_step_scope_parent_enqueues_exactly_once():
+    """STEP scope has no single commit; the standalone deterministic
+    enqueue transaction still gives exactly-once entries across retries."""
+    cluster = make_cluster()
+    ran = []
+    spec = parent_spec(child_spec(ran))
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(scope=TxnScope.STEP),
+    )
+    ex.run(spec, uuid="step-parent")
+    # simulate a lost finish acknowledgement: the whole finish re-runs
+    ex.run(parent_spec(child_spec(ran)), uuid="step-parent")
+    entries = [
+        e for e in list_queue_entries(cluster.storage, "default")
+        if e.startswith("step-parent")
+    ]
+    assert entries == [trigger_entry_id("step-parent", "child")]
+    versions = cluster.storage.list_keys(
+        f"d/{trigger_key('default', entries[0])}/"
+    )
+    assert len(versions) == 1
+    cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# consumer: claim, drive, dedup
+# ---------------------------------------------------------------------------
+
+def test_chain_end_to_end_child_runs_once_with_parent_args():
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool.submit(parent_spec(child)).result(timeout=30)
+        assert consumer.drain(timeout_s=30)
+    assert ran == [{"payload": 41}]  # once, with the producing step's result
+    assert consumer.stats["children_completed"] == 1
+    # the child finished under the entry-derived UUID and was marked done
+    markers = cluster.storage.list_keys("w/")
+    assert any(".chain.child" in m for m in markers)
+    cluster.stop()
+
+
+def test_kill_mid_handoff_replays_exactly_once():
+    """The satellite scenario: the consumer dies between claim and
+    child-start; a later pass (same or different consumer) re-drives, and
+    the child's effects land exactly once."""
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    platform = fast_platform(
+        failure_rate=1.0, failure_sites=("chain:handoff",)
+    )
+    with WorkflowPool(platform, cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool.submit(parent_spec(child)).result(timeout=30)
+        # every handoff dies at the injection site: entry claimed, no child
+        assert consumer.step() == 0
+        assert consumer.stats["handoff_crashes"] == 1
+        assert ran == []
+        # recovery: injection stops (the replacement consumer process)
+        platform.config.failure_rate = 0.0
+        assert consumer.drain(timeout_s=30)
+    assert ran == [{"payload": 41}]
+    cluster.stop()
+
+
+def test_pool_restart_replay_after_claim_runs_child_once():
+    """Crash between claim and child-start, then a POOL RESTART: the new
+    consumer (different consumer id) takes over the stale claim and the
+    child still runs exactly once."""
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    platform1 = fast_platform(
+        failure_rate=1.0, failure_sites=("chain:handoff",)
+    )
+    with WorkflowPool(platform1, cluster=cluster) as pool1:
+        consumer1 = pool1.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool1.submit(parent_spec(child), uuid="restart-parent").result(30)
+        consumer1.step()  # claims, then dies mid-handoff
+        assert consumer1.stats["handoff_crashes"] == 1
+    assert ran == []
+
+    # fresh process: new pool, new consumer identity
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool2:
+        consumer2 = pool2.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        assert consumer2.drain(timeout_s=30)
+        assert consumer2.stats["claims_taken_over"] == 1
+    assert ran == [{"payload": 41}]
+
+    # a third replay finds the finish marker and never re-drives
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool3:
+        consumer3 = pool3.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        assert consumer3.drain(timeout_s=30)
+        assert consumer3.stats["already_finished_skips"] >= 1
+        assert consumer3.stats["children_started"] == 0
+    assert len(ran) == 1
+    cluster.stop()
+
+
+def test_two_consumers_racing_drive_child_effects_once():
+    """Claim dedup across racing consumers: both may observe the entry, but
+    the child's read-modify-write effect lands exactly once."""
+    cluster = make_cluster()
+    spec_child = WorkflowSpec("bump")
+
+    def bump(ctx):
+        raw = ctx.get("race/cnt")
+        count = int(raw) if raw else 0
+        ctx.put("race/cnt", str(count + 1).encode())
+        return count + 1
+
+    spec_child.step("bump", bump)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        c1 = pool.attach_chain_consumer(
+            {"bump": spec_child},
+            consumer_cfg(reclaim_after_s=60.0), start=False,
+        )
+        c2 = pool.attach_chain_consumer(
+            {"bump": spec_child},
+            consumer_cfg(reclaim_after_s=60.0), start=False,
+        )
+        parent = WorkflowSpec("race-parent")
+        parent.step("p", lambda ctx: 1)
+        parent.trigger(Trigger(spec_child))
+        pool.submit(parent).result(timeout=30)
+        threads = [
+            threading.Thread(target=c.step) for c in (c1, c2) for _ in range(2)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for c in (c1, c2):
+            c.drain(timeout_s=30)
+        started = (
+            c1.stats["children_started"] + c2.stats["children_started"]
+        )
+        # dedup may allow a redundant idempotent drive, never a lost one
+        assert started >= 1
+    node = cluster.live_nodes()[0]
+    tx = node.start_transaction()
+    assert node.get(tx, "race/cnt") == b"1"
+    node.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_n_deep_chain_via_registry_factory():
+    """A 4-deep pipeline where each level triggers the next through the
+    registry's factory form; every level runs exactly once, in order."""
+    cluster = make_cluster()
+    ran = []
+    depth = 4
+
+    def level_factory(args):
+        level = (args or {}).get("level", 0)
+        spec = WorkflowSpec("level")
+
+        def body(ctx, level=level):
+            ran.append(level)
+            ctx.put(f"deep/eff/{level}", str(level).encode())
+            return {"level": level + 1}
+
+        spec.step("body", body)
+        if level + 1 < depth:
+            spec.trigger(Trigger("level", args_from="body"))
+        return spec
+
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"level": level_factory}, consumer_cfg(), start=False
+        )
+        root = WorkflowSpec("root")
+        root.step("seed", lambda ctx: {"level": 0})
+        root.trigger(Trigger("level", args_from="seed"))
+        pool.submit(root).result(timeout=30)
+        assert consumer.drain(timeout_s=60)
+    assert ran == [0, 1, 2, 3]
+    cluster.stop()
+
+
+def test_unscoped_handoff_baseline_duplicates_on_retry():
+    """TxnScope.NONE: a retried parent enqueues a fresh entry per attempt —
+    the duplicate-fire anomaly the durable queue eliminates."""
+    storage = MemoryStorage()
+    remaining = [1]
+    spec = WorkflowSpec("unscoped-parent")
+
+    def flaky(ctx):
+        ctx.put("un/effect", b"x")
+        if remaining[0] > 0:
+            remaining[0] -= 1
+            raise FunctionFailure("post-effect crash")
+        return 1
+
+    spec.step("p", flaky)
+    spec.trigger(Trigger("child"))
+    ex = WorkflowExecutor(
+        fast_platform(), storage=storage,
+        config=WorkflowConfig(scope=TxnScope.NONE, memoize=False,
+                              max_attempts=4),
+    )
+    ex.run(spec, uuid="un-parent")
+    # stage_triggers ran once... but a lost-ack re-drive stages again with a
+    # fresh suffix: nothing dedups the unscoped handoff
+    ex.run(spec, uuid="un-parent")
+    entries = storage.list_keys(trigger_key("default",
+                                            trigger_entry_id("un-parent",
+                                                             "child")))
+    assert len(entries) == 2  # duplicate triggers — the baseline anomaly
+    storage.delete_batch(entries)
+
+
+# ---------------------------------------------------------------------------
+# claim bookkeeping details
+# ---------------------------------------------------------------------------
+
+def test_claim_is_deterministic_and_write_once():
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool.submit(parent_spec(child), uuid="claim-parent").result(30)
+        assert consumer.drain(timeout_s=30)
+    entry_id = trigger_entry_id("claim-parent", "child")
+    storage = cluster.storage
+    # exactly one claim commit, under the deterministic claim UUID
+    assert storage.get(f"{UUID_PREFIX}{claim_txn_uuid(entry_id)}") is not None
+    claim_commits = [
+        k for k in storage.list_keys(COMMIT_PREFIX)
+        if k.endswith(f".{entry_id}.claim") or claim_txn_uuid(entry_id) in k
+    ]
+    assert len(claim_commits) == 1
+    cluster.stop()
+
+
+def test_unknown_workflow_entry_parked_not_reclaimed_every_pass():
+    """An entry whose spec name is missing from the registry is parked
+    after one look — no claim transaction per poll pass, no unbounded
+    unknown_workflows growth."""
+    cluster = make_cluster()
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer({}, consumer_cfg(), start=False)
+        parent = WorkflowSpec("orphan-parent")
+        parent.step("p", lambda ctx: 1)
+        parent.trigger(Trigger("no-such-spec"))
+        pool.submit(parent).result(timeout=30)
+        for _ in range(5):
+            consumer.step()
+        assert consumer.stats["unknown_workflows"] == 1  # parked after one
+        assert consumer.stats["claims_committed"] == 0   # never claimed it
+    cluster.stop()
+
+
+def test_same_node_racing_claimants_defer_without_killing_shared_txn():
+    """Two consumers whose claim sessions share one deterministic-UUID
+    transaction context: the loser must defer WITHOUT aborting the shared
+    context (which would kill the winner's in-flight claim commit)."""
+    import threading as _threading
+
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumers = [
+            pool.attach_chain_consumer(
+                {"child": child},
+                consumer_cfg(reclaim_after_s=60.0), start=False,
+            )
+            for _ in range(3)
+        ]
+        pool.submit(parent_spec(child), uuid="shared-claim").result(30)
+        barrier = _threading.Barrier(len(consumers))
+
+        def race(c):
+            barrier.wait()
+            c.step()
+
+        threads = [_threading.Thread(target=race, args=(c,))
+                   for c in consumers]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for c in consumers:
+            c.drain(timeout_s=30)
+        # nobody miscounted an abort-kill as a handoff crash, and the entry
+        # was driven (claims resolved, not mutually destroyed)
+        assert sum(c.stats["handoff_crashes"] for c in consumers) == 0
+        assert sum(c.stats["children_started"] for c in consumers) >= 1
+    assert ran == [{"payload": 41}]
+    cluster.stop()
+
+
+def test_spilled_trigger_entry_still_discovered_and_driven():
+    """A saturated parent's write buffer spills the trigger entry to a
+    uuid-derived storage key (§3.3) — only the commit record's storage-key
+    map addresses it.  Discovery and payload reads must still find it, or
+    a spilling parent's committed trigger would silently drop the chain."""
+    from repro.core import AftNodeConfig
+
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(
+            num_nodes=1,
+            start_background_threads=False,
+            # every buffered byte saturates: ALL writes spill
+            node=AftNodeConfig(write_buffer_max_bytes=1),
+        ),
+    )
+    ran = []
+    child = child_spec(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool.submit(parent_spec(child), uuid="spill-parent").result(30)
+        entry_id = trigger_entry_id("spill-parent", "child")
+        # the entry bytes really did land at a spill key, not the default
+        prefix = f"d/{trigger_key('default', entry_id)}/"
+        skeys = cluster.storage.list_keys(prefix)
+        assert any("/.spill/" in k for k in skeys)
+        assert list_queue_entries(cluster.storage, "default") == [entry_id]
+        assert consumer.drain(timeout_s=30)
+    assert ran == [{"payload": 41}]
+    cluster.stop()
+
+
+def test_raising_factory_parks_entry_like_unknown_spec():
+    """A registry factory that raises is as unresolvable as a missing name:
+    the entry is parked after one look, not hot-looped as crashes."""
+    cluster = make_cluster()
+
+    def bad_factory(args):
+        raise KeyError("factory expects args it never gets")
+
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": bad_factory}, consumer_cfg(), start=False
+        )
+        parent = WorkflowSpec("bad-factory-parent")
+        parent.step("p", lambda ctx: 1)
+        parent.trigger(Trigger("child"))
+        pool.submit(parent).result(timeout=30)
+        for _ in range(5):
+            consumer.step()
+        assert consumer.stats["unknown_workflows"] == 1
+        assert consumer.stats["handoff_crashes"] == 0
+        assert consumer.stats["claims_committed"] == 0
+    cluster.stop()
+
+
+def test_marker_ack_gate_not_vacuous_when_all_nodes_dead():
+    """An empty live set must not satisfy the ack gate: only the hard
+    cutoff may retire markers while every node is down (the replacement's
+    agent still needs the marker's GC license)."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(parent_spec(child_spec([])), uuid="dead-wf")
+    for node in cluster.live_nodes():
+        node.fail()
+    fm = cluster.fault_manager
+    fm.config.workflow_marker_ttl_s = 0.0
+    assert fm.sweep_finished_markers() == 0  # no live acks ⇒ no retirement
+    fm.config.workflow_marker_max_ttl_s = 0.0
+    assert fm.sweep_finished_markers() == 1  # hard cutoff still works
+    cluster.stop()
+
+
+def test_raised_soft_ttl_does_not_disable_ack_gating():
+    """workflow_marker_ttl_s above the default max backstop must not
+    silently revert to TTL-only retirement: the hard cutoff tracks
+    max(soft, hard)."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(parent_spec(child_spec([])), uuid="slow-wf")
+    fm = cluster.fault_manager
+    # a "raised" soft TTL (negative = already elapsed, the test-time stand-in
+    # for a large value that has passed) with the DEFAULT backstop: the hard
+    # cutoff is soft + backstop, so the ack gate stays in force
+    fm.config.workflow_marker_ttl_s = -10.0
+    assert fm.sweep_finished_markers() == 0
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    assert fm.sweep_finished_markers() == 1
+    cluster.stop()
+
+
+def test_pool_dedupes_chain_child_whose_marker_already_exists():
+    """Check-then-act closure: if a rival drive finished (and possibly
+    GC'd) the child between the consumer's marker check and attempt start,
+    the pool must resolve the ticket WITHOUT running any bodies — re-running
+    after the u/-index sweep would re-commit under STEP scope."""
+    from repro.workflow import MemoStore
+
+    cluster = make_cluster()
+    MemoStore(cluster).mark_finished("rivaled-entry")  # rival won already
+    ran = []
+    spec = WorkflowSpec("child")
+    spec.step("consume", lambda ctx: ran.append(1) or 1)
+    with WorkflowPool(
+        fast_platform(), cluster=cluster,
+        config=PoolConfig(scope=TxnScope.STEP),
+    ) as pool:
+        r = pool.submit(
+            spec, uuid="rivaled-entry",
+            chain_entry={"queue": "default", "entry": "rivaled-entry"},
+        ).result(timeout=30)
+    assert ran == []                 # no body ran, no re-commit possible
+    assert r.steps_run == 0
+    assert r.deduped                 # callers can tell this from a real run
+    assert pool.stats["already_finished_dedups"] == 1
+    cluster.stop()
+
+
+def test_quarantined_chain_marker_still_reclaims_queue_entry():
+    """Losing a chain child's marker payload (quarantine) must not leak its
+    queue entry forever: the sweep falls back to locating the entry by the
+    child uuid it IS."""
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child}, consumer_cfg(), start=False
+        )
+        pool.submit(parent_spec(child), uuid="quar-chain").result(timeout=30)
+        assert consumer.drain(timeout_s=30)
+    storage = cluster.storage
+    entry_id = trigger_entry_id("quar-chain", "child")
+    # bit-rot the child's marker BEFORE any sweep: provenance lost
+    storage.put(workflow_finish_key(entry_id), b"\x00garbage")
+    cluster.fault_manager.sweep_finished_markers()  # quarantines it
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    assert storage.list_keys("d/q/") == []  # entry reclaimed regardless
+    cluster.stop()
+
+
+def test_resume_eligible_redrive_of_finished_uuid_never_reruns_bodies():
+    """The attempt-start marker guard covers ANY explicit-uuid resubmit,
+    not just chain children: a crashed client re-driving a finished (and
+    GC-swept) STEP-scope uuid must not re-commit its steps."""
+    cluster = make_cluster()
+    ran = []
+    spec = WorkflowSpec("redrive-guard")
+    spec.step("bump", lambda ctx: ran.append(1) or 1)
+    cfg = PoolConfig(scope=TxnScope.STEP)
+    with WorkflowPool(fast_platform(), cluster=cluster, config=cfg) as pool:
+        pool.submit(spec, uuid="rg-wf").result(timeout=30)
+    assert ran == [1]
+    LocalGcAgent(cluster.live_nodes()[0]).step()  # memos + u/ entries gone
+    with WorkflowPool(fast_platform(), cluster=cluster, config=cfg) as pool:
+        r = pool.submit(spec, uuid="rg-wf").result(timeout=30)
+    assert ran == [1]  # body did NOT re-run
+    assert pool.stats["already_finished_dedups"] == 1
+    assert r.steps_run == 0
+    cluster.stop()
+
+
+def test_trigger_validation_rejects_bad_queue_names():
+    spec = WorkflowSpec("badq")
+    spec.step("a", lambda ctx: 1)
+    spec.trigger(Trigger("x", queue="a/b"))
+    with pytest.raises(WorkflowSpecError):
+        spec.validate()

@@ -307,6 +307,99 @@ def test_multi_node_caches_purge_memo_records():
     cluster.stop()
 
 
+def test_marker_retirement_waits_for_every_nodes_gc_agent():
+    """Regression: TTL-only retirement raced slow GC agents.  With two
+    nodes, the marker must survive until BOTH agents have consumed it —
+    deleting earlier would orphan the slow node's view (and, before the
+    fix, the memo records themselves if no agent ever swept)."""
+    cluster = make_cluster(nodes=2)
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(crashy_chain(crashes=0), uuid="ack-wf")
+    # propagate the memo commits to both nodes' caches (two multicast
+    # passes: send, then deliver)
+    for _ in range(2):
+        for agent in cluster.agents.values():
+            agent.step()
+    fm = cluster.fault_manager
+    fm.config.workflow_marker_ttl_s = 0.0
+
+    # age gate passed, but NO agent has swept yet: the marker must survive
+    assert fm.sweep_finished_markers() == 0
+    assert len(cluster.storage.list_keys(f"{WF_FINISH_PREFIX}ack-wf")) == 1
+
+    nodes = cluster.live_nodes()
+    cluster.gc_agents[nodes[0].node_id].step()
+    # one of two nodes acked: still not retirable
+    assert fm.sweep_finished_markers() == 0
+    assert len(cluster.storage.list_keys(f"{WF_FINISH_PREFIX}ack-wf")) == 1
+
+    cluster.gc_agents[nodes[1].node_id].step()
+    assert fm.sweep_finished_markers() == 1
+    fm.deleter.drain()
+    assert cluster.storage.list_keys(f"{WF_FINISH_PREFIX}ack-wf") == []
+    # both nodes purged their caches before the marker went away
+    for node in nodes:
+        assert node.committed_tid_for_uuid("ack-wf.memo.a") is None
+    cluster.stop()
+
+
+def test_marker_hard_ttl_backstop_retires_without_acks():
+    """A node whose agent never runs must not pin markers forever: past
+    workflow_marker_max_ttl_s the marker retires unacked (bounded-staleness
+    escape hatch, the pre-fix behavior as a backstop)."""
+    cluster = make_cluster(nodes=2)
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(crashy_chain(crashes=0), uuid="cap-wf")
+    fm = cluster.fault_manager
+    fm.config.workflow_marker_ttl_s = 0.0
+    fm.config.workflow_marker_max_ttl_s = 0.0
+    assert fm.sweep_finished_markers() == 1  # no acks, but past the hard cap
+    cluster.stop()
+
+
+def test_unparsable_marker_quarantined_not_deleted():
+    """Regression: an unparsable marker was treated as ancient and deleted
+    immediately — before any agent could consume it, orphaning the
+    workflow's memo records forever.  Now it is re-stamped (quarantined)
+    and follows the ordinary ack-gated path, so the memos still get
+    reclaimed."""
+    cluster = make_cluster()
+    ex = WorkflowExecutor(
+        fast_platform(), cluster=cluster,
+        config=WorkflowConfig(declare_finished=True),
+    )
+    ex.run(crashy_chain(crashes=0), uuid="quar-wf")
+    storage = cluster.storage
+    marker = f"{WF_FINISH_PREFIX}quar-wf"
+    storage.put(marker, b"\x00 not json")  # bit-rotted payload
+    fm = cluster.fault_manager
+    fm.config.workflow_marker_ttl_s = 0.0
+
+    assert fm.sweep_finished_markers() == 0
+    fm.deleter.drain()
+    # still present, now with a parsable quarantine payload
+    raw = storage.get(marker)
+    assert raw is not None
+    assert json.loads(raw)["quarantined"] is True
+    assert fm.stats["finish_markers_quarantined"] == 1
+
+    # the GC license survived: the agent reclaims the memos, acks, and only
+    # then does the marker retire
+    agent = LocalGcAgent(cluster.live_nodes()[0])
+    agent.step()
+    assert memo_keys(storage, "quar-wf")["wf_data"] == []
+    assert fm.sweep_finished_markers() == 1
+    fm.deleter.drain()
+    assert storage.get(marker) is None
+    cluster.stop()
+
+
 def test_fault_manager_prunes_deleted_memo_records():
     """After the node-side sweep deletes memo commit records from storage,
     the fault manager's aggregate (unpruned) view drops them too — otherwise
@@ -335,4 +428,128 @@ def test_fault_manager_prunes_deleted_memo_records():
         if all(k.startswith(MEMO_PREFIX) for k in r.write_set)
     ]
     assert memo_records == []
+    cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# chaining × GC (workflow/chain.py: the q/ trigger queue rides the sweep)
+# ---------------------------------------------------------------------------
+
+def _chain_pair(ran):
+    """parent --on_commit--> child; child records its runs in ``ran``."""
+    from repro.workflow import Trigger
+
+    child = WorkflowSpec("child")
+
+    def consume(ctx):
+        ran.append(ctx.args)
+        ctx.put("cg/child-effect", b"ok")
+        return ctx.args
+
+    child.step("consume", consume)
+    parent = WorkflowSpec("parent")
+    parent.step("produce", lambda ctx: ctx.put("cg/parent-effect", b"p") or 7)
+    parent.trigger(Trigger(child, args_from="produce"))
+    return parent, child
+
+
+def test_consumed_chain_entry_reclaimed_with_child_marker():
+    """A finished child's trigger entry, claim versions, and claim/enqueue
+    bookkeeping transactions are reclaimed by the marker sweep — the queue
+    footprint plateaus like the memo footprint does."""
+    from repro.core.records import TRIGGER_PREFIX, claim_txn_uuid
+    from repro.workflow import ChainConsumerConfig, list_queue_entries
+
+    cluster = make_cluster()
+    storage = cluster.storage
+    ran = []
+    parent, child = _chain_pair(ran)
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child},
+            ChainConsumerConfig(reclaim_after_s=0.0), start=False,
+        )
+        pool.submit(parent, uuid="cgc-parent").result(timeout=30)
+        assert consumer.drain(timeout_s=30)
+    assert ran == [7]
+    entry_id = "cgc-parent.chain.child"
+    assert list_queue_entries(storage, "default") == [entry_id]
+    assert storage.get(f"{UUID_PREFIX}{claim_txn_uuid(entry_id)}") is not None
+
+    node = cluster.live_nodes()[0]
+    LocalGcAgent(node).step()
+
+    # entry + claim versions gone, claim bookkeeping gone
+    assert list_queue_entries(storage, "default") == []
+    assert storage.list_keys(f"{DATA_PREFIX}{TRIGGER_PREFIX}") == []
+    assert storage.get(f"{UUID_PREFIX}{claim_txn_uuid(entry_id)}") is None
+    assert [
+        k for k in storage.list_keys(COMMIT_PREFIX) if ".claim" in k
+    ] == []
+    # node cache purged of the claim transaction
+    assert node.committed_tid_for_uuid(claim_txn_uuid(entry_id)) is None
+    # both workflows' memo state reclaimed; their own commits survive
+    assert memo_keys(storage, "cgc-parent")["wf_data"] == []
+    assert memo_keys(storage, entry_id)["wf_data"] == []
+    # the child's durable effects are untouched
+    fresh = AftNode(storage, AftNodeConfig(node_id="fresh-chain"))
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "cg/child-effect") == b"ok"
+    fresh.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_chain_trigger_replay_after_memo_sweep_runs_child_once():
+    """The ISSUE-4 satellite scenario end to end: parent commits, its memo
+    records are swept, then the CLAIMED trigger replays after a pool
+    restart — the child must run exactly once."""
+    from repro.workflow import ChainConsumerConfig
+
+    cluster = make_cluster()
+    storage = cluster.storage
+    ran = []
+    parent, child = _chain_pair(ran)
+    platform = LambdaPlatform(FaasConfig(
+        time_scale=0.0, failure_rate=1.0, failure_sites=("chain:handoff",)
+    ))
+    with WorkflowPool(platform, cluster=cluster) as pool:
+        consumer = pool.attach_chain_consumer(
+            {"child": child},
+            ChainConsumerConfig(reclaim_after_s=0.0), start=False,
+        )
+        pool.submit(parent, uuid="replay-parent").result(timeout=30)
+        consumer.step()  # claims the entry, dies mid-handoff
+        assert consumer.stats["handoff_crashes"] == 1
+    assert ran == []
+
+    # parent finished → its memo records are swept; the claimed-but-undriven
+    # entry must SURVIVE the sweep (it is licensed by the child's marker,
+    # which does not exist yet)
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    assert memo_keys(storage, "replay-parent")["wf_data"] == []
+    entries = storage.list_keys("d/q/default/replay-parent.chain.child/")
+    assert len(entries) >= 1
+
+    # pool restart: a fresh consumer takes over the stale claim
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool2:
+        consumer2 = pool2.attach_chain_consumer(
+            {"child": child},
+            ChainConsumerConfig(reclaim_after_s=0.0), start=False,
+        )
+        assert consumer2.drain(timeout_s=30)
+        assert consumer2.stats["children_completed"] == 1
+
+    # a further replay skips: the finish marker is the never-again fence
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool3:
+        consumer3 = pool3.attach_chain_consumer(
+            {"child": child},
+            ChainConsumerConfig(reclaim_after_s=0.0), start=False,
+        )
+        assert consumer3.drain(timeout_s=30)
+        assert consumer3.stats["children_started"] == 0
+    assert ran == [7]
+
+    # and the sweep now reclaims the consumed entry too
+    LocalGcAgent(cluster.live_nodes()[0]).step()
+    assert storage.list_keys("d/q/") == []
     cluster.stop()

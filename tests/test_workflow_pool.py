@@ -481,3 +481,165 @@ def test_pool_declares_finished_workflows():
     uuids = {m[len(WF_FINISH_PREFIX):] for m in markers}
     assert uuids == {r.workflow_uuid for r in results}
     cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# late memo hits (rival re-drives) must not pollute the adaptive batcher
+# ---------------------------------------------------------------------------
+
+def test_late_rival_memo_skips_body_and_counts_as_memoized():
+    """A rival attempt (e.g. a replayed chain trigger) commits a step's memo
+    AFTER this attempt's load_all: the dispatch-time probe must replay the
+    memo instead of re-running the body."""
+    import time as _time
+
+    from repro.workflow import MemoStore
+    from repro.workflow.txn import encode_memo
+
+    cluster = make_cluster()
+    memo_store = MemoStore(cluster)
+    ran = {"a": 0, "b": 0}
+
+    spec = WorkflowSpec("rival")
+
+    def step_a(ctx):
+        ran["a"] += 1
+        # the rival lands b's memo while a is still executing — after this
+        # run's load_all, before b's dispatch
+        memo_store.save(
+            ctx.workflow_uuid, "b", encode_memo("rival-result", {})
+        )
+        return "a"
+
+    def step_b(ctx):
+        ran["b"] += 1
+        return "local-result"
+
+    spec.step("a", step_a)
+    spec.step("b", step_b, deps=["a"])
+
+    with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+        # an explicit uuid marks the run resume-eligible (re-drives race)
+        r = pool.submit(spec, uuid="rival-wf").result(timeout=30)
+    assert ran == {"a": 1, "b": 0}          # b's body never ran
+    assert r.results["b"] == "rival-result"  # the rival's result fed through
+    assert r.steps_memoized == 1
+    assert pool.stats["late_memo_hits"] == 1
+    cluster.stop()
+
+
+def test_batch_target_survives_memo_hit_resume_burst():
+    """Regression: memo-hit 'steps' return in microseconds; feeding them
+    into the step-latency EWMA during a resume burst drags the modeled
+    latency toward zero and pins batch_target at adaptive_batch_max.  With
+    the guard, the gauge tracks the REAL bodies (slow here → small target)."""
+    import time as _time
+
+    from repro.workflow import MemoStore
+    from repro.workflow.txn import encode_memo
+
+    cluster = make_cluster()
+    memo_store = MemoStore(cluster)
+    # measurable invoke overhead vs. slow bodies ⇒ the model wants SMALL
+    # batches; 30+ near-zero memo-hit samples would say the opposite
+    platform = LambdaPlatform(
+        FaasConfig(time_scale=0.02, warm_latency_ms=50.0, latency_sigma=0.0)
+    )
+
+    def burst_spec(i):
+        spec = WorkflowSpec(f"burst{i}")
+
+        def real(ctx):
+            # rival-memoize every downstream step while the real body runs
+            for name in ("m1", "m2", "m3"):
+                memo_store.save(
+                    ctx.workflow_uuid, name, encode_memo(name, {})
+                )
+            _time.sleep(0.002)
+            return "real"
+
+        prev = spec.step("real", real)
+        for name in ("m1", "m2", "m3"):
+            def body(ctx):
+                return "never-runs"
+            prev = spec.step(name, body, deps=[prev])
+        return spec
+
+    cfg = PoolConfig(max_inflight_steps=64)
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [
+            pool.submit(burst_spec(i), uuid=f"burst-{i}") for i in range(10)
+        ]
+        results = [t.result(timeout=60) for t in tickets]
+    assert sum(r.steps_memoized for r in results) == 30  # the burst was real
+    # the gauge reflects the 2ms real bodies against ~1ms overhead (target
+    # ≈ 2), not the microsecond memo hits (which would clamp it to max)
+    assert pool.stats["batch_target"] <= 8
+    assert pool.stats["batch_target"] < cfg.adaptive_batch_max
+    cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# site-scoped fault injection inside batched invocations
+# ---------------------------------------------------------------------------
+
+def test_invoke_batch_evaluates_injection_per_thunk():
+    """Regression: batched execution used to dodge invocation-level
+    injection entirely.  Each thunk is its own failure candidate, and a
+    killed thunk doesn't take down the rest of the batch."""
+    platform = fast_platform(
+        failure_rate=1.0, failure_sites=("invoke:batch",)
+    )
+    ran = []
+    thunks = [lambda i=i: ran.append(i) or i for i in range(4)]
+    out = platform.invoke_batch(thunks)
+    assert ran == []                       # every slot died before its body
+    assert platform.failures_injected == 4  # per-thunk, counted accurately
+    assert all(isinstance(x, FunctionFailure) for x in out)
+
+    # partial injection: survivors still run, in order
+    platform2 = fast_platform(
+        failure_rate=0.5, failure_sites=("invoke:batch",), seed=3
+    )
+    ran2 = []
+    out2 = platform2.invoke_batch([lambda i=i: ran2.append(i) or i
+                                   for i in range(20)])
+    survivors = [x for x in out2 if not isinstance(x, FunctionFailure)]
+    assert 0 < len(survivors) < 20
+    assert ran2 == survivors
+
+
+def test_pool_exactly_once_under_invoke_batch_injection():
+    """The pool under invocation-level kills: steps die before their bodies
+    run, workflows retry, effects land exactly once, and the platform's
+    injection counters prove batched mode no longer dodges the hazard."""
+    cluster = make_cluster()
+    platform = fast_platform(
+        failure_rate=0.2, failure_sites=("invoke:batch",), seed=7
+    )
+    n = 60
+    with WorkflowPool(
+        platform, cluster=cluster, config=PoolConfig(max_attempts=30)
+    ) as pool:
+        results = pool.run_all([counter_spec(i) for i in range(n)],
+                               timeout=120)
+    assert platform.failures_injected > 0   # the hazard actually fired
+    assert any(r.attempts > 1 for r in results)
+    assert pool.stats["workflow_retries"] > 0
+    node = cluster.live_nodes()[0]
+    tx = node.start_transaction()
+    for i in range(n):
+        assert json.loads(node.get(tx, f"cnt/{i}"))["count"] == 1
+    node.abort_transaction(tx)
+    cluster.stop()
+
+
+def test_executor_submit_path_respects_invoke_site():
+    """The unbatched path exposes the matching invoke:single site."""
+    platform = fast_platform(
+        failure_rate=1.0, failure_sites=("invoke:single",)
+    )
+    import pytest as _pytest
+    with _pytest.raises(FunctionFailure):
+        platform.invoke(lambda: 1)
+    assert platform.failures_injected == 1
