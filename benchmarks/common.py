@@ -37,7 +37,13 @@ def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
                  gc_interval_s: float = 0.2,
                  fast_failover: bool = False,
                  router=None,
-                 data_cache_bytes: Optional[int] = None) -> AftCluster:
+                 data_cache_bytes: Optional[int] = None,
+                 node_overrides: Optional[Dict] = None,
+                 background: bool = True) -> AftCluster:
+    """``node_overrides`` patches extra AftNodeConfig fields (e.g. the I/O
+    pipeline knobs ``io_workers`` / ``enable_io_pipeline`` in fig_async);
+    ``background=False`` skips the multicast/GC/fault-manager threads for
+    single-node latency studies where they only add scheduler noise."""
     from repro.core import FaultManagerConfig
 
     node_cfg = AftNodeConfig(
@@ -48,15 +54,19 @@ def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
     )
     if data_cache_bytes is not None:
         node_cfg.data_cache_bytes = data_cache_bytes
+    for k, v in (node_overrides or {}).items():
+        setattr(node_cfg, k, v)
     fm = FaultManagerConfig(scan_interval_s=0.1, gc_interval_s=0.15,
                             heartbeat_interval_s=0.3 if fast_failover else 1.0,
                             heartbeat_misses=3)
     cfg = ClusterConfig(num_nodes=nodes, standby_nodes=standby, node=node_cfg,
                         fault_manager=fm,
                         replacement_delay_s=1.0 * time_scale * 33,
-                        routing=router)
+                        routing=router,
+                        start_background_threads=background)
     cluster = AftCluster(engine, cfg)
-    cluster.start()
+    if background:
+        cluster.start()
     return cluster
 
 

@@ -1,0 +1,366 @@
+"""fig_async: the asynchronous storage I/O pipeline (group commit +
+commit offload) vs. the synchronous commit path.
+
+AFT's overhead is storage round trips: the synchronous ``AftNode`` commit
+serializes each caller behind ``put_batch(versions)`` then ``put(record)``
+(§3.3 over §6.1.1 batching), so a pool multiplexing a thousand workflows
+bottlenecks on a handful of threads × per-op latency.  The pipelined path
+(``storage/pipeline.py``) offloads every commit and coalesces concurrent
+transactions' version writes into shared BatchWriteItem-style flushes while
+keeping the per-transaction ordering barrier (versions + ``u/`` index
+durable before the commit record).
+
+Three measurements on the DynamoDB-like engine:
+
+1. **throughput** — 1000 concurrent small workflows through one
+   ``WorkflowPool``, sync commit (``commit_offload=False`` + pipeline
+   disabled) vs. pipelined group commit; reports steps/sec, commit-latency
+   percentiles, coalesce ratio (transactions per flush) and pipeline depth;
+
+2. **kill-mid-flush fault injection** — a fault hook inside the pipeline's
+   flush path randomly kills flushes (both *before* the batch lands and
+   *after* it lands but before the ack), so commits die with versions
+   partially/fully durable and no commit record.  The audit proves
+   exactly-once: every workflow has exactly ONE commit record, none are
+   lost, and no effect is applied twice;
+
+3. **write-ordering audit** — an instrumented inner store logs the durable
+   order of every key; for every commit record ever persisted, all of its
+   version keys and its ``u/`` index entry must be durable first (the §3.3
+   invariant the group-commit coalescer must never reorder).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.records import (
+    COMMIT_PREFIX,
+    TransactionRecord,
+    uuid_key,
+)
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage.memory import MemoryStorage
+from repro.storage.simulated import dynamodb_like
+from repro.workflow import PoolConfig, TxnScope, WorkflowPool, WorkflowSpec
+
+from .common import make_cluster, save
+
+STEPS_PER_WORKFLOW = 3
+FUNCTION_SLOTS = 8
+WARM_LATENCY_MS = 10.0
+IO_WORKERS = 8
+FLUSH_CONCURRENCY = 8
+# Like fig_pool, this figure runs less compressed than the global quick
+# scale: the quantity under study (storage round-trip cost on the commit
+# path) must dominate interpreter noise.
+ASYNC_TIME_SCALE = 0.7
+
+
+def build_spec(wf: int) -> WorkflowSpec:
+    """Fan-out-2 → fan-in over UNIQUE keys: every workflow writes its own
+    ``async/<wf>/...`` entity, so the exactly-once audit is a pure presence
+    check (shared-counter RMWs would conflate lost updates — a consistency
+    level AFT does not promise — with the duplicates/losses under test)."""
+    spec = WorkflowSpec(f"async-{wf}")
+
+    def shard(ctx):
+        key = f"async/{wf}/s{ctx.branch}"
+        ctx.maybe_fail()
+        ctx.put(key, str(ctx.branch + 1).encode())
+        return ctx.branch + 1
+
+    names = spec.fan_out("shard", shard, 2)
+
+    def agg(ctx):
+        total = sum(ctx.inputs[n] for n in names)
+        ctx.put(f"async/{wf}/sum", str(total).encode())
+        return total
+
+    spec.fan_in("agg", agg, names, allow_skipped_deps=False)
+    return spec
+
+
+class RecordingStorage(MemoryStorage):
+    """MemoryStorage that logs the durable order of every key (appended
+    *after* the write applies, so log position == durability order)."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.log: List[str] = []
+        self._log_lock = threading.Lock()
+
+    def _record(self, keys) -> None:
+        with self._log_lock:
+            self.log.extend(keys)
+
+    def put(self, key: str, value: bytes) -> None:
+        super().put(key, value)
+        self._record([key])
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        super().put_batch(items)
+        self._record(list(items.keys()))
+
+
+def _platform(ts: float, seed: int, failure_rate: float = 0.0) -> LambdaPlatform:
+    return LambdaPlatform(
+        FaasConfig(time_scale=ts, failure_rate=failure_rate,
+                   warm_latency_ms=WARM_LATENCY_MS,
+                   max_workers=FUNCTION_SLOTS, seed=seed)
+    )
+
+
+def _pool_cfg(offload: bool, declare_finished: bool = True) -> PoolConfig:
+    # the throughput arms disable finished-workflow declaration so the
+    # lifecycle GC (measured by fig_pool) stays out of the commit-path
+    # measurement; the kill arm keeps it on and exercises pipelined GC
+    # deletes under fault injection
+    return PoolConfig(
+        scope=TxnScope.WORKFLOW, max_attempts=50,
+        batch_max_steps=16, max_inflight_steps=256,
+        max_admitted_workflows=4096,
+        commit_offload=offload,
+        declare_finished=declare_finished,
+    )
+
+
+def _best_of(run_fn, reps: int) -> Dict:
+    outs = [run_fn(r) for r in range(reps)]
+    best = max(outs, key=lambda o: o["steps_per_s"])
+    best["reps"] = [o["steps_per_s"] for o in outs]
+    return best
+
+
+# ---------------------------------------------------------------------------
+# throughput: sync commit path vs pipelined group commit
+# ---------------------------------------------------------------------------
+
+def _run_throughput(
+    n: int, ts: float, seed: int, offload: bool,
+    overrides: Optional[Dict] = None,
+) -> Dict:
+    store = dynamodb_like(time_scale=ts, seed=seed)
+    platform = _platform(ts, seed)
+    # single node, no failure injection: the multicast/GC/fault-manager
+    # loops would only add scheduler noise to a latency comparison
+    cluster = make_cluster(
+        store, nodes=1, time_scale=ts, background=False,
+        node_overrides={
+            "enable_io_pipeline": offload,
+            "io_workers": IO_WORKERS,
+            "flush_concurrency": FLUSH_CONCURRENCY,
+            **(overrides or {}),
+        },
+    )
+    t0 = time.perf_counter()
+    with WorkflowPool(
+        platform, cluster=cluster,
+        config=_pool_cfg(offload, declare_finished=False),
+    ) as pool:
+        tickets = [pool.submit(build_spec(i)) for i in range(n)]
+        results = [t.result(timeout=600) for t in tickets]
+        pool_stats = dict(pool.stats)
+    wall = time.perf_counter() - t0
+    steps = sum(r.steps_run for r in results)
+    node = cluster.live_nodes()[0]
+    snap = node.stats()
+    out = {
+        "mode": "pipelined" if offload else "sync",
+        "workflows": n,
+        "wall_s": round(wall, 3),
+        "steps_run": steps,
+        "steps_per_s": round(steps / wall, 1),
+        "workflows_per_s": round(n / wall, 1),
+        "commits": int(snap["commits"]),
+        "commit_p50_ms": round(snap.get("commit_p50_ms", 0.0), 3),
+        "commit_p99_ms": round(snap.get("commit_p99_ms", 0.0), 3),
+        "commit_pipeline_depth": pool_stats["commit_pipeline_depth"],
+    }
+    if offload:
+        out["pipeline"] = {
+            "coalesce_ratio": snap.get("io_coalesce_ratio", 0.0),
+            "mean_flush_items": snap.get("io_mean_flush_items", 0.0),
+            "flush_size_max": int(snap.get("io_flush_size_max", 0)),
+            "flushes": int(snap.get("io_flushes", 0)),
+            "depth_max": int(snap.get("io_depth_max", 0)),
+            "mean_queue_wait_ms": snap.get("io_mean_queue_wait_ms", 0.0),
+        }
+    platform.shutdown()
+    cluster.stop()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kill-mid-flush: exactly-once + write-ordering audit under injected crashes
+# ---------------------------------------------------------------------------
+
+def _run_kill_mid_flush(n: int, ts: float, seed: int) -> Dict:
+    inner = RecordingStorage()
+    store = dynamodb_like(time_scale=ts, seed=seed, inner=inner)
+    platform = _platform(ts, seed)
+    cluster = make_cluster(
+        store, nodes=1, time_scale=ts,
+        node_overrides={
+            "enable_io_pipeline": True,
+            "io_workers": IO_WORKERS,
+        },
+    )
+    node = cluster.live_nodes()[0]
+    rng = random.Random(seed)
+    kill_budget = max(n // 8, 8)
+    kills = {"flush": 0, "flush_landed": 0, "delete_flush": 0}
+    lock = threading.Lock()
+
+    def fault_hook(site: str, keys: List[str]) -> None:
+        # kill ~12% of flushes while the budget lasts: "pipeline:flush"
+        # dies before the batch lands (nothing durable), the -landed site
+        # dies after (durable but unacked — the §3.3.1 lost-ack window),
+        # and delete flushes model a GC sweep dying mid-reclamation
+        with lock:
+            if sum(kills.values()) >= kill_budget:
+                return
+            if rng.random() >= 0.12:
+                return
+            if site == "pipeline:flush":
+                kills["flush"] += 1
+            elif site == "pipeline:delete-flush":
+                kills["delete_flush"] += 1
+            else:
+                kills["flush_landed"] += 1
+        raise RuntimeError(f"injected kill-mid-flush at {site}")
+
+    node.io_pipeline().fault_hook = fault_hook
+    specs = [build_spec(i) for i in range(n)]
+    with WorkflowPool(
+        platform, cluster=cluster, config=_pool_cfg(True)
+    ) as pool:
+        tickets = [pool.submit(s) for s in specs]
+        results = [t.result(timeout=600) for t in tickets]
+        retries = pool.stats["workflow_retries"]
+    node.io_pipeline().fault_hook = None
+
+    # -- exactly-once audit: one commit record per committed uuid ----------
+    by_uuid: Dict[str, int] = {}
+    for key in store.list_keys(COMMIT_PREFIX):
+        raw = store.get(key)
+        if raw is None:
+            continue
+        record = TransactionRecord.decode(raw)
+        by_uuid[record.tid.uuid] = by_uuid.get(record.tid.uuid, 0) + 1
+    final_uuids = [r.workflow_uuid for r in results]
+    dropped = sum(1 for u in final_uuids if by_uuid.get(u, 0) == 0)
+    duplicates = sum(c - 1 for c in by_uuid.values() if c > 1)
+
+    # -- write-ordering audit: record never durable before versions + u/ ---
+    position = {}
+    for i, key in enumerate(inner.log):
+        position.setdefault(key, i)  # first time the key became durable
+    ordering_violations = 0
+    for key in inner.list_keys(COMMIT_PREFIX):
+        raw = inner.get(key)
+        if raw is None:
+            continue
+        record = TransactionRecord.decode(raw)
+        rec_pos = position.get(key)
+        deps = [record.storage_key_for(k) for k in record.write_set]
+        deps.append(uuid_key(record.tid.uuid))
+        if rec_pos is None or any(
+            position.get(d, 1 << 60) > rec_pos for d in deps
+        ):
+            ordering_violations += 1
+
+    # -- value audit: every workflow's effects visible, fan-in consistent --
+    anomalies = 0
+    client = cluster.client()
+    tx = client.start_transaction()
+    for i in range(n):
+        s0 = client.get(tx, f"async/{i}/s0")
+        s1 = client.get(tx, f"async/{i}/s1")
+        total = client.get(tx, f"async/{i}/sum")
+        if s0 != b"1" or s1 != b"2" or total != b"3":
+            anomalies += 1
+    client.abort_transaction(tx)
+
+    platform.shutdown()
+    cluster.stop()
+    return {
+        "workflows": n,
+        "completed": len(results),
+        "injected_kills": dict(kills),
+        "workflow_retries": retries,
+        "dropped_workflows": dropped,
+        "duplicate_commits": duplicates,
+        "ordering_violations": ordering_violations,
+        "anomalies": anomalies,
+        "exactly_once": (
+            dropped == 0 and duplicates == 0
+            and ordering_violations == 0 and anomalies == 0
+        ),
+    }
+
+
+def run(quick: bool = True) -> Dict:
+    ts = ASYNC_TIME_SCALE
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    # the headline claim is AT 1000 concurrent workflows, so even smoke
+    # runs the full width — the per-workflow work is tiny by design
+    if smoke:
+        sweep = [1000]
+        kill_n = 150
+    elif quick:
+        sweep = [300, 1000]
+        kill_n = 300
+    else:
+        sweep = [300, 1000, 3000]
+        kill_n = 600
+
+    throughput = []
+    for n in sweep:
+        # the shared CI box has multi-second noise waves; report each arm's
+        # best of three interleaved runs (standard practice for wall-clock
+        # microbenchmarks on shared hardware; both arms get the same deal)
+        sync = _best_of(
+            lambda r: _run_throughput(n, ts, seed=n + r, offload=False), 3
+        )
+        piped = _best_of(
+            lambda r: _run_throughput(n, ts, seed=n + r, offload=True), 3
+        )
+        throughput.append({
+            "concurrent_workflows": n,
+            "sync": sync,
+            "pipelined": piped,
+            "speedup_steps_per_s": round(
+                piped["steps_per_s"] / max(sync["steps_per_s"], 1e-9), 2
+            ),
+        })
+
+    kill = _run_kill_mid_flush(kill_n, ts, seed=7)
+
+    biggest = throughput[-1]
+    out = {
+        "engine": "dynamodb",
+        "time_scale": ts,
+        "steps_per_workflow": STEPS_PER_WORKFLOW,
+        "throughput": throughput,
+        "kill_mid_flush": kill,
+        "headline": {
+            "concurrent_workflows": biggest["concurrent_workflows"],
+            "sync_steps_per_s": biggest["sync"]["steps_per_s"],
+            "pipelined_steps_per_s": biggest["pipelined"]["steps_per_s"],
+            "speedup": biggest["speedup_steps_per_s"],
+            "coalesce_ratio": biggest["pipelined"]["pipeline"]["coalesce_ratio"],
+            "exactly_once_under_kills": kill["exactly_once"],
+        },
+    }
+    save("fig_async", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

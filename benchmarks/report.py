@@ -128,11 +128,50 @@ def chain_table() -> str:
     return "\n".join(rows)
 
 
+def io_table() -> str:
+    """Async storage pipeline (figa): sync vs group commit + fault audit."""
+    res = json.loads((RESULTS / "fig_async.json").read_text())
+    rows = ["| commit path | steps/s | speedup | commit p50 ms | p99 ms |",
+            "|---|---|---|---|---|"]
+    for t in res["throughput"]:
+        for mode in ("sync", "pipelined"):
+            r = t[mode]
+            speedup = (t["speedup_steps_per_s"]
+                       if mode == "pipelined" else 1.0)
+            rows.append(
+                f"| {r['mode']} ({t['concurrent_workflows']} wf) | "
+                f"{r['steps_per_s']:.0f} | {speedup:.2f}× | "
+                f"{r['commit_p50_ms']:.2f} | {r['commit_p99_ms']:.1f} |")
+    rows.append("")
+    rows.append("| pipeline gauge | value |")
+    rows.append("|---|---|")
+    pl = res["throughput"][-1]["pipelined"]["pipeline"]
+    for label, key in (("coalesce ratio (txns/flush)", "coalesce_ratio"),
+                       ("mean flush items", "mean_flush_items"),
+                       ("max flush items", "flush_size_max"),
+                       ("flushes", "flushes"),
+                       ("queue depth max", "depth_max"),
+                       ("mean queue wait ms", "mean_queue_wait_ms")):
+        rows.append(f"| {label} | {pl[key]} |")
+    k = res["kill_mid_flush"]
+    rows.append("")
+    rows.append(
+        f"kill-mid-flush: {sum(k['injected_kills'].values())} injected "
+        f"({k['injected_kills']['flush']} pre-land, "
+        f"{k['injected_kills']['flush_landed']} post-land, "
+        f"{k['injected_kills'].get('delete_flush', 0)} gc-delete), "
+        f"{k['workflow_retries']} retries → dropped {k['dropped_workflows']}, "
+        f"duplicates {k['duplicate_commits']}, ordering violations "
+        f"{k['ordering_violations']}, anomalies {k['anomalies']} — "
+        f"exactly-once: {'yes' if k['exactly_once'] else 'NO'}")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "variants",
-                             "routing", "chain"])
+                             "routing", "chain", "io"])
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -160,6 +199,14 @@ def main() -> None:
         except FileNotFoundError:
             table = "(run `python -m benchmarks.run --only figc` first)"
         print("### Cross-workflow chaining (figc: kill-mid-handoff)\n")
+        print(table)
+        print()
+    if args.section in ("all", "io"):
+        try:
+            table = io_table()
+        except FileNotFoundError:
+            table = "(run `python -m benchmarks.run --only figa` first)"
+        print("### Async storage I/O pipeline (figa: group commit)\n")
         print(table)
 
 

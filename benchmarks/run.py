@@ -32,11 +32,12 @@ MODULES = {
     "figp": "benchmarks.fig_pool",
     "figr": "benchmarks.fig_routing",
     "figc": "benchmarks.fig_chain",
+    "figa": "benchmarks.fig_async",
     "ckpt": "benchmarks.ckpt_bench",
 }
 
 # fast, representative subset for CI smoke runs (seconds each)
-SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc"]
+SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc", "figa"]
 
 
 def main() -> int:

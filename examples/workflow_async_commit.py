@@ -1,0 +1,101 @@
+"""Commit offload + group commit through the async storage I/O pipeline.
+
+Runs the same 200 small workflows through one ``WorkflowPool`` twice on a
+DynamoDB-like simulated engine:
+
+* **sync** — the pre-pipeline path: every commit blocks its caller on
+  ``put_batch(versions)`` then ``put(commit_record)``;
+* **pipelined** — ``commit_offload=True`` (the default): commits ride the
+  node's ``StorageIOPipeline``; concurrent transactions' version writes
+  coalesce into shared BatchWriteItem-style flushes and the ticket resolves
+  when the commit future lands.
+
+Then audits exactly-once: every workflow has exactly ONE commit record and
+its effects are readable, and prints the pipeline gauges (coalesce ratio =
+transactions sharing each flush).
+
+Run:  PYTHONPATH=src python examples/workflow_async_commit.py
+"""
+
+import time
+
+from repro.core import AftCluster, AftNodeConfig, ClusterConfig
+from repro.core.records import COMMIT_PREFIX, TransactionRecord
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage.simulated import dynamodb_like
+from repro.workflow import PoolConfig, TxnScope, WorkflowPool, WorkflowSpec
+
+N = 200
+TS = 0.3  # latency compression (see storage/simulated.py)
+
+
+def build_spec(i: int) -> WorkflowSpec:
+    spec = WorkflowSpec(f"order-{i}")
+
+    def reserve(ctx):
+        ctx.put(f"orders/{i}/reserved", b"2")
+        return 2
+
+    def charge(ctx):
+        ctx.put(f"orders/{i}/charged", str(ctx.inputs["reserve"] * 5).encode())
+        return ctx.inputs["reserve"] * 5
+
+    spec.step("reserve", reserve)
+    spec.step("charge", charge, deps=("reserve",))
+    return spec
+
+
+def run_once(offload: bool):
+    store = dynamodb_like(time_scale=TS, seed=7)
+    cluster = AftCluster(store, ClusterConfig(
+        num_nodes=1,
+        node=AftNodeConfig(enable_io_pipeline=offload, io_workers=8,
+                           flush_concurrency=4),
+        start_background_threads=False,
+    ))
+    platform = LambdaPlatform(FaasConfig(time_scale=TS, max_workers=8))
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, commit_offload=offload,
+                     batch_max_steps=16, declare_finished=False)
+    t0 = time.perf_counter()
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [pool.submit(build_spec(i)) for i in range(N)]
+        results = [t.result(timeout=120) for t in tickets]
+    wall = time.perf_counter() - t0
+    node = cluster.live_nodes()[0]
+    snap = node.stats()
+
+    # exactly-once audit: one commit record per workflow, effects readable
+    by_uuid = {}
+    for key in store.list_keys(COMMIT_PREFIX):
+        u = TransactionRecord.decode(store.get(key)).tid.uuid
+        by_uuid[u] = by_uuid.get(u, 0) + 1
+    dupes = sum(c - 1 for c in by_uuid.values())
+    missing = sum(1 for r in results if by_uuid.get(r.workflow_uuid, 0) != 1)
+    client = cluster.client()
+    tx = client.start_transaction()
+    bad = sum(
+        1 for i in range(N)
+        if client.get(tx, f"orders/{i}/charged") != b"10"
+    )
+    client.abort_transaction(tx)
+
+    mode = "pipelined" if offload else "sync"
+    print(f"{mode:9s}: {N} workflows in {wall:.2f}s "
+          f"({N / wall:.0f} wf/s), duplicates={dupes}, "
+          f"missing={missing}, bad_reads={bad}")
+    if offload:
+        print(f"           coalesce ratio {snap['io_coalesce_ratio']:.1f} "
+              f"txns/flush, {snap['io_flushes']:.0f} flushes of mean "
+              f"{snap['io_mean_flush_items']:.1f} items "
+              f"(offloaded commits: {snap['async_commits']:.0f})")
+    assert dupes == 0 and missing == 0 and bad == 0, "exactly-once violated!"
+    platform.shutdown()
+    cluster.stop()
+    return N / wall
+
+
+if __name__ == "__main__":
+    sync_rate = run_once(offload=False)
+    piped_rate = run_once(offload=True)
+    print(f"group commit speedup: {piped_rate / sync_rate:.2f}x "
+          f"(workflows/s, same DAGs, same engine)")

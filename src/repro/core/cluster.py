@@ -155,6 +155,7 @@ class AftCluster:
             agent.stop()
         if gc_agent is not None:
             gc_agent.stop()
+        node.close_pipeline()  # graceful leave: flush + stop I/O threads
 
     def kill_node(self, index: int = 0) -> AftNode:
         """Failure injection (§6.7): hard-kill a live node."""
@@ -202,6 +203,8 @@ class AftCluster:
             agent.stop()
         for gc_agent in list(self.gc_agents.values()):
             gc_agent.stop()
+        for node in self.all_nodes():
+            node.close_pipeline()
 
     # deterministic single-step for tests -----------------------------------
     def step_all(self) -> None:
@@ -235,6 +238,7 @@ class AftClient:
         uuid: Optional[str] = None,
         *,
         hint: Optional[PlacementHint] = None,
+        fresh: bool = False,
     ) -> str:
         node: Optional[AftNode] = None
         if uuid is not None:
@@ -252,7 +256,7 @@ class AftClient:
                 # original even when this client never saw it
                 hint = PlacementHint(uuid=uuid)
             node = self.cluster.pick_node(hint)
-        txid = node.start_transaction(uuid)
+        txid = node.start_transaction(uuid, fresh=fresh)
         with self._lock:
             self._sessions[txid] = node
             self._session_history[txid] = node
@@ -278,6 +282,23 @@ class AftClient:
         with self._lock:
             self._sessions.pop(txid, None)
         return tid
+
+    def commit_transaction_async(self, txid: str):
+        """Commit through the node's storage I/O pipeline; returns a
+        ``Future[TxnId]`` that resolves when the commit record is durable.
+        The session is released on success (a failed commit keeps it, like
+        the sync path's raise, so the caller can abort or retry)."""
+        node = self._node(txid)
+        fut = node.commit_transaction_async(txid)
+
+        def _release(f) -> None:
+            if f.exception() is None:
+                node.release_transaction(txid)
+                with self._lock:
+                    self._sessions.pop(txid, None)
+
+        fut.add_done_callback(_release)
+        return fut
 
     def abort_transaction(self, txid: str) -> None:
         node = self._node(txid)

@@ -82,6 +82,11 @@ class LocalGcAgent:
         self.workflow_gc_batch = workflow_gc_batch
         self.workflows_reclaimed = 0
         self.memo_keys_deleted = 0
+        # deletes enqueued on the node's storage I/O pipeline this pass
+        # (coalesced into shared delete_batch flushes off this thread, so
+        # the sweep's round trips never serialize with foreground commits);
+        # drained before gc_finished_workflows returns
+        self._delete_futures: List = []
         # markers this agent has already processed; markers persist until the
         # fault manager's TTL sweep, and re-sweeping one is wasted listings
         self._swept_markers: Set[str] = set()
@@ -106,7 +111,10 @@ class LocalGcAgent:
 
         Returns the number of workflows processed this call.  Safe to run
         concurrently on many nodes: storage deletes are idempotent, and each
-        node's cache purge works from its own local view.
+        node's cache purge works from its own local view.  Storage deletes
+        flow through the node's I/O pipeline (coalesced ``delete_batch``
+        flushes on the pipeline's workers) and are drained before this call
+        returns, so callers still observe a settled store.
         """
         storage = self.node.storage
         limit = max_workflows or self.workflow_gc_batch
@@ -153,6 +161,16 @@ class LocalGcAgent:
                 self.memo_keys_deleted += self._reclaim_chain_entry(
                     chain["queue"], chain["entry"]
                 )
+        # settle the pipelined deletes BEFORE acking: an ack is the promise
+        # that this node's sweep is durably done, and the fault manager may
+        # retire the marker the moment the last ack lands.  If ANY delete
+        # flush failed, un-sweep this pass's markers and withhold every ack
+        # — acking anyway would let the marker retire with doomed keys
+        # still in storage, orphaning them forever (deletes are idempotent,
+        # so the next pass simply redoes the sweep).
+        if not self._drain_deletes():
+            self._swept_markers -= set(todo)
+            return 0
         # ack AFTER the storage sweep + cache purge: the fault manager
         # retires a marker only once every live node has acked it, closing
         # the retire-before-sweep race that orphaned memo records
@@ -161,6 +179,32 @@ class LocalGcAgent:
                 self.node.ack_workflow_marker(marker[len(WF_FINISH_PREFIX):])
         self.workflows_reclaimed += len(todo)
         return len(todo)
+
+    # -------------------------------------------------- pipelined deletes
+    def _delete_keys(self, keys) -> None:
+        """Route a sweep's doomed keys through the node's I/O pipeline when
+        one already exists (coalesced, off-thread); falls back to a direct
+        ``delete_batch`` otherwise.  The sweep never CREATES the pipeline:
+        a purely synchronous deployment keeps its exact pre-pipeline
+        storage traffic (prefetching activates with the pipeline)."""
+        if not keys:
+            return
+        pipeline = self.node.io_pipeline(create=False)
+        if pipeline is None:
+            self.node.storage.delete_batch(keys)
+            return
+        self._delete_futures.append(pipeline.submit_deletes(keys))
+
+    def _drain_deletes(self) -> bool:
+        """Wait out this pass's delete flushes; False if any failed."""
+        futures, self._delete_futures = self._delete_futures, []
+        ok = True
+        for fut in futures:
+            try:
+                fut.result()
+            except Exception:
+                ok = False  # idempotent; caller re-sweeps next pass
+        return ok
 
     def _find_entry_for_child(self, wf_uuid: str) -> Optional[dict]:
         """Locate a finished chain child's queue entry without marker
@@ -215,8 +259,7 @@ class LocalGcAgent:
             ):
                 doomed.add(commit_key(record.tid))
                 doomed.add(uuid_key(uuid))
-        if doomed:
-            storage.delete_batch(sorted(doomed))
+        self._delete_keys(sorted(doomed))
         return len(doomed)
 
     def _reclaim_workflow(self, wf_uuid: str) -> int:
@@ -256,8 +299,7 @@ class LocalGcAgent:
         # straggler versions under the reserved prefix (e.g. spilled memo
         # buffers from crashed attempts)
         doomed.update(storage.list_keys(f"{DATA_PREFIX}{namespace}"))
-        if doomed:
-            storage.delete_batch(sorted(doomed))
+        self._delete_keys(sorted(doomed))
         return len(doomed)
 
     # ------------------------------------------------------------- lifecycle

@@ -24,11 +24,14 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..storage.base import StorageEngine
+from ..storage.pipeline import PipelineConfig, StorageIOPipeline
 from .atomic_read import ReadSelection, ReadStatus, atomic_read_select
 from .commit_cache import CommitSetCache, DataCache
 from .errors import (
@@ -72,9 +75,23 @@ class AftNodeConfig:
                                           # committing an unfamiliar retried
                                           # UUID (rare path only)
     storage_read_retries: int = 3
-    storage_read_retry_s: float = 0.02
+    storage_read_retry_s: float = 0.02    # scaled by the engine's time_scale
     min_gc_age_s: float = 0.0             # §5.2.1 mitigation knob
     clock_skew_ns: int = 0                # tests: protocols don't need sync
+    # --- asynchronous storage I/O pipeline (storage/pipeline.py) ---------
+    # The pipeline is created lazily, on first async use (async commit, GC
+    # deletes): purely synchronous workloads never pay for its threads and
+    # behave byte-for-byte as before.
+    enable_io_pipeline: bool = True
+    io_workers: int = 4                   # read/probe/task threads per node
+    flush_max_items: int = 25             # BatchWriteItem-style page size
+    flush_linger_ms: float = 8.0          # coalescing window, engine-ms
+    flush_concurrency: int = 2            # flushes on the wire at once
+    # prefetch the rest of a commit record's write set when one of its keys
+    # is read (Algorithm-1 readsets are built from cowritten sets, so the
+    # sibling keys are the likeliest next reads); active only once the
+    # pipeline exists
+    prefetch_cowritten: bool = True
 
 
 class TxnState(Enum):
@@ -110,6 +127,15 @@ class TransactionContext:
     started_at: float = field(default_factory=time.monotonic)
     committed_tid: Optional[TxnId] = None
     is_retry: bool = False  # client reopened with a prior UUID (§3.3.1)
+    # a commit reached storage (version flush issued): from here on an
+    # abort may be racing a commit that actually LANDED (the lost-ack
+    # window), so cleanup must not delete spilled bytes a durable commit
+    # record may reference — the orphan GC, which checks commit state,
+    # reclaims them instead
+    commit_attempted: bool = False
+    # an in-flight async commit (commit_transaction_async): concurrent
+    # committers of one session share it instead of double-committing
+    commit_future: Optional[Future] = None
     # guards read_set: one session may be driven by many parallel branches of
     # a workflow DAG (the buffer has its own lock)
     lock: threading.Lock = field(default_factory=threading.Lock)
@@ -143,6 +169,17 @@ class AftNode:
         self._lock = threading.RLock()
         self._alive = True
         self._inflight_ops = 0  # get/put/commit currently executing
+        # asynchronous I/O pipeline: created lazily on first async use, so
+        # synchronous workloads never start its threads
+        self._pipeline: Optional[StorageIOPipeline] = None
+        # commit-latency samples (seconds).  stats() sorts a snapshot per
+        # call and routing policies call stats() on the placement hot path,
+        # so the window stays small enough that the sort is tens of µs.
+        # _lat_lock guards iteration-vs-append: sorting a deque while a
+        # committer appends raises "deque mutated during iteration".
+        self._commit_lat: Deque[float] = deque(maxlen=1024)
+        self._lat_lock = threading.Lock()
+        self._prefetched_tids: Set[TxnId] = set()
         self.stats: NodeStats = NodeStats(
             {
                 "reads": 0,
@@ -150,6 +187,8 @@ class AftNode:
                 "ryw_hits": 0,
                 "writes": 0,
                 "commits": 0,
+                "async_commits": 0,
+                "prefetched_keys": 0,
                 "aborts": 0,
                 "staleness_aborts": 0,
                 "remote_merges": 0,
@@ -192,6 +231,56 @@ class AftNode:
         with self._lock:
             self._inflight_ops -= 1
 
+    # --------------------------------------------------------- I/O pipeline
+    def io_pipeline(self, create: bool = True) -> Optional[StorageIOPipeline]:
+        """The node's asynchronous storage pipeline, created on first use
+        (``None`` when ``enable_io_pipeline`` is off).  ``create=False``
+        returns the pipeline only if async work already started it —
+        opportunistic users (GC sweeps) use that so a purely synchronous
+        deployment never grows pipeline threads or prefetch traffic."""
+        if not self.config.enable_io_pipeline:
+            return None
+        with self._lock:
+            if self._pipeline is None:
+                if not create:
+                    return None
+                self._pipeline = StorageIOPipeline(
+                    self.storage,
+                    PipelineConfig(
+                        io_workers=self.config.io_workers,
+                        flush_max_items=self.config.flush_max_items,
+                        flush_linger_ms=self.config.flush_linger_ms,
+                        flush_concurrency=self.config.flush_concurrency,
+                        name=f"io-{self.node_id}",
+                    ),
+                )
+            return self._pipeline
+
+    def drain_pipeline(self, timeout: Optional[float] = None) -> None:
+        """Block until every enqueued pipeline write/delete has landed (a
+        no-op without a pipeline).  Drivers call this at shutdown so
+        fire-and-forget work (offloaded memo saves) is durable before the
+        process moves on."""
+        with self._lock:
+            pipe = self._pipeline
+        if pipe is not None:
+            pipe.drain(timeout)
+
+    def close_pipeline(self) -> None:
+        """Tear down the pipeline's threads (cluster shutdown / node
+        removal).  A crashed node (:meth:`fail`) deliberately does NOT close
+        it: in-flight flushes may still land, which is exactly the §3.3
+        partial-durability window the protocol tolerates."""
+        with self._lock:
+            pipe, self._pipeline = self._pipeline, None
+        if pipe is not None:
+            pipe.close()
+
+    def _storage_time_scale(self) -> float:
+        """Latency compression of a simulated engine (1.0 for real ones);
+        wall-clock protocol waits must shrink with the ops they pace."""
+        return getattr(self.storage, "time_scale", 1.0)
+
     def _stats_snapshot(self) -> Dict[str, float]:
         """Thread-safe point-in-time view: counters + derived gauges.
         This is ``node.stats()`` — see :class:`NodeStats`."""
@@ -210,6 +299,16 @@ class AftNode:
         snap["data_cache_bytes"] = dc["bytes"]
         lookups = dc["hits"] + dc["misses"]
         snap["data_cache_hit_rate"] = dc["hits"] / lookups if lookups else 0.0
+        with self._lat_lock:
+            lat = sorted(self._commit_lat)
+        if lat:
+            snap["commit_p50_ms"] = lat[len(lat) // 2] * 1e3
+            snap["commit_p99_ms"] = lat[min(len(lat) - 1,
+                                            int(len(lat) * 0.99))] * 1e3
+        pipe = self._pipeline
+        if pipe is not None:
+            for k, v in pipe.stats().items():
+                snap[f"io_{k}"] = v
         return snap
 
     # ------------------------------------------------------------- bootstrap
@@ -233,11 +332,19 @@ class AftNode:
         return loaded
 
     # ------------------------------------------------------------- Table 1
-    def start_transaction(self, uuid: Optional[str] = None) -> str:
+    def start_transaction(
+        self, uuid: Optional[str] = None, *, fresh: bool = False
+    ) -> str:
         """StartTransaction() → txid.  A retried request may pass its old
-        UUID to continue/recommit the same logical transaction (§3.3.1)."""
+        UUID to continue/recommit the same logical transaction (§3.3.1).
+        ``fresh=True`` declares a *supplied* UUID newly minted — the caller
+        generated it this attempt and nobody else can know it — so the
+        commit path skips the §3.3.1 already-committed probe (one storage
+        read per commit).  Workflow drivers pass it on the first attempt of
+        locally-generated workflow UUIDs; anything deterministic or
+        re-driven (retries, chain children, explicit resumes) must not."""
         self._check_alive()
-        is_retry = uuid is not None
+        is_retry = uuid is not None and not fresh
         uuid = uuid or fresh_uuid()
         with self._lock:
             if uuid not in self._txns or self._txns[uuid].state is not TxnState.RUNNING:
@@ -362,9 +469,19 @@ class AftNode:
         spilled = ctx.buffer.discard()
         ctx.state = TxnState.ABORTED
         self.stats["aborts"] += 1
-        if spilled:  # nothing was visible; clean up best-effort (§3.3)
+        # Best-effort spill cleanup is safe ONLY for never-attempted
+        # commits.  Once a commit reached storage, "commit failed" may
+        # really be "commit landed, ack lost" — its durable record then
+        # references the spilled keys, and deleting them would destroy
+        # committed data.  The fault manager's orphan GC (which verifies
+        # commit state) reclaims genuinely orphaned spills instead.
+        if spilled and not ctx.commit_attempted:
             try:
-                self.storage.delete_batch(spilled)
+                pipe = self._pipeline
+                if pipe is not None:  # off the caller's thread, coalesced
+                    pipe.submit_deletes(spilled)
+                else:
+                    self.storage.delete_batch(spilled)
             except Exception:
                 pass  # orphan GC (fault manager) is the backstop
 
@@ -373,13 +490,16 @@ class AftNode:
         only then acknowledge + make visible (§3.3).  Idempotent per UUID."""
         self._check_alive()
         self._op_begin()
+        t0 = time.perf_counter()
         try:
             return self._commit_transaction(txid)
         finally:
+            with self._lat_lock:
+                self._commit_lat.append(time.perf_counter() - t0)
             self._op_end()
 
-    def _commit_transaction(self, txid: str) -> TxnId:
-        ctx = self._ctx(txid)
+    def _probe_already_committed(self, ctx: TransactionContext) -> Optional[TxnId]:
+        """§3.3.1 idempotence check shared by both commit paths."""
         with self._lock:
             already = self._committed_uuids.get(ctx.uuid)
         if already is None and ctx.is_retry and self.config.verify_uuid_on_retry:
@@ -398,6 +518,11 @@ class AftNode:
                 with self._lock:
                     self._committed_uuids[ctx.uuid] = record.tid
                 already = record.tid
+        return already
+
+    def _commit_transaction(self, txid: str) -> TxnId:
+        ctx = self._ctx(txid)
+        already = self._probe_already_committed(ctx)
         if already is not None:  # §3.3.1 retry of a committed transaction
             ctx.state = TxnState.COMMITTED
             ctx.committed_tid = already
@@ -416,6 +541,7 @@ class AftNode:
             # index lands BEFORE the commit record: index ∧ record ⇔
             # committed, so a crash between the two reads as "not committed".
             to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
+            ctx.commit_attempted = True
             self.storage.put_batch(to_write)
             # step 2: persist the commit record — the *linearization point*
             # for durability; a crash before this line loses the txn (client
@@ -424,24 +550,265 @@ class AftNode:
                 tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
             )
             self.storage.put(commit_key(tid), record.encode())
-            # step 3: acknowledge + make visible locally.
-            with self._lock:
-                self.cache.add(record, fresh=True)
-                self._committed_uuids[ctx.uuid] = tid
-            if self.config.enable_data_cache:
-                for key, skey in storage_keys.items():
-                    raw = to_write.get(skey)
-                    if raw is not None:
-                        self.data_cache.put(key, tid, raw)
+            self._commit_make_visible(ctx, tid, record, to_write, storage_keys)
         else:
             # read-only transaction: nothing to persist or announce.
             with self._lock:
                 self._committed_uuids[ctx.uuid] = tid
+            ctx.state = TxnState.COMMITTED
+            ctx.committed_tid = tid
+            self.stats["commits"] += 1
+        return tid
 
+    def _commit_make_visible(
+        self, ctx: TransactionContext, tid: TxnId, record: TransactionRecord,
+        to_write: Dict[str, bytes], storage_keys: Dict[str, str],
+    ) -> None:
+        """Step 3 of §3.3 — acknowledge + make visible locally — shared by
+        the synchronous and pipelined commit paths so visibility semantics
+        can never diverge between them."""
+        with self._lock:
+            self.cache.add(record, fresh=True)
+            self._committed_uuids[ctx.uuid] = tid
+        if self.config.enable_data_cache:
+            for key, skey in storage_keys.items():
+                raw = to_write.get(skey)
+                if raw is not None:
+                    self.data_cache.put(key, tid, raw)
         ctx.state = TxnState.COMMITTED
         ctx.committed_tid = tid
         self.stats["commits"] += 1
-        return tid
+
+    # ---------------------------------------------------------- async commit
+    def commit_transaction_async(self, txid: str) -> "Future[TxnId]":
+        """CommitTransaction, pipelined: the whole §3.3 sequence runs on the
+        storage I/O pipeline and the returned future resolves to the TxnId
+        once the commit record is durable (or fails with the commit's
+        error).  Semantics are identical to :meth:`commit_transaction` —
+        same idempotence, same write ordering — but the *caller* never
+        blocks on storage, and concurrent committers' version writes
+        coalesce into shared group-commit flushes.
+
+        Ordering is a barrier **per transaction**, not per op: the version
+        bytes and the ``u/`` uuid index flush first (possibly sharing
+        batches with other transactions), and only when that group's future
+        resolves is the commit record submitted — so the record can never
+        be durable before its versions, no matter how flushes interleave.
+        Concurrent async commits of one session share a single future."""
+        self._check_alive()
+        ctx = self._ctx(txid)
+        pipeline = self.io_pipeline()
+        if pipeline is None:  # pipeline disabled: degrade to the sync path
+            fut: "Future[TxnId]" = Future()
+            try:
+                fut.set_result(self.commit_transaction(txid))
+            except BaseException as exc:  # noqa: BLE001 - delivered via future
+                fut.set_exception(exc)
+            return fut
+        with self._lock:
+            if ctx.commit_future is not None and not ctx.commit_future.done():
+                return ctx.commit_future
+            result: "Future[TxnId]" = Future()
+            ctx.commit_future = result
+        self.stats["async_commits"] += 1
+        self._op_begin()
+        t0 = time.perf_counter()
+
+        def settle(tid: Optional[TxnId] = None,
+                   exc: Optional[BaseException] = None) -> None:
+            with self._lat_lock:
+                self._commit_lat.append(time.perf_counter() - t0)
+            self._op_end()
+            if exc is not None:
+                result.set_exception(exc)
+            else:
+                result.set_result(tid)
+
+        try:
+            # cheap local idempotence check on the caller's thread; the
+            # expensive §3.3.1 storage probe (retried UUIDs only) runs as a
+            # pipeline task CONCURRENTLY with the version flush below — it
+            # only has to answer before the commit *record* is written.
+            with self._lock:
+                local_already = self._committed_uuids.get(ctx.uuid)
+            if local_already is not None:
+                ctx.state = TxnState.COMMITTED
+                ctx.committed_tid = local_already
+                settle(local_already)
+                return result
+            if ctx.state is not TxnState.RUNNING:
+                raise TransactionNotRunning(txid)
+            tid = TxnId(self.clock.now_ns(), ctx.uuid)
+            to_write, storage_keys = ctx.buffer.finalize(tid)
+            write_set = tuple(sorted(storage_keys.keys()))
+            need_probe = ctx.is_retry and self.config.verify_uuid_on_retry
+            if not write_set:  # read-only: nothing to persist
+                def finish_read_only() -> None:
+                    try:
+                        already = self._probe_already_committed(ctx)
+                        final = already if already is not None else tid
+                        if already is None:
+                            with self._lock:
+                                self._committed_uuids[ctx.uuid] = tid
+                            self.stats["commits"] += 1
+                        ctx.state = TxnState.COMMITTED
+                        ctx.committed_tid = final
+                        settle(final)
+                    except BaseException as e:  # noqa: BLE001
+                        settle(exc=e)
+
+                if need_probe:
+                    pipeline.submit_task(finish_read_only)
+                else:
+                    finish_read_only()
+                return result
+            # The u/ index is an in-place OVERWRITE, not a fresh version
+            # key, so for retried UUIDs it must NOT ride the version flush:
+            # repointing u/<uuid> at this (possibly never-recorded) tid
+            # while the probe is still in flight could durably dangle the
+            # index — and a later probe (fresh node, post-restart) would
+            # read index-without-record as "not committed" and recommit a
+            # DUPLICATE.  Fresh UUIDs have no prior index entry to damage,
+            # so theirs coalesces into the version flush as before; retried
+            # ones write it after the probe concludes, still before the
+            # record (the §3.3.1 index ∧ record ⇔ committed contract).
+            if not need_probe:
+                to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
+            record = TransactionRecord(
+                tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
+            )
+
+            def after_record(f: Future) -> None:
+                exc = f.exception()
+                if exc is not None:
+                    settle(exc=exc)
+                    return
+                try:
+                    self._commit_make_visible(
+                        ctx, tid, record, to_write, storage_keys
+                    )
+                    settle(tid)
+                except BaseException as e:  # noqa: BLE001
+                    settle(exc=e)
+
+            # join point: versions durable AND probe answered.  Writing the
+            # versions of an already-committed retry is harmless (they are
+            # invisible orphans, swept like any crashed attempt's); its u/
+            # index repoint and commit RECORD are what §3.3.1 forbids — so
+            # those two (and only those two) wait on the probe.
+            join_state = {"versions": None, "probe": None}
+            join_lock = threading.Lock()
+
+            def advance() -> None:
+                with join_lock:
+                    if join_state["versions"] is None or join_state["probe"] is None:
+                        return  # the other leg is still in flight
+                    versions_exc, probe_out = join_state["versions"][0], join_state["probe"]
+                    join_state["versions"] = join_state["probe"] = None  # fire once
+                if versions_exc is not None:
+                    settle(exc=versions_exc)
+                    return
+                probe_exc, already = probe_out
+                if probe_exc is not None:
+                    settle(exc=probe_exc)
+                    return
+                if already is not None:  # §3.3.1: a rival commit won; ours
+                    ctx.state = TxnState.COMMITTED      # becomes orphans
+                    ctx.committed_tid = already         # (u/ left untouched)
+                    settle(already)
+                    return
+                try:
+                    # §3.3 crash window: the versions + u/ index are
+                    # durable here, but a node that died meanwhile never
+                    # writes its commit record — the retry recommits.
+                    self._check_alive()
+                    # step 2: the commit record, ordered strictly after
+                    # THIS transaction's version flush and index write (the
+                    # put still coalesces with other transactions' I/O).
+                    pipeline.submit_put(
+                        commit_key(tid), record.encode()
+                    ).add_done_callback(after_record)
+                except BaseException as e:  # noqa: BLE001
+                    settle(exc=e)
+
+            def after_versions(f: Future) -> None:
+                with join_lock:
+                    join_state["versions"] = (f.exception(),)
+                advance()
+
+            def probe_done(out) -> None:
+                with join_lock:
+                    join_state["probe"] = out
+                advance()
+
+            def probe_concluded(out) -> None:
+                """The probe's verdict is in.  Not-committed ⇒ NOW repoint
+                the u/ index (withheld from the version flush — see above)
+                and complete the probe leg only once it is durable: the
+                index write runs concurrent with the still-in-flight
+                version flush, and the record (gated by the join) stays
+                ordered after both."""
+                exc, already = out
+                if exc is not None or already is not None:
+                    probe_done(out)
+                    return
+                try:
+                    self._check_alive()
+                    pipeline.submit_put(
+                        uuid_key(ctx.uuid), commit_key(tid).encode()
+                    ).add_done_callback(
+                        lambda f: probe_done((f.exception(), None))
+                    )
+                except BaseException as e:  # noqa: BLE001
+                    probe_done((e, None))
+
+            def probe_found(record: TransactionRecord) -> None:
+                self.cache.add(record)
+                with self._lock:
+                    self._committed_uuids[ctx.uuid] = record.tid
+                probe_done((None, record.tid))
+
+            # The §3.3.1 storage probe as a callback chain over PIPELINED
+            # reads: the two point lookups (u/ index, then the record)
+            # coalesce into shared batch-gets with other in-flight commits'
+            # probes, and no worker thread ever blocks waiting for them.
+            def on_record_raw(f: Future) -> None:
+                try:
+                    raw = f.result()
+                    if raw is None:  # index without record: crashed commit
+                        probe_concluded((None, None))
+                        return
+                    probe_found(TransactionRecord.decode(raw))
+                except BaseException as e:  # noqa: BLE001
+                    probe_done((e, None))
+
+            def on_index_ptr(f: Future) -> None:
+                try:
+                    ptr = f.result()
+                    if ptr is None:
+                        probe_concluded((None, None))
+                        return
+                    pipeline.submit_get(
+                        ptr.decode()
+                    ).add_done_callback(on_record_raw)
+                except BaseException as e:  # noqa: BLE001
+                    probe_done((e, None))
+
+            # step 1: all data versions + the uuid → commit-key index,
+            # group-committed with whatever else is in flight (§6.1.1
+            # batching, lifted across transactions).
+            if need_probe:
+                pipeline.submit_get(
+                    uuid_key(ctx.uuid)
+                ).add_done_callback(on_index_ptr)
+            else:
+                with join_lock:
+                    join_state["probe"] = (None, None)
+            ctx.commit_attempted = True
+            pipeline.submit_puts(to_write).add_done_callback(after_versions)
+        except BaseException as exc:  # noqa: BLE001
+            settle(exc=exc)
+        return result
 
     # ---------------------------------------------------------------- reads
     def _fetch(self, key: str, tid: TxnId) -> bytes:
@@ -452,8 +819,16 @@ class AftNode:
                 self.stats["read_cache_hits"] += 1
                 return cached
         record = self.cache.get(tid)
+        if record is not None:
+            # kick off the pipelined prefetch of the record's OTHER keys
+            # before the foreground read blocks, so they fetch in parallel
+            self._maybe_prefetch_cowritten(record, exclude=key)
         skey = record.storage_key_for(key) if record else data_key(key, tid)
         value = None
+        # Backoff paces a *storage* race, so it scales with the engine: a
+        # simulated engine compresses op latency by time_scale, and a fixed
+        # wall-clock sleep here would dwarf the op it waits on.
+        retry_s = self.config.storage_read_retry_s * self._storage_time_scale()
         for attempt in range(self.config.storage_read_retries):
             value = self.storage.get(skey)
             if value is not None:
@@ -461,7 +836,7 @@ class AftNode:
             # Committed metadata exists ⇒ the version bytes were durably
             # acked before the commit record (§3.3); fresh-key read-after-
             # write makes a miss here transient (or a GC race, §5.2.1).
-            time.sleep(self.config.storage_read_retry_s * (attempt + 1))
+            time.sleep(retry_s * (attempt + 1))
         if value is None:
             self.stats["staleness_aborts"] += 1
             raise ReadAbortError(
@@ -470,6 +845,55 @@ class AftNode:
         if self.config.enable_data_cache:
             self.data_cache.put(key, tid, value)
         return value
+
+    def _maybe_prefetch_cowritten(
+        self, record: TransactionRecord, exclude: str
+    ) -> None:
+        """Pipelined read-set prefetch: a transaction that reads one key of
+        a committed write set tends to read the rest (Algorithm 1 builds
+        Atomic Readsets *from* cowritten sets), so fan the sibling versions
+        out on the I/O pipeline into the data cache while the foreground
+        ``get`` is still in flight.  Fires only when the pipeline already
+        exists (async users) — purely synchronous workloads keep their
+        exact pre-pipeline storage traffic."""
+        if (
+            not self.config.prefetch_cowritten
+            or not self.config.enable_data_cache
+            or len(record.write_set) <= 1
+        ):
+            return
+        pipeline = self._pipeline
+        if pipeline is None:
+            return
+        with self._lock:
+            if record.tid in self._prefetched_tids:
+                return
+            if len(self._prefetched_tids) > 4096:
+                self._prefetched_tids.clear()
+            self._prefetched_tids.add(record.tid)
+        keys = [
+            k for k in record.write_set
+            if k != exclude and not self.data_cache.contains_key(k)
+        ]
+
+        def _install(key: str):
+            def cb(f: Future) -> None:
+                try:
+                    value = f.result()
+                except Exception:
+                    return  # a prefetch is only ever a hint
+                if value is not None:
+                    self.data_cache.put(key, record.tid, value)
+                    self.stats["prefetched_keys"] += 1
+            return cb
+
+        for k in keys:
+            try:
+                pipeline.submit_get(
+                    record.storage_key_for(k)
+                ).add_done_callback(_install(k))
+            except RuntimeError:
+                return  # pipeline closing; prefetch is best-effort
 
     # --------------------------------------------------- distributed hooks
     def drain_fresh_commits(self) -> List[TransactionRecord]:

@@ -1,6 +1,7 @@
 from .base import StorageEngine, StorageUnsupported
 from .localfs import LocalFSStorage
 from .memory import MemoryStorage
+from .pipeline import PipelineConfig, StorageIOPipeline
 from .sharded import ShardedStorage
 from .simulated import (
     ENGINE_PRESETS,
@@ -18,6 +19,8 @@ __all__ = [
     "MemoryStorage",
     "LocalFSStorage",
     "ShardedStorage",
+    "StorageIOPipeline",
+    "PipelineConfig",
     "SimulatedEngine",
     "LatencyModel",
     "ENGINE_PRESETS",

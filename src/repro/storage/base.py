@@ -31,6 +31,20 @@ class StorageEngine(abc.ABC):
     #: ``put_batch`` but pay per-key latency (Redis-cluster style, §6.1.2).
     supports_batch: bool = False
 
+    #: whether ``get_batch`` fetches many keys in one round trip (DynamoDB
+    #: ``BatchGetItem`` style).  When False, ``get_batch`` degrades to a
+    #: per-key loop, so callers wanting read parallelism should issue
+    #: concurrent point gets instead (``storage/pipeline.py`` does).
+    supports_batch_get: bool = False
+
+    #: latency compression factor of a *simulated* engine (``simulated.py``):
+    #: every modeled sleep is multiplied by it so benchmark suites fit in CI.
+    #: Protocol-level wall-clock waits (read-retry backoff in ``AftNode``)
+    #: must scale by the same factor or a single transient miss sleeps
+    #: orders of magnitude longer than the op it waits on.  Real engines
+    #: leave the default of 1.0.
+    time_scale: float = 1.0
+
     @abc.abstractmethod
     def put(self, key: str, value: bytes) -> None:
         """Durably persist ``value`` at ``key``.  Returns only once durable."""

@@ -15,6 +15,7 @@ from .base import StorageEngine
 
 class MemoryStorage(StorageEngine):
     supports_batch = True
+    supports_batch_get = True
 
     def __init__(self) -> None:
         self._data: Dict[str, bytes] = {}

@@ -1,0 +1,534 @@
+"""StorageIOPipeline — asynchronous storage I/O with cross-transaction
+group commit (§6.1.1 taken to its conclusion).
+
+AFT's overhead is dominated by storage round trips.  The paper batches one
+transaction's updates into a single ``put_batch`` (§6.1.1) and its Go
+implementation parallelizes *all* storage operations; this module is that
+lesson applied across transactions:
+
+* **group commit** — concurrent committers hand their version writes to the
+  pipeline as *put groups* (:meth:`StorageIOPipeline.submit_puts`); a flusher
+  coalesces pending groups from *different* transactions into shared
+  ``put_batch`` flushes (DynamoDB ``BatchWriteItem``-style, up to
+  ``flush_max_items`` per call), so under load the per-call base latency is
+  paid once per flush instead of once per transaction.  Each group resolves
+  its future only when **all** of its items are durable — the §3.3 ordering
+  barrier is per *transaction*, never per flush: a caller chains its commit
+  record behind its version group's future, and because the record is only
+  submitted after that future resolves, no coalescing schedule can reorder a
+  record ahead of its own versions (they are never in the same flush);
+* **pipelined reads** — :meth:`get_many` fans point reads across the worker
+  pool (cloud KVSes serve independent gets concurrently; only the *caller*
+  was serial), used by ``AftNode`` to prefetch a commit record's cowritten
+  keys while the foreground read returns;
+* **coalesced deletes** — GC sweeps enqueue doomed keys
+  (:meth:`submit_deletes`); the flusher folds them into shared
+  ``delete_batch`` calls so background reclamation stops stalling foreground
+  commits on per-key round trips;
+* **stats** — queue depth, coalesce ratio (groups per flush), flush sizes,
+  and queue-wait times, surfaced through ``AftNode.stats()`` and the
+  ``benchmarks/report.py --section io`` table.
+
+Failure injection: ``fault_hook`` (when set) is called around every flush
+with a site name and the flush's keys; a hook that raises models a node
+dying mid-flush.  Sites:
+
+* ``pipeline:flush`` — before the storage call: nothing in this flush lands;
+* ``pipeline:flush-landed`` — after the storage call but before any group
+  future resolves: the bytes are durable but the committer never hears the
+  ack (the §3.3.1 lost-ack window, now at flush granularity);
+* ``pipeline:delete-flush`` — before a coalesced delete batch: a GC sweep
+  dies mid-reclamation (the agent withholds its marker ack and re-sweeps).
+
+Either way the affected transactions' commit futures fail, the attempt
+retries under the same UUID, and the write-ordering protocol keeps the
+outcome exactly-once — ``benchmarks/fig_async.py`` audits precisely this.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Tuple
+
+from .base import StorageEngine
+
+
+@dataclass
+class PipelineConfig:
+    io_workers: int = 4           # threads for reads / probes / tasks
+    flush_max_items: int = 25     # DynamoDB BatchWriteItem page size
+    # group-commit linger, in ENGINE milliseconds: scaled by the storage's
+    # time_scale (like every other latency in the simulation), so the wait
+    # stays proportional to the flush it amortizes.  ~1/2 of a batch-write
+    # round trip: long enough to fill a batch under load; an idle pipeline
+    # (no flush on the wire) skips it entirely.
+    flush_linger_ms: float = 8.0
+    # flushes on the wire at once.  Deliberately SMALL: while the slots are
+    # busy, arriving groups pile up and the next gather packs a full batch —
+    # group commit emerges from bounded concurrency, the way a WAL writer
+    # coalesces behind the previous fsync.  Raising it trades coalescing
+    # for parallel wire time; 2 keeps one flush filling while one flies.
+    flush_concurrency: int = 2
+    name: str = "io"
+
+
+class _Group:
+    """One caller's batch of same-kind ops; its future is the caller's
+    per-transaction durability barrier.  A large group may be split across
+    several flushes running on different workers, so the remaining-items
+    countdown is guarded by a per-group lock; the future fires outside it
+    (callbacks run inline on the resolving thread)."""
+
+    __slots__ = ("items", "remaining", "future", "enqueued_at", "site",
+                 "lock", "settled")
+
+    def __init__(self, items, site: str):
+        self.items = items            # dict (puts) or list (deletes)
+        self.remaining = len(items)
+        self.future: Future = Future()
+        self.enqueued_at = time.perf_counter()
+        self.site = site
+        self.lock = threading.Lock()
+        self.settled = False
+
+
+class StorageIOPipeline:
+    """Worker pool + group-commit flusher in front of a StorageEngine."""
+
+    def __init__(
+        self,
+        storage: StorageEngine,
+        config: Optional[PipelineConfig] = None,
+    ) -> None:
+        self.storage = storage
+        self.config = config or PipelineConfig()
+        # test/benchmark injection point; see module docstring
+        self.fault_hook: Optional[Callable[[str, List[str]], None]] = None
+        self._lock = threading.Condition()
+        self._put_q: Deque[Tuple[_Group, List[str]]] = deque()
+        self._del_q: Deque[Tuple[_Group, List[str]]] = deque()
+        # pipelined reads: (key, future, enqueued_at) coalesced into
+        # BatchGetItem-style get_batch calls on engines that support them
+        self._get_q: Deque[Tuple[str, Future, float]] = deque()
+        self._batch_get = bool(getattr(storage, "supports_batch_get", False))
+        self._pending_put_items = 0
+        self._inflight_flushes = 0
+        self._inflight_gets = 0
+        self._inflight_direct = 0  # point gets / tasks on the worker pool
+        self._closed = False
+        self._stats_lock = threading.Lock()
+        self._s = {
+            "put_groups": 0,
+            "put_items": 0,
+            "flushes": 0,            # SUCCESSFUL put flushes only
+            "flushed_items": 0,
+            "flush_groups": 0,       # Σ distinct groups per flush
+            "flush_failures": 0,
+            "flush_size_max": 0,
+            "delete_flushes": 0,
+            "deleted_keys": 0,
+            "gets": 0,
+            "get_batches": 0,
+            "batched_gets": 0,
+            "tasks": 0,
+            "depth_max": 0,
+            "queue_wait_s_total": 0.0,
+            "queue_wait_samples": 0,
+            "faults_injected": 0,
+        }
+        # Two pools: flushes get dedicated threads so a burst of queued
+        # tasks (commit probes, prefetch reads) can never wedge itself
+        # ahead of the flush that would drain the backlog.  The semaphore
+        # gates the flusher at one outstanding flush per flush thread —
+        # while every slot is on the wire, incoming groups accumulate and
+        # the next gather packs a full batch (group commit emerges from
+        # backpressure, not from waiting).
+        workers = max(self.config.io_workers, 1)
+        flushers = max(self.config.flush_concurrency, 1)
+        self._workers = ThreadPoolExecutor(
+            max_workers=workers,
+            thread_name_prefix=f"{self.config.name}-worker",
+        )
+        self._flush_pool = ThreadPoolExecutor(
+            max_workers=flushers,
+            thread_name_prefix=f"{self.config.name}-flush",
+        )
+        self._flush_slots = threading.Semaphore(flushers)
+        self._flusher = threading.Thread(
+            target=self._flush_loop, name=f"{self.config.name}-flusher",
+            daemon=True,
+        )
+        self._flusher.start()
+
+    # ------------------------------------------------------------------- api
+    def submit_puts(self, items: Dict[str, bytes]) -> "Future[None]":
+        """Enqueue one transaction's writes; the returned future resolves
+        once EVERY item is durable (possibly across several shared flushes).
+        Empty groups resolve immediately."""
+        group = _Group(dict(items), "pipeline:flush")
+        if not group.items:
+            group.future.set_result(None)
+            return group.future
+        keys = list(group.items.keys())
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StorageIOPipeline is closed")
+            self._put_q.append((group, keys))
+            self._pending_put_items += len(keys)
+            self._note_depth_locked()
+            self._lock.notify_all()
+        with self._stats_lock:
+            self._s["put_groups"] += 1
+            self._s["put_items"] += len(keys)
+        return group.future
+
+    def submit_put(self, key: str, value: bytes) -> "Future[None]":
+        """Single put through the same coalescer — concurrent callers'
+        singles (e.g. commit records of independent transactions) share
+        flushes too."""
+        return self.submit_puts({key: value})
+
+    def submit_deletes(self, keys: Iterable[str]) -> "Future[None]":
+        """Enqueue idempotent deletes (GC sweeps); coalesced into shared
+        ``delete_batch`` calls off the caller's thread."""
+        group = _Group(list(keys), "pipeline:delete")
+        if not group.items:
+            group.future.set_result(None)
+            return group.future
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StorageIOPipeline is closed")
+            self._del_q.append((group, list(group.items)))
+            self._note_depth_locked()
+            self._lock.notify_all()
+        return group.future
+
+    def submit_get(self, key: str) -> "Future[Optional[bytes]]":
+        """Pipelined point read.  On engines with true batch gets
+        (``supports_batch_get``) concurrent callers' reads coalesce into
+        shared ``get_batch`` round trips — the read-side twin of group
+        commit; otherwise each read fans out to the worker pool.
+
+        The future resolves on a pipeline thread; callbacks must not block
+        on other pipeline futures (chain with ``add_done_callback``)."""
+        with self._stats_lock:
+            self._s["gets"] += 1
+        if not self._batch_get:
+            return self._submit_tracked(self.storage.get, key)
+        fut: "Future[Optional[bytes]]" = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StorageIOPipeline is closed")
+            self._get_q.append((key, fut, time.perf_counter()))
+            self._note_depth_locked()
+            self._lock.notify_all()
+        return fut
+
+    def get_many(self, keys: Iterable[str]) -> Dict[str, Optional[bytes]]:
+        """Pipelined multi-key read: all keys fetched concurrently (and
+        coalesced where the engine batches); blocks the caller only for the
+        slowest round trip, not the sum (the pre-pipeline ``for k:
+        storage.get(k)`` shape).  Never call from a pipeline thread."""
+        futs = {k: self.submit_get(k) for k in keys}
+        return {k: f.result() for k, f in futs.items()}
+
+    def submit_task(self, fn: Callable, *args) -> Future:
+        """Run arbitrary storage-touching work on the worker pool (commit
+        offload, prefetch).  Tasks must not block on pipeline futures —
+        batch-get resolution shares these workers."""
+        with self._stats_lock:
+            self._s["tasks"] += 1
+        return self._submit_tracked(fn, *args)
+
+    def _submit_tracked(self, fn: Callable, *args) -> Future:
+        """Worker-pool submission that drain() can see.  The returned
+        future resolves (callbacks included — they may enqueue follow-up
+        writes) BEFORE the in-flight count drops, so a drain can never slip
+        through the instant between a probe's completion and the commit
+        writes it chains."""
+        with self._lock:
+            self._inflight_direct += 1
+        out: Future = Future()
+
+        def run() -> None:
+            try:
+                try:
+                    out.set_result(fn(*args))  # callbacks run inline here
+                except BaseException as e:  # noqa: BLE001 - via future
+                    out.set_exception(e)
+            finally:
+                with self._lock:
+                    self._inflight_direct -= 1
+                    self._lock.notify_all()
+
+        self._workers.submit(run)
+        return out
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until everything enqueued before this call has flushed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while (
+                self._put_q or self._del_q or self._get_q
+                or self._inflight_flushes or self._inflight_gets
+                or self._inflight_direct
+            ):
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError("pipeline drain timed out")
+                self._lock.wait(remaining)
+
+    def stats(self) -> Dict[str, float]:
+        with self._stats_lock:
+            s = dict(self._s)
+        with self._lock:
+            s["depth"] = (
+                len(self._put_q) + len(self._del_q) + len(self._get_q)
+            )
+            s["inflight_flushes"] = self._inflight_flushes
+        flushes = max(s["flushes"], 1)
+        s["coalesce_ratio"] = round(s["flush_groups"] / flushes, 3)
+        s["mean_flush_items"] = round(s["flushed_items"] / flushes, 3)
+        waits = max(s.pop("queue_wait_samples"), 1)
+        s["mean_queue_wait_ms"] = round(
+            s.pop("queue_wait_s_total") / waits * 1e3, 4
+        )
+        return s
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._lock.notify_all()
+        self._flusher.join(timeout=10)
+        self._flush_pool.shutdown(wait=True)
+        self._workers.shutdown(wait=True)
+
+    # --------------------------------------------------------------- flusher
+    def _note_depth_locked(self) -> None:
+        depth = len(self._put_q) + len(self._del_q) + len(self._get_q)
+        with self._stats_lock:
+            if depth > self._s["depth_max"]:
+                self._s["depth_max"] = depth
+
+    def _flush_loop(self) -> None:
+        cfg = self.config
+        linger_s = (
+            cfg.flush_linger_ms
+            * getattr(self.storage, "time_scale", 1.0)
+            / 1e3
+        )
+        while True:
+            with self._lock:
+                while (
+                    not self._put_q and not self._del_q and not self._get_q
+                    and not self._closed
+                ):
+                    self._lock.wait()
+                if (
+                    self._closed
+                    and not self._put_q and not self._del_q and not self._get_q
+                ):
+                    return
+                # dispatch coalesced batch-gets FIRST and without slot
+                # gating: reads resolve commit probes and prefetches, and
+                # must never queue behind write flushes
+                self._dispatch_gets_locked(cfg.flush_max_items, linger_s)
+                if not self._put_q and not self._del_q:
+                    continue  # reads fully drained; wait for more work
+            # wait for a free flush slot OUTSIDE the lock: submitters never
+            # block, and the backlog that builds while all slots are on the
+            # wire is exactly what fills the next batch.  Poll rather than
+            # park — reads arriving while every slot is on the wire must
+            # still dispatch (they gate commit records via the §3.3.1
+            # probe), so keep draining the get queue between attempts.
+            while not self._flush_slots.acquire(timeout=0.002):
+                with self._lock:
+                    self._dispatch_gets_locked(cfg.flush_max_items, linger_s)
+            with self._lock:
+                # linger until the batch FILLS or this batch's linger
+                # budget runs out.  Without the fill condition the system
+                # is bistable: tiny eager flushes keep slots free which
+                # keeps flushes tiny (4× the wire time of the coalesced
+                # regime).  The budget is measured from BATCH START, not
+                # from the oldest group's age — under steady arrival the
+                # queue front is always already "old", and an age-based
+                # deadline degenerates into eager ~2/3-full flushes.  An
+                # idle pipeline (nothing on the wire) skips the linger so a
+                # lone commit is never taxed for coalescing that cannot
+                # happen.
+                if (
+                    self._put_q
+                    and not self._closed
+                    and linger_s > 0
+                    and self._inflight_flushes > 0
+                ):
+                    deadline = time.perf_counter() + linger_s
+                    while (
+                        self._put_q
+                        and not self._closed
+                        and self._pending_put_items < cfg.flush_max_items
+                    ):
+                        remaining = deadline - time.perf_counter()
+                        if remaining <= 0:
+                            break
+                        self._lock.wait(remaining)
+                        self._dispatch_gets_locked(cfg.flush_max_items, linger_s)
+                batch, groups = self._gather_puts_locked(cfg.flush_max_items)
+                # deletes are one engine call regardless of size (the
+                # engines model BatchWriteItem-style deletes without a page
+                # cap), so drain generously — paging them like puts would
+                # let a GC wave monopolize flush slots
+                dels, del_groups = self._gather_deletes_locked(
+                    max(cfg.flush_max_items, 1000)
+                )
+                if batch or dels:
+                    self._inflight_flushes += 1
+            if not batch and not dels:
+                self._flush_slots.release()
+                continue
+            # several flushes ride the wire at once (the groups' barriers,
+            # not flush ordering, carry the protocol's ordering guarantees)
+            self._flush_pool.submit(self._do_flush, batch, groups, dels, del_groups)
+
+    def _dispatch_gets_locked(self, max_items: int, linger_s: float) -> None:
+        """Carve pending reads into batch-get round trips.  Reads dispatch
+        EAGERLY (no fill/linger gate): they resolve §3.3.1 probes that gate
+        commit records, batch-get base cost is low, and arrival bursts
+        batch naturally; they ride the worker pool, never the write-flush
+        slots."""
+        del linger_s  # reads never linger; see docstring
+        while self._get_q:
+            pairs = [
+                self._get_q.popleft() for _ in
+                range(min(max_items, len(self._get_q)))
+            ]
+            self._inflight_gets += 1
+            with self._stats_lock:
+                self._s["get_batches"] += 1
+                self._s["batched_gets"] += len(pairs)
+            self._workers.submit(self._do_get_batch, pairs)
+
+    def _do_get_batch(self, pairs) -> None:
+        keys = [k for k, _f, _t in pairs]
+        try:
+            out = self.storage.get_batch(keys)
+        except BaseException as exc:  # noqa: BLE001 - delivered via futures
+            for _k, fut, _t in pairs:
+                if not fut.done():
+                    fut.set_exception(exc)
+        else:
+            for k, fut, _t in pairs:
+                if not fut.done():
+                    fut.set_result(out.get(k))
+        with self._lock:
+            self._inflight_gets -= 1
+            self._lock.notify_all()  # drain() may be waiting
+
+    def _gather_puts_locked(self, max_items: int):
+        batch: Dict[str, bytes] = {}
+        groups: List[Tuple[_Group, int]] = []  # (group, items taken)
+        while self._put_q and len(batch) < max_items:
+            group, keys = self._put_q[0]
+            take = min(max_items - len(batch), len(keys))
+            taken = keys[-take:]
+            del keys[-take:]
+            for k in taken:
+                batch[k] = group.items[k]
+            groups.append((group, take))
+            self._pending_put_items -= take
+            if not keys:
+                self._put_q.popleft()
+        return batch, groups
+
+    def _gather_deletes_locked(self, max_items: int):
+        dels: List[str] = []
+        groups: List[Tuple[_Group, int]] = []
+        while self._del_q and len(dels) < max_items:
+            group, keys = self._del_q[0]
+            take = min(max_items - len(dels), len(keys))
+            dels.extend(keys[-take:])
+            del keys[-take:]
+            groups.append((group, take))
+            if not keys:
+                self._del_q.popleft()
+        return dels, groups
+
+    def _do_flush(self, batch, groups, dels, del_groups) -> None:
+        # puts and deletes sharing one flush are INDEPENDENT storage calls
+        # with independent failure domains: a GC delete outage must fail
+        # only the delete groups, never a committing transaction whose
+        # put_batch already landed (and vice versa).
+        now = time.perf_counter()
+        put_exc: Optional[BaseException] = None
+        del_exc: Optional[BaseException] = None
+        if batch:
+            try:
+                self._fault_point("pipeline:flush", list(batch))
+                self.storage.put_batch(batch)
+                self._fault_point("pipeline:flush-landed", list(batch))
+            except BaseException as e:  # noqa: BLE001 - delivered via futures
+                put_exc = e
+        if dels:
+            try:
+                self._fault_point("pipeline:delete-flush", list(dels))
+                self.storage.delete_batch(dels)
+            except BaseException as e:  # noqa: BLE001 - delivered via futures
+                del_exc = e
+        with self._stats_lock:
+            if batch and put_exc is None:
+                self._s["flushes"] += 1
+                self._s["flushed_items"] += len(batch)
+                self._s["flush_groups"] += len(groups)
+                if len(batch) > self._s["flush_size_max"]:
+                    self._s["flush_size_max"] = len(batch)
+            elif batch:
+                self._s["flush_failures"] += 1
+            if dels and del_exc is None:
+                self._s["delete_flushes"] += 1
+                self._s["deleted_keys"] += len(dels)
+            for group, _ in groups:
+                self._s["queue_wait_s_total"] += now - group.enqueued_at
+                self._s["queue_wait_samples"] += 1
+        self._flush_slots.release()
+        for group, take in groups:
+            self._settle_group(group, take, put_exc)
+        for group, take in del_groups:
+            self._settle_group(group, take, del_exc)
+        with self._lock:
+            self._inflight_flushes -= 1
+            self._lock.notify_all()
+
+    def _fault_point(self, site: str, keys: List[str]) -> None:
+        hook = self.fault_hook
+        if hook is None:
+            return
+        try:
+            hook(site, keys)
+        except BaseException:
+            with self._stats_lock:
+                self._s["faults_injected"] += 1
+            raise
+
+    @staticmethod
+    def _settle_group(group: _Group, take: int, exc: Optional[BaseException]):
+        fire: Optional[bool] = None  # True → success, False → exception
+        with group.lock:
+            if not group.settled:
+                if exc is not None:
+                    group.settled = True
+                    fire = False
+                else:
+                    group.remaining -= take
+                    if group.remaining <= 0:
+                        group.settled = True
+                        fire = True
+        if fire is True:
+            group.future.set_result(None)
+        elif fire is False:
+            group.future.set_exception(exc)

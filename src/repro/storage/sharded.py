@@ -24,6 +24,14 @@ class ShardedStorage(StorageEngine):
         # batching helps only when all keys co-locate; callers shouldn't rely
         # on a single round trip.
         self.supports_batch = any(s.supports_batch for s in shards)
+        self.supports_batch_get = any(
+            getattr(s, "supports_batch_get", False) for s in shards
+        )
+        # retry backoff (AftNode._fetch) scales with the fastest shard — a
+        # miss should never out-sleep the op it waits on
+        self.time_scale = min(
+            getattr(s, "time_scale", 1.0) for s in shards
+        )
 
     def _shard(self, key: str) -> StorageEngine:
         return self.shards[zlib.crc32(key.encode()) % len(self.shards)]

@@ -81,6 +81,7 @@ class SimulatedEngine(StorageEngine):
         self.time_scale = time_scale
         self.name = name
         self.supports_batch = write.batch_base_ms >= 0
+        self.supports_batch_get = read.batch_base_ms >= 0
         self._rng = random.Random(seed)
         self._rng_lock = threading.Lock()
         # overwrite consistency: key → (old value, visible_at) while the new
@@ -207,10 +208,24 @@ def s3_like(time_scale: float = 1.0, seed: int = 0) -> SimulatedEngine:
     )
 
 
-def dynamodb_like(time_scale: float = 1.0, seed: int = 0) -> SimulatedEngine:
-    """Cloud KVS: ~4 ms ops, BatchWriteItem-style batching (25 items/call)."""
+def dynamodb_like(
+    time_scale: float = 1.0,
+    seed: int = 0,
+    inner: Optional[StorageEngine] = None,
+) -> SimulatedEngine:
+    """Cloud KVS: ~4 ms ops, BatchWriteItem-style batching (25 items/call).
+    ``inner`` substitutes the backing store (e.g. an instrumented recorder
+    for write-ordering audits, ``benchmarks/fig_async.py``)."""
     return SimulatedEngine(
-        read=LatencyModel(base_ms=3.6, per_kb_ms=0.02, sigma=0.30),
+        inner,
+        # BatchGetItem-style read batching, same shape as the write side
+        read=LatencyModel(
+            base_ms=3.6,
+            per_kb_ms=0.02,
+            sigma=0.30,
+            batch_base_ms=4.8,
+            batch_per_item_ms=0.35,
+        ),
         write=LatencyModel(
             base_ms=4.2,
             per_kb_ms=0.02,

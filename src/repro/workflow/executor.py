@@ -75,6 +75,12 @@ class WorkflowConfig:
     # node the router scores best for its declared reads, instead of pinning
     # the whole workflow to one node (see workflow/txn.py StepTxnSession)
     place_steps: bool = False
+    # STEP scope only: offload step commits to the node's storage I/O
+    # pipeline so a commit overlaps the dispatch of dependent steps
+    # (visibility barrier at the dependent's body start — see
+    # workflow/txn.py).  Off by default here: the bare executor is the
+    # simple blocking driver; WorkflowPool defaults it on.
+    commit_offload: bool = False
 
 
 @dataclass
@@ -167,7 +173,10 @@ def execute_step(
     session.step_commit(step.name, payload if inline else None)
     if memoizing and not inline:
         assert memo_store is not None
-        memo_store.save(session.uuid, step.name, payload)
+        memo_store.save(
+            session.uuid, step.name, payload,
+            fresh=bool(getattr(session, "fresh", False)),
+        )
     return result
 
 
@@ -226,6 +235,11 @@ class WorkflowExecutor:
                     uuid=workflow_uuid, keys=spec.declared_reads()
                 ),
                 place_steps=cfg.place_steps,
+                commit_offload=cfg.commit_offload,
+                # first attempt of a UUID minted just above: no rival can
+                # have committed anything under it, so §3.3.1 probes are
+                # pure overhead.  Retries and explicit re-drives must probe.
+                fresh=(attempt == 1 and not resume_eligible),
             )
             memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
             if memoizing and (attempt > 1 or resume_eligible):

@@ -41,7 +41,12 @@ is the scheduler-level answer:
 Internally one scheduler thread owns all bookkeeping (guarded by a single
 condition variable); step bodies run on the platform pool inside batched
 invocations, and session lifecycle I/O (memo loads, commit, abort) runs on a
-small finisher pool so the scheduler never blocks on storage.
+small finisher pool so the scheduler never blocks on storage.  With
+``commit_offload=True`` (default) the finisher does not even block on
+commits: they ride the node's storage I/O pipeline
+(``storage/pipeline.py``), the ticket resolves when the commit future
+lands, and concurrent workflows' version writes coalesce into shared
+group-commit flushes.
 """
 
 from __future__ import annotations
@@ -86,6 +91,15 @@ class PoolConfig:
     # reads; WORKFLOW scope always stays pinned per §3.1 but the pin itself
     # is routed by the workflow's hint
     place_steps: bool = False
+    # commit offload (storage/pipeline.py): route commits through the
+    # node's asynchronous I/O pipeline.  WORKFLOW scope: the finisher
+    # enqueues the DAG's commit and moves on — the ticket resolves when the
+    # commit future lands, and concurrent workflows' version writes
+    # group-commit into shared put_batch flushes.  STEP scope: a step's
+    # commit overlaps the dispatch of its dependents (visibility barrier at
+    # the dependent's body start).  Memo saves become fire-and-forget
+    # (safe: a lost memo just re-runs its step, recommitting idempotently).
+    commit_offload: bool = True
     # scheduling.  batch_max_steps=None (default) sizes batches adaptively
     # from an EWMA of observed step latency vs. invoke overhead; an explicit
     # integer is a static override (the historical knob).
@@ -245,7 +259,10 @@ class WorkflowPool:
         self.cluster = cluster
         self.storage = storage
         self.config = config or PoolConfig()
-        self._memo = MemoStore(cluster) if cluster is not None else None
+        self._memo = (
+            MemoStore(cluster, offload=self.config.commit_offload)
+            if cluster is not None else None
+        )
         self._memoizing = (
             self.config.memoize
             and self.config.scope is not TxnScope.NONE
@@ -266,7 +283,11 @@ class WorkflowPool:
             "chain_triggers_staged": 0,
             "late_memo_hits": 0,  # rival memo found at dispatch, body skipped
             "already_finished_dedups": 0,  # finish marker found at attempt start
+            "commits_offloaded": 0,       # finish commits sent to the pipeline
+            "commit_inflight": 0,         # gauge: offloaded commits in flight
+            "commit_pipeline_depth": 0,   # high-water mark of the above
         }
+        self._commit_inflight = 0
         self._batcher = AdaptiveBatcher(self.config)
         self.stats["batch_target"] = self._batcher.cap
         self._cond = threading.Condition()
@@ -369,6 +390,16 @@ class WorkflowPool:
             if wait:
                 while self._admitted > 0:
                     self._cond.wait()
+        if wait and self.cluster is not None:
+            # tickets resolve on the FINAL commit; offloaded memo saves are
+            # fire-and-forget, so settle the I/O pipelines before declaring
+            # the pool closed — a re-drive right after close() must find
+            # every memo the completed workflows earned
+            for node in self.cluster.live_nodes():
+                try:
+                    node.drain_pipeline(timeout=30)
+                except Exception:
+                    pass  # crash-mid-drain: memos are an optimization
         self._stop.set()
         with self._cond:
             self._cond.notify_all()
@@ -459,6 +490,11 @@ class WorkflowPool:
                     uuid=run.uuid, keys=run.spec.declared_reads()
                 ),
                 place_steps=self.config.place_steps,
+                commit_offload=self.config.commit_offload,
+                # first attempt of a UUID this pool minted: nobody else can
+                # know it, so the §3.3.1 probes are skipped.  Retries and
+                # chain/explicit re-drives (resume_eligible) must probe.
+                fresh=(run.attempt == 1 and not run.resume_eligible),
             )
             memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
             if self._memoizing and (run.attempt > 1 or run.resume_eligible):
@@ -477,10 +513,45 @@ class WorkflowPool:
                 # results and hand them to the scope — under WORKFLOW scope
                 # the entries ride inside the commit below (atomic handoff)
                 run.session.stage_triggers(run.spec.on_commit, run.results)
+            if self.config.commit_offload:
+                # commit offload: enqueue the scope's final commit on the
+                # storage I/O pipeline and free this finisher thread — the
+                # ticket resolves when the commit future lands, and many
+                # workflows' commits coalesce into shared group flushes
+                fut = run.session.finish_async()
+                with self._cond:
+                    self.stats["commits_offloaded"] += 1
+                    self._commit_inflight += 1
+                    self.stats["commit_inflight"] = self._commit_inflight
+                    if self._commit_inflight > self.stats["commit_pipeline_depth"]:
+                        self.stats["commit_pipeline_depth"] = self._commit_inflight
+                fut.add_done_callback(
+                    lambda f: self._commit_landed(run, epoch, f)
+                )
+                return
             tid = run.session.finish()
         except BaseException as exc:  # noqa: BLE001
             self._emit(("finish_error", run, epoch, exc))
             return
+        self._after_commit(run, epoch, tid)
+
+    def _commit_landed(self, run: _Run, epoch: int, fut) -> None:
+        # runs on a pipeline worker thread: hop marker I/O back onto the
+        # finisher pool (inline fallback if the pool is already shut down)
+        with self._cond:
+            self._commit_inflight -= 1
+            self.stats["commit_inflight"] = self._commit_inflight
+        exc = fut.exception()
+        if exc is not None:
+            self._emit(("finish_error", run, epoch, exc))
+            return
+        tid = fut.result()
+        try:
+            self._finisher.submit(self._after_commit, run, epoch, tid)
+        except RuntimeError:  # close(wait=False) raced the landing
+            self._after_commit(run, epoch, tid)
+
+    def _after_commit(self, run: _Run, epoch: int, tid) -> None:
         if self._memoizing and self.config.declare_finished:
             try:
                 extra = (

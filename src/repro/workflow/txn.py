@@ -42,6 +42,7 @@ import base64
 import json
 import threading
 import time
+from concurrent.futures import Future
 from enum import Enum
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
@@ -114,16 +115,46 @@ def decode_memo(raw: bytes) -> Tuple[Any, Dict[str, bytes]]:
 
 
 class MemoStore:
-    """Per-step result persistence *through* AFT (exactly-once by UUID)."""
+    """Per-step result persistence *through* AFT (exactly-once by UUID).
 
-    def __init__(self, cluster: AftCluster):
+    With ``offload=True`` (set by drivers running commit offload) the memo
+    commit rides the node's storage I/O pipeline and ``save`` returns
+    without waiting for durability.  Losing an offloaded memo to a crash is
+    safe by construction: the step simply re-runs on retry and its memo
+    recommits under the same deterministic UUID (§3.3.1) — the memo is an
+    optimization, never the correctness anchor."""
+
+    def __init__(self, cluster: AftCluster, *, offload: bool = False):
         self.cluster = cluster
+        self.offload = offload
 
-    def save(self, workflow_uuid: str, step_name: str, payload: bytes) -> None:
+    def save(
+        self, workflow_uuid: str, step_name: str, payload: bytes,
+        *, fresh: bool = False,
+    ) -> None:
+        """``fresh=True``: this memo's workflow UUID was minted this
+        attempt (first attempt, not a re-drive), so no rival can have
+        committed the memo — the §3.3.1 probe is skipped."""
         client = self.cluster.client()
-        tx = client.start_transaction(memo_txn_uuid(workflow_uuid, step_name))
+        tx = client.start_transaction(
+            memo_txn_uuid(workflow_uuid, step_name), fresh=fresh
+        )
         client.put(tx, memo_key(workflow_uuid, step_name), payload)
-        client.commit_transaction(tx)
+        if not self.offload:
+            client.commit_transaction(tx)
+            return
+        # fire-and-forget (see class docstring) — but a FAILED commit must
+        # still abort the session, or its RUNNING context (and buffered
+        # payload) would sit in node._txns until the §3.3.1 timeout sweep,
+        # inflating the open-sessions load signal routing reads
+        def _cleanup(f) -> None:
+            if f.exception() is not None:
+                try:
+                    client.abort_transaction(tx)
+                except Exception:
+                    pass  # node died; the timeout sweep is the backstop
+
+        client.commit_transaction_async(tx).add_done_callback(_cleanup)
 
     def mark_finished(
         self, workflow_uuid: str, extra: Optional[Dict[str, Any]] = None
@@ -238,6 +269,10 @@ class WorkflowSession:
     # "memo exists" ⇔ "step committed"); False ⇒ the executor persists the
     # memo as a separate idempotent transaction after the body returns.
     inline_memo = False
+    # True ⇒ this attempt's workflow UUID was minted locally this attempt
+    # (first attempt, not a resume/re-drive), so no rival commit can exist
+    # anywhere and the §3.3.1 probes are skipped (core/node.py fresh=)
+    fresh = False
 
     def get(self, step_name: str, key: str) -> Optional[bytes]:
         raise NotImplementedError
@@ -276,6 +311,18 @@ class WorkflowSession:
         """Commit whatever the scope holds open; idempotent on retry."""
         return None
 
+    def finish_async(self) -> "Future[Optional[TxnId]]":
+        """Commit-offload variant of :meth:`finish`: returns a future that
+        resolves when the scope's final commit is durable.  The base
+        implementation degrades to the blocking path; sessions backed by a
+        storage I/O pipeline override it."""
+        fut: "Future[Optional[TxnId]]" = Future()
+        try:
+            fut.set_result(self.finish())
+        except BaseException as exc:  # noqa: BLE001 - delivered via future
+            fut.set_exception(exc)
+        return fut
+
     def abandon(self) -> None:
         """Attempt failed: roll back anything uncommitted."""
 
@@ -294,9 +341,13 @@ class WorkflowTxnSession(WorkflowSession):
         cluster: AftCluster,
         workflow_uuid: str,
         hint: Optional[PlacementHint] = None,
+        fresh: bool = False,
     ):
         self.client = cluster.client()
-        self.txid = self.client.start_transaction(workflow_uuid, hint=hint)
+        self.fresh = fresh
+        self.txid = self.client.start_transaction(
+            workflow_uuid, hint=hint, fresh=fresh
+        )
         self.uuid = self.txid
         self.node = self.client.node_of(self.txid)
 
@@ -325,6 +376,12 @@ class WorkflowTxnSession(WorkflowSession):
     def finish(self) -> Optional[TxnId]:
         return self.client.commit_transaction(self.txid)
 
+    def finish_async(self) -> "Future[Optional[TxnId]]":
+        # the DAG's single commit rides the node's I/O pipeline: version
+        # writes group-commit with other in-flight workflows' commits, and
+        # the caller (pool finisher) is free the moment it is enqueued
+        return self.client.commit_transaction_async(self.txid)
+
     def abandon(self) -> None:
         try:
             self.client.abort_transaction(self.txid)
@@ -338,6 +395,17 @@ class StepTxnSession(WorkflowSession):
     The memo record is written *inside* the step's transaction, so "step
     committed" and "memo exists" are the same event — a retry that finds the
     memo knows the step's writes are already durable and atomic.
+
+    Commit offload (``commit_offload=True``): a step's commit is submitted
+    to the node's storage I/O pipeline and the body returns immediately, so
+    the *dispatch* of dependent steps (batching, platform invocation,
+    queueing) overlaps the commit flush.  The §3.1 visibility contract is
+    preserved by a drain barrier: ``step_begin`` waits for every earlier
+    offloaded commit of this workflow before the new step's body reads, so
+    a dependent can never observe a predecessor's pre-commit state — the
+    wait happens on the platform worker *after* dispatch overhead is paid.
+    A failed offloaded commit surfaces at that barrier (or at ``finish``)
+    and fails the attempt, which retries under the same UUIDs (§3.3.1).
 
     Placement: by default (§3.1 extended to DAGs) every step transaction of
     one workflow pins to a single node, so a step's commit is locally
@@ -361,18 +429,41 @@ class StepTxnSession(WorkflowSession):
         workflow_uuid: str,
         hint: Optional[PlacementHint] = None,
         place_steps: bool = False,
+        commit_offload: bool = False,
+        fresh: bool = False,
     ):
         self.cluster = cluster
         self.uuid = workflow_uuid
         self.place_steps = place_steps
+        self.commit_offload = commit_offload
+        self.fresh = fresh
         self._lock = threading.Lock()
         self._txids: Dict[str, str] = {}
         self._nodes: Dict[str, "object"] = {}  # step_name → AftNode
         self._records: list = []  # this workflow's commit records so far
+        self._pending: Dict[str, Future] = {}  # offloaded commits in flight
+        self._commit_failure: Optional[BaseException] = None  # latched
         self._staged_triggers: list = []  # (entry_id, key, payload) at finish
         self.node = None if place_steps else cluster.pick_node(hint)
 
+    def _drain_commits(self) -> None:
+        """Visibility barrier for commit offload: block until every
+        offloaded step commit of this workflow has landed, surfacing the
+        first failure (which fails the attempt → whole-workflow retry).
+        Failures are latched, so a commit that failed *between* barriers is
+        still reported at the next one, never silently dropped."""
+        with self._lock:
+            pending = list(self._pending.values())
+            failure = self._commit_failure
+        if failure is not None:
+            raise failure
+        for fut in pending:
+            exc = fut.exception()  # waits for completion
+            if exc is not None:
+                raise exc
+
     def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
+        self._drain_commits()
         if self.place_steps:
             node = self.cluster.pick_node(
                 PlacementHint(
@@ -388,7 +479,9 @@ class StepTxnSession(WorkflowSession):
                 node.merge_remote_commits(records)
         else:
             node = self.node
-        txid = node.start_transaction(step_txn_uuid(self.uuid, step_name))
+        txid = node.start_transaction(
+            step_txn_uuid(self.uuid, step_name), fresh=self.fresh
+        )
         with self._lock:
             self._txids[step_name] = txid
             self._nodes[step_name] = node
@@ -409,7 +502,13 @@ class StepTxnSession(WorkflowSession):
         node, txid = self._bound(step_name)
         if memo_payload is not None:
             node.put(txid, memo_key(self.uuid, step_name), memo_payload)
+        if self.commit_offload:
+            self._step_commit_async(step_name, node, txid)
+            return
         tid = node.commit_transaction(txid)
+        self._step_committed(step_name, node, txid, tid)
+
+    def _step_committed(self, step_name: str, node, txid: str, tid) -> None:
         if self.place_steps:
             record = node.cache.get(tid)  # None for read-only steps
             if record is not None:
@@ -419,6 +518,56 @@ class StepTxnSession(WorkflowSession):
         with self._lock:
             self._txids.pop(step_name, None)
             self._nodes.pop(step_name, None)
+
+    def _step_commit_async(self, step_name: str, node, txid: str) -> None:
+        # The barrier waits on a GATE future resolved only after this
+        # session's post-commit bookkeeping ran — waiting on the node's
+        # future directly would race it: Future.set_result wakes waiters
+        # BEFORE running callbacks, so a dependent could pass the barrier,
+        # snapshot self._records without the upstream's record, and (under
+        # place_steps) read stale state on its node.
+        gate: Future = Future()
+        with self._lock:
+            self._pending[step_name] = gate
+            # unbind now: the step is done dispatching; the commit's fate is
+            # carried by the pending gate (drained before dependents read)
+            self._txids.pop(step_name, None)
+            self._nodes.pop(step_name, None)
+
+        def _done(f: Future) -> None:
+            exc = f.exception()
+            if exc is None:
+                self._step_committed_async_record(node, txid, f.result())
+            else:
+                # the commit REPORTED failure (it may still have landed —
+                # the lost-ack window): abort so the RUNNING context is not
+                # leaked until the §3.3.1 timeout sweep.  Abort is safe
+                # either way: once a commit reached storage it never
+                # deletes spilled bytes (core/node.py), and the retry's
+                # idempotence probe resolves the true outcome.
+                try:
+                    node.abort_transaction(txid)
+                    node.release_transaction(txid)
+                except Exception:
+                    pass  # node died; the timeout sweep is the backstop
+            with self._lock:
+                self._pending.pop(step_name, None)
+                if exc is not None and self._commit_failure is None:
+                    self._commit_failure = exc
+            if exc is None:
+                gate.set_result(None)
+            else:
+                gate.set_exception(exc)
+
+        node.commit_transaction_async(txid).add_done_callback(_done)
+
+    def _step_committed_async_record(self, node, txid: str, tid) -> None:
+        if self.place_steps:
+            record = node.cache.get(tid)
+            if record is not None:
+                with self._lock:
+                    self._records.append(record)
+        node.release_transaction(txid)
 
     def replay(self, step_name: str, writes: Dict[str, bytes]) -> None:
         pass  # memo present ⇔ the step's transaction already committed
@@ -435,6 +584,9 @@ class StepTxnSession(WorkflowSession):
         self._staged_triggers = build_entries(self.uuid, triggers, results)
 
     def finish(self) -> Optional[TxnId]:
+        # commit-offload barrier: the DAG is only done when every offloaded
+        # step commit is durable (a straggler failure fails the attempt)
+        self._drain_commits()
         # STEP scope has no single DAG commit to fold entries into; each
         # entry gets its own *deterministic* enqueue transaction
         # ("<entry>.enq"), so a retried finish recommits idempotently
@@ -451,6 +603,13 @@ class StepTxnSession(WorkflowSession):
         return None
 
     def abandon(self) -> None:
+        # let offloaded commits settle first: an in-flight §3.3 commit
+        # cannot be revoked, and racing an abort against it would be wrong
+        # either way (the retry's idempotence probe resolves the outcome)
+        try:
+            self._drain_commits()
+        except BaseException:  # noqa: BLE001 - already abandoning
+            pass
         with self._lock:
             pending = [
                 (self._nodes[name], txid)
@@ -529,20 +688,28 @@ def make_session(
     cowritten_hint: Sequence[str] = (),
     hint: Optional[PlacementHint] = None,
     place_steps: bool = False,
+    commit_offload: bool = False,
+    fresh: bool = False,
 ) -> WorkflowSession:
     """``hint`` routes the session's node(s) (``core/routing.py``);
     ``place_steps`` additionally lets STEP scope place every step's
     transaction independently by its declared reads (ignored by the other
-    scopes, which are single-node by construction)."""
+    scopes, which are single-node by construction); ``commit_offload``
+    routes STEP-scope step commits through the node's storage I/O pipeline
+    (WORKFLOW scope always exposes its single commit via ``finish_async``
+    — whether it is *used* is the driver's choice); ``fresh`` marks the
+    workflow UUID as minted this attempt, skipping §3.3.1 probes."""
     if scope is TxnScope.WORKFLOW:
         if cluster is None:
             raise ValueError("TxnScope.WORKFLOW requires an AftCluster")
-        return WorkflowTxnSession(cluster, workflow_uuid, hint=hint)
+        return WorkflowTxnSession(cluster, workflow_uuid, hint=hint,
+                                  fresh=fresh)
     if scope is TxnScope.STEP:
         if cluster is None:
             raise ValueError("TxnScope.STEP requires an AftCluster")
         return StepTxnSession(
-            cluster, workflow_uuid, hint=hint, place_steps=place_steps
+            cluster, workflow_uuid, hint=hint, place_steps=place_steps,
+            commit_offload=commit_offload, fresh=fresh,
         )
     if storage is None:
         raise ValueError("TxnScope.NONE requires a StorageEngine")

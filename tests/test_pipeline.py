@@ -1,0 +1,541 @@
+"""StorageIOPipeline + async commit path: cross-transaction group commit
+coalescing, the per-transaction ordering barrier (versions + u/ index before
+the commit record — §3.3 under arbitrary flush interleavings), the
+crash-window between the uuid index and the commit record, commit offload
+through sessions and the pool, pipelined GC deletes, cowritten prefetch, and
+the engine-scaled read-retry backoff."""
+
+import threading
+import time
+from typing import Dict, List
+
+import pytest
+
+from repro.core import AftCluster, AftNode, AftNodeConfig, ClusterConfig
+from repro.core.gc import LocalGcAgent
+from repro.core.records import (
+    COMMIT_PREFIX,
+    UUID_PREFIX,
+    TransactionRecord,
+    commit_key,
+    lookup_committed_record,
+    uuid_key,
+)
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage.base import StorageEngine
+from repro.storage.memory import MemoryStorage
+from repro.storage.pipeline import PipelineConfig, StorageIOPipeline
+from repro.storage.simulated import dynamodb_like
+from repro.workflow import (
+    PoolConfig,
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+
+class RecordingStorage(MemoryStorage):
+    """Logs the durable order of every persisted key (appended after the
+    write applies) plus per-batch sizes; the ordering-invariant tests and
+    the coalescing assertions read these."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.log: List[str] = []
+        self.batch_sizes: List[int] = []
+        self._log_lock = threading.Lock()
+
+    def put(self, key: str, value: bytes) -> None:
+        super().put(key, value)
+        with self._log_lock:
+            self.log.append(key)
+            self.batch_sizes.append(1)
+
+    def put_batch(self, items: Dict[str, bytes]) -> None:
+        super().put_batch(items)
+        with self._log_lock:
+            self.log.extend(items.keys())
+            self.batch_sizes.append(len(items))
+
+    def first_positions(self) -> Dict[str, int]:
+        with self._log_lock:
+            pos: Dict[str, int] = {}
+            for i, key in enumerate(self.log):
+                pos.setdefault(key, i)
+            return pos
+
+
+def assert_record_ordering(storage) -> None:
+    """§3.3 invariant: no commit record durable before every one of its
+    version keys and its u/ index entry."""
+    pos = storage.first_positions()
+    for key in storage.list_keys(COMMIT_PREFIX):
+        record = TransactionRecord.decode(storage.get(key))
+        rec_pos = pos[key]
+        deps = [record.storage_key_for(k) for k in record.write_set]
+        deps.append(uuid_key(record.tid.uuid))
+        for dep in deps:
+            assert dep in pos and pos[dep] < rec_pos, (
+                f"commit record {key} durable before its dependency {dep}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# pipeline unit behavior
+# ---------------------------------------------------------------------------
+
+def test_group_coalescing_and_barrier():
+    store = RecordingStorage()
+    pipe = StorageIOPipeline(store, PipelineConfig(
+        io_workers=2, flush_max_items=25, flush_linger_ms=20.0,
+        flush_concurrency=1,
+    ))
+    try:
+        futs = [
+            pipe.submit_puts({f"g{i}/a": b"x", f"g{i}/b": b"y"})
+            for i in range(10)
+        ]
+        for f in futs:
+            assert f.result(10) is None
+        # every item durable once its group future resolves
+        assert len(store.list_keys("g")) == 20
+        s = pipe.stats()
+        # 10 groups (20 items) coalesced into far fewer flushes
+        assert s["flushes"] < 10
+        assert s["coalesce_ratio"] > 1.5
+        assert max(store.batch_sizes) > 2  # real cross-group batches
+    finally:
+        pipe.close()
+
+
+def test_large_group_splits_across_flushes_single_barrier():
+    store = RecordingStorage()
+    pipe = StorageIOPipeline(store, PipelineConfig(
+        io_workers=2, flush_max_items=5, flush_linger_ms=0.0,
+    ))
+    try:
+        items = {f"big/{i}": bytes([i]) for i in range(23)}
+        fut = pipe.submit_puts(items)
+        assert fut.result(10) is None
+        assert len(store.list_keys("big/")) == 23  # all durable at resolve
+        assert pipe.stats()["flushes"] >= 5  # paged into ≥ ceil(23/5) flushes
+    finally:
+        pipe.close()
+
+
+def test_pipelined_gets_coalesce_on_batching_engines():
+    store = RecordingStorage()  # MemoryStorage: supports_batch_get
+    for i in range(30):
+        store.put(f"r/{i}", str(i).encode())
+    pipe = StorageIOPipeline(store, PipelineConfig(
+        io_workers=2, flush_max_items=25, flush_linger_ms=10.0,
+    ))
+    try:
+        out = pipe.get_many([f"r/{i}" for i in range(30)])
+        assert out["r/7"] == b"7" and out["r/29"] == b"29"
+        s = pipe.stats()
+        assert s["get_batches"] >= 1
+        assert s["batched_gets"] == 30
+    finally:
+        pipe.close()
+
+
+def test_delete_coalescing_and_drain():
+    store = RecordingStorage()
+    for i in range(40):
+        store.put(f"d/{i}", b"x")
+    pipe = StorageIOPipeline(store, PipelineConfig(io_workers=2))
+    try:
+        futs = [
+            pipe.submit_deletes([f"d/{i}" for i in range(j, j + 10)])
+            for j in range(0, 40, 10)
+        ]
+        pipe.drain(timeout=10)
+        for f in futs:
+            assert f.done()
+        assert store.list_keys("d/") == []
+        assert pipe.stats()["deleted_keys"] == 40
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# async commit: equivalence + idempotence
+# ---------------------------------------------------------------------------
+
+def test_async_commit_matches_sync_and_is_idempotent():
+    store = RecordingStorage()
+    node = AftNode(store, AftNodeConfig(node_id="n0"))
+    tx = node.start_transaction()
+    node.put(tx, "k1", b"v1")
+    node.put(tx, "k2", b"v2")
+    tid = node.commit_transaction_async(tx).result(10)
+    assert node.committed_tid_for_uuid(tid.uuid) == tid
+    # visible to a fresh transaction through Algorithm 1
+    tx2 = node.start_transaction()
+    assert node.get(tx2, "k1") == b"v1"
+    # §3.3.1 retry of the SAME uuid recommits idempotently (async + sync)
+    tx3 = node.start_transaction(tid.uuid)
+    node.put(tx3, "k1", b"v1")
+    assert node.commit_transaction_async(tx3).result(10) == tid
+    tx4 = node.start_transaction(tid.uuid)
+    assert node.commit_transaction(tx4) == tid
+    assert len(store.list_keys(COMMIT_PREFIX)) == 1
+    assert_record_ordering(store)
+    node.close_pipeline()
+
+
+def test_async_commit_read_only_and_shared_future():
+    node = AftNode(MemoryStorage(), AftNodeConfig())
+    tx = node.start_transaction()
+    node.get(tx, "nothing")  # read-only session
+    f1 = node.commit_transaction_async(tx)
+    tid = f1.result(10)
+    assert tid is not None
+    assert node.storage.list_keys(COMMIT_PREFIX) == []  # nothing persisted
+    node.close_pipeline()
+
+
+def test_async_commit_retry_probe_finds_rival_commit():
+    """A retried UUID whose commit this node never heard of resolves through
+    the pipelined u/-probe instead of recommitting (cross-node §3.3.1) —
+    and crucially leaves the u/ index pointing at the SURVIVING record: a
+    retry that repointed the index at its own never-recorded tid would make
+    every later probe read index-without-record as "not committed" and
+    recommit a duplicate."""
+    store = MemoryStorage()
+    n0 = AftNode(store, AftNodeConfig(node_id="n0"))
+    tx = n0.start_transaction()
+    n0.put(tx, "k", b"v")
+    tid = n0.commit_transaction(tx)
+    n1 = AftNode(store, AftNodeConfig(node_id="n1"), bootstrap=False)
+    tx2 = n1.start_transaction(tid.uuid)  # same UUID ⇒ retry
+    n1.put(tx2, "k", b"v")
+    tid2 = n1.commit_transaction_async(tx2).result(10)
+    assert tid2 == tid
+    assert len(store.list_keys(COMMIT_PREFIX)) == 1
+    n1.drain_pipeline(timeout=10)  # any stray index write would be in-flight
+    assert store.get(uuid_key(tid.uuid)) == commit_key(tid).encode()
+    # a THIRD retry on yet another amnesiac node still resolves to tid
+    n2 = AftNode(store, AftNodeConfig(node_id="n2"), bootstrap=False)
+    tx3 = n2.start_transaction(tid.uuid)
+    n2.put(tx3, "k", b"v")
+    assert n2.commit_transaction_async(tx3).result(10) == tid
+    assert len(store.list_keys(COMMIT_PREFIX)) == 1
+    for n in (n0, n1, n2):
+        n.close_pipeline()
+
+
+# ---------------------------------------------------------------------------
+# the crash window: u/ index durable, commit record not (satellite)
+# ---------------------------------------------------------------------------
+
+class FailOncePut(MemoryStorage):
+    """Raises on the first put whose key matches a prefix (sync path)."""
+
+    def __init__(self, fail_prefix: str) -> None:
+        super().__init__()
+        self.fail_prefix = fail_prefix
+        self.fired = False
+
+    def put(self, key: str, value: bytes) -> None:
+        if not self.fired and key.startswith(self.fail_prefix):
+            self.fired = True
+            raise RuntimeError(f"injected crash before {key}")
+        super().put(key, value)
+
+
+def _assert_crash_window_recovery(store, uuid: str) -> None:
+    # the index landed, the record did not: reads as NOT committed
+    assert store.get(uuid_key(uuid)) is not None
+    assert store.list_keys(COMMIT_PREFIX) == []
+    assert lookup_committed_record(store, uuid) is None
+    # retry on a fresh node recommits exactly once, no duplicate versions
+    n1 = AftNode(store, AftNodeConfig(node_id="n1"), bootstrap=False)
+    tx = n1.start_transaction(uuid)
+    n1.put(tx, "pay/1", b"100")
+    tid = n1.commit_transaction(tx)
+    records = store.list_keys(COMMIT_PREFIX)
+    assert len(records) == 1
+    record = TransactionRecord.decode(store.get(records[0]))
+    assert record.tid == tid and record.write_set == ("pay/1",)
+    # the u/ index points at the surviving record and the value reads back
+    assert store.get(uuid_key(uuid)) == commit_key(tid).encode()
+    tx2 = n1.start_transaction()
+    assert n1.get(tx2, "pay/1") == b"100"
+    n1.close_pipeline()
+
+
+def test_crash_between_index_and_record_sync_path():
+    store = FailOncePut(COMMIT_PREFIX)
+    node = AftNode(store, AftNodeConfig(node_id="n0"))
+    tx = node.start_transaction()
+    node.put(tx, "pay/1", b"100")
+    with pytest.raises(RuntimeError):
+        node.commit_transaction(tx)
+    node.fail()  # the function's node dies with the commit half-done
+    _assert_crash_window_recovery(store, tx)
+
+
+def test_crash_between_index_and_record_async_path():
+    store = MemoryStorage()
+    node = AftNode(store, AftNodeConfig(node_id="n0"))
+    pipe = node.io_pipeline()
+
+    def kill_record_flush(site: str, keys: List[str]) -> None:
+        if site == "pipeline:flush" and any(
+            k.startswith(COMMIT_PREFIX) for k in keys
+        ):
+            raise RuntimeError("injected kill-mid-flush at the record write")
+
+    pipe.fault_hook = kill_record_flush
+    tx = node.start_transaction()
+    node.put(tx, "pay/1", b"100")
+    fut = node.commit_transaction_async(tx)
+    with pytest.raises(RuntimeError):
+        fut.result(10)
+    pipe.fault_hook = None
+    node.fail()
+    _assert_crash_window_recovery(store, tx)
+
+
+# ---------------------------------------------------------------------------
+# commit offload through sessions + pool, GC, prefetch, retry scale
+# ---------------------------------------------------------------------------
+
+def _cluster(storage=None, **node_kw) -> AftCluster:
+    return AftCluster(
+        storage if storage is not None else MemoryStorage(),
+        ClusterConfig(
+            num_nodes=1, start_background_threads=False,
+            node=AftNodeConfig(**node_kw),
+        ),
+    )
+
+
+def two_step_spec(i: int) -> WorkflowSpec:
+    """Dependent step reads the upstream's AFT write — the visibility
+    barrier probe for STEP-scope commit offload."""
+    spec = WorkflowSpec(f"wf{i}")
+
+    def a(ctx):
+        ctx.put(f"off/{i}/a", b"7")
+        return 7
+
+    def b(ctx):
+        raw = ctx.get(f"off/{i}/a")
+        assert raw == b"7", f"dependent read missed upstream commit: {raw!r}"
+        ctx.put(f"off/{i}/b", b"14")
+        return 14
+
+    spec.step("a", a)
+    spec.step("b", b, deps=("a",))
+    return spec
+
+
+def test_step_scope_commit_offload_preserves_dataflow():
+    cluster = _cluster()
+    platform = LambdaPlatform(FaasConfig(time_scale=0.0))
+    ex = WorkflowExecutor(
+        platform, cluster=cluster,
+        config=WorkflowConfig(scope=TxnScope.STEP, commit_offload=True),
+    )
+    for i in range(5):
+        r = ex.run(two_step_spec(i))
+        assert r.results["b"] == 14
+    # both steps' commits landed exactly once each
+    store = cluster.storage
+    assert len(store.list_keys(COMMIT_PREFIX)) == 10
+    assert_record_ordering_ok = store.list_keys(UUID_PREFIX)
+    assert len(assert_record_ordering_ok) == 10
+    platform.shutdown()
+    cluster.stop()
+
+
+def test_pool_offloaded_commits_exactly_once_under_flush_kills():
+    store = RecordingStorage()
+    cluster = _cluster(storage=store, flush_linger_ms=0.0)
+    node = cluster.live_nodes()[0]
+    state = {"kills": 0}
+    lock = threading.Lock()
+
+    def hook(site: str, keys: List[str]) -> None:
+        with lock:
+            if state["kills"] >= 12:
+                return
+            state["kills"] += 1
+        raise RuntimeError("injected kill-mid-flush")
+
+    node.io_pipeline().fault_hook = hook
+    platform = LambdaPlatform(FaasConfig(time_scale=0.0))
+    cfg = PoolConfig(
+        scope=TxnScope.WORKFLOW, commit_offload=True, max_attempts=30,
+        retry_backoff_ms=0.0, declare_finished=False,
+    )
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [pool.submit(two_step_spec(i)) for i in range(30)]
+        results = [t.result(timeout=60) for t in tickets]
+    node.io_pipeline().fault_hook = None
+    assert state["kills"] > 0
+    by_uuid: Dict[str, int] = {}
+    for key in store.list_keys(COMMIT_PREFIX):
+        u = TransactionRecord.decode(store.get(key)).tid.uuid
+        by_uuid[u] = by_uuid.get(u, 0) + 1
+    for r in results:
+        assert by_uuid.get(r.workflow_uuid) == 1  # exactly one commit
+    assert all(c == 1 for c in by_uuid.values())  # memos included
+    assert_record_ordering(store)
+    platform.shutdown()
+    cluster.stop()
+
+
+def test_gc_sweep_deletes_ride_the_pipeline():
+    cluster = _cluster()
+    node = cluster.live_nodes()[0]
+    platform = LambdaPlatform(FaasConfig(time_scale=0.0))
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, declare_finished=True)
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        pool.submit(two_step_spec(0), uuid="gc-wf").result(timeout=30)
+    assert cluster.storage.list_keys("d/.wf/")  # memos exist pre-sweep
+    agent = LocalGcAgent(node)
+    agent.gc_finished_workflows()
+    # the sweep settled before returning, THROUGH the pipeline
+    assert cluster.storage.list_keys("d/.wf/") == []
+    assert node.stats()["io_deleted_keys"] > 0
+    platform.shutdown()
+    cluster.stop()
+
+
+def test_abort_after_attempted_commit_preserves_spilled_bytes():
+    """Lost-ack window + spilled writes: the commit lands durably but its
+    future fails; the failure handler aborts.  Abort must NOT delete the
+    spilled version bytes — the durable commit record references them, and
+    a retry resolves to the committed tid whose data must stay readable."""
+    store = MemoryStorage()
+    node = AftNode(store, AftNodeConfig(
+        node_id="n0", write_buffer_max_bytes=8,  # force spill
+    ))
+    pipe = node.io_pipeline()
+    fired = {"n": 0}
+
+    def lose_record_ack(site: str, keys: List[str]) -> None:
+        if site == "pipeline:flush-landed" and any(
+            k.startswith(COMMIT_PREFIX) for k in keys
+        ):
+            fired["n"] += 1
+            raise RuntimeError("ack lost after the record landed")
+
+    pipe.fault_hook = lose_record_ack
+    tx = node.start_transaction()
+    node.put(tx, "big", b"0123456789abcdef")  # spills past 8 bytes
+    fut = node.commit_transaction_async(tx)
+    with pytest.raises(RuntimeError):
+        fut.result(10)
+    pipe.fault_hook = None
+    assert fired["n"] == 1
+    node.abort_transaction(tx)  # what every async failure handler does
+    # the record IS durable; the retry resolves to it...
+    record = lookup_committed_record(store, tx)
+    assert record is not None
+    tx2 = node.start_transaction(tx)
+    node.put(tx2, "big", b"0123456789abcdef")
+    assert node.commit_transaction_async(tx2).result(10) == record.tid
+    # ...and the spilled bytes it references were NOT destroyed
+    tx3 = node.start_transaction()
+    assert node.get(tx3, "big") == b"0123456789abcdef"
+    node.close_pipeline()
+
+
+def test_gc_withholds_ack_when_pipelined_deletes_fail():
+    """A failed delete flush must NOT let the sweep ack the marker — an
+    acked marker can retire, permanently orphaning the undeleted keys.  The
+    next pass re-sweeps (idempotent) and only then acks."""
+
+    class FlakyDeletes(MemoryStorage):
+        def __init__(self):
+            super().__init__()
+            self.fail_next = False
+
+        def delete_batch(self, keys):
+            if self.fail_next:
+                self.fail_next = False
+                raise RuntimeError("injected delete outage")
+            super().delete_batch(keys)
+
+    store = FlakyDeletes()
+    cluster = _cluster(storage=store)
+    node = cluster.live_nodes()[0]
+    platform = LambdaPlatform(FaasConfig(time_scale=0.0))
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, declare_finished=True)
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        pool.submit(two_step_spec(0), uuid="gc-flaky").result(timeout=30)
+    agent = LocalGcAgent(node)
+    store.fail_next = True
+    assert agent.gc_finished_workflows() == 0  # pass aborted, nothing acked
+    assert not node.workflow_marker_acked("gc-flaky")
+    assert store.list_keys("d/.wf/")  # doomed keys survived the outage
+    assert agent.gc_finished_workflows() == 1  # re-sweep succeeds
+    assert node.workflow_marker_acked("gc-flaky")
+    assert store.list_keys("d/.wf/") == []
+    platform.shutdown()
+    cluster.stop()
+
+
+def test_fetch_prefetches_cowritten_keys():
+    node = AftNode(MemoryStorage(), AftNodeConfig(node_id="n0"))
+    node.io_pipeline()  # prefetch activates once the pipeline exists
+    tx = node.start_transaction()
+    for i in range(4):
+        node.put(tx, f"cw/{i}", str(i).encode())
+    tid = node.commit_transaction(tx)
+    # forget cached bytes so reads must go to storage
+    record = node.cache.get(tid)
+    node.data_cache.evict_transaction(record)
+    tx2 = node.start_transaction()
+    assert node.get(tx2, "cw/0") == b"0"
+    node.drain_pipeline(timeout=10)
+    deadline = time.monotonic() + 5
+    while (
+        node.stats["prefetched_keys"] < 3 and time.monotonic() < deadline
+    ):
+        time.sleep(0.01)
+    assert node.stats["prefetched_keys"] == 3
+    for i in range(1, 4):
+        assert node.data_cache.contains_key(f"cw/{i}")
+    node.close_pipeline()
+
+
+def test_read_retry_backoff_scales_with_engine_time_scale():
+    # storage_read_retry_s is huge, but the engine is compressed 10000×:
+    # a doomed read must abort quickly instead of out-sleeping the engine
+    store = dynamodb_like(time_scale=0.0001)
+    node = AftNode(
+        store,
+        AftNodeConfig(
+            node_id="n0", enable_data_cache=False,
+            storage_read_retries=3, storage_read_retry_s=0.5,
+        ),
+    )
+    tx = node.start_transaction()
+    node.put(tx, "gone", b"x")
+    tid = node.commit_transaction(tx)
+    # destroy the version bytes (a GC race) so the fetch retries, then fails
+    record = node.cache.get(tid)
+    store.inner.delete(record.storage_key_for("gone"))
+    from repro.core.errors import ReadAbortError
+
+    tx2 = node.start_transaction()
+    t0 = time.monotonic()
+    with pytest.raises(ReadAbortError):
+        node.get(tx2, "gone")
+    elapsed = time.monotonic() - t0
+    # unscaled backoff would sleep 0.5·(1+2+3) = 3s; scaled is ~instant
+    assert elapsed < 1.0
+    node.close_pipeline()
+
+
+# The hypothesis property test for the group-commit ordering invariant
+# lives in tests/test_property_pipeline.py (importorskip'd like the other
+# property suites), so this module always runs.
