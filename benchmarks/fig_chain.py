@@ -33,6 +33,8 @@ from typing import Dict
 from repro.core import AftCluster, ClusterConfig
 from repro.core.gc import LocalGcAgent
 from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
 from repro.storage.memory import MemoryStorage
 from repro.workflow import (
     ChainConsumerConfig,
@@ -243,7 +245,21 @@ def run_baseline(chains: int, seed: int) -> Dict:
 def run(quick: bool = True) -> Dict:
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
     chains = 2 if smoke else (6 if quick else 20)
-    aft = run_aft(chains, seed=11)
+    # trace the whole chained run (handoffs included) and replay it through
+    # the offline invariant checker: kill-mid-handoff must leave a log the
+    # checker still scores clean
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(
+        path=os.environ.get(obs_trace.TRACE_FILE_ENV), capacity=500_000
+    )
+    try:
+        aft = run_aft(chains, seed=11)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        tracer.close()
+    checked = check_events(tracer.events())
+    aft["trace_events"] = len(tracer.events())
+    aft["trace_violations"] = len(checked.violations)
     baseline = run_baseline(chains, seed=11)
     out = {
         "depth": DEPTH,
@@ -268,6 +284,7 @@ def run(quick: bool = True) -> Dict:
             "queue_reclaimed_by_gc": (
                 aft["queue_keys_after_gc"] < aft["queue_keys_before_gc"]
             ),
+            "trace_violations": aft["trace_violations"],
         },
     }
     save("fig_chain", out)

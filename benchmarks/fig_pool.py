@@ -30,6 +30,7 @@ from typing import Dict, List
 
 from repro.core.gc import LocalGcAgent
 from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.obs import trace as obs_trace
 from repro.workflow import (
     PoolConfig,
     TxnScope,
@@ -236,12 +237,42 @@ def run(quick: bool = True) -> Dict:
     no_gc = _run_footprint(waves, per_wave, ts, seed=1, gc=False)
     with_gc = _run_footprint(waves, per_wave, ts, seed=1, gc=True)
 
+    # observability overhead: the largest arm re-run with span tracing on
+    # (ring sink), against a fresh tracing-off baseline with the same seed.
+    # The registry rides both arms (it is always on); this isolates the
+    # optional part — per-step span emission + trace-id hashing.
+    n = sweep[-1]
+    base = _run_pool(n, ts, seed=n + 1)
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(capacity=200_000)
+    try:
+        traced = _run_pool(n, ts, seed=n + 1)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+    overhead_pct = round(
+        (base["steps_per_s"] - traced["steps_per_s"])
+        / max(base["steps_per_s"], 1e-9) * 100, 2
+    )
+    obs_overhead = {
+        "concurrent_workflows": n,
+        "steps_per_s_tracing_off": base["steps_per_s"],
+        "steps_per_s_tracing_on": traced["steps_per_s"],
+        "overhead_pct": overhead_pct,
+        "trace_events": len(tracer.events()),
+    }
+    print(
+        f"[fig_pool] obs overhead @ {n} workflows: "
+        f"{base['steps_per_s']:.1f} steps/s tracing off vs "
+        f"{traced['steps_per_s']:.1f} tracing on ({overhead_pct:+.2f}%)"
+    )
+
     biggest = throughput[-1]
     out = {
         "steps_per_workflow": STEPS_PER_WORKFLOW,
         "failure_rate": FAILURE_RATE,
         "throughput_sweep": throughput,
         "footprint": {"no_gc": no_gc, "with_gc": with_gc},
+        "obs_overhead": obs_overhead,
         "headline": {
             "max_concurrent_workflows": biggest["concurrent_workflows"],
             "pool_steps_per_s": biggest["pool"]["steps_per_s"],
@@ -252,6 +283,7 @@ def run(quick: bool = True) -> Dict:
             "final_keys_no_gc": no_gc["final_keys"],
             "final_keys_with_gc": with_gc["final_keys"],
             "storage_plateaus_with_gc": with_gc["plateaued"],
+            "obs_overhead_pct": obs_overhead["overhead_pct"],
         },
     }
     save("fig_pool", out)

@@ -21,6 +21,7 @@ increments each branch exactly once, no matter how many attempts it took).
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from typing import Dict, List
@@ -29,6 +30,8 @@ from repro.core import AftNode, AftNodeConfig, TransactionObserver
 from repro.core.errors import ReadAbortError
 from repro.core.records import extract_metadata
 from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
 from repro.workflow import (
     TxnScope,
     WorkflowConfig,
@@ -225,6 +228,18 @@ def _run_mode(mode: str, workflows: int, ts: float, seed: int) -> Dict:
         "exactly_once_violations": violations,
         "branch_counts": counts,
     }
+    if cluster is not None:
+        # cluster-merged metrics view: gossip the per-node registry
+        # snapshots through the ICI plane when jax has devices, else take
+        # the fault manager's direct in-process path — same merged view
+        fm = cluster.fault_manager
+        try:
+            from repro.core.gossip import MetricsPlane
+
+            MetricsPlane(cluster.live_nodes(), store, fault_manager=fm).step()
+        except Exception:
+            fm.collect_metrics()
+        out["obs"] = fm.cluster_metrics()
     platform.shutdown()
     if cluster is not None:
         cluster.stop()
@@ -234,8 +249,29 @@ def _run_mode(mode: str, workflows: int, ts: float, seed: int) -> Dict:
 def run(quick: bool = True) -> Dict:
     ts = QUICK_TIME_SCALE
     workflows = 30 if quick else 120
-    aft = _run_mode("aft", workflows, ts, seed=11)
+    # tracing on for the aft stream: REPRO_TRACE_FILE adds the file sink
+    # (the CI obs-check hook replays it); otherwise the ring buffer alone
+    # feeds the offline checker below
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(
+        path=os.environ.get(obs_trace.TRACE_FILE_ENV), capacity=500_000
+    )
+    try:
+        aft = _run_mode("aft", workflows, ts, seed=11)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        tracer.close()
     unscoped = _run_mode("unscoped", workflows, ts, seed=11)
+
+    checked = check_events(tracer.events())
+    aft["trace_events"] = len(tracer.events())
+    aft["trace_violations"] = len(checked.violations)
+    save("obs_metrics", {
+        **aft.pop("obs", {"nodes": {}, "cluster": {}}),
+        "trace": {"events": aft["trace_events"],
+                  "violations": aft["trace_violations"],
+                  "summary": checked.summary()},
+    })
     out = {
         "branches": BRANCHES,
         "failure_rate": FAILURE_RATE,
@@ -247,6 +283,7 @@ def run(quick: bool = True) -> Dict:
             "unscoped_anomalies": unscoped["fr_anomalies"]
             + unscoped["exactly_once_violations"],
             "aft_exactly_once": aft["exactly_once_violations"] == 0,
+            "trace_violations": aft["trace_violations"],
         },
     }
     save("fig_workflow", out)

@@ -167,47 +167,81 @@ def io_table() -> str:
     return "\n".join(rows)
 
 
+def obs_table() -> str:
+    """Per-node + cluster-merged registry snapshots with the commit-phase
+    latency breakdown (obs layer; written by figw with tracing enabled)."""
+    res = json.loads((RESULTS / "obs_metrics.json").read_text())
+
+    def hist(snap: dict, key: str) -> tuple:
+        h = snap.get(key)
+        if not isinstance(h, dict) or not h.get("count"):
+            return "—", "—"
+        return f"{h['p50_ms']:.2f}", f"{h['p99_ms']:.2f}"
+
+    rows = ["| scope | commits | commit p50/p99 ms | version flush p50 | "
+            "probe p50 | record write p50 | queue wait p50 |",
+            "|---|---|---|---|---|---|---|"]
+    scopes = [(f"node {nid}", snap)
+              for nid, snap in sorted(res["nodes"].items())]
+    scopes.append(("cluster (merged)", res["cluster"]))
+    for label, snap in scopes:
+        p50, p99 = hist(snap, "commit.total")
+        rows.append(
+            f"| {label} | {snap.get('commits', 0)} | {p50}/{p99} | "
+            f"{hist(snap, 'commit.version_flush')[0]} | "
+            f"{hist(snap, 'commit.probe')[0]} | "
+            f"{hist(snap, 'commit.record_write')[0]} | "
+            f"{hist(snap, 'pipeline.queue_wait')[0]} |")
+    trace = res.get("trace")
+    if trace:
+        rows.append("")
+        rows.append(
+            f"trace: {trace['events']} events, checker violations: "
+            f"{trace['violations']} "
+            f"({'clean' if not trace['violations'] else 'VIOLATIONS'})")
+    return "\n".join(rows)
+
+
+# section name → (title, renderer, `--only` hint when its results file is
+# missing; None = results ship with the repo, let the error surface)
+SECTIONS = {
+    "dryrun": ("Dry-run matrix", dryrun_table, None),
+    "roofline": ("Roofline baselines (single pod, 256 chips)",
+                 lambda: roofline_table(tagged=False), None),
+    "variants": ("Perf-iteration variants",
+                 lambda: roofline_table(tagged=True), None),
+    "routing": ("Routing policies (figr: 4 nodes, Zipf entities)",
+                routing_table, "figr"),
+    "chain": ("Cross-workflow chaining (figc: kill-mid-handoff)",
+              chain_table, "figc"),
+    "io": ("Async storage I/O pipeline (figa: group commit)",
+           io_table, "figa"),
+    "obs": ("Observability (per-node + gossip-merged registry, figw)",
+            obs_table, "figw"),
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "variants",
-                             "routing", "chain", "io"])
+    ap.add_argument("--section", default="all")
     args = ap.parse_args()
-    if args.section in ("all", "dryrun"):
-        print("### Dry-run matrix\n")
-        print(dryrun_table())
-        print()
-    if args.section in ("all", "roofline"):
-        print("### Roofline baselines (single pod, 256 chips)\n")
-        print(roofline_table(tagged=False))
-        print()
-    if args.section in ("all", "variants"):
-        print("### Perf-iteration variants\n")
-        print(roofline_table(tagged=True))
-        print()
-    if args.section in ("all", "routing"):
+    if args.section != "all" and args.section not in SECTIONS:
+        ap.error(
+            f"unknown section {args.section!r}; registered sections: "
+            f"all, {', '.join(SECTIONS)}"
+        )
+    for name, (title, render, hint) in SECTIONS.items():
+        if args.section not in ("all", name):
+            continue
         try:
-            table = routing_table()
+            table = render()
         except FileNotFoundError:
-            table = "(run `python -m benchmarks.run --only figr` first)"
-        print("### Routing policies (figr: 4 nodes, Zipf entities)\n")
+            if hint is None:
+                raise
+            table = f"(run `python -m benchmarks.run --only {hint}` first)"
+        print(f"### {title}\n")
         print(table)
         print()
-    if args.section in ("all", "chain"):
-        try:
-            table = chain_table()
-        except FileNotFoundError:
-            table = "(run `python -m benchmarks.run --only figc` first)"
-        print("### Cross-workflow chaining (figc: kill-mid-handoff)\n")
-        print(table)
-        print()
-    if args.section in ("all", "io"):
-        try:
-            table = io_table()
-        except FileNotFoundError:
-            table = "(run `python -m benchmarks.run --only figa` first)"
-        print("### Async storage I/O pipeline (figa: group commit)\n")
-        print(table)
 
 
 if __name__ == "__main__":

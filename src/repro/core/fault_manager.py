@@ -29,6 +29,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Set
 
+from ..obs.registry import Registry
 from ..storage.base import StorageEngine
 from .commit_cache import CommitSetCache
 from .ids import TxnId
@@ -139,6 +140,38 @@ class FaultManager:
             "orphan_spills_deleted": 0,
             "nodes_replaced": 0,
         }
+        # gossip-fed per-node registry snapshots (repro/obs): the fault
+        # manager is the cluster-wide observer, so the merged metrics view
+        # lives here alongside the aggregate commit view
+        self._metrics_lock = threading.Lock()
+        self._node_metrics: Dict[str, dict] = {}
+
+    # ----------------------------------------------------- metrics (obs)
+    def ingest_metrics(self, snapshots: Dict[str, dict]) -> None:
+        """Accept per-node registry snapshots (from a ``MetricsPlane``
+        gossip round, or any out-of-band push); newest wins per node."""
+        with self._metrics_lock:
+            self._node_metrics.update(snapshots)
+
+    def collect_metrics(self) -> int:
+        """Direct (no-gossip) refresh: snapshot every live member's
+        registry in-process.  The fallback path when the jax collective
+        plane isn't running — same merged view, no ICI round."""
+        fresh = {
+            node.node_id: node.registry.snapshot()
+            for node in self.membership()
+            if node.alive
+        }
+        self.ingest_metrics(fresh)
+        return len(fresh)
+
+    def cluster_metrics(self) -> Dict[str, dict]:
+        """``{"nodes": {node_id: snapshot}, "cluster": merged}`` — the
+        cluster view is :meth:`Registry.merge` over the per-node snapshots
+        (counters summed, ``*_rate`` gauges averaged, histograms merged)."""
+        with self._metrics_lock:
+            nodes = {k: dict(v) for k, v in self._node_metrics.items()}
+        return {"nodes": nodes, "cluster": Registry.merge(list(nodes.values()))}
 
     # ------------------------------------------------------------ ingestion
     def ingest(self) -> int:

@@ -52,6 +52,7 @@ See ``docs/WORKFLOWS.md``.
 from __future__ import annotations
 
 import json
+import logging
 import threading
 from typing import List, Optional, Set
 
@@ -74,6 +75,8 @@ from .records import (
     uuid_key,
 )
 
+log = logging.getLogger("repro.gc")
+
 
 class LocalGcAgent:
     def __init__(self, node: AftNode, *, workflow_gc_batch: int = 64):
@@ -82,6 +85,10 @@ class LocalGcAgent:
         self.workflow_gc_batch = workflow_gc_batch
         self.workflows_reclaimed = 0
         self.memo_keys_deleted = 0
+        # keys whose delete flush failed and were therefore left in storage
+        # for a later pass — reported, never silently dropped
+        self.gc_skipped_keys = 0
+        self._c_skipped = node.registry.counter("gc_skipped_keys")
         # deletes enqueued on the node's storage I/O pipeline this pass
         # (coalesced into shared delete_batch flushes off this thread, so
         # the sweep's round trips never serialize with foreground commits);
@@ -168,7 +175,15 @@ class LocalGcAgent:
         # — acking anyway would let the marker retire with doomed keys
         # still in storage, orphaning them forever (deletes are idempotent,
         # so the next pass simply redoes the sweep).
-        if not self._drain_deletes():
+        skipped = self._drain_deletes()
+        if skipped:
+            self.gc_skipped_keys += skipped
+            self._c_skipped.inc(skipped)
+            log.warning(
+                "gc sweep on %s: delete flush failed, %d key(s) left in "
+                "storage; un-sweeping %d marker(s) for retry next pass",
+                self.node.node_id, skipped, len(todo),
+            )
             self._swept_markers -= set(todo)
             return 0
         # ack AFTER the storage sweep + cache purge: the fault manager
@@ -193,18 +208,20 @@ class LocalGcAgent:
         if pipeline is None:
             self.node.storage.delete_batch(keys)
             return
-        self._delete_futures.append(pipeline.submit_deletes(keys))
+        self._delete_futures.append((pipeline.submit_deletes(keys),
+                                     len(keys)))
 
-    def _drain_deletes(self) -> bool:
-        """Wait out this pass's delete flushes; False if any failed."""
+    def _drain_deletes(self) -> int:
+        """Wait out this pass's delete flushes; returns the number of keys
+        whose flush failed (0 ⇔ everything landed)."""
         futures, self._delete_futures = self._delete_futures, []
-        ok = True
-        for fut in futures:
+        skipped = 0
+        for fut, nkeys in futures:
             try:
                 fut.result()
             except Exception:
-                ok = False  # idempotent; caller re-sweeps next pass
-        return ok
+                skipped += nkeys  # idempotent; caller re-sweeps next pass
+        return skipped
 
     def _find_entry_for_child(self, wf_uuid: str) -> Optional[dict]:
         """Locate a finished chain child's queue entry without marker

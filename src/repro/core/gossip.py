@@ -21,6 +21,7 @@ in the host-network plane.
 from __future__ import annotations
 
 import hashlib
+import json
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -35,6 +36,10 @@ from .records import COMMIT_PREFIX, TransactionRecord, commit_key
 from .supersede import is_superseded
 
 DIGEST_WIDTH = 4
+
+# storage namespace for published node-metrics snapshots (repro/obs):
+# m/<node_id> holds the node's latest registry snapshot as JSON
+METRICS_PREFIX = "m/"
 
 
 def _hash64(s: str) -> int:
@@ -163,3 +168,76 @@ class DigestPlane:
                     merged += node.merge_remote_commits([rec])
         self.stats["rounds"] += 1
         return merged
+
+
+class MetricsPlane:
+    """Gossip-fed cluster metrics aggregation (repro/obs) on the ICI.
+
+    Rides the exact machinery of :class:`DigestPlane`: each round, every
+    node publishes its registry snapshot as JSON under ``m/<node_id>`` and
+    contributes one ``[seq_hi, seq_lo, hash_hi, hash_lo]`` int32 row; a
+    single ``all_gather`` (``exchange_digests`` with k=1) makes every row
+    globally visible.  A row is a *pointer*, not the payload — the snapshot
+    blob itself travels through shared storage, and the gossiped hash
+    verifies the fetched bytes (a mismatch means the publish raced the
+    fetch; the row is skipped and the next round retries).  Stale rows
+    (seq not newer than the last ingested) are skipped too, so a wedged
+    node's frozen snapshot is ingested once, not every round.
+
+    The merged view lands in the fault manager (``ingest_metrics``), which
+    is where a cluster-wide observer already lives; ``views`` keeps the
+    plane's own copy for driving code that has no fault manager.
+    """
+
+    def __init__(self, nodes: Sequence[AftNode], storage, *,
+                 fault_manager=None, mesh: Optional[Mesh] = None):
+        self.nodes = list(nodes)
+        self.storage = storage
+        self.fault_manager = fault_manager
+        self.mesh = mesh
+        self._seq = 0
+        self._ingested_seq: Dict[str, int] = {}
+        self.views: Dict[str, dict] = {}  # node_id → latest snapshot
+        self.stats = {"rounds": 0, "published": 0, "ingested": 0,
+                      "hash_mismatches": 0}
+
+    def _publish(self, node: AftNode) -> Tuple[int, int]:
+        """Write the node's snapshot blob; returns (seq, hash64)."""
+        snap = node.registry.snapshot()
+        blob = json.dumps(snap, sort_keys=True, default=str).encode()
+        self.storage.put(f"{METRICS_PREFIX}{node.node_id}", blob)
+        self.stats["published"] += 1
+        return self._seq, _hash64(blob.decode())
+
+    def step(self) -> int:
+        """One gossip round.  Returns the number of snapshots ingested."""
+        self._seq += 1
+        rows = np.zeros((len(self.nodes), 1, DIGEST_WIDTH), dtype=np.uint32)
+        for i, node in enumerate(self.nodes):
+            if not node.alive:
+                continue  # zero row: peers skip it, like an empty digest
+            seq, h = self._publish(node)
+            s_hi, s_lo = _split64(seq)
+            h_hi, h_lo = _split64(h)
+            rows[i, 0] = (s_hi, s_lo, h_hi, h_lo)
+        gathered = exchange_digests(rows.view(np.int32), self.mesh)
+        ingested = 0
+        fresh: Dict[str, dict] = {}
+        for j, node in enumerate(self.nodes):
+            for seq, h in unpack_digest(gathered[j]):
+                if seq <= self._ingested_seq.get(node.node_id, 0):
+                    continue
+                raw = self.storage.get(f"{METRICS_PREFIX}{node.node_id}")
+                if raw is None or _hash64(raw.decode()) != h:
+                    self.stats["hash_mismatches"] += raw is not None
+                    continue
+                snap = json.loads(raw)
+                self._ingested_seq[node.node_id] = seq
+                self.views[node.node_id] = snap
+                fresh[node.node_id] = snap
+                ingested += 1
+        if fresh and self.fault_manager is not None:
+            self.fault_manager.ingest_metrics(fresh)
+        self.stats["rounds"] += 1
+        self.stats["ingested"] += ingested
+        return ingested

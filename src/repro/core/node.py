@@ -24,12 +24,15 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Set, Tuple
 
+from ..obs import trace as obs_trace
+from ..obs.registry import Registry
 from ..storage.base import StorageEngine
 from ..storage.pipeline import PipelineConfig, StorageIOPipeline
 from .atomic_read import ReadSelection, ReadStatus, atomic_read_select
@@ -100,6 +103,9 @@ class TxnState(Enum):
     ABORTED = "aborted"
 
 
+_stats_deprecation_warned = False
+
+
 class NodeStats(dict):
     """Counter map that is also callable.
 
@@ -108,13 +114,28 @@ class NodeStats(dict):
     with derived gauges — open sessions, in-flight ops, data-cache hit
     rate — taken under the node lock.  The snapshot is what routing
     policies (``core/routing.py``) and benchmark reports consume: a copy,
-    never a live view, so a scorer iterating it cannot race the node."""
+    never a live view, so a scorer iterating it cannot race the node.
+
+    Deprecation shim: the snapshot is now assembled by the node's metrics
+    registry (``node.registry``, ``repro/obs/registry.py``); calling
+    ``node.stats()`` still returns the same key set, but new code should
+    read ``node.registry.snapshot()`` (which additionally carries the
+    commit-phase latency histograms)."""
 
     def __init__(self, counters: Dict[str, int], snapshot_fn) -> None:
         super().__init__(counters)
         self._snapshot_fn = snapshot_fn
 
     def __call__(self) -> Dict[str, float]:
+        global _stats_deprecation_warned
+        if not _stats_deprecation_warned:
+            _stats_deprecation_warned = True
+            warnings.warn(
+                "AftNode.stats() is a deprecated read path; use "
+                "node.registry.snapshot() (repro.obs.registry) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         return self._snapshot_fn()
 
 
@@ -152,10 +173,17 @@ class AftNode:
         config: Optional[AftNodeConfig] = None,
         *,
         bootstrap: bool = True,
+        registry: Optional[Registry] = None,
     ) -> None:
         self.storage = storage
         self.config = config or AftNodeConfig()
         self.node_id = self.config.node_id
+        # unified metrics registry (repro/obs): each node owns one unless the
+        # caller shares theirs; legacy stats dicts attach as live views
+        self.registry = registry or Registry(
+            name=self.node_id,
+            time_scale=getattr(storage, "time_scale", 1.0),
+        )
         self.clock = Clock(skew_ns=self.config.clock_skew_ns)
         self.cache = CommitSetCache()
         self.data_cache = DataCache(self.config.data_cache_bytes)
@@ -197,6 +225,15 @@ class AftNode:
             },
             self._stats_snapshot,
         )
+        # registry wiring: counters stay the live dict above (writers keep
+        # doing ``stats["x"] += 1``), derived gauges come from a provider,
+        # and the commit path decomposes into phase histograms (ISSUE 6)
+        self.registry.attach_counters(self.stats)
+        self.registry.attach_provider(self._gauges)
+        self._h_commit = self.registry.histogram("commit.total")
+        self._h_version_flush = self.registry.histogram("commit.version_flush")
+        self._h_probe = self.registry.histogram("commit.probe")
+        self._h_record_write = self.registry.histogram("commit.record_write")
         if bootstrap:
             self.bootstrap()
 
@@ -253,6 +290,7 @@ class AftNode:
                         flush_concurrency=self.config.flush_concurrency,
                         name=f"io-{self.node_id}",
                     ),
+                    registry=self.registry,
                 )
             return self._pipeline
 
@@ -281,11 +319,10 @@ class AftNode:
         wall-clock protocol waits must shrink with the ops they pace."""
         return getattr(self.storage, "time_scale", 1.0)
 
-    def _stats_snapshot(self) -> Dict[str, float]:
-        """Thread-safe point-in-time view: counters + derived gauges.
-        This is ``node.stats()`` — see :class:`NodeStats`."""
+    def _gauges(self) -> Dict[str, float]:
+        """Derived gauges, sampled by the registry at snapshot time."""
         with self._lock:
-            snap: Dict[str, float] = dict(self.stats)
+            snap: Dict[str, float] = {}
             snap["open_sessions"] = sum(
                 1 for c in self._txns.values() if c.state is TxnState.RUNNING
             )
@@ -299,16 +336,28 @@ class AftNode:
         snap["data_cache_bytes"] = dc["bytes"]
         lookups = dc["hits"] + dc["misses"]
         snap["data_cache_hit_rate"] = dc["hits"] / lookups if lookups else 0.0
+        pipe = self._pipeline
+        if pipe is not None:
+            for k, v in pipe.stats().items():
+                snap[f"io_{k}"] = v
+        return snap
+
+    def _stats_snapshot(self) -> Dict[str, float]:
+        """Thread-safe point-in-time view: counters + derived gauges.
+        This is ``node.stats()`` — see :class:`NodeStats`.  The snapshot is
+        read through the metrics registry (counters and gauges are attached
+        there); histogram summaries are flattened back to the historical
+        ``commit_p50_ms``/``commit_p99_ms`` keys."""
+        snap: Dict[str, float] = {
+            k: v for k, v in self.registry.snapshot().items()
+            if not isinstance(v, dict)
+        }
         with self._lat_lock:
             lat = sorted(self._commit_lat)
         if lat:
             snap["commit_p50_ms"] = lat[len(lat) // 2] * 1e3
             snap["commit_p99_ms"] = lat[min(len(lat) - 1,
                                             int(len(lat) * 0.99))] * 1e3
-        pipe = self._pipeline
-        if pipe is not None:
-            for k, v in pipe.stats().items():
-                snap[f"io_{k}"] = v
         return snap
 
     # ------------------------------------------------------------- bootstrap
@@ -418,6 +467,19 @@ class AftNode:
                 ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
                 chosen = sel.tid
             value = self._fetch(key, chosen)
+            tracer = obs_trace.get_tracer()
+            if tracer.enabled:
+                # the offline checker (repro/obs/checker.py) replays these
+                # to re-derive Definition-1 read atomicity from the log alone
+                rec = self.cache.get(chosen)
+                tracer.emit(
+                    "read",
+                    txn=ctx.uuid,
+                    trace=obs_trace.txn_trace_id(ctx.uuid),
+                    key=key,
+                    tid=chosen.encode(),
+                    cow=list(rec.write_set) if rec is not None else [key],
+                )
             return value, chosen
         finally:
             self._op_end()
@@ -494,8 +556,10 @@ class AftNode:
         try:
             return self._commit_transaction(txid)
         finally:
+            dt = time.perf_counter() - t0
             with self._lat_lock:
-                self._commit_lat.append(time.perf_counter() - t0)
+                self._commit_lat.append(dt)
+            self._h_commit.observe_s(dt)
             self._op_end()
 
     def _probe_already_committed(self, ctx: TransactionContext) -> Optional[TxnId]:
@@ -542,14 +606,24 @@ class AftNode:
             # committed, so a crash between the two reads as "not committed".
             to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
             ctx.commit_attempted = True
+            tracer = obs_trace.get_tracer()
+            t_vf = time.perf_counter()
             self.storage.put_batch(to_write)
+            self._h_version_flush.observe_s(time.perf_counter() - t_vf)
+            if tracer.enabled:
+                tracer.emit("order", uuid=ctx.uuid, stage="versions")
             # step 2: persist the commit record — the *linearization point*
             # for durability; a crash before this line loses the txn (client
             # retries), a crash after it is a committed txn (§3.3.1).
             record = TransactionRecord(
                 tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
             )
+            t_rec = time.perf_counter()
             self.storage.put(commit_key(tid), record.encode())
+            self._h_record_write.observe_s(time.perf_counter() - t_rec)
+            if tracer.enabled:
+                tracer.emit("order", uuid=ctx.uuid, stage="record",
+                            writes=len(write_set))
             self._commit_make_visible(ctx, tid, record, to_write, storage_keys)
         else:
             # read-only transaction: nothing to persist or announce.
@@ -578,6 +652,11 @@ class AftNode:
         ctx.state = TxnState.COMMITTED
         ctx.committed_tid = tid
         self.stats["commits"] += 1
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            tracer.emit("order", uuid=ctx.uuid, stage="visible",
+                        tid=tid.encode(),
+                        trace=obs_trace.txn_trace_id(ctx.uuid))
 
     # ---------------------------------------------------------- async commit
     def commit_transaction_async(self, txid: str) -> "Future[TxnId]":
@@ -616,8 +695,10 @@ class AftNode:
 
         def settle(tid: Optional[TxnId] = None,
                    exc: Optional[BaseException] = None) -> None:
+            dt = time.perf_counter() - t0
             with self._lat_lock:
-                self._commit_lat.append(time.perf_counter() - t0)
+                self._commit_lat.append(dt)
+            self._h_commit.observe_s(dt)
             self._op_end()
             if exc is not None:
                 result.set_exception(exc)
@@ -678,12 +759,22 @@ class AftNode:
                 tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
             )
 
+            # mutable cell: advance() stamps the record-write submit time,
+            # after_record reads it (the closures share this commit's scope)
+            t_rec = [0.0]
+
             def after_record(f: Future) -> None:
                 exc = f.exception()
                 if exc is not None:
                     settle(exc=exc)
                     return
                 try:
+                    self._h_record_write.observe_s(
+                        time.perf_counter() - t_rec[0])
+                    tracer = obs_trace.get_tracer()
+                    if tracer.enabled:
+                        tracer.emit("order", uuid=ctx.uuid, stage="record",
+                                    writes=len(write_set))
                     self._commit_make_visible(
                         ctx, tid, record, to_write, storage_keys
                     )
@@ -725,6 +816,7 @@ class AftNode:
                     # step 2: the commit record, ordered strictly after
                     # THIS transaction's version flush and index write (the
                     # put still coalesces with other transactions' I/O).
+                    t_rec[0] = time.perf_counter()
                     pipeline.submit_put(
                         commit_key(tid), record.encode()
                     ).add_done_callback(after_record)
@@ -732,11 +824,21 @@ class AftNode:
                     settle(exc=e)
 
             def after_versions(f: Future) -> None:
+                exc = f.exception()
+                if exc is None:
+                    # queue wait + coalesced flush, measured from commit
+                    # start: the version-flush leg of the phase breakdown
+                    self._h_version_flush.observe_s(time.perf_counter() - t0)
+                    tracer = obs_trace.get_tracer()
+                    if tracer.enabled:
+                        tracer.emit("order", uuid=ctx.uuid, stage="versions")
                 with join_lock:
-                    join_state["versions"] = (f.exception(),)
+                    join_state["versions"] = (exc,)
                 advance()
 
             def probe_done(out) -> None:
+                if need_probe:
+                    self._h_probe.observe_s(time.perf_counter() - t0)
                 with join_lock:
                     join_state["probe"] = out
                 advance()

@@ -24,6 +24,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
+from ..obs.registry import Registry
+
 
 class FunctionFailure(Exception):
     """A function instance died mid-execution (injected)."""
@@ -46,7 +48,8 @@ class FaasConfig:
 
 
 class LambdaPlatform:
-    def __init__(self, config: Optional[FaasConfig] = None):
+    def __init__(self, config: Optional[FaasConfig] = None, *,
+                 registry: Optional[Registry] = None):
         self.config = config or FaasConfig()
         self._rng = random.Random(self.config.seed)
         self._rng_lock = threading.Lock()
@@ -61,6 +64,22 @@ class LambdaPlatform:
         # counters are bumped from many pool threads at once (submit/map);
         # bare += would drop updates
         self._stats_lock = threading.Lock()
+        self.registry = registry or Registry(
+            name="faas", time_scale=self.config.time_scale)
+        self.registry.attach_provider(self._counters)
+        self._h_invoke = self.registry.histogram("site:invoke:single")
+        self._h_invoke_batch = self.registry.histogram("site:invoke:batch")
+
+    def _counters(self) -> dict:
+        with self._stats_lock:
+            return {
+                "invocations": self.invocations,
+                "batched_invocations": self.batched_invocations,
+                "batched_steps": self.batched_steps,
+                "failures_injected": self.failures_injected,
+                "retries": self.retries,
+                "on_failure_errors": self.on_failure_errors,
+            }
 
     # -- simulation hooks ------------------------------------------------
     def _sleep_ms(self, ms: float) -> None:
@@ -106,8 +125,12 @@ class LambdaPlatform:
             self.invocations += 1
         if self.config.failure_sites is not None:
             self.maybe_fail(site="invoke:single")
-        self._sleep_ms(self._sample_overhead())
-        return fn(*args, **kwargs)
+        t0 = time.perf_counter()
+        try:
+            self._sleep_ms(self._sample_overhead())
+            return fn(*args, **kwargs)
+        finally:
+            self._h_invoke.observe_s(time.perf_counter() - t0)
 
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Future:
         """Schedule one function invocation on the platform pool — the
@@ -140,6 +163,7 @@ class LambdaPlatform:
             self.invocations += 1
             self.batched_invocations += 1
             self.batched_steps += len(thunks)
+        t0 = time.perf_counter()
         self._sleep_ms(self._sample_overhead())
         out: List[Any] = []
         for thunk in thunks:
@@ -153,6 +177,7 @@ class LambdaPlatform:
                     out.append(exc)
                     continue
             out.append(thunk())
+        self._h_invoke_batch.observe_s(time.perf_counter() - t0)
         return out
 
     def submit_batch(self, thunks: Sequence[Callable[[], Any]]) -> Future:

@@ -1,0 +1,267 @@
+"""Offline trace-replay invariant checker.
+
+Re-derives AFT's safety invariants from a JSON-lines trace event log alone —
+no access to the cluster, the storage engine, or ``repro.core`` (this module
+is deliberately self-contained, a *separate encoding* of the invariants so it
+can catch protocol bugs rather than inherit them):
+
+* **read atomicity** (Definition 1, §3.4) — from ``read`` events: a
+  transaction that read ``k`` at version ``i`` whose committing transaction
+  cowrote ``l`` must not also have read ``l`` at a version older than ``i``
+  (and must not have read ``l`` as NULL while ``i`` proves a committed
+  version of ``l`` exists).
+* **§3.3 write ordering** — from ``order`` events: for every committing
+  transaction, data/version writes land before the commit record, and the
+  commit record lands before the commit becomes locally visible.
+* **exactly-once triggers/commits** (§3.3.1) — from ``wf_finished`` events:
+  all non-deduplicated completions of one workflow UUID (including chain
+  children replayed after a kill) must agree on a single committed
+  transaction ID — two distinct TIDs means the idempotency machinery
+  re-applied effects.
+* **span uniqueness** — from ``span`` events: no span ID is emitted twice
+  (attempt-qualified IDs must make kill-and-retry replays distinct).
+
+Versions are compared by their encoded TxnId strings, whose lexicographic
+order equals ``⟨timestamp, uuid⟩`` order (see ``core/ids.py``).
+
+CLI::
+
+    python -m repro.obs.checker trace.jsonl        # exit 1 on any violation
+    python -m repro.obs.checker --selftest         # seeded-violation check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
+
+__all__ = [
+    "Violation",
+    "CheckResult",
+    "check_events",
+    "check_file",
+    "seeded_violation_events",
+]
+
+
+@dataclass
+class Violation:
+    invariant: str   # read-atomicity | write-ordering | exactly-once | span-unique
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.invariant}] {self.detail}"
+
+
+@dataclass
+class CheckResult:
+    violations: List[Violation] = field(default_factory=list)
+    events: int = 0
+    txns_checked: int = 0
+    commits_checked: int = 0
+    finishes_checked: int = 0
+    spans_checked: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        lines = [
+            f"events scanned:        {self.events}",
+            f"read txns checked:     {self.txns_checked}",
+            f"commit orders checked: {self.commits_checked}",
+            f"workflow finishes:     {self.finishes_checked}",
+            f"spans checked:         {self.spans_checked}",
+            f"violations:            {len(self.violations)}",
+        ]
+        lines.extend(f"  {v}" for v in self.violations)
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# invariant 1: read atomicity (Definition 1)
+# ---------------------------------------------------------------------------
+
+def _fractured_witness(version: Mapping[str, str],
+                       cow: Mapping[str, Tuple[str, ...]]) -> Optional[str]:
+    """Definition 1 over encoded-TxnId strings: ∀ k read at version i, every
+    key l cowritten by i's transaction that was also read must satisfy
+    j ≥ i.  (NULL reads are excluded, mirroring Algorithm 1's dynamic read
+    sets: a key read as NULL before a cowriting sibling entered the read set
+    is a legitimately stale-but-atomic read, not a fracture.)"""
+    for k, i in version.items():
+        for l in cow.get(k, ()):
+            j = version.get(l)
+            if j is not None and j < i:  # encoded TxnIds order lexically
+                return (f"read {k}@{i} whose txn cowrote {l}, but read "
+                        f"{l}@{j} with {j} < {i}")
+    return None
+
+
+def _check_read_atomicity(reads_by_txn: Mapping[str, List[dict]],
+                          out: CheckResult) -> None:
+    for txn, reads in reads_by_txn.items():
+        out.txns_checked += 1
+        version: Dict[str, str] = {}      # key -> encoded tid (last read wins)
+        cow: Dict[str, Tuple[str, ...]] = {}
+        for r in reads:
+            key = r.get("key")
+            tid = r.get("tid")
+            if key is None or tid is None:
+                continue
+            version[key] = str(tid)
+            cow[key] = tuple(str(c) for c in (r.get("cow") or ()))
+            witness = _fractured_witness(version, cow)
+            if witness is not None:
+                out.violations.append(Violation(
+                    "read-atomicity", f"txn {txn}: {witness}"))
+                # drop the offending read so one stale read is not re-counted
+                # on every subsequent read of the same transaction
+                del version[key]
+                del cow[key]
+
+
+# ---------------------------------------------------------------------------
+# invariant 2: §3.3 write ordering
+# ---------------------------------------------------------------------------
+
+def _check_write_ordering(orders_by_uuid: Mapping[str, List[dict]],
+                          out: CheckResult) -> None:
+    for uuid, evs in orders_by_uuid.items():
+        out.commits_checked += 1
+        version_seqs = [e["seq"] for e in evs if e["stage"] == "versions"]
+        record_evs = [e for e in evs if e["stage"] == "record"]
+        record_seqs = [e["seq"] for e in record_evs]
+        for e in record_evs:
+            if e.get("writes", 0) > 0 and not any(
+                    s < e["seq"] for s in version_seqs):
+                out.violations.append(Violation(
+                    "write-ordering",
+                    f"txn {uuid}: commit record (seq {e['seq']}) with "
+                    f"{e['writes']} writes but no prior version flush"))
+        for e in (e for e in evs if e["stage"] == "visible"):
+            if not any(s < e["seq"] for s in record_seqs):
+                out.violations.append(Violation(
+                    "write-ordering",
+                    f"txn {uuid}: became visible (seq {e['seq']}) before "
+                    f"any commit-record write"))
+
+
+# ---------------------------------------------------------------------------
+# invariant 3: exactly-once workflow completion (§3.3.1)
+# ---------------------------------------------------------------------------
+
+def _check_exactly_once(finishes_by_uuid: Mapping[str, List[dict]],
+                        out: CheckResult) -> None:
+    for uuid, evs in finishes_by_uuid.items():
+        out.finishes_checked += 1
+        tids: Set[str] = {
+            str(e["tid"]) for e in evs
+            if not e.get("deduped") and e.get("tid") is not None
+        }
+        if len(tids) > 1:
+            out.violations.append(Violation(
+                "exactly-once",
+                f"workflow {uuid}: finished under {len(tids)} distinct "
+                f"commit TIDs ({sorted(tids)}) — effects applied twice"))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def check_events(events: Iterable[Mapping]) -> CheckResult:
+    out = CheckResult()
+    reads_by_txn: Dict[str, List[dict]] = {}
+    orders_by_uuid: Dict[str, List[dict]] = {}
+    finishes_by_uuid: Dict[str, List[dict]] = {}
+    span_ids: Dict[str, int] = {}
+
+    for ev in events:
+        out.events += 1
+        kind = ev.get("ev")
+        if kind == "read":
+            reads_by_txn.setdefault(str(ev.get("txn")), []).append(dict(ev))
+        elif kind == "order":
+            orders_by_uuid.setdefault(str(ev.get("uuid")), []).append(dict(ev))
+        elif kind == "wf_finished":
+            finishes_by_uuid.setdefault(
+                str(ev.get("uuid")), []).append(dict(ev))
+        elif kind == "span":
+            out.spans_checked += 1
+            sid = ev.get("span")
+            if sid is not None:
+                span_ids[sid] = span_ids.get(sid, 0) + 1
+
+    _check_read_atomicity(reads_by_txn, out)
+    _check_write_ordering(orders_by_uuid, out)
+    _check_exactly_once(finishes_by_uuid, out)
+    for sid, n in span_ids.items():
+        if n > 1:
+            out.violations.append(Violation(
+                "span-unique", f"span id {sid} emitted {n} times"))
+    return out
+
+
+def check_file(path: str) -> CheckResult:
+    events = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return check_events(events)
+
+
+# ---------------------------------------------------------------------------
+# seeded violation (negative self-test)
+# ---------------------------------------------------------------------------
+
+def seeded_violation_events() -> List[dict]:
+    """A minimal trace with one deliberate read-atomicity violation: txn B
+    reads y from t1 (which cowrote x and y) but x from the older t0."""
+    t0 = f"{1000:020d}.aaaa"
+    t1 = f"{2000:020d}.bbbb"
+    return [
+        {"seq": 1, "ev": "order", "uuid": "bbbb", "stage": "versions"},
+        {"seq": 2, "ev": "order", "uuid": "bbbb", "stage": "record",
+         "writes": 2},
+        {"seq": 3, "ev": "order", "uuid": "bbbb", "stage": "visible"},
+        {"seq": 4, "ev": "read", "txn": "reader", "key": "x", "tid": t0,
+         "cow": ["x"]},
+        {"seq": 5, "ev": "read", "txn": "reader", "key": "y", "tid": t1,
+         "cow": ["x", "y"]},
+    ]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.checker",
+        description="Replay a trace event log and verify AFT invariants.")
+    ap.add_argument("trace", nargs="?", help="JSON-lines trace file")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the checker flags a seeded violation")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        res = check_events(seeded_violation_events())
+        detected = any(v.invariant == "read-atomicity"
+                       for v in res.violations)
+        print(res.summary())
+        print("selftest:", "seeded violation detected"
+              if detected else "FAILED to detect seeded violation")
+        return 0 if detected else 1
+
+    if not args.trace:
+        ap.error("a trace file is required (or --selftest)")
+    res = check_file(args.trace)
+    print(res.summary())
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

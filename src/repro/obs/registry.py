@@ -1,0 +1,407 @@
+"""Unified metrics registry: counters, gauges, histograms with streaming
+percentile sketches.
+
+One ``Registry`` instance per scope owner (an ``AftNode``, a
+``WorkflowPool``, a ``LambdaPlatform``); components either create typed
+metrics (``counter`` / ``gauge`` / ``histogram``) or attach the live stats
+dicts they already maintain (``attach_counters`` / ``attach_provider``), so
+the pre-existing ``stats["x"] += 1`` call sites keep working while the
+registry becomes the single read path.
+
+``snapshot()`` returns a flat, JSON-serializable dict: plain numbers for
+counters/gauges, a mergeable summary dict for each histogram.  Snapshots
+from many nodes combine with ``Registry.merge`` (counters sum, ``*_rate``
+keys average, histogram sketches union by weighted sample) — that is what
+the gossip-fed cluster view in ``core/gossip.MetricsPlane`` ships around —
+and render to a Prometheus-style text dump with ``Registry.to_prometheus``.
+
+Latency histograms store **milliseconds of wall time**.  Benchmarks run the
+engines under a ``time_scale`` compression factor; the registry carries
+that factor (``Registry.time_scale``) so report tooling can re-expand
+percentiles to engine milliseconds (``wall_ms / time_scale``) without the
+hot path paying for the division.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+import time
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "QuantileSketch",
+    "Registry",
+    "Scope",
+]
+
+_QUANTILES = ((0.50, "p50_ms"), (0.90, "p90_ms"), (0.99, "p99_ms"))
+
+
+def _weighted_quantile(pairs: List[Tuple[float, float]], q: float) -> float:
+    """Quantile over (value, weight) pairs by weighted rank."""
+    if not pairs:
+        return 0.0
+    pairs = sorted(pairs)
+    total = sum(w for _, w in pairs)
+    rank = q * total
+    acc = 0.0
+    for value, weight in pairs:
+        acc += weight
+        if acc >= rank:
+            return value
+    return pairs[-1][0]
+
+
+class QuantileSketch:
+    """Bounded-memory streaming quantile sketch.
+
+    Keeps at most ``max_samples`` retained values; on overflow it halves the
+    retained set (every other sorted sample) and doubles both the per-sample
+    weight and the keep-one-in-``weight`` admission stride.  Count / sum /
+    min / max stay exact; quantiles degrade gracefully to a weighted
+    subsample.  Summaries carry the retained samples so sketches from
+    different nodes merge without approximation beyond what each already
+    made.
+    """
+
+    __slots__ = ("max_samples", "samples", "weight", "count", "total",
+                 "vmin", "vmax", "_admit")
+
+    def __init__(self, max_samples: int = 256):
+        self.max_samples = max(8, int(max_samples))
+        self.samples: List[float] = []
+        self.weight = 1
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self._admit = 0  # admission phase: record when it hits 0 (mod weight)
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        self.total += value
+        if value < self.vmin:
+            self.vmin = value
+        if value > self.vmax:
+            self.vmax = value
+        if self._admit == 0:
+            self.samples.append(value)
+            if len(self.samples) > self.max_samples:
+                self.samples = sorted(self.samples)[::2]
+                self.weight *= 2
+        self._admit = (self._admit + 1) % self.weight
+
+    def quantile(self, q: float) -> float:
+        return _weighted_quantile(
+            [(v, float(self.weight)) for v in self.samples], q)
+
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "count": self.count,
+            "sum_ms": round(self.total, 4),
+            "min_ms": round(self.vmin, 4) if self.count else 0.0,
+            "max_ms": round(self.vmax, 4) if self.count else 0.0,
+        }
+        pairs = [(v, float(self.weight)) for v in self.samples]
+        for q, key in _QUANTILES:
+            out[key] = round(_weighted_quantile(pairs, q), 4)
+        out["samples"] = [round(v, 4) for v in self.samples]
+        out["weight"] = self.weight
+        return out
+
+    @staticmethod
+    def merge_summaries(summaries: Iterable[Mapping]) -> Dict[str, object]:
+        """Combine histogram summary dicts (e.g. one per node)."""
+        count = 0
+        total = 0.0
+        vmin = float("inf")
+        vmax = float("-inf")
+        pairs: List[Tuple[float, float]] = []
+        for s in summaries:
+            if not s or not s.get("count"):
+                continue
+            count += int(s["count"])
+            total += float(s.get("sum_ms", 0.0))
+            vmin = min(vmin, float(s.get("min_ms", vmin)))
+            vmax = max(vmax, float(s.get("max_ms", vmax)))
+            w = float(s.get("weight", 1))
+            pairs.extend((float(v), w) for v in s.get("samples", ()))
+        out: Dict[str, object] = {
+            "count": count,
+            "sum_ms": round(total, 4),
+            "min_ms": round(vmin, 4) if count else 0.0,
+            "max_ms": round(vmax, 4) if count else 0.0,
+        }
+        for q, key in _QUANTILES:
+            out[key] = round(_weighted_quantile(pairs, q), 4)
+        out["samples"] = [round(v, 4) for v, _ in pairs[:512]]
+        out["weight"] = 1
+        return out
+
+
+class Counter:
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins value, or a zero-arg callback sampled at snapshot."""
+
+    __slots__ = ("name", "_value", "_fn")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value: float = 0.0
+        self._fn: Optional[Callable[[], float]] = None
+
+    def set(self, value: float) -> None:
+        self._value = value
+
+    def set_fn(self, fn: Callable[[], float]) -> None:
+        self._fn = fn
+
+    @property
+    def value(self) -> float:
+        if self._fn is not None:
+            return self._fn()
+        return self._value
+
+
+class Histogram:
+    """Latency histogram; values are wall-clock milliseconds."""
+
+    __slots__ = ("name", "_sketch", "_lock")
+
+    def __init__(self, name: str, max_samples: int = 256):
+        self.name = name
+        self._sketch = QuantileSketch(max_samples)
+        self._lock = threading.Lock()
+
+    def observe(self, value_ms: float) -> None:
+        with self._lock:
+            self._sketch.observe(value_ms)
+
+    def observe_s(self, seconds: float) -> None:
+        self.observe(seconds * 1e3)
+
+    @property
+    def count(self) -> int:
+        return self._sketch.count
+
+    def quantile(self, q: float) -> float:
+        with self._lock:
+            return self._sketch.quantile(q)
+
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            return self._sketch.summary()
+
+
+class _Timer:
+    __slots__ = ("_hist", "_t0")
+
+    def __init__(self, hist: Histogram):
+        self._hist = hist
+        self._t0 = 0.0
+
+    def __enter__(self) -> "_Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._hist.observe_s(time.perf_counter() - self._t0)
+
+
+class Registry:
+    """Namespace of metrics plus live views onto legacy stats dicts."""
+
+    def __init__(self, name: str = "", time_scale: float = 1.0):
+        self.name = name
+        self.time_scale = float(time_scale) if time_scale else 1.0
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, object] = {}
+        self._live: List[Tuple[str, Mapping]] = []
+        self._providers: List[Tuple[str, Callable[[], Mapping]]] = []
+
+    # -- typed metrics ------------------------------------------------------
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, not {cls.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def observe_site(self, site: str, seconds: float) -> None:
+        """Record latency at a named fault-injection site (``invoke:batch``,
+        ``pipeline:flush``, ...) under the ``site:`` histogram namespace."""
+        self.histogram(f"site:{site}").observe_s(seconds)
+
+    def timer(self, name: str) -> _Timer:
+        return _Timer(self.histogram(name))
+
+    # -- live legacy views --------------------------------------------------
+
+    def attach_counters(self, mapping: Mapping, prefix: str = "") -> None:
+        """Expose a live counters dict; the owner keeps mutating it and the
+        registry reads it at snapshot time (zero hot-path cost)."""
+        with self._lock:
+            self._live.append((prefix, mapping))
+
+    def attach_provider(self, fn: Callable[[], Mapping],
+                        prefix: str = "") -> None:
+        """Expose derived gauges computed by ``fn()`` at snapshot time."""
+        with self._lock:
+            self._providers.append((prefix, fn))
+
+    def scoped(self, prefix: str) -> "Scope":
+        return Scope(self, prefix)
+
+    # -- snapshot / merge / export ------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            live = list(self._live)
+            providers = list(self._providers)
+            metrics = list(self._metrics.items())
+        out: Dict[str, object] = {}
+        for prefix, mapping in live:
+            for k, v in dict(mapping).items():
+                out[prefix + k] = v
+        for prefix, fn in providers:
+            for k, v in dict(fn()).items():
+                out[prefix + k] = v
+        for name, m in metrics:
+            if isinstance(m, Histogram):
+                out[name] = m.summary()
+            else:
+                out[name] = m.value
+        return out
+
+    @staticmethod
+    def merge(snapshots: Iterable[Mapping]) -> Dict[str, object]:
+        """Cluster-merge per-node snapshots: histogram summaries union by
+        weighted sample, ``*_rate`` keys average, everything else sums."""
+        hists: Dict[str, List[Mapping]] = {}
+        sums: Dict[str, float] = {}
+        rates: Dict[str, List[float]] = {}
+        for snap in snapshots:
+            for k, v in snap.items():
+                if isinstance(v, Mapping):
+                    hists.setdefault(k, []).append(v)
+                elif isinstance(v, (int, float)):
+                    if k.endswith("_rate"):
+                        rates.setdefault(k, []).append(float(v))
+                    else:
+                        sums[k] = sums.get(k, 0) + v
+        out: Dict[str, object] = dict(sums)
+        for k, vals in rates.items():
+            out[k] = round(sum(vals) / len(vals), 4) if vals else 0.0
+        for k, summaries in hists.items():
+            out[k] = QuantileSketch.merge_summaries(summaries)
+        return out
+
+    @staticmethod
+    def to_prometheus(snapshot: Mapping, prefix: str = "aft",
+                      labels: Optional[Mapping[str, str]] = None) -> str:
+        """Render a snapshot as Prometheus exposition-format text."""
+        label_s = ""
+        pairs = sorted((labels or {}).items())
+        if pairs:
+            label_s = "{%s}" % ",".join(f'{k}="{v}"' for k, v in pairs)
+
+        def metric_name(key: str) -> str:
+            return f"{prefix}_{re.sub(r'[^a-zA-Z0-9_]', '_', key)}"
+
+        lines: List[str] = []
+        for key in sorted(snapshot):
+            value = snapshot[key]
+            name = metric_name(key)
+            if isinstance(value, Mapping):
+                lines.append(f"{name}_count{label_s} {value.get('count', 0)}")
+                lines.append(
+                    f"{name}_sum_ms{label_s} {value.get('sum_ms', 0.0)}")
+                for q, qkey in _QUANTILES:
+                    if qkey in value:
+                        if pairs:
+                            q_label = "{%s}" % ",".join(
+                                [f'{k}="{v}"' for k, v in pairs]
+                                + [f'quantile="{q}"'])
+                        else:
+                            q_label = '{quantile="%s"}' % q
+                        lines.append(f"{name}{q_label} {value[qkey]}")
+            elif isinstance(value, bool):
+                lines.append(f"{name}{label_s} {int(value)}")
+            elif isinstance(value, (int, float)):
+                lines.append(f"{name}{label_s} {value}")
+        return "\n".join(lines) + "\n"
+
+
+class Scope:
+    """Dotted-prefix view onto a parent registry; nests via ``scoped()``."""
+
+    __slots__ = ("registry", "prefix")
+
+    def __init__(self, registry: Registry, prefix: str):
+        self.registry = registry
+        self.prefix = prefix
+
+    def _join(self, name: str) -> str:
+        return f"{self.prefix}.{name}" if self.prefix else name
+
+    def counter(self, name: str) -> Counter:
+        return self.registry.counter(self._join(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self.registry.gauge(self._join(name))
+
+    def histogram(self, name: str) -> Histogram:
+        return self.registry.histogram(self._join(name))
+
+    def timer(self, name: str) -> _Timer:
+        return self.registry.timer(self._join(name))
+
+    def observe_site(self, site: str, seconds: float) -> None:
+        self.registry.observe_site(site, seconds)
+
+    def attach_counters(self, mapping: Mapping, prefix: str = "") -> None:
+        self.registry.attach_counters(mapping, self._join(prefix) + "."
+                                      if prefix else self.prefix + ".")
+
+    def attach_provider(self, fn: Callable[[], Mapping],
+                        prefix: str = "") -> None:
+        self.registry.attach_provider(fn, self._join(prefix) + "."
+                                      if prefix else self.prefix + ".")
+
+    def scoped(self, prefix: str) -> "Scope":
+        return Scope(self.registry, self._join(prefix))

@@ -54,6 +54,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Tuple
 
+from ..obs import trace as obs_trace
+from ..obs.registry import Registry
 from .base import StorageEngine
 
 
@@ -103,9 +105,22 @@ class StorageIOPipeline:
         self,
         storage: StorageEngine,
         config: Optional[PipelineConfig] = None,
+        *,
+        registry: Optional[Registry] = None,
     ) -> None:
         self.storage = storage
         self.config = config or PipelineConfig()
+        # per-site flush latency + queue wait land in the owner's registry
+        # (an AftNode shares its own); a standalone pipeline grows a private
+        # one so the instrumentation below never needs a None check
+        self.registry = registry or Registry(
+            name=self.config.name,
+            time_scale=getattr(storage, "time_scale", 1.0),
+        )
+        self._h_flush = self.registry.histogram("site:pipeline:flush")
+        self._h_delete_flush = self.registry.histogram(
+            "site:pipeline:delete-flush")
+        self._h_queue_wait = self.registry.histogram("pipeline.queue_wait")
         # test/benchmark injection point; see module docstring
         self.fault_hook: Optional[Callable[[str, List[str]], None]] = None
         self._lock = threading.Condition()
@@ -467,19 +482,34 @@ class StorageIOPipeline:
         now = time.perf_counter()
         put_exc: Optional[BaseException] = None
         del_exc: Optional[BaseException] = None
+        tracer = obs_trace.get_tracer()
         if batch:
             try:
                 self._fault_point("pipeline:flush", list(batch))
+                t_put = time.perf_counter()
                 self.storage.put_batch(batch)
+                self._h_flush.observe_s(time.perf_counter() - t_put)
                 self._fault_point("pipeline:flush-landed", list(batch))
             except BaseException as e:  # noqa: BLE001 - delivered via futures
                 put_exc = e
+            if tracer.enabled:
+                tracer.emit("flush", site="pipeline:flush",
+                            name=self.config.name, items=len(batch),
+                            groups=len(groups), ok=put_exc is None)
         if dels:
             try:
                 self._fault_point("pipeline:delete-flush", list(dels))
+                t_del = time.perf_counter()
                 self.storage.delete_batch(dels)
+                self._h_delete_flush.observe_s(time.perf_counter() - t_del)
             except BaseException as e:  # noqa: BLE001 - delivered via futures
                 del_exc = e
+            if tracer.enabled:
+                tracer.emit("flush", site="pipeline:delete-flush",
+                            name=self.config.name, items=len(dels),
+                            ok=del_exc is None)
+        for group, _ in groups:
+            self._h_queue_wait.observe_s(now - group.enqueued_at)
         with self._stats_lock:
             if batch and put_exc is None:
                 self._s["flushes"] += 1

@@ -67,6 +67,8 @@ from ..core.records import (
     trigger_key,
     workflow_finish_key,
 )
+from ..obs import trace as obs_trace
+from ..obs.registry import Registry
 from .spec import WorkflowSpec, WorkflowSpecError
 
 
@@ -293,6 +295,8 @@ class ChainConsumer:
         pool,
         registry: Dict[str, Any],
         config: Optional[ChainConsumerConfig] = None,
+        *,
+        metrics: Optional[Registry] = None,
     ):
         if pool.cluster is None:
             raise ValueError("ChainConsumer requires a cluster-backed pool")
@@ -301,6 +305,12 @@ class ChainConsumer:
         self.platform = pool.platform
         self.registry = dict(registry)
         self.config = config or ChainConsumerConfig()
+        # `registry` was taken by the spec-name registry long before the
+        # metrics registry existed, hence `metrics`; defaults to sharing the
+        # pool's so one snapshot covers scheduler + consumer
+        self.metrics = metrics or getattr(pool, "registry", None) or Registry(
+            name="chain"
+        )
         self.stats: Dict[str, int] = {
             "polls": 0,
             "entries_seen": 0,
@@ -314,6 +324,7 @@ class ChainConsumer:
             "handoff_crashes": 0,
             "unknown_workflows": 0,
         }
+        self.metrics.attach_counters(self.stats, "chain.")
         self._inflight: Dict[str, Any] = {}   # entry_id → PoolTicket
         self._done: Set[str] = set()
         self._failed: Set[str] = set()
@@ -425,10 +436,37 @@ class ChainConsumer:
             self._inflight[entry_id] = ticket
             self._failed.discard(entry_id)
         self.stats["children_started"] += 1
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            tracer.emit(
+                "chain_child",
+                queue=queue,
+                entry=entry_id,
+                parent=payload.get("parent"),
+                parent_trace=obs_trace.txn_trace_id(payload["parent"])
+                if payload.get("parent") else None,
+                trace=obs_trace.trace_id(entry_id),
+            )
         ticket.add_done_callback(
             lambda fut, eid=entry_id: self._on_child_done(eid, fut)
         )
         return True
+
+    def _emit_claim(self, queue: str, entry_id: str, outcome: str) -> None:
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            # the claim transaction's UUID is <entry>.claim, so
+            # txn_trace_id(claim uuid) == trace_id(entry) — the claim lands
+            # in the CHILD workflow's trace with zero plumbing
+            tracer.emit(
+                "claim",
+                queue=queue,
+                entry=entry_id,
+                consumer=self.config.consumer_id,
+                outcome=outcome,
+                trace=obs_trace.trace_id(entry_id),
+                txn=claim_txn_uuid(entry_id),
+            )
 
     def _claim(self, queue: str, entry_id: str, payload: Dict[str, Any]) -> bool:
         """Commit (or adopt) the entry's claim; False defers to its owner."""
@@ -466,6 +504,7 @@ class ChainConsumer:
             )
             if entry is None:
                 client.abort_transaction(txid)
+                self._emit_claim(queue, entry_id, "swept")
                 return False  # swept (or not yet visible) — nothing to drive
             if prior is not None:
                 if prior_buffered:
@@ -474,6 +513,7 @@ class ChainConsumer:
                     # THEIRS to commit — touching it (abort) would kill
                     # their in-flight claim.  Defer; their drive covers it.
                     self.stats["claims_deferred"] += 1
+                    self._emit_claim(queue, entry_id, "deferred")
                     return False
                 try:
                     claim = json.loads(prior)
@@ -489,6 +529,7 @@ class ChainConsumer:
                 # commit resolves through the §3.3.1 already-committed probe
                 client.abort_transaction(txid)
                 if mine:
+                    self._emit_claim(queue, entry_id, "adopted")
                     return True
                 if stale:
                     now = time.time()
@@ -501,13 +542,17 @@ class ChainConsumer:
                             self._takeover_at[entry_id] = now
                     if recently:
                         self.stats["claims_deferred"] += 1
+                        self._emit_claim(queue, entry_id, "deferred")
                         return False
                     self.stats["claims_taken_over"] += 1
+                    self._emit_claim(queue, entry_id, "taken_over")
                     return True
                 self.stats["claims_deferred"] += 1
+                self._emit_claim(queue, entry_id, "deferred")
                 return False
             client.commit_transaction(txid)
             self.stats["claims_committed"] += 1
+            self._emit_claim(queue, entry_id, "committed")
             return True
         except BaseException:
             try:

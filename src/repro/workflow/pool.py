@@ -51,6 +51,7 @@ group-commit flushes.
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from collections import deque
@@ -61,8 +62,14 @@ from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 from ..core import AftCluster, PlacementHint
 from ..core.ids import fresh_uuid
-from ..core.records import lookup_committed_record, workflow_finish_key
+from ..core.records import (
+    WF_CHAIN_INFIX,
+    lookup_committed_record,
+    workflow_finish_key,
+)
 from ..faas.platform import LambdaPlatform
+from ..obs import trace as obs_trace
+from ..obs.registry import Registry
 from ..storage.base import StorageEngine
 from .executor import (
     StepFailure,
@@ -213,6 +220,13 @@ class _RunState(Enum):
     DONE = "done"
 
 
+# process-wide run sequence: folded into span IDs so a workflow re-driven
+# under the same UUID (memo-resume in a fresh pool, already-finished dedup)
+# cannot collide with the spans its first incarnation already emitted —
+# attempt counters restart at 1 across pools, this seed never repeats
+_RUN_SEQ = itertools.count(1)
+
+
 @dataclass
 class _Run:
     spec: WorkflowSpec
@@ -226,6 +240,7 @@ class _Run:
     deduped: bool = False  # resolved from the finish marker, nothing ran
     state: _RunState = _RunState.RETRY_WAIT
     attempt: int = 0
+    span_seed: int = field(default_factory=lambda: next(_RUN_SEQ))
     retry_at: float = 0.0
     t0: float = field(default_factory=time.perf_counter)
     session: Optional[WorkflowSession] = None
@@ -254,6 +269,7 @@ class WorkflowPool:
         cluster: Optional[AftCluster] = None,
         storage: Optional[StorageEngine] = None,
         config: Optional[PoolConfig] = None,
+        registry: Optional[Registry] = None,
     ):
         self.platform = platform
         self.cluster = cluster
@@ -287,6 +303,11 @@ class WorkflowPool:
             "commit_inflight": 0,         # gauge: offloaded commits in flight
             "commit_pipeline_depth": 0,   # high-water mark of the above
         }
+        self.registry = registry or Registry(
+            name="pool", time_scale=platform.config.time_scale
+        )
+        self.registry.attach_counters(self.stats)
+        self._h_wf_wall = self.registry.histogram("workflow.wall")
         self._commit_inflight = 0
         self._batcher = AdaptiveBatcher(self.config)
         self.stats["batch_target"] = self._batcher.cap
@@ -350,6 +371,21 @@ class WorkflowPool:
             run.retry_at = 0.0  # start as soon as the scheduler sees it
             self._retry.append(run)
             self._cond.notify_all()
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            # trace propagation is structural: every layer derives the same
+            # trace id from the workflow UUID it already holds.  A chain
+            # child's UUID embeds its parent's (<parent>.chain.<edge>), so
+            # the parent link falls out of the grammar with no plumbing.
+            parent_uuid, sep, _ = workflow_uuid.rpartition(WF_CHAIN_INFIX)
+            tracer.emit(
+                "submit",
+                name=spec.name,
+                uuid=workflow_uuid,
+                trace=obs_trace.trace_id(workflow_uuid),
+                parent=obs_trace.txn_trace_id(parent_uuid) if sep else None,
+                chain=dict(chain_entry) if chain_entry else None,
+            )
         return ticket
 
     def run_all(
@@ -741,6 +777,28 @@ class WorkflowPool:
 
     def _complete(self, run: _Run, tid) -> None:
         run.state = _RunState.DONE
+        wall_s = time.perf_counter() - run.t0
+        self._h_wf_wall.observe_s(wall_s)
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            trace = obs_trace.trace_id(run.uuid)
+            tracer.emit(
+                "span",
+                name="wf",
+                trace=trace,
+                span=obs_trace.span_id(trace, "wf", f"{run.span_seed}.{run.attempt}"),
+                parent=None,
+                dur_ms=wall_s * 1e3,
+                status="dedup" if run.deduped else "ok",
+                attempts=run.attempt,
+            )
+            tracer.emit(
+                "wf_finished",
+                uuid=run.uuid,
+                trace=trace,
+                tid=(tid.encode() if hasattr(tid, "uuid") else tid),
+                deduped=run.deduped,
+            )
         self.stats["workflows_completed"] += 1
         if run.session is not None:  # deduped runs never staged anything
             self.stats["chain_triggers_staged"] += len(run.spec.on_commit)
@@ -879,6 +937,24 @@ class WorkflowPool:
             except BaseException as exc:  # noqa: BLE001 - reported, not raised
                 outcome = (False, exc)
             body_s = time.perf_counter() - t0
+            tracer = obs_trace.get_tracer()
+            if tracer.enabled:
+                # span ids are attempt-qualified (…/step:x#seed.epoch): a
+                # kill-and-retry re-runs the step under a NEW span, and the
+                # checker's span-uniqueness pass holds even across a memo
+                # re-drive of the same UUID in a fresh pool (span_seed)
+                trace = obs_trace.trace_id(run.uuid)
+                qual = f"{run.span_seed}.{epoch}"
+                tracer.emit(
+                    "span",
+                    name=f"step:{name}",
+                    trace=trace,
+                    span=obs_trace.span_id(trace, f"step:{name}", qual),
+                    parent=obs_trace.span_id(trace, "wf", qual),
+                    dur_ms=body_s * 1e3,
+                    status="ok" if outcome[0] else "error",
+                    memo_hit=memo_hit,
+                )
             self._emit(
                 ("step", run, epoch, name, outcome[0], outcome[1],
                  body_s, lead_s, memo_hit)

@@ -3,27 +3,35 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
 from repro.core import AftCluster, ClusterConfig
-from repro.core.gossip import (DigestPlane, _hash64, exchange_digests,
-                               pack_digest, unpack_digest)
+from repro.core.gossip import (METRICS_PREFIX, DigestPlane, MetricsPlane,
+                               _hash64, exchange_digests, pack_digest,
+                               unpack_digest)
 from repro.core.ids import TxnId
 from repro.storage.memory import MemoryStorage
 
 
-@given(st.lists(st.tuples(st.integers(0, 2**62), st.text(min_size=1,
-                                                         max_size=24)),
-                min_size=0, max_size=16, unique_by=lambda t: t))
-@settings(max_examples=50, deadline=None)
-def test_digest_roundtrip(items):
-    tids = [TxnId(ts, u) for ts, u in items]
-    rows = pack_digest(tids, 16)
-    got = set(unpack_digest(rows))
-    want = {(t.timestamp, _hash64(t.encode())) for t in tids}
-    # pack keeps the newest ≤16; with ≤16 inputs nothing drops
-    assert got == want or (len(items) == 0 and not got)
+try:  # the property test needs hypothesis; the rest of the module doesn't
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+
+@pytest.mark.skipif(st is None, reason="hypothesis not installed")
+def test_digest_roundtrip():
+    @given(st.lists(st.tuples(st.integers(0, 2**62),
+                              st.text(min_size=1, max_size=24)),
+                    min_size=0, max_size=16, unique_by=lambda t: t))
+    @settings(max_examples=50, deadline=None)
+    def prop(items):
+        tids = [TxnId(ts, u) for ts, u in items]
+        rows = pack_digest(tids, 16)
+        got = set(unpack_digest(rows))
+        want = {(t.timestamp, _hash64(t.encode())) for t in tids}
+        # pack keeps the newest ≤16; with ≤16 inputs nothing drops
+        assert got == want or (len(items) == 0 and not got)
+
+    prop()
 
 
 def test_exchange_degenerate_single_device():
@@ -69,5 +77,66 @@ def test_plane_prunes_superseded():
         t = nodes[1].start_transaction()
         assert nodes[1].get(t, "hot") == b"v2"
         nodes[1].abort_transaction(t)
+    finally:
+        cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# metrics plane: gossip-fed registry snapshots → fault-manager merged view
+# ---------------------------------------------------------------------------
+
+def test_metrics_plane_feeds_fault_manager_merged_view():
+    cluster = AftCluster(MemoryStorage(), ClusterConfig(num_nodes=3))
+    try:
+        nodes = cluster.live_nodes()
+        txid = nodes[0].start_transaction()
+        nodes[0].put(txid, "k", b"v")
+        nodes[0].commit_transaction(txid)
+
+        fm = cluster.fault_manager
+        plane = MetricsPlane(nodes, cluster.storage, fault_manager=fm)
+        assert plane.step() == len(nodes)
+        # every node's snapshot blob landed under the reserved m/ prefix
+        for node in nodes:
+            assert cluster.storage.get(f"{METRICS_PREFIX}{node.node_id}")
+        assert set(plane.views) == {n.node_id for n in nodes}
+
+        merged = fm.cluster_metrics()
+        assert set(merged["nodes"]) == {n.node_id for n in nodes}
+        # counters sum across nodes; histogram summaries merge
+        assert merged["cluster"]["commits"] == 1
+        assert merged["cluster"]["commit.total"]["count"] == 1
+    finally:
+        cluster.stop()
+
+
+def test_metrics_plane_rounds_refresh_the_view():
+    cluster = AftCluster(MemoryStorage(), ClusterConfig(num_nodes=2))
+    try:
+        nodes = cluster.live_nodes()
+        fm = cluster.fault_manager
+        plane = MetricsPlane(nodes, cluster.storage, fault_manager=fm)
+        plane.step()
+        assert fm.cluster_metrics()["cluster"].get("commits", 0) == 0
+        for node in nodes:  # one commit per node between rounds
+            txid = node.start_transaction()
+            node.put(txid, f"k/{node.node_id}", b"v")
+            node.commit_transaction(txid)
+        plane.step()
+        assert fm.cluster_metrics()["cluster"]["commits"] == 2
+        assert plane.stats["rounds"] == 2
+        assert plane.stats["hash_mismatches"] == 0
+    finally:
+        cluster.stop()
+
+
+def test_metrics_plane_skips_dead_nodes():
+    cluster = AftCluster(MemoryStorage(), ClusterConfig(num_nodes=2))
+    try:
+        nodes = cluster.live_nodes()
+        nodes[1].fail()
+        plane = MetricsPlane(nodes, cluster.storage)
+        assert plane.step() == 1  # the dead node contributes a zero row
+        assert set(plane.views) == {nodes[0].node_id}
     finally:
         cluster.stop()

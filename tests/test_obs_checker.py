@@ -1,0 +1,222 @@
+"""Offline trace-replay invariant checker (repro/obs/checker.py).
+
+Synthetic event-log fixtures for each invariant, the acceptance-criteria
+negative test (the seeded read-atomicity violation MUST be flagged), and
+the CLI entry point's exit codes."""
+
+import json
+
+import pytest
+
+from repro.obs.checker import (
+    check_events,
+    check_file,
+    main,
+    seeded_violation_events,
+)
+
+
+def tid(ts: int, uuid: str) -> str:
+    return f"{ts:020d}.{uuid}"
+
+
+def clean_commit(uuid: str, seq0: int, writes: int = 1):
+    """versions → record → visible, the §3.3 order."""
+    return [
+        {"seq": seq0, "ev": "order", "uuid": uuid, "stage": "versions"},
+        {"seq": seq0 + 1, "ev": "order", "uuid": uuid, "stage": "record",
+         "writes": writes},
+        {"seq": seq0 + 2, "ev": "order", "uuid": uuid, "stage": "visible",
+         "tid": tid(1000, uuid)},
+    ]
+
+
+# ---------------------------------------------------------------------------
+# clean traces score clean
+# ---------------------------------------------------------------------------
+
+def test_clean_synthetic_trace_has_zero_violations():
+    t1 = tid(2000, "bbbb")
+    events = (
+        clean_commit("aaaa", 1) + clean_commit("bbbb", 10, writes=2)
+        # an atomic observation: both keys from the SAME cowriting txn
+        + [
+            {"seq": 20, "ev": "read", "txn": "r1", "key": "x", "tid": t1,
+             "cow": ["x", "y"]},
+            {"seq": 21, "ev": "read", "txn": "r1", "key": "y", "tid": t1,
+             "cow": ["x", "y"]},
+        ]
+        + [
+            {"seq": 30, "ev": "wf_finished", "uuid": "wf-1",
+             "tid": t1, "deduped": False},
+            {"seq": 31, "ev": "span", "span": "t/wf#1"},
+            {"seq": 32, "ev": "span", "span": "t/wf#2"},
+        ]
+    )
+    res = check_events(events)
+    assert res.ok, res.summary()
+    assert res.commits_checked == 2
+    assert res.txns_checked == 1
+    assert res.finishes_checked == 1
+    assert res.spans_checked == 2
+
+
+def test_null_reads_are_not_fractures():
+    """A key read as NULL alongside a cowriting sibling mirrors Algorithm
+    1's dynamic read set — legitimate, not a violation."""
+    t1 = tid(2000, "bbbb")
+    events = [
+        {"seq": 1, "ev": "read", "txn": "r1", "key": "x", "tid": t1,
+         "cow": ["x", "y"]},
+        {"seq": 2, "ev": "read", "txn": "r1", "key": "y", "tid": None},
+    ]
+    assert check_events(events).ok
+
+
+def test_newer_sibling_read_is_atomic():
+    """Reading l at j > i (a NEWER version than the cowriter wrote)
+    satisfies Definition 1 — only j < i fractures.  y's own writer must
+    not cowrite x, else the x@t0 read would fracture from y's side."""
+    events = [
+        {"seq": 1, "ev": "read", "txn": "r1", "key": "x",
+         "tid": tid(1000, "aaaa"), "cow": ["x", "y"]},
+        {"seq": 2, "ev": "read", "txn": "r1", "key": "y",
+         "tid": tid(2000, "bbbb"), "cow": ["y"]},
+    ]
+    assert check_events(events).ok
+
+
+# ---------------------------------------------------------------------------
+# each invariant's violation fixture
+# ---------------------------------------------------------------------------
+
+def test_seeded_read_atomicity_violation_is_flagged():
+    """Acceptance criterion: the checker MUST flag the seeded violation."""
+    res = check_events(seeded_violation_events())
+    assert not res.ok
+    assert [v.invariant for v in res.violations] == ["read-atomicity"]
+    assert "reader" in res.violations[0].detail
+
+
+def test_fractured_read_detected_regardless_of_read_order():
+    """The fracture is caught whether the stale or the fresh read lands
+    first (the witness scan is incremental but order-insensitive)."""
+    t0, t1 = tid(1000, "aaaa"), tid(2000, "bbbb")
+    fresh_then_stale = [
+        {"seq": 1, "ev": "read", "txn": "r", "key": "y", "tid": t1,
+         "cow": ["x", "y"]},
+        {"seq": 2, "ev": "read", "txn": "r", "key": "x", "tid": t0,
+         "cow": ["x"]},
+    ]
+    res = check_events(fresh_then_stale)
+    assert [v.invariant for v in res.violations] == ["read-atomicity"]
+
+
+def test_one_stale_read_counts_once():
+    """The offending read is dropped after its first witness, so later
+    reads of the same transaction do not re-count it."""
+    t0, t1 = tid(1000, "aaaa"), tid(2000, "bbbb")
+    events = seeded_violation_events() + [
+        {"seq": 6, "ev": "read", "txn": "reader", "key": "z", "tid": t1,
+         "cow": ["z"]},
+    ]
+    res = check_events(events)
+    assert len(res.violations) == 1
+
+
+def test_write_ordering_record_before_version_flush():
+    events = [
+        {"seq": 1, "ev": "order", "uuid": "u", "stage": "record", "writes": 3},
+        {"seq": 2, "ev": "order", "uuid": "u", "stage": "versions"},
+        {"seq": 3, "ev": "order", "uuid": "u", "stage": "visible"},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["write-ordering"]
+    assert "no prior version flush" in res.violations[0].detail
+
+
+def test_write_ordering_visible_before_record():
+    events = [
+        {"seq": 1, "ev": "order", "uuid": "u", "stage": "versions"},
+        {"seq": 2, "ev": "order", "uuid": "u", "stage": "visible"},
+        {"seq": 3, "ev": "order", "uuid": "u", "stage": "record", "writes": 1},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["write-ordering"]
+    assert "before any commit-record write" in res.violations[0].detail
+
+
+def test_write_ordering_zero_write_record_needs_no_version_flush():
+    """A read-only (or trigger-only) commit writes no versions; its record
+    landing first is legal."""
+    events = [
+        {"seq": 1, "ev": "order", "uuid": "u", "stage": "record", "writes": 0},
+        {"seq": 2, "ev": "order", "uuid": "u", "stage": "visible"},
+    ]
+    assert check_events(events).ok
+
+
+def test_exactly_once_flags_two_tids_for_one_uuid():
+    events = [
+        {"seq": 1, "ev": "wf_finished", "uuid": "wf-1",
+         "tid": tid(1000, "aaaa"), "deduped": False},
+        {"seq": 2, "ev": "wf_finished", "uuid": "wf-1",
+         "tid": tid(2000, "bbbb"), "deduped": False},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["exactly-once"]
+
+
+def test_exactly_once_allows_deduped_refinishes():
+    """A replayed finish marked deduped (resolved from the finish marker)
+    does not count against the single-TID rule."""
+    events = [
+        {"seq": 1, "ev": "wf_finished", "uuid": "wf-1",
+         "tid": tid(1000, "aaaa"), "deduped": False},
+        {"seq": 2, "ev": "wf_finished", "uuid": "wf-1",
+         "tid": tid(2000, "bbbb"), "deduped": True},
+        {"seq": 3, "ev": "wf_finished", "uuid": "wf-1",
+         "tid": tid(1000, "aaaa"), "deduped": False},
+    ]
+    assert check_events(events).ok
+
+
+def test_duplicate_span_ids_are_flagged():
+    events = [
+        {"seq": 1, "ev": "span", "span": "t/step:a#1"},
+        {"seq": 2, "ev": "span", "span": "t/step:a#1"},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["span-unique"]
+
+
+# ---------------------------------------------------------------------------
+# file + CLI round trip
+# ---------------------------------------------------------------------------
+
+def _write_jsonl(path, events) -> str:
+    path.write_text("".join(json.dumps(e) + "\n" for e in events))
+    return str(path)
+
+
+def test_check_file_round_trips(tmp_path):
+    clean = _write_jsonl(tmp_path / "clean.jsonl", clean_commit("u", 1))
+    bad = _write_jsonl(tmp_path / "bad.jsonl", seeded_violation_events())
+    assert check_file(clean).ok
+    assert not check_file(bad).ok
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = _write_jsonl(tmp_path / "clean.jsonl", clean_commit("u", 1))
+    bad = _write_jsonl(tmp_path / "bad.jsonl", seeded_violation_events())
+    assert main([clean]) == 0
+    assert main([bad]) == 1
+    assert main(["--selftest"]) == 0
+    out = capsys.readouterr().out
+    assert "seeded violation detected" in out
+    assert "violations:            1" in out
+
+
+def test_cli_requires_a_trace_or_selftest():
+    with pytest.raises(SystemExit):
+        main([])

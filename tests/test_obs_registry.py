@@ -1,0 +1,195 @@
+"""Metrics registry (repro/obs/registry.py): sketches, scoping, live-dict
+views, snapshot/merge/export, and the AftNode.stats() deprecation shim."""
+
+import warnings
+
+import pytest
+
+import repro.core.node as node_mod
+from repro.core import AftNode, AftNodeConfig, PlacementHint
+from repro.core.routing import CacheAwareRouter
+from repro.obs.registry import Counter, QuantileSketch, Registry
+from repro.storage.memory import MemoryStorage
+
+
+# ---------------------------------------------------------------------------
+# sketch + histogram
+# ---------------------------------------------------------------------------
+
+def test_sketch_exact_count_sum_min_max_and_percentiles():
+    s = QuantileSketch()
+    for v in range(1, 1001):
+        s.observe(float(v))
+    out = s.summary()
+    assert out["count"] == 1000
+    assert out["sum_ms"] == pytest.approx(500500.0)
+    assert out["min_ms"] == 1.0
+    assert out["max_ms"] == 1000.0
+    # compaction keeps a uniform stride, so percentiles stay tight
+    assert out["p50_ms"] == pytest.approx(500, rel=0.05)
+    assert out["p99_ms"] == pytest.approx(990, rel=0.05)
+
+
+def test_sketch_compaction_bounds_memory():
+    s = QuantileSketch()
+    for v in range(100_000):
+        s.observe(float(v))
+    assert len(s.summary()["samples"]) <= 256
+    assert s.summary()["count"] == 100_000
+
+
+def test_histogram_observe_s_converts_to_ms():
+    reg = Registry(name="t")
+    h = reg.histogram("lat")
+    h.observe_s(0.25)
+    assert reg.snapshot()["lat"]["sum_ms"] == pytest.approx(250.0)
+
+
+def test_timer_context_observes():
+    reg = Registry(name="t")
+    with reg.timer("op"):
+        pass
+    assert reg.snapshot()["op"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# registry API
+# ---------------------------------------------------------------------------
+
+def test_get_or_create_and_kind_mismatch():
+    reg = Registry(name="t")
+    c = reg.counter("n")
+    assert reg.counter("n") is c
+    with pytest.raises(TypeError):
+        reg.gauge("n")
+
+
+def test_scoped_nests_with_dotted_prefixes():
+    reg = Registry(name="t")
+    reg.scoped("a").scoped("b").counter("c").inc(3)
+    assert reg.snapshot()["a.b.c"] == 3
+
+
+def test_attach_counters_is_a_live_view():
+    reg = Registry(name="t")
+    stats = {"ops": 0}
+    reg.attach_counters(stats)
+    stats["ops"] = 7
+    assert reg.snapshot()["ops"] == 7
+
+
+def test_attach_provider_computes_at_snapshot_time():
+    reg = Registry(name="t")
+    state = {"v": 1}
+    reg.attach_provider(lambda: {"derived": state["v"] * 2})
+    state["v"] = 21
+    assert reg.snapshot()["derived"] == 42
+
+
+def test_merge_sums_counters_averages_rates_merges_hists():
+    a, b = Registry(name="a"), Registry(name="b")
+    a.counter("commits").inc(10)
+    b.counter("commits").inc(5)
+    a.gauge("hit_rate").set(1.0)
+    b.gauge("hit_rate").set(0.0)
+    a.histogram("lat").observe(10.0)
+    b.histogram("lat").observe(30.0)
+    merged = Registry.merge([a.snapshot(), b.snapshot()])
+    assert merged["commits"] == 15
+    assert merged["hit_rate"] == pytest.approx(0.5)
+    assert merged["lat"]["count"] == 2
+    assert merged["lat"]["min_ms"] == 10.0
+    assert merged["lat"]["max_ms"] == 30.0
+
+
+def test_to_prometheus_renders_counters_and_summaries():
+    reg = Registry(name="t")
+    reg.counter("commits").inc(2)
+    reg.histogram("commit.total").observe(5.0)
+    text = Registry.to_prometheus(reg.snapshot(), prefix="aft",
+                                  labels={"node": "n0"})
+    assert 'aft_commits{node="n0"} 2' in text
+    assert "aft_commit_total" in text
+
+
+# ---------------------------------------------------------------------------
+# AftNode integration: registry absorbs the stats dict, shim stays compatible
+# ---------------------------------------------------------------------------
+
+def _commit_once(node: AftNode) -> None:
+    tx = node.start_transaction()
+    node.put(tx, "k", b"v")
+    node.commit_transaction(tx)
+
+
+def test_node_stats_shim_warns_once_and_keeps_legacy_keys():
+    node = AftNode(MemoryStorage(), AftNodeConfig(node_id="n0"))
+    _commit_once(node)
+    node_mod._stats_deprecation_warned = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        snap = node.stats()
+        node.stats()  # second call: the warning fires only once
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in caught) == 1
+    for key in ("commits", "open_sessions", "inflight_ops",
+                "data_cache_hit_rate", "commit_p50_ms", "commit_p99_ms"):
+        assert key in snap
+    assert snap["commits"] == 1
+
+
+def test_node_registry_snapshot_carries_commit_phase_histograms():
+    node = AftNode(MemoryStorage(), AftNodeConfig(node_id="n0"))
+    _commit_once(node)
+    snap = node.registry.snapshot()
+    assert snap["commit.total"]["count"] == 1
+    assert snap["commit.version_flush"]["count"] == 1
+    assert snap["commit.record_write"]["count"] == 1
+    assert snap["commits"] == 1  # the legacy counters ride along
+
+
+def test_cache_aware_router_scores_through_the_shim():
+    node = AftNode(MemoryStorage(), AftNodeConfig(node_id="n0"))
+    _commit_once(node)
+    router = CacheAwareRouter()
+    router.sync([node])
+    hint = PlacementHint(uuid="u", keys=("k",))
+    assert router.route([node], hint) is node
+
+
+def test_fault_manager_collect_metrics_merges_without_gossip():
+    """The direct (no-jax) aggregation path: the fault manager snapshots
+    live members in-process and serves the same merged view the gossip
+    MetricsPlane would feed it."""
+    from repro.core import AftCluster, ClusterConfig
+
+    cluster = AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=2, start_background_threads=False),
+    )
+    try:
+        for node in cluster.live_nodes():
+            _commit_once(node)
+        fm = cluster.fault_manager
+        assert fm.collect_metrics() == 2
+        merged = fm.cluster_metrics()
+        assert len(merged["nodes"]) == 2
+        assert merged["cluster"]["commits"] == 2
+        assert merged["cluster"]["commit.total"]["count"] == 2
+    finally:
+        cluster.stop()
+
+
+def test_counter_is_thread_safe_under_concurrent_inc():
+    import threading
+
+    c = Counter("c")
+    def bump():
+        for _ in range(10_000):
+            c.inc()
+    threads = [threading.Thread(target=bump) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 40_000

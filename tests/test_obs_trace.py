@@ -1,0 +1,316 @@
+"""Span tracing (repro/obs/trace.py): deterministic UUID-derived trace IDs,
+the ring/file sinks, and structural propagation through the workflow pool
+and the ChainConsumer child handoff — including kill-and-retry and
+memo-resume, where span IDs must stay unique (satellite d)."""
+
+import json
+
+from repro.core import AftCluster, ClusterConfig
+from repro.core.records import claim_txn_uuid, trigger_entry_id
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
+from repro.storage.memory import MemoryStorage
+from repro.workflow import (
+    ChainConsumerConfig,
+    PoolConfig,
+    Trigger,
+    WorkflowPool,
+    WorkflowSpec,
+)
+
+
+def make_cluster(nodes: int = 1) -> AftCluster:
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False),
+    )
+
+
+def fast_platform(**kw) -> LambdaPlatform:
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def consumer_cfg(**kw) -> ChainConsumerConfig:
+    kw.setdefault("reclaim_after_s", 0.0)
+    return ChainConsumerConfig(**kw)
+
+
+def parent_spec(child: WorkflowSpec) -> WorkflowSpec:
+    spec = WorkflowSpec("parent")
+
+    def produce(ctx):
+        ctx.put("chain/parent-effect", b"done")
+        return {"payload": 41}
+
+    spec.step("produce", produce)
+    spec.trigger(Trigger(child, args_from="produce"))
+    return spec
+
+
+def child_spec(ran) -> WorkflowSpec:
+    spec = WorkflowSpec("child")
+
+    def consume(ctx):
+        ran.append(ctx.args)
+        ctx.put("chain/child-effect", json.dumps(ctx.args).encode())
+        return ctx.args
+
+    spec.step("consume", consume)
+    return spec
+
+
+def counter_spec(i: int) -> WorkflowSpec:
+    spec = WorkflowSpec(f"count{i}")
+
+    def bump(ctx):
+        raw = ctx.get(f"cnt/{i}")
+        count = json.loads(raw)["count"] if raw else 0
+        ctx.maybe_fail()
+        ctx.put(f"cnt/{i}", json.dumps({"count": count + 1}).encode())
+        return count + 1
+
+    spec.step("bump", bump)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# trace-ID grammar
+# ---------------------------------------------------------------------------
+
+def test_trace_id_is_deterministic_and_uuid_scoped():
+    assert obs_trace.trace_id("wf-1") == obs_trace.trace_id("wf-1")
+    assert obs_trace.trace_id("wf-1") != obs_trace.trace_id("wf-2")
+    assert len(obs_trace.trace_id("wf-1")) == 16
+
+
+def test_base_uuid_strips_derived_decorations():
+    assert obs_trace.base_uuid("wf-1.step.branch0") == "wf-1"
+    assert obs_trace.base_uuid("wf-1.memo.agg") == "wf-1"
+    assert obs_trace.base_uuid("wf-1.chain.child.claim") == "wf-1.chain.child"
+    assert obs_trace.base_uuid("wf-1.chain.child.enq") == "wf-1.chain.child"
+    # a chain child is its own workflow — the .chain. infix is kept
+    assert obs_trace.base_uuid("wf-1.chain.child") == "wf-1.chain.child"
+    assert obs_trace.base_uuid("wf-1.chain.child.step.s0") == "wf-1.chain.child"
+
+
+def test_txn_trace_id_maps_every_derived_txn_to_the_owning_trace():
+    wf = "figw-7"
+    for derived in (wf, f"{wf}.step.s0", f"{wf}.memo.s0"):
+        assert obs_trace.txn_trace_id(derived) == obs_trace.trace_id(wf)
+    # the claim transaction of a queue entry lands in the CHILD's trace
+    entry = trigger_entry_id("figw-7", "next")
+    assert obs_trace.txn_trace_id(claim_txn_uuid(entry)) \
+        == obs_trace.trace_id(entry)
+
+
+def test_span_ids_are_attempt_qualified():
+    t = obs_trace.trace_id("wf-1")
+    assert obs_trace.span_id(t, "step:a", 1) != obs_trace.span_id(t, "step:a", 2)
+    assert obs_trace.span_id(t, "step:a", 1) == f"{t}/step:a#1"
+
+
+# ---------------------------------------------------------------------------
+# tracer sinks
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_caps_and_orders_events():
+    t = obs_trace.Tracer(capacity=4)
+    for i in range(10):
+        t.emit("x", i=i)
+    evs = t.events()
+    assert len(evs) == 4
+    assert [e["i"] for e in evs] == [6, 7, 8, 9]
+    assert [e["seq"] for e in evs] == [7, 8, 9, 10]
+
+
+def test_file_sink_round_trips_through_json_lines(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    t = obs_trace.Tracer(path=str(path))
+    t.emit("read", txn="u1", key="k")
+    t.emit("span", name="wf", trace="t", span="t/wf#1")
+    t.close()
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [rec["ev"] for rec in lines] == ["read", "span"]
+    assert lines[0]["key"] == "k"
+    assert lines[1]["span"] == "t/wf#1"
+
+
+def test_span_context_manager_records_duration_and_error_status():
+    t = obs_trace.Tracer()
+    with t.span("ok-op", "tr"):
+        pass
+    try:
+        with t.span("bad-op", "tr"):
+            raise ValueError("boom")
+    except ValueError:
+        pass
+    ok, bad = t.events()
+    assert ok["status"] == "ok" and ok["dur_ms"] >= 0
+    assert bad["status"] == "error"
+
+
+def test_disabled_tracer_emits_nothing():
+    t = obs_trace.Tracer(enabled=False)
+    t.emit("x")
+    assert t.events() == []
+    assert not obs_trace.get_tracer().enabled  # global default stays off
+
+
+def test_set_tracer_returns_previous_for_restore():
+    mine = obs_trace.Tracer()
+    prev = obs_trace.set_tracer(mine)
+    try:
+        assert obs_trace.get_tracer() is mine
+    finally:
+        obs_trace.set_tracer(prev)
+    assert obs_trace.get_tracer() is prev
+
+
+# ---------------------------------------------------------------------------
+# end-to-end propagation: pool submit → claim → chain child
+# ---------------------------------------------------------------------------
+
+def _events_by_ev(events):
+    by = {}
+    for e in events:
+        by.setdefault(e["ev"], []).append(e)
+    return by
+
+
+def test_chain_child_claim_lands_in_child_trace_linked_to_parent():
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    prev = obs_trace.set_tracer(obs_trace.Tracer(capacity=100_000))
+    try:
+        with WorkflowPool(fast_platform(), cluster=cluster) as pool:
+            consumer = pool.attach_chain_consumer(
+                {"child": child}, consumer_cfg(), start=False
+            )
+            pool.submit(parent_spec(child), uuid="tp-parent").result(timeout=30)
+            assert consumer.drain(timeout_s=30)
+        events = obs_trace.get_tracer().events()
+    finally:
+        obs_trace.set_tracer(prev)
+
+    assert ran == [{"payload": 41}]
+    entry = trigger_entry_id("tp-parent", "child")
+    parent_trace = obs_trace.trace_id("tp-parent")
+    child_trace = obs_trace.trace_id(entry)
+    by = _events_by_ev(events)
+
+    # the claim rides the child's trace with no plumbing: its txn UUID is
+    # <entry>.claim, whose base_uuid is the entry (= the child's UUID)
+    committed = [e for e in by["claim"] if e["outcome"] == "committed"]
+    assert committed and committed[0]["trace"] == child_trace
+    assert committed[0]["txn"] == claim_txn_uuid(entry)
+
+    # the child's submit event links back to the parent's trace
+    child_submits = [e for e in by["submit"] if e["uuid"] == entry]
+    assert child_submits and child_submits[0]["trace"] == child_trace
+    assert child_submits[0]["parent"] == parent_trace
+    assert child_submits[0]["chain"]["entry"] == entry
+
+    # the consumer's chain_child event carries both ends of the link
+    link = by["chain_child"][0]
+    assert link["trace"] == child_trace
+    assert link["parent_trace"] == parent_trace
+
+    # both workflows closed their root spans in their own traces
+    wf_spans = {e["trace"] for e in by["span"] if e["name"] == "wf"}
+    assert {parent_trace, child_trace} <= wf_spans
+    cluster.stop()
+
+
+def test_kill_mid_handoff_keeps_child_trace_and_unique_spans():
+    """The replayed handoff recommits under the same entry UUID, so the
+    child keeps ONE trace across the crash — while the retry's spans stay
+    distinct (attempt-qualified IDs)."""
+    cluster = make_cluster()
+    ran = []
+    child = child_spec(ran)
+    platform = fast_platform(
+        failure_rate=1.0, failure_sites=("chain:handoff",)
+    )
+    prev = obs_trace.set_tracer(obs_trace.Tracer(capacity=100_000))
+    try:
+        with WorkflowPool(platform, cluster=cluster) as pool:
+            consumer = pool.attach_chain_consumer(
+                {"child": child}, consumer_cfg(), start=False
+            )
+            pool.submit(parent_spec(child), uuid="kh-parent").result(timeout=30)
+            assert consumer.step() == 0  # claimed, then died mid-handoff
+            platform.config.failure_rate = 0.0
+            assert consumer.drain(timeout_s=30)
+        events = obs_trace.get_tracer().events()
+    finally:
+        obs_trace.set_tracer(prev)
+
+    assert ran == [{"payload": 41}]
+    entry = trigger_entry_id("kh-parent", "child")
+    child_trace = obs_trace.trace_id(entry)
+    by = _events_by_ev(events)
+    # crash + replay: ≥ 2 claim events, all in the child's single trace
+    claims = [e for e in by["claim"] if e["entry"] == entry]
+    assert len(claims) >= 2
+    assert {e["trace"] for e in claims} == {child_trace}
+
+    checked = check_events(events)
+    assert checked.ok, checked.violations
+    span_ids = [e["span"] for e in by.get("span", [])]
+    assert len(span_ids) == len(set(span_ids))
+    cluster.stop()
+
+
+def test_retry_and_memo_resume_emit_fresh_spans_and_one_tid(tmp_path):
+    """Kill-and-retry inside the pool plus a cross-pool memo re-drive: the
+    trace stays checker-clean, span IDs never collide, and every workflow
+    UUID commits exactly one transaction ID."""
+    cluster = make_cluster()
+    prev = obs_trace.set_tracer(
+        obs_trace.Tracer(path=str(tmp_path / "t.jsonl"), capacity=100_000)
+    )
+    try:
+        platform = fast_platform(failure_rate=0.35, seed=7)
+        cfg = PoolConfig(max_attempts=25, declare_finished=False)
+        with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+            tickets = [
+                pool.submit(counter_spec(i), uuid=f"obs-{i}") for i in range(8)
+            ]
+            results = [t.result(timeout=60) for t in tickets]
+        # memo re-drive in a "new process": bodies replay from memos under
+        # the SAME uuid — same trace, a fresh attempt's worth of spans
+        with WorkflowPool(fast_platform(), cluster=cluster, config=cfg) as pool:
+            redriven = pool.submit(counter_spec(0), uuid="obs-0").result(60)
+        tracer = obs_trace.get_tracer()
+        events = tracer.events()
+        tracer.close()
+    finally:
+        obs_trace.set_tracer(prev)
+
+    assert any(r.attempts > 1 for r in results)  # the kill actually fired
+    assert redriven.steps_memoized == 1
+    assert redriven.committed_tid == results[0].committed_tid
+
+    checked = check_events(events)
+    assert checked.ok, checked.violations
+
+    by = _events_by_ev(events)
+    span_ids = [e["span"] for e in by["span"]]
+    assert len(span_ids) == len(set(span_ids))
+    # exactly one committed tid per workflow uuid, re-drive included
+    tids = {}
+    for e in by["wf_finished"]:
+        tids.setdefault(e["uuid"], set()).add(e["tid"])
+    assert tids and all(len(ts) == 1 for ts in tids.values())
+    # every cnt/ write was committed exactly once
+    for i in range(8):
+        raw = cluster.storage.get(f"d/cnt/{i}/")  # versioned: prefix scan
+        keys = cluster.storage.list_keys(f"d/cnt/{i}/")
+        assert len(keys) == 1, (i, raw, keys)
+
+    # the file sink captured the same stream the ring did
+    lines = (tmp_path / "t.jsonl").read_text().splitlines()
+    assert len(lines) == len(events)
+    cluster.stop()
