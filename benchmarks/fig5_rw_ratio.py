@@ -1,21 +1,201 @@
 """Fig 5: read/write ratio — 10-IO transactions, reads from 0% to 100%,
-AFT over DynamoDB and Redis."""
+AFT over DynamoDB and Redis.
+
+Extended with a **read-heavy fast-lane arm**: the same read-dominated
+regime driven through the workflow pool, comparing the gossip-fed
+read-only lane (``PoolConfig.read_only_lane``) on vs. off.  Read-only
+steps on the fast lane skip the commit record, the ``u/`` idempotence
+index, and the memo write — on a ≥ 80%-reads mix that is most of the
+write traffic, so steps/sec should at least double.  Every reader step
+doubles as a read-atomicity audit (both keys of a cowritten pair must
+carry identical payloads), and a snapshot mini-arm exercises the
+bounded-staleness lane on write-once keys.  CI runs this arm under
+``REPRO_TRACE_FILE`` and replays the trace through the offline checker
+(read-atomicity, read-durability, snapshot-bound invariants)."""
 
 from __future__ import annotations
 
-from typing import Dict
+import os
+import time
+from typing import Dict, List
 
+from repro.core import SnapshotUnavailable
+from repro.faas.platform import FaasConfig, LambdaPlatform
 from repro.faas.workload import run_workload
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
+from repro.workflow import PoolConfig, TxnScope, WorkflowPool, WorkflowSpec
 
 from .common import QUICK_TIME_SCALE, engine, make_cluster, save, workload_cfg
 
+# the read-heavy arm runs less compressed than the rw grid: the quantity
+# under study (per-step commit IO) would otherwise vanish into interpreter
+# noise (same rationale as fig_pool's POOL_TIME_SCALE)
+LANE_TIME_SCALE = 0.15
+# cowritten pairs cycle over a bounded keyspace so supersedence + GC stay
+# active under the audit, mirroring the property-test harness
+PAIR_KEYSPACE = 16
+# 1 writer step + READERS read-only steps per workflow → 90% reads
+READERS_PER_WF = 9
+
+
+def build_read_heavy_spec(wf: int) -> WorkflowSpec:
+    """1 pair-write + READERS_PER_WF auditing read-only steps."""
+    spec = WorkflowSpec(f"rh-{wf}")
+    k1 = f"rh/{wf % PAIR_KEYSPACE}/a"
+    k2 = f"rh/{wf % PAIR_KEYSPACE}/b"
+    payload = f"wf-{wf}".encode()
+
+    def writer(ctx):
+        # both keys of the pair always carry identical payloads, so any
+        # reader observing two different values has a fractured read
+        ctx.put(k1, payload)
+        ctx.put(k2, payload)
+        return wf
+
+    spec.step("w", writer)
+
+    def audit(ctx):
+        v1 = ctx.get(k1)
+        v2 = ctx.get(k2)
+        return 1 if (v1 is not None and v2 is not None and v1 != v2) else 0
+
+    spec.fan_out("r", audit, READERS_PER_WF, deps=("w",),
+                 reads=lambda i: (k1, k2), read_only=True)
+    spec.validate()
+    return spec
+
+
+def _run_lane(workflows: int, ts: float, seed: int, lane_on: bool) -> Dict:
+    store = engine("dynamodb", ts, seed=seed)
+    platform = LambdaPlatform(FaasConfig(time_scale=ts, warm_latency_ms=0.0,
+                                         seed=seed))
+    cluster = make_cluster(store, nodes=3, time_scale=ts)
+    cfg = PoolConfig(scope=TxnScope.STEP, max_attempts=10,
+                     batch_max_steps=16, max_inflight_steps=256,
+                     read_only_lane=lane_on)
+    t0 = time.perf_counter()
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [pool.submit(build_read_heavy_spec(i))
+                   for i in range(workflows)]
+        results = [t.result(timeout=600) for t in tickets]
+    wall = time.perf_counter() - t0
+    steps = sum(r.steps_run for r in results)
+    anomalies = sum(
+        v for r in results for n, v in r.results.items() if n.startswith("r[")
+    )
+    out = {
+        "read_only_lane": lane_on,
+        "workflows": workflows,
+        "read_step_fraction": round(READERS_PER_WF / (READERS_PER_WF + 1), 2),
+        "wall_s": round(wall, 3),
+        "steps_run": steps,
+        "steps_per_s": round(steps / wall, 1),
+        "read_atomic_anomalies": anomalies,
+    }
+    platform.shutdown()
+    cluster.stop()
+    return out
+
+
+def _run_snapshot_arm(ts: float, seed: int, keys: int,
+                      max_staleness_s: float = 30.0) -> Dict:
+    """Write-once keys through one node, bounded-staleness snapshot reads
+    from the others: every served snapshot must carry the (only) committed
+    payload; stalled gossip may only yield SnapshotUnavailable."""
+    cluster = make_cluster(engine("dynamodb", ts, seed=seed), nodes=3,
+                           time_scale=ts)
+    writer, *readers = cluster.nodes
+    tids = {}
+    for i in range(keys):
+        tx = writer.start_transaction()
+        writer.put(tx, f"snap/{i}", f"v{i}".encode())
+        tids[i] = writer.commit_transaction(tx)
+    # wait (bounded) for the gossiped watermark to cover the last commit
+    deadline = time.monotonic() + 10.0
+    last_ts = tids[keys - 1].timestamp
+    while time.monotonic() < deadline and any(
+        r.read_watermark_ns() < last_ts for r in readers
+    ):
+        time.sleep(0.02)
+    served = unavailable = wrong = 0
+    for i in range(keys):
+        for reader in readers:
+            try:
+                snap = reader.snapshot_read(f"snap/{i}", max_staleness_s)
+            except SnapshotUnavailable:
+                unavailable += 1
+                continue
+            served += 1
+            if snap.value != f"v{i}".encode() or snap.tid != tids[i]:
+                wrong += 1
+    cluster.stop()
+    return {
+        "keys": keys,
+        "reads": keys * len(readers),
+        "served": served,
+        "unavailable": unavailable,
+        "wrong_values": wrong,
+    }
+
+
+def run_read_heavy(quick: bool = True) -> Dict:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    workflows = 60 if smoke else (120 if quick else 320)
+    ts = LANE_TIME_SCALE
+    # tracing on for the whole arm: REPRO_TRACE_FILE adds the file sink
+    # (the CI obs-check hook replays it through the offline checker); the
+    # ring buffer alone feeds the inline check below either way
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(
+        path=os.environ.get(obs_trace.TRACE_FILE_ENV), capacity=500_000
+    )
+    # best-of-2 per arm: wall time on a shared container swings with
+    # scheduler noise; the max steps/sec is the run least perturbed by it
+    # (applied symmetrically, so the ratio is not biased).  The audit and
+    # checker counters aggregate over every run — anomaly gates see all.
+    def best_of(lane_on: bool) -> Dict:
+        runs = [_run_lane(workflows, ts, seed=workflows + i, lane_on=lane_on)
+                for i in range(2)]
+        best = max(runs, key=lambda r: r["steps_per_s"])
+        best["read_atomic_anomalies"] = sum(
+            r["read_atomic_anomalies"] for r in runs
+        )
+        return best
+
+    try:
+        lane_off = best_of(False)
+        lane_on = best_of(True)
+        snapshot = _run_snapshot_arm(ts, seed=workflows,
+                                     keys=8 if smoke else 32)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        tracer.close()
+    checked = check_events(tracer.events())
+    return {
+        "lane_off": lane_off,
+        "lane_on": lane_on,
+        "speedup_steps_per_s": round(
+            lane_on["steps_per_s"] / max(lane_off["steps_per_s"], 1e-9), 2
+        ),
+        "read_atomic_anomalies": (
+            lane_on["read_atomic_anomalies"]
+            + lane_off["read_atomic_anomalies"]
+        ),
+        "snapshot": snapshot,
+        "trace_events": len(tracer.events()),
+        "checker_violations": len(checked.violations),
+    }
+
 
 def run(quick: bool = True) -> Dict:
-    clients = 10
-    per_client = 40 if quick else 1000
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    clients = 4 if smoke else 10
+    per_client = 10 if smoke else (40 if quick else 1000)
     ts = QUICK_TIME_SCALE
     out: Dict[str, Dict] = {}
-    for reads in (0, 2, 4, 6, 8, 10):
+    grid = (0, 8, 10) if smoke else (0, 2, 4, 6, 8, 10)
+    for reads in grid:
         writes = 10 - reads
         row = {}
         for store in ("dynamodb", "redis"):
@@ -28,6 +208,7 @@ def run(quick: bool = True) -> Dict:
             row[f"aft_{store}"] = res.summary()
             cluster.stop()
         out[f"reads_{reads*10}pct"] = row
+    out["read_heavy_fast_lane"] = run_read_heavy(quick)
     save("fig5_rw_ratio", out)
     return out
 

@@ -19,14 +19,22 @@ from .errors import (
     AftError,
     NodeFailed,
     ReadAbortError,
+    ReadOnlyTransaction,
+    SnapshotUnavailable,
     TransactionNotRunning,
     UnknownTransaction,
 )
 from .fault_manager import FaultManager, FaultManagerConfig
 from .gc import LocalGcAgent
 from .ids import Clock, TxnHandle, TxnId, fresh_uuid
-from .multicast import FAULT_MANAGER_ID, MulticastAgent, MulticastBus
-from .node import AftNode, AftNodeConfig, TxnState
+from .multicast import (
+    FAULT_MANAGER_ID,
+    BusFaults,
+    BusMessage,
+    MulticastAgent,
+    MulticastBus,
+)
+from .node import AftNode, AftNodeConfig, SnapshotResult, TxnState
 from .records import (
     COMMIT_PREFIX,
     DATA_PREFIX,
@@ -67,6 +75,9 @@ __all__ = [
     "TransactionWriteBuffer",
     "MulticastBus",
     "MulticastAgent",
+    "BusFaults",
+    "BusMessage",
+    "SnapshotResult",
     "FAULT_MANAGER_ID",
     "FaultManager",
     "FaultManagerConfig",
@@ -84,6 +95,8 @@ __all__ = [
     "AftError",
     "NodeFailed",
     "ReadAbortError",
+    "ReadOnlyTransaction",
+    "SnapshotUnavailable",
     "TransactionNotRunning",
     "UnknownTransaction",
     "commit_key",

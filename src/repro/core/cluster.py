@@ -158,10 +158,21 @@ class AftCluster:
         node.close_pipeline()  # graceful leave: flush + stop I/O threads
 
     def kill_node(self, index: int = 0) -> AftNode:
-        """Failure injection (§6.7): hard-kill a live node."""
-        node = self.live_nodes()[index]
-        node.fail()
+        """Failure injection (§6.7): hard-kill a live node.  Its agents are
+        detached immediately — in particular the multicast inbox is
+        unregistered, or peers' eager pushes would accumulate in a queue
+        nobody will ever drain (the node stays in ``self.nodes`` so
+        heartbeat detection still sees the corpse)."""
+        with self._lock:
+            node = self.live_nodes()[index]
+            node.fail()
+            agent = self.agents.pop(node.node_id, None)
+            gc_agent = self.gc_agents.pop(node.node_id, None)
         self._sync_router()
+        if agent is not None:
+            agent.stop()  # unregisters the bus inbox
+        if gc_agent is not None:
+            gc_agent.stop()
         return node
 
     # ---------------------------------------------------------- load balance
@@ -239,6 +250,7 @@ class AftClient:
         *,
         hint: Optional[PlacementHint] = None,
         fresh: bool = False,
+        read_only: bool = False,
     ) -> str:
         node: Optional[AftNode] = None
         if uuid is not None:
@@ -256,7 +268,8 @@ class AftClient:
                 # original even when this client never saw it
                 hint = PlacementHint(uuid=uuid)
             node = self.cluster.pick_node(hint)
-        txid = node.start_transaction(uuid, fresh=fresh)
+        txid = node.start_transaction(uuid, fresh=fresh,
+                                      read_only=read_only)
         with self._lock:
             self._sessions[txid] = node
             self._session_history[txid] = node
@@ -306,6 +319,16 @@ class AftClient:
         node.release_transaction(txid)
         with self._lock:
             self._sessions.pop(txid, None)
+
+    def snapshot_read(self, key: str, max_staleness_s: float, *,
+                      hint: Optional[PlacementHint] = None):
+        """Bounded-staleness snapshot read (no transaction): routed like a
+        single-key read session, answered entirely from the chosen node's
+        gossip-fed cache at its read watermark.  Returns a
+        :class:`~repro.core.node.SnapshotResult`; raises
+        ``SnapshotUnavailable`` when gossip lag exceeds the bound."""
+        node = self.cluster.pick_node(hint or PlacementHint(keys=(key,)))
+        return node.snapshot_read(key, max_staleness_s)
 
     def node_of(self, txid: str) -> AftNode:
         return self._node(txid)

@@ -11,7 +11,7 @@ pruned by the local metadata GC (§5.1).
 from __future__ import annotations
 
 import threading
-from bisect import bisect_left, insort
+from bisect import bisect_left, bisect_right, insort
 from typing import Callable, Dict, Iterable, List, Optional, Set
 
 from .ids import TxnId
@@ -34,6 +34,11 @@ class CommitSetCache:
         # monotone log of locally-known commits, for the multicast thread to
         # drain ("transactions committed recently on this node", §4)
         self._fresh: List[TransactionRecord] = []
+        # key → newest timestamp ever PRUNED for that key (§5.1 GC).  The
+        # snapshot lane needs this: a version resolved at a watermark is
+        # only trustworthy if no pruned version could have sat between it
+        # and the watermark (see AftNode.snapshot_read).
+        self._pruned_max: Dict[str, int] = {}
 
     # -- writes --------------------------------------------------------------
     def add(self, record: TransactionRecord, *, fresh: bool = False) -> bool:
@@ -55,6 +60,8 @@ class CommitSetCache:
             if record is None:
                 return None
             for key in record.write_set:
+                if tid.timestamp > self._pruned_max.get(key, -1):
+                    self._pruned_max[key] = tid.timestamp
                 versions = self._index.get(key)
                 if versions is None:
                     continue
@@ -64,6 +71,16 @@ class CommitSetCache:
                 if not versions:
                     del self._index[key]
             return record
+
+    def note_pruned(self, record: TransactionRecord) -> None:
+        """Tombstone ``record``'s write-set keys in the pruned-watermark map
+        without requiring the record to be indexed here — global GC phase 1
+        confirming a commit this node never learned (the announcement was
+        dropped and the record was superseded before repair caught up)."""
+        with self._lock:
+            for key in record.write_set:
+                if record.tid.timestamp > self._pruned_max.get(key, -1):
+                    self._pruned_max[key] = record.tid.timestamp
 
     def drain_fresh(self) -> List[TransactionRecord]:
         """Hand the multicast thread everything committed since last drain."""
@@ -89,6 +106,25 @@ class CommitSetCache:
         with self._lock:
             versions = self._index.get(key)
             return versions[-1] if versions else None
+
+    def pruned_max_ts(self, key: str) -> int:
+        """Newest timestamp ever pruned for ``key`` (-1 if never pruned).
+        Monotone; survives the pruned records themselves."""
+        with self._lock:
+            return self._pruned_max.get(key, -1)
+
+    def latest_version_at(self, key: str, max_ts_ns: int) -> Optional[TxnId]:
+        """Newest locally-known committed version of ``key`` with timestamp
+        ≤ ``max_ts_ns`` — the snapshot-lane resolver: given a gossiped read
+        watermark, the freshest version at-or-below it is the snapshot's
+        answer."""
+        with self._lock:
+            versions = self._index.get(key)
+            if not versions:
+                return None
+            i = bisect_right(versions, max_ts_ns,
+                             key=lambda t: t.timestamp)
+            return versions[i - 1] if i else None
 
     def all_tids(self) -> List[TxnId]:
         with self._lock:

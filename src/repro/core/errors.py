@@ -24,3 +24,18 @@ class ReadAbortError(AftError):
 
 class NodeFailed(AftError):
     """Injected/simulated node failure — requests to a dead node fail."""
+
+
+class ReadOnlyTransaction(AftError):
+    """Write attempted inside a transaction declared ``read_only=True``.
+    The read-only lane skips version writes, the commit record and the
+    ``u/`` index entirely, so a buffered write could never become durable —
+    raising at ``put`` time surfaces the mis-declaration immediately."""
+
+
+class SnapshotUnavailable(AftError):
+    """Bounded-staleness snapshot read could not be served: the gossiped
+    read watermark lags behind ``now`` by more than the caller's declared
+    staleness bound (e.g. the multicast plane is partitioned or a peer's
+    horizon has stalled).  Callers retry, widen the bound, or fall back to
+    a transactional read."""

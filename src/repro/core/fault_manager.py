@@ -251,12 +251,13 @@ class FaultManager:
         ][: self.config.gc_batch]
         if not candidates:
             return 0
-        tids = [r.tid for r in candidates]
         # phase 1: all nodes must confirm local deletion — "when the GC
         # process receives acknowledgements from all nodes, it deletes ..."
-        confirmed: Set[TxnId] = set(tids)
+        # (full records travel with the proposal: a node that never learned
+        # a commit still has to tombstone its keys for the snapshot fence)
+        confirmed: Set[TxnId] = {r.tid for r in candidates}
         for node in nodes:
-            confirmed &= set(node.confirm_locally_deleted(tids))
+            confirmed &= set(node.confirm_locally_deleted(candidates))
             if not confirmed:
                 return 0
         # phase 2: delete version bytes + commit records (batched, off-path)

@@ -16,6 +16,16 @@ guarantees the record is durable before its ID can appear in any digest.
 
 Supersedence pruning (§4.1, Algorithm 2) applies before packing, exactly as
 in the host-network plane.
+
+The plane also carries a *horizon channel*: one extra ``(1, 4)`` row per
+node per round publishes the node's commit horizon
+(``AftNode.commit_horizon_ns``), and every receiver folds the gathered
+horizons into its read watermark (``set_watermark_provider``) — the same
+bounded-staleness frontier the host-network ``MulticastAgent`` gossips.
+A node withholds its horizon for a round whenever the round's digest could
+not carry its full fresh set (k-truncation or §4.1 pruning): a horizon must
+never claim coverage of a commit whose pointer was not exchanged, so the
+channel degrades to a stalled (fail-safe) watermark instead.
 """
 
 from __future__ import annotations
@@ -119,8 +129,26 @@ class DigestPlane:
         self.mesh = mesh
         self._pending: Dict[str, List[TransactionRecord]] = {
             n.node_id: [] for n in self.nodes}
+        # receiver node_id → {src node_id → newest gathered horizon}
+        self.peer_horizons: Dict[str, Dict[str, int]] = {
+            n.node_id: {} for n in self.nodes}
         self.stats = {"rounds": 0, "rows_sent": 0, "records_fetched": 0,
-                      "pruned": 0}
+                      "pruned": 0, "horizons_withheld": 0}
+        for node in self.nodes:
+            node.set_watermark_provider(self._floor_fn(node))
+
+    def _floor_fn(self, node: AftNode):
+        """Watermark floor for one node: min over the *currently live* other
+        plane members' gathered horizons (-1 until heard from — fail-safe),
+        or None when the node stands alone."""
+        def floor() -> Optional[int]:
+            others = [p for p in self.nodes
+                      if p.node_id != node.node_id and p.alive]
+            if not others:
+                return None
+            known = self.peer_horizons.get(node.node_id, {})
+            return min(known.get(p.node_id, -1) for p in others)
+        return floor
 
     def _resolve(self, ts: int, uuid_hash: int) -> Optional[TransactionRecord]:
         """Commit-log lookup by timestamp prefix + hash verification."""
@@ -137,6 +165,12 @@ class DigestPlane:
     def step(self) -> int:
         """One gossip round.  Returns the number of records merged."""
         per_node: List[np.ndarray] = []
+        # horizon BEFORE draining (mirrors MulticastAgent.step): commits
+        # visible after this point either ride this round's digest or carry
+        # timestamps above the horizon (in-flight commits cap it)
+        horizons: Dict[str, Optional[int]] = {
+            n.node_id: (n.commit_horizon_ns() if n.alive else None)
+            for n in self.nodes}
         for node in self.nodes:
             fresh = self._pending[node.node_id]
             fresh.extend(node.drain_fresh_commits())
@@ -148,16 +182,23 @@ class DigestPlane:
                 kept.append(rec)
             self._pending[node.node_id] = []
             tids = [r.tid for r in kept]
+            if len(kept) != len(fresh) or len(tids) > self.k:
+                # the digest cannot carry every fresh commit this round
+                # (§4.1 pruning or k-truncation): withhold the horizon so it
+                # never claims a commit whose pointer was not exchanged
+                horizons[node.node_id] = None
+                self.stats["horizons_withheld"] += 1
             self.stats["rows_sent"] += len(tids)
             per_node.append(pack_digest(tids, self.k))
         if not per_node:
             return 0
         gathered = exchange_digests(np.stack(per_node), self.mesh)
+        h_gathered = self._exchange_horizons(horizons)
         merged = 0
         for i, node in enumerate(self.nodes):
             if not node.alive:
                 continue
-            for j in range(len(self.nodes)):
+            for j, src in enumerate(self.nodes):
                 if j == i:
                     continue
                 for ts, h in unpack_digest(gathered[j]):
@@ -166,8 +207,36 @@ class DigestPlane:
                         continue
                     self.stats["records_fetched"] += 1
                     merged += node.merge_remote_commits([rec])
+                src_h = h_gathered.get(src.node_id)
+                if src_h is not None:
+                    mine = self.peer_horizons[node.node_id]
+                    if src_h > mine.get(src.node_id, -1):
+                        mine[src.node_id] = src_h
         self.stats["rounds"] += 1
         return merged
+
+    def _exchange_horizons(
+        self, horizons: Dict[str, Optional[int]]
+    ) -> Dict[str, Optional[int]]:
+        """All-gather the per-node commit horizons as one extra (1, 4) row
+        per node — ``[h_hi, h_lo, 1, 0]`` (the marker keeps a legitimate
+        horizon distinguishable from an all-zero withheld row)."""
+        rows = np.zeros((len(self.nodes), 1, DIGEST_WIDTH), dtype=np.uint32)
+        for i, node in enumerate(self.nodes):
+            h = horizons.get(node.node_id)
+            if h is None or h < 0:
+                continue  # withheld: peers keep their last value
+            h_hi, h_lo = _split64(h)
+            rows[i, 0] = (h_hi, h_lo, 1, 0)
+        gathered = exchange_digests(rows.view(np.int32), self.mesh)
+        out: Dict[str, Optional[int]] = {}
+        for j, node in enumerate(self.nodes):
+            row = np.asarray(gathered[j]).view(np.uint32).reshape(-1)
+            if int(row[2]) != 1:
+                out[node.node_id] = None
+                continue
+            out[node.node_id] = _join64(int(row[0]), int(row[1]))
+        return out
 
 
 class MetricsPlane:

@@ -1,11 +1,39 @@
 """Commit-set multicast with supersedence pruning (§4, §4.1).
 
-Each node runs a background agent that periodically (default 1 s) gathers the
-transactions committed locally since the last round, prunes any that are
-already locally superseded (Algorithm 2 — "for highly contended workloads …
-this significantly reduces the volume of metadata"), and broadcasts the rest
-to every peer.  The *unpruned* set always goes to the fault manager (§4.2),
-which is what makes commit announcements loss-proof.
+Each node runs a background agent that pushes freshly-committed transaction
+metadata to every peer — eagerly at commit time (the gossip-fed read fast
+path: peers fold the records into their ``CommitSetCache`` so read-atomic
+version resolution is a local lookup) — and periodically (default 1 s)
+drains the fresh-commit log for the fault manager, prunes any records that
+are already locally superseded (Algorithm 2 — "for highly contended
+workloads … this significantly reduces the volume of metadata"), and emits
+a heartbeat carrying the node's *commit horizon*.  The *unpruned* set
+always goes to the fault manager (§4.2), which is what makes commit
+announcements loss-proof.
+
+Commit horizons & the read watermark
+------------------------------------
+Every sequenced message carries ``horizon``: a timestamp h such that every
+transaction this node has committed (or will ever commit) with timestamp
+≤ h was durably recorded before the message was sent — ``now`` capped below
+the earliest still-in-flight commit.  A receiver only advances its view of
+a peer's horizon along a *contiguous* sequence prefix: a dropped or delayed
+message stalls the horizon (fail-safe — bounded-staleness snapshot reads
+degrade to ``SnapshotUnavailable``, never to stale answers) until either
+the gap self-heals out of the reorder buffer or the agent repairs it by
+re-scanning the durable commit set (sound: every commit covered by a later
+message's horizon was durable before that message was sent).  The minimum
+over all live peers' horizons, combined with the node's own horizon, is the
+node's *read watermark* — the snapshot lane's staleness bound
+(``AftNode.snapshot_read``).
+
+Fault injection
+---------------
+``MulticastBus`` accepts per-message fault knobs (``BusFaults``: drop,
+delay-by-rounds, reorder, duplicate — seeded, deterministic) plus a
+``fault_hook`` invoked with the named site ``multicast:send`` so the
+gossip plane can be killed mid-stream by the same ``maybe_fail`` machinery
+as every other subsystem.
 
 Components expose a synchronous ``step()`` so tests and deterministic
 simulations can drive rounds manually; ``start()`` runs the same step on a
@@ -14,114 +42,405 @@ daemon thread.
 
 from __future__ import annotations
 
-import queue
+import random
 import threading
-import time
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
-from .ids import TxnId
 from .node import AftNode
 from .records import TransactionRecord
 from .supersede import is_superseded
+
+FAULT_MANAGER_ID = "fault-manager"
+
+#: named fault site checked on every bus send (wire ``bus.fault_hook`` to
+#: ``LambdaPlatform.maybe_fail`` to crash the gossip plane mid-stream)
+SEND_FAULT_SITE = "multicast:send"
+
+
+@dataclass
+class BusFaults:
+    """Seeded, per-message fault plan for the multicast fabric.
+
+    Each knob is an independent probability, evaluated first-match-wins in
+    the order drop → delay → duplicate → reorder, so e.g. ``drop_rate=1.0``
+    silences the bus regardless of the other knobs.
+    """
+
+    drop_rate: float = 0.0        # message silently lost
+    delay_rate: float = 0.0       # message held for ``delay_rounds`` drains
+    delay_rounds: int = 1
+    reorder_rate: float = 0.0     # message jumps the queue (front-insert)
+    duplicate_rate: float = 0.0   # message delivered twice
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class BusMessage:
+    """One bus delivery: commit records plus the gossip-plane envelope.
+
+    ``seq`` is the sender's per-source broadcast counter (contiguity is the
+    receiver's loss detector); ``horizon`` is the sender's commit horizon at
+    send time.  Unsequenced messages (``seq is None``) are the legacy
+    record-stream shape the fault manager consumes.
+    """
+
+    src: str
+    records: Tuple[TransactionRecord, ...] = ()
+    seq: Optional[int] = None
+    horizon: Optional[int] = None
 
 
 class MulticastBus:
     """In-process message fabric between AFT nodes and the fault manager.
 
-    Models the paper's point-to-point broadcast; an optional delivery delay
-    and drop hook let tests exercise races (commit acknowledged → node dies
-    before broadcast — the §4.2 liveness scenario).
+    Models the paper's point-to-point broadcast; the seeded ``BusFaults``
+    knobs, the legacy ``drop_filter`` hook and the named ``multicast:send``
+    fault site let tests exercise races (commit acknowledged → node dies
+    before broadcast — the §4.2 liveness scenario) and arbitrary
+    drop/delay/reorder/duplicate schedules.
     """
 
-    def __init__(self) -> None:
-        self._inboxes: Dict[str, "queue.SimpleQueue[Tuple[str, List[TransactionRecord]]]"] = {}
+    def __init__(self, faults: Optional[BusFaults] = None) -> None:
+        self._inboxes: Dict[str, Deque[BusMessage]] = {}
+        # dst → [rounds_left, message] entries awaiting release
+        self._delayed: Dict[str, List[List]] = {}
         self._lock = threading.Lock()
         self.drop_filter: Optional[Callable[[str, str], bool]] = None
+        # named-site crash hook (e.g. LambdaPlatform.maybe_fail); a raise
+        # propagates to the sender, modelling an agent dying mid-send
+        self.fault_hook: Optional[Callable[[str], None]] = None
         self.messages_sent = 0
         self.records_sent = 0
+        self.messages_dropped = 0
+        self.messages_delayed = 0
+        self.messages_reordered = 0
+        self.messages_duplicated = 0
+        self.faults: Optional[BusFaults] = None
+        self._rng = random.Random(0)
+        if faults is not None:
+            self.set_faults(faults)
 
-    def register(self, member_id: str) -> None:
+    def set_faults(self, faults: Optional[BusFaults]) -> None:
+        """Install (and re-seed) the fault plan; ``None`` heals the bus."""
         with self._lock:
-            self._inboxes.setdefault(member_id, queue.SimpleQueue())
+            self.faults = faults
+            self._rng = random.Random(faults.seed if faults else 0)
+
+    # -- membership ----------------------------------------------------------
+    def register(self, member_id: str) -> int:
+        """(Re-)register a member with an EMPTY inbox.  Returns the number
+        of stale messages discarded — a replacement node must not replay its
+        predecessor's backlog (it bootstraps from durable storage instead)."""
+        with self._lock:
+            stale = self._inboxes.get(member_id)
+            delayed = self._delayed.pop(member_id, None)
+            discarded = (len(stale) if stale else 0) + (
+                len(delayed) if delayed else 0)
+            self._inboxes[member_id] = deque()
+            return discarded
 
     def unregister(self, member_id: str) -> None:
         with self._lock:
             self._inboxes.pop(member_id, None)
+            self._delayed.pop(member_id, None)
 
     def members(self) -> List[str]:
         with self._lock:
             return list(self._inboxes.keys())
 
-    def send(
-        self, src: str, dst: str, records: List[TransactionRecord]
-    ) -> None:
-        if not records:
-            return
-        if self.drop_filter is not None and self.drop_filter(src, dst):
-            return
-        with self._lock:
-            inbox = self._inboxes.get(dst)
-        if inbox is None:
-            return
-        inbox.put((src, records))
-        self.messages_sent += 1
-        self.records_sent += len(records)
-
-    def drain(self, member_id: str) -> List[Tuple[str, List[TransactionRecord]]]:
+    def inbox_depth(self, member_id: str) -> int:
+        """Queued + delayed messages for a member; 0 for unknown members
+        (the orphaned-inbox regression probe)."""
         with self._lock:
             inbox = self._inboxes.get(member_id)
-        out: List[Tuple[str, List[TransactionRecord]]] = []
-        if inbox is None:
+            delayed = self._delayed.get(member_id)
+            return (len(inbox) if inbox else 0) + (
+                len(delayed) if delayed else 0)
+
+    # -- send / receive ------------------------------------------------------
+    def send(
+        self,
+        src: str,
+        dst: str,
+        records: List[TransactionRecord],
+        *,
+        seq: Optional[int] = None,
+        horizon: Optional[int] = None,
+    ) -> None:
+        if not records and seq is None:
+            return  # nothing to say and no envelope to advance
+        if self.fault_hook is not None:
+            self.fault_hook(SEND_FAULT_SITE)  # may raise: sender dies here
+        if self.drop_filter is not None and self.drop_filter(src, dst):
+            return
+        msg = BusMessage(src=src, records=tuple(records),
+                         seq=seq, horizon=horizon)
+        with self._lock:
+            inbox = self._inboxes.get(dst)
+            if inbox is None:
+                return
+            f = self.faults
+            if f is not None:
+                if f.drop_rate > 0 and self._rng.random() < f.drop_rate:
+                    self.messages_dropped += 1
+                    return
+                if f.delay_rate > 0 and self._rng.random() < f.delay_rate:
+                    self._delayed.setdefault(dst, []).append(
+                        [max(1, f.delay_rounds), msg])
+                    self.messages_delayed += 1
+                    return
+                if (f.duplicate_rate > 0
+                        and self._rng.random() < f.duplicate_rate):
+                    inbox.append(msg)
+                    self.messages_duplicated += 1
+                elif (f.reorder_rate > 0
+                        and self._rng.random() < f.reorder_rate):
+                    inbox.appendleft(msg)
+                    self.messages_reordered += 1
+                    self.messages_sent += 1
+                    self.records_sent += len(records)
+                    return
+            inbox.append(msg)
+            self.messages_sent += 1
+            self.records_sent += len(records)
+
+    def _release_delayed(self, member_id: str) -> None:
+        # caller holds self._lock
+        entries = self._delayed.get(member_id)
+        if not entries:
+            return
+        inbox = self._inboxes.get(member_id)
+        still_held: List[List] = []
+        for entry in entries:
+            entry[0] -= 1
+            if entry[0] <= 0 and inbox is not None:
+                inbox.append(entry[1])
+            else:
+                still_held.append(entry)
+        if still_held:
+            self._delayed[member_id] = still_held
+        else:
+            del self._delayed[member_id]
+
+    def drain_messages(self, member_id: str) -> List[BusMessage]:
+        """Drain a member's inbox (releasing due delayed messages first)."""
+        with self._lock:
+            self._release_delayed(member_id)
+            inbox = self._inboxes.get(member_id)
+            if not inbox:
+                return []
+            out = list(inbox)
+            inbox.clear()
             return out
-        while True:
-            try:
-                out.append(inbox.get_nowait())
-            except queue.Empty:
-                return out
 
-
-FAULT_MANAGER_ID = "fault-manager"
+    def drain(self, member_id: str) -> List[Tuple[str, List[TransactionRecord]]]:
+        """Legacy record-stream view of ``drain_messages`` — the shape
+        ``FaultManager.ingest`` consumes (empty heartbeats filtered out)."""
+        return [(m.src, list(m.records))
+                for m in self.drain_messages(member_id) if m.records]
 
 
 class MulticastAgent:
-    """Per-node §4 background thread: broadcast fresh commits (pruned) to
-    peers + (unpruned) to the fault manager; merge everything received."""
+    """Per-node §4 agent: eagerly push each commit's metadata to peers as it
+    becomes visible (the read fast path), periodically stream the unpruned
+    fresh-commit log to the fault manager (§4.2), heartbeat the node's
+    commit horizon, and merge everything received — tracking each peer's
+    horizon along a contiguous sequence prefix to feed the node's read
+    watermark."""
 
-    def __init__(self, node: AftNode, bus: MulticastBus, peers: Callable[[], List[str]]):
+    def __init__(
+        self,
+        node: AftNode,
+        bus: MulticastBus,
+        peers: Callable[[], List[str]],
+        *,
+        eager_push: bool = True,
+        gap_repair_rounds: int = 5,
+    ):
         self.node = node
         self.bus = bus
         self.peers = peers  # live membership comes from the cluster manager
+        self.eager_push = eager_push
+        self.gap_repair_rounds = gap_repair_rounds
         self.bus.register(node.node_id)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._seq_lock = threading.Lock()
+        self._seq = 0  # this node's broadcast counter (per-source contiguity)
+        # receiver-side horizon tracking, all keyed by source node id
+        self._next_seq: Dict[str, int] = {}
+        self._pending: Dict[str, Dict[int, int]] = {}  # src → seq → horizon
+        self._gap_rounds: Dict[str, int] = {}
+        self.peer_horizons: Dict[str, int] = {}
         self.pruned_total = 0
         self.broadcast_total = 0
+        self.eager_pushes = 0
+        self.send_failures = 0
+        self.gap_repairs = 0
+        node.set_watermark_provider(self._watermark_floor)
+        if eager_push:
+            node.set_commit_listener(self._on_commit)
+
+    # -- eager push (commit-time fan-out) ------------------------------------
+    def _on_commit(self, record: TransactionRecord) -> None:
+        """Commit listener: push one freshly-visible record to every peer.
+        Best-effort — a failed send is healed by the fault manager's §4.2
+        anti-entropy scan, so errors are counted, never raised into the
+        committing client's path.  Deliberately UNpruned: the message's
+        horizon claims coverage of this commit, and a receiver's snapshot
+        watermark may sit below the superseding rival's timestamp — pruning
+        here would let a snapshot read miss an in-bound version.  §4.1
+        pruning stays on the periodic batch path."""
+        if not self.node.alive:
+            return
+        with self._seq_lock:
+            self._seq += 1
+            seq = self._seq
+            horizon = self.node.commit_horizon_ns()
+        sent = False
+        for peer in self.peers():
+            if peer == self.node.node_id:
+                continue
+            try:
+                self.bus.send(self.node.node_id, peer, [record],
+                              seq=seq, horizon=horizon)
+                sent = True
+            except Exception:
+                self.send_failures += 1
+        if sent:
+            self.eager_pushes += 1
+            self.broadcast_total += 1
 
     # -- one §4 round --------------------------------------------------------
     def step(self) -> None:
         if not self.node.alive:
             return
+        # horizon BEFORE draining: every commit visible after this point is
+        # either in the drained batch (announced now) or has a timestamp
+        # above the horizon (in-flight commits cap it) — so the claim
+        # "all commits ≤ horizon are durable" rides the same message as the
+        # records it covers
+        horizon = self.node.commit_horizon_ns()
         fresh = self.node.drain_fresh_commits()
         if fresh:
             # fault manager always receives the unpruned set (§4.2)
-            self.bus.send(self.node.node_id, FAULT_MANAGER_ID, list(fresh))
-            # peers receive the §4.1-pruned set
-            outgoing = [r for r in fresh if not is_superseded(r, self.node.cache)]
-            self.pruned_total += len(fresh) - len(outgoing)
-            if outgoing:
-                for peer in self.peers():
-                    if peer != self.node.node_id:
-                        self.bus.send(self.node.node_id, peer, outgoing)
-                self.broadcast_total += len(outgoing)
-        # merge inbound announcements (receiver-side supersedence check is
-        # inside merge_remote_commits)
-        for _src, records in self.bus.drain(self.node.node_id):
             try:
-                self.node.merge_remote_commits(records)
+                self.bus.send(self.node.node_id, FAULT_MANAGER_ID,
+                              list(fresh))
+            except Exception:
+                self.send_failures += 1
+        # §4.1 pruning accounting runs every round; with eager push the
+        # records already reached the peers at commit time, so the periodic
+        # broadcast degrades to a horizon heartbeat
+        outgoing = [r for r in fresh if not is_superseded(r, self.node.cache)]
+        self.pruned_total += len(fresh) - len(outgoing)
+        to_peers: List[TransactionRecord] = (
+            [] if self.eager_push else outgoing)
+        with self._seq_lock:
+            self._seq += 1
+            seq = self._seq
+        for peer in self.peers():
+            if peer == self.node.node_id:
+                continue
+            try:
+                self.bus.send(self.node.node_id, peer, to_peers,
+                              seq=seq, horizon=horizon)
+            except Exception:
+                self.send_failures += 1
+        if to_peers:
+            self.broadcast_total += len(to_peers)
+        # merge inbound announcements (receiver-side supersedence check is
+        # inside merge_remote_commits) and fold horizons
+        for msg in self.bus.drain_messages(self.node.node_id):
+            if msg.records:
+                try:
+                    self.node.merge_remote_commits(list(msg.records))
+                except Exception:
+                    if not self.node.alive:
+                        return
+                    raise
+            if msg.seq is not None and msg.horizon is not None:
+                self._ingest_horizon(msg.src, msg.seq, msg.horizon)
+        self._repair_gaps()
+
+    # -- horizon tracking ----------------------------------------------------
+    def _ingest_horizon(self, src: str, seq: int, horizon: int) -> None:
+        nxt = self._next_seq.get(src)
+        if nxt is None:
+            # first contact: only the stream head is a sound baseline —
+            # anything later may hide dropped announcements before it
+            if seq == 1:
+                self._next_seq[src] = 2
+                self._adopt_horizon(src, horizon)
+                self._drain_pending(src)
+            else:
+                self._pending.setdefault(src, {})[seq] = horizon
+            return
+        if seq < nxt:
+            return  # duplicate / already covered
+        if seq == nxt:
+            self._next_seq[src] = nxt + 1
+            self._adopt_horizon(src, horizon)
+            self._drain_pending(src)
+        else:
+            self._pending.setdefault(src, {})[seq] = horizon
+
+    def _drain_pending(self, src: str) -> None:
+        pend = self._pending.get(src)
+        if not pend:
+            return
+        nxt = self._next_seq[src]
+        while nxt in pend:
+            self._adopt_horizon(src, pend.pop(nxt))
+            nxt += 1
+        self._next_seq[src] = nxt
+        if not pend:
+            self._pending.pop(src, None)
+
+    def _adopt_horizon(self, src: str, horizon: int) -> None:
+        if horizon > self.peer_horizons.get(src, -1):
+            self.peer_horizons[src] = horizon
+
+    def _repair_gaps(self) -> None:
+        """A persistent sequence gap (dropped message) stalls a peer's
+        horizon; after ``gap_repair_rounds`` rounds, re-scan the durable
+        commit set and jump past the gap.  Sound: every commit covered by
+        the horizon of the newest pending message was durably recorded
+        before that message was sent, so the scan observes it."""
+        for src in list(self._pending.keys()):
+            pend = self._pending.get(src)
+            if not pend:
+                self._gap_rounds.pop(src, None)
+                continue
+            rounds = self._gap_rounds.get(src, 0) + 1
+            if rounds < self.gap_repair_rounds:
+                self._gap_rounds[src] = rounds
+                continue
+            try:
+                self.node.bootstrap()
             except Exception:
                 if not self.node.alive:
                     return
                 raise
+            top = max(pend)
+            self._adopt_horizon(src, pend[top])
+            self._next_seq[src] = top + 1
+            pend.clear()
+            self._pending.pop(src, None)
+            self._gap_rounds.pop(src, None)
+            self.gap_repairs += 1
+
+    def _watermark_floor(self) -> Optional[int]:
+        """Min of live peers' horizons, re-evaluated against CURRENT
+        membership on every call (a freshly-joined peer floors the
+        watermark at -1 until heard from — fail-safe).  None ⇒ no peers,
+        the node's own horizon stands alone."""
+        peer_ids = [p for p in self.peers() if p != self.node.node_id]
+        if not peer_ids:
+            return None
+        return min(self.peer_horizons.get(p, -1) for p in peer_ids)
 
     # -- threading -----------------------------------------------------------
     def start(self) -> None:

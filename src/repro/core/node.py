@@ -40,6 +40,8 @@ from .commit_cache import CommitSetCache, DataCache
 from .errors import (
     NodeFailed,
     ReadAbortError,
+    ReadOnlyTransaction,
+    SnapshotUnavailable,
     TransactionNotRunning,
     UnknownTransaction,
 )
@@ -148,6 +150,10 @@ class TransactionContext:
     started_at: float = field(default_factory=time.monotonic)
     committed_tid: Optional[TxnId] = None
     is_retry: bool = False  # client reopened with a prior UUID (§3.3.1)
+    # declared read-only lane: reads stay fully Algorithm-1 atomic, but the
+    # commit skips version writes, the commit record AND the u/ index — a
+    # buffered write is a contract violation (put raises)
+    read_only: bool = False
     # a commit reached storage (version flush issued): from here on an
     # abort may be racing a commit that actually LANDED (the lost-ack
     # window), so cleanup must not delete spilled bytes a durable commit
@@ -164,6 +170,19 @@ class TransactionContext:
     def read_set_snapshot(self) -> Dict[str, TxnId]:
         with self.lock:
             return dict(self.read_set)
+
+
+@dataclass(frozen=True)
+class SnapshotResult:
+    """Outcome of a bounded-staleness snapshot read (``snapshot_read``):
+    the freshest committed version at-or-below the gossiped read watermark.
+    ``tid is None`` ⇔ no committed version of the key existed at the
+    watermark (``value`` is then ``None`` too)."""
+
+    value: Optional[bytes]
+    tid: Optional[TxnId]
+    watermark_ns: int
+    lag_ns: int
 
 
 class AftNode:
@@ -197,6 +216,18 @@ class AftNode:
         self._lock = threading.RLock()
         self._alive = True
         self._inflight_ops = 0  # get/put/commit currently executing
+        # gossip-plane hooks (core/multicast.py wires these): the commit
+        # listener eagerly pushes each freshly-visible record to peers; the
+        # watermark provider supplies the min-over-peers horizon floor
+        self._commit_listener: Optional[
+            Callable[[TransactionRecord], None]] = None
+        self._watermark_provider: Optional[
+            Callable[[], Optional[int]]] = None
+        # uuid → minted commit timestamp of commits between tid assignment
+        # and visibility; the commit horizon is capped strictly below the
+        # earliest of these, so a horizon announcement can never cover a
+        # commit whose record is not yet durable
+        self._inflight_commit_ts: Dict[str, int] = {}
         # asynchronous I/O pipeline: created lazily on first async use, so
         # synchronous workloads never start its threads
         self._pipeline: Optional[StorageIOPipeline] = None
@@ -216,6 +247,9 @@ class AftNode:
                 "writes": 0,
                 "commits": 0,
                 "async_commits": 0,
+                "probe_cache_hits": 0,
+                "snapshot_reads": 0,
+                "snapshot_unavailable": 0,
                 "prefetched_keys": 0,
                 "aborts": 0,
                 "staleness_aborts": 0,
@@ -340,6 +374,15 @@ class AftNode:
         if pipe is not None:
             for k, v in pipe.stats().items():
                 snap[f"io_{k}"] = v
+        # watermark lag: how far the snapshot lane trails real time (0 on a
+        # peerless node).  Outside the locked block — commit_horizon_ns
+        # takes the node lock itself and the provider may take cluster locks.
+        if self._alive:
+            try:
+                snap["read_watermark_lag_ms"] = max(
+                    0, self.clock.now_ns() - self.read_watermark_ns()) / 1e6
+            except Exception:
+                pass  # provider racing a membership change; gauge is best-effort
         return snap
 
     def _stats_snapshot(self) -> Dict[str, float]:
@@ -359,6 +402,128 @@ class AftNode:
             snap["commit_p99_ms"] = lat[min(len(lat) - 1,
                                             int(len(lat) * 0.99))] * 1e3
         return snap
+
+    # ------------------------------- gossip plane: horizons & the watermark
+    def set_commit_listener(
+        self, fn: Optional[Callable[[TransactionRecord], None]]
+    ) -> None:
+        """Install the eager-push hook: called with each commit's record the
+        moment it becomes visible (§3.3 step 3).  Best-effort — exceptions
+        are swallowed (the fault manager's anti-entropy heals lost pushes)."""
+        self._commit_listener = fn
+
+    def set_watermark_provider(
+        self, fn: Optional[Callable[[], Optional[int]]]
+    ) -> None:
+        """Install the peer-horizon floor: a callable returning the minimum
+        commit horizon gossiped by live peers, or ``None`` when the node has
+        no peers (its own horizon then stands alone)."""
+        self._watermark_provider = fn
+
+    def commit_horizon_ns(self) -> int:
+        """Timestamp h such that every transaction this node has committed
+        (or will ever commit) with timestamp ≤ h is durably recorded: the
+        clock now, capped strictly below the earliest in-flight commit's
+        minted timestamp.  Sound because tids are minted and registered
+        in-flight atomically under the node lock against a strictly
+        monotonic clock."""
+        with self._lock:
+            now = self.clock.now_ns()
+            if self._inflight_commit_ts:
+                return min(now, min(self._inflight_commit_ts.values()) - 1)
+            return now
+
+    def read_watermark_ns(self) -> int:
+        """The snapshot lane's staleness frontier: every commit anywhere in
+        the cluster with timestamp ≤ the watermark has been durably recorded
+        AND announced to this node (contiguity-gated horizon tracking in
+        ``core/multicast.py`` is what upgrades "durable" to "announced")."""
+        own = self.commit_horizon_ns()
+        provider = self._watermark_provider
+        if provider is None:
+            return own
+        floor = provider()
+        if floor is None:
+            return own
+        return min(own, floor)
+
+    def snapshot_read(
+        self, key: str, max_staleness_s: float
+    ) -> SnapshotResult:
+        """Bounded-staleness snapshot read: resolve the freshest committed
+        version of ``key`` at-or-below the gossiped read watermark, without
+        a transaction and without any storage probe for rivals.  Raises
+        :class:`SnapshotUnavailable` when the watermark trails ``now`` by
+        more than the declared bound (gossip stalled/partitioned) — the
+        lane degrades to unavailability, never to out-of-bound staleness."""
+        self._check_alive()
+        self.stats["snapshot_reads"] += 1
+        wm = self.read_watermark_ns()
+        lag_ns = max(0, self.clock.now_ns() - wm)
+        bound_ns = int(max_staleness_s * 1e9)
+        if lag_ns > bound_ns:
+            self.stats["snapshot_unavailable"] += 1
+            raise SnapshotUnavailable(
+                f"read watermark lags {lag_ns / 1e6:.1f} ms > declared "
+                f"bound {bound_ns / 1e6:.1f} ms for {key!r}"
+            )
+        tid = self.cache.latest_version_at(key, wm)
+        # GC fence: §5.1 pruning removes superseded versions from the cache
+        # (and their data from storage), so a resolution is only complete if
+        # every version ever pruned for this key is at-or-below what we
+        # resolved — otherwise a pruned version may have sat inside
+        # (resolved, wm] and the answer would be silently stale.  The
+        # newest version of a key is never superseded, hence never pruned:
+        # once the watermark covers it this fence always passes.
+        pruned = self.cache.pruned_max_ts(key)
+        if pruned > (tid.timestamp if tid is not None else -1):
+            self.stats["snapshot_unavailable"] += 1
+            raise SnapshotUnavailable(
+                f"local GC pruned versions of {key!r} up to ts {pruned} "
+                f"past the resolution at watermark {wm} — cannot prove the "
+                f"snapshot complete"
+            )
+        # a superseded version's DATA can be reclaimed by the §5.2 global
+        # GC before this node's local prune runs (record still cached, so
+        # the fence above cannot see it) — an unreadable version degrades
+        # to unavailability, never to serving a different version
+        try:
+            value = self._fetch(key, tid) if tid is not None else None
+        except ReadAbortError as exc:
+            self.stats["snapshot_unavailable"] += 1
+            raise SnapshotUnavailable(
+                f"resolved version of {key!r} at watermark {wm} was "
+                f"reclaimed by GC before it could be served: {exc}"
+            ) from exc
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled:
+            # replayed by the offline checker's snapshot-bound invariant
+            tracer.emit(
+                "snap",
+                key=key,
+                tid=tid.encode() if tid is not None else None,
+                wm=wm,
+                lag_ns=lag_ns,
+                bound_ns=bound_ns,
+            )
+        return SnapshotResult(value=value, tid=tid,
+                              watermark_ns=wm, lag_ns=lag_ns)
+
+    def _register_inflight(self, uuid: str, ts_ns: int) -> None:
+        with self._lock:
+            self._inflight_commit_ts[uuid] = ts_ns
+
+    def _clear_inflight(self, uuid: str) -> None:
+        with self._lock:
+            self._inflight_commit_ts.pop(uuid, None)
+
+    def _mint_tid(self, ctx: TransactionContext) -> TxnId:
+        """Assign the commit timestamp and register it in-flight in ONE
+        locked step, so no horizon computed in between can cover it."""
+        with self._lock:
+            tid = TxnId(self.clock.now_ns(), ctx.uuid)
+            self._inflight_commit_ts[ctx.uuid] = tid.timestamp
+            return tid
 
     # ------------------------------------------------------------- bootstrap
     def bootstrap(self) -> int:
@@ -382,7 +547,8 @@ class AftNode:
 
     # ------------------------------------------------------------- Table 1
     def start_transaction(
-        self, uuid: Optional[str] = None, *, fresh: bool = False
+        self, uuid: Optional[str] = None, *, fresh: bool = False,
+        read_only: bool = False,
     ) -> str:
         """StartTransaction() → txid.  A retried request may pass its old
         UUID to continue/recommit the same logical transaction (§3.3.1).
@@ -391,7 +557,11 @@ class AftNode:
         commit path skips the §3.3.1 already-committed probe (one storage
         read per commit).  Workflow drivers pass it on the first attempt of
         locally-generated workflow UUIDs; anything deterministic or
-        re-driven (retries, chain children, explicit resumes) must not."""
+        re-driven (retries, chain children, explicit resumes) must not.
+        ``read_only=True`` declares the transaction will never write: reads
+        stay fully Algorithm-1 atomic, ``put`` raises, and the commit is
+        local-only — no version flush, no commit record, no ``u/`` index,
+        no §3.3.1 probe (there is no durable effect to deduplicate)."""
         self._check_alive()
         is_retry = uuid is not None and not fresh
         uuid = uuid or fresh_uuid()
@@ -403,6 +573,7 @@ class AftNode:
                         uuid, self.storage, self.config.write_buffer_max_bytes
                     ),
                     is_retry=is_retry,
+                    read_only=read_only,
                 )
         return uuid
 
@@ -411,6 +582,11 @@ class AftNode:
         ctx = self._ctx(txid)
         if ctx.state is not TxnState.RUNNING:
             raise TransactionNotRunning(txid)
+        if ctx.read_only:
+            raise ReadOnlyTransaction(
+                f"transaction {txid} was declared read_only; its commit "
+                "would never persist this write"
+            )
         self._op_begin()
         try:
             ctx.buffer.put(key, value)
@@ -566,6 +742,11 @@ class AftNode:
         """§3.3.1 idempotence check shared by both commit paths."""
         with self._lock:
             already = self._committed_uuids.get(ctx.uuid)
+        if (already is not None and ctx.is_retry
+                and self.config.verify_uuid_on_retry):
+            # the gossip-fed commit-set cache answered a probe that would
+            # otherwise have cost two storage point reads (§3.3.1 via §4)
+            self.stats["probe_cache_hits"] += 1
         if already is None and ctx.is_retry and self.config.verify_uuid_on_retry:
             # A retried request landed on a node that has not yet heard (via
             # multicast/fault manager) whether the original commit succeeded.
@@ -586,6 +767,8 @@ class AftNode:
 
     def _commit_transaction(self, txid: str) -> TxnId:
         ctx = self._ctx(txid)
+        if ctx.read_only:
+            return self._commit_read_only(ctx)
         already = self._probe_already_committed(ctx)
         if already is not None:  # §3.3.1 retry of a committed transaction
             ctx.state = TxnState.COMMITTED
@@ -594,44 +777,73 @@ class AftNode:
         if ctx.state is not TxnState.RUNNING:
             raise TransactionNotRunning(txid)
 
-        tid = TxnId(self.clock.now_ns(), ctx.uuid)
-        to_write, storage_keys = ctx.buffer.finalize(tid)
-        write_set = tuple(sorted(storage_keys.keys()))
+        tid = self._mint_tid(ctx)
+        try:
+            to_write, storage_keys = ctx.buffer.finalize(tid)
+            write_set = tuple(sorted(storage_keys.keys()))
 
-        if write_set:
-            # step 1: persist all data versions (batched when the engine
-            # supports it — AFT batches by default, §6.1.1), plus the
-            # uuid → commit-key index used by the §3.3.1 retry probe.  The
-            # index lands BEFORE the commit record: index ∧ record ⇔
-            # committed, so a crash between the two reads as "not committed".
-            to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
-            ctx.commit_attempted = True
-            tracer = obs_trace.get_tracer()
-            t_vf = time.perf_counter()
-            self.storage.put_batch(to_write)
-            self._h_version_flush.observe_s(time.perf_counter() - t_vf)
-            if tracer.enabled:
-                tracer.emit("order", uuid=ctx.uuid, stage="versions")
-            # step 2: persist the commit record — the *linearization point*
-            # for durability; a crash before this line loses the txn (client
-            # retries), a crash after it is a committed txn (§3.3.1).
-            record = TransactionRecord(
-                tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
-            )
-            t_rec = time.perf_counter()
-            self.storage.put(commit_key(tid), record.encode())
-            self._h_record_write.observe_s(time.perf_counter() - t_rec)
-            if tracer.enabled:
-                tracer.emit("order", uuid=ctx.uuid, stage="record",
-                            writes=len(write_set))
-            self._commit_make_visible(ctx, tid, record, to_write, storage_keys)
-        else:
-            # read-only transaction: nothing to persist or announce.
-            with self._lock:
-                self._committed_uuids[ctx.uuid] = tid
-            ctx.state = TxnState.COMMITTED
-            ctx.committed_tid = tid
-            self.stats["commits"] += 1
+            if write_set:
+                # step 1: persist all data versions (batched when the engine
+                # supports it — AFT batches by default, §6.1.1), plus the
+                # uuid → commit-key index used by the §3.3.1 retry probe.  The
+                # index lands BEFORE the commit record: index ∧ record ⇔
+                # committed, so a crash between the two reads as "not committed".
+                to_write[uuid_key(ctx.uuid)] = commit_key(tid).encode()
+                ctx.commit_attempted = True
+                tracer = obs_trace.get_tracer()
+                t_vf = time.perf_counter()
+                self.storage.put_batch(to_write)
+                self._h_version_flush.observe_s(time.perf_counter() - t_vf)
+                if tracer.enabled:
+                    tracer.emit("order", uuid=ctx.uuid, stage="versions")
+                # step 2: persist the commit record — the *linearization point*
+                # for durability; a crash before this line loses the txn (client
+                # retries), a crash after it is a committed txn (§3.3.1).
+                record = TransactionRecord(
+                    tid=tid, write_set=write_set, storage_keys=dict(storage_keys)
+                )
+                # the record event is sequenced BEFORE the put: a remote
+                # reader can observe the durable record the instant storage
+                # acks it, i.e. before any post-put emission here could run —
+                # which would invert trace order against the reader's read
+                # event and trip the offline read-durability check on a
+                # perfectly-ordered commit.  Nothing can serve the version in
+                # the emit→durable window (the cache is populated only in
+                # _commit_make_visible, and storage cannot return an
+                # unwritten record), so sequencing at submit loses nothing.
+                if tracer.enabled:
+                    tracer.emit("order", uuid=ctx.uuid, stage="record",
+                                writes=len(write_set), tid=tid.encode(),
+                                keys=list(write_set))
+                t_rec = time.perf_counter()
+                self.storage.put(commit_key(tid), record.encode())
+                self._h_record_write.observe_s(time.perf_counter() - t_rec)
+                self._commit_make_visible(ctx, tid, record, to_write, storage_keys)
+            else:
+                # empty write set: nothing to persist or announce.
+                with self._lock:
+                    self._committed_uuids[ctx.uuid] = tid
+                ctx.state = TxnState.COMMITTED
+                ctx.committed_tid = tid
+                self.stats["commits"] += 1
+        finally:
+            self._clear_inflight(ctx.uuid)
+        return tid
+
+    def _commit_read_only(self, ctx: TransactionContext) -> TxnId:
+        """Commit the declared read-only lane: assign a local tid and flip
+        state — nothing durable exists, so there is nothing to probe, flush,
+        record or announce.  Deliberately does NOT touch ``_committed_uuids``:
+        recording a uuid with no durable record would wrongly satisfy a
+        later non-read-only retry's §3.3.1 idempotence check."""
+        if ctx.state is not TxnState.RUNNING:
+            if ctx.state is TxnState.COMMITTED and ctx.committed_tid is not None:
+                return ctx.committed_tid  # idempotent re-commit
+            raise TransactionNotRunning(ctx.uuid)
+        tid = TxnId(self.clock.now_ns(), ctx.uuid)
+        ctx.state = TxnState.COMMITTED
+        ctx.committed_tid = tid
+        self.stats["commits"] += 1
         return tid
 
     def _commit_make_visible(
@@ -657,6 +869,16 @@ class AftNode:
             tracer.emit("order", uuid=ctx.uuid, stage="visible",
                         tid=tid.encode(),
                         trace=obs_trace.txn_trace_id(ctx.uuid))
+        # eager gossip push BEFORE clearing the in-flight cap: a horizon
+        # computed in between must not cover a commit whose announcement has
+        # not yet been sequenced (core/multicast.py soundness argument)
+        listener = self._commit_listener
+        if listener is not None:
+            try:
+                listener(record)
+            except Exception:
+                pass  # best-effort; §4.2 anti-entropy heals lost pushes
+        self._clear_inflight(ctx.uuid)
 
     # ---------------------------------------------------------- async commit
     def commit_transaction_async(self, txid: str) -> "Future[TxnId]":
@@ -676,6 +898,13 @@ class AftNode:
         Concurrent async commits of one session share a single future."""
         self._check_alive()
         ctx = self._ctx(txid)
+        if ctx.read_only:  # local-only commit: nothing to pipeline
+            fut_ro: "Future[TxnId]" = Future()
+            try:
+                fut_ro.set_result(self.commit_transaction(txid))
+            except BaseException as exc:  # noqa: BLE001 - delivered via future
+                fut_ro.set_exception(exc)
+            return fut_ro
         pipeline = self.io_pipeline()
         if pipeline is None:  # pipeline disabled: degrade to the sync path
             fut: "Future[TxnId]" = Future()
@@ -695,6 +924,7 @@ class AftNode:
 
         def settle(tid: Optional[TxnId] = None,
                    exc: Optional[BaseException] = None) -> None:
+            self._clear_inflight(ctx.uuid)
             dt = time.perf_counter() - t0
             with self._lat_lock:
                 self._commit_lat.append(dt)
@@ -713,13 +943,16 @@ class AftNode:
             with self._lock:
                 local_already = self._committed_uuids.get(ctx.uuid)
             if local_already is not None:
+                if ctx.is_retry and self.config.verify_uuid_on_retry:
+                    # gossip-fed cache answered instead of the storage probe
+                    self.stats["probe_cache_hits"] += 1
                 ctx.state = TxnState.COMMITTED
                 ctx.committed_tid = local_already
                 settle(local_already)
                 return result
             if ctx.state is not TxnState.RUNNING:
                 raise TransactionNotRunning(txid)
-            tid = TxnId(self.clock.now_ns(), ctx.uuid)
+            tid = self._mint_tid(ctx)
             to_write, storage_keys = ctx.buffer.finalize(tid)
             write_set = tuple(sorted(storage_keys.keys()))
             need_probe = ctx.is_retry and self.config.verify_uuid_on_retry
@@ -771,10 +1004,6 @@ class AftNode:
                 try:
                     self._h_record_write.observe_s(
                         time.perf_counter() - t_rec[0])
-                    tracer = obs_trace.get_tracer()
-                    if tracer.enabled:
-                        tracer.emit("order", uuid=ctx.uuid, stage="record",
-                                    writes=len(write_set))
                     self._commit_make_visible(
                         ctx, tid, record, to_write, storage_keys
                     )
@@ -816,6 +1045,17 @@ class AftNode:
                     # step 2: the commit record, ordered strictly after
                     # THIS transaction's version flush and index write (the
                     # put still coalesces with other transactions' I/O).
+                    # Emitted at submit, not in after_record: a reader can
+                    # observe the durable record from storage before this
+                    # commit's completion callback is ever scheduled, and a
+                    # post-hoc emission would sequence the record event
+                    # after that read — a false read-durability violation
+                    # in the offline checker (see the sync path's note).
+                    tracer = obs_trace.get_tracer()
+                    if tracer.enabled:
+                        tracer.emit("order", uuid=ctx.uuid, stage="record",
+                                    writes=len(write_set), tid=tid.encode(),
+                                    keys=list(write_set))
                     t_rec[0] = time.perf_counter()
                     pipeline.submit_put(
                         commit_key(tid), record.encode()
@@ -1010,6 +1250,16 @@ class AftNode:
         for record in records:
             if is_superseded(record, self.cache):
                 self.stats["remote_skipped_superseded"] += 1
+                # §4.1 accounting: a superseded record is not a merge — but
+                # its version metadata still enters the cache, else a
+                # delayed announcement could leave a watermark-covered
+                # version invisible to the snapshot lane's
+                # ``latest_version_at`` resolver.  Local GC prunes it like
+                # any locally-superseded record (§5.1).
+                if self.cache.add(record):
+                    with self._lock:
+                        self._committed_uuids.setdefault(
+                            record.tid.uuid, record.tid)
                 continue
             if self.cache.add(record):
                 with self._lock:
@@ -1142,23 +1392,37 @@ class AftNode:
         with self._lock:
             self._acked_markers &= live_uuids
 
-    def confirm_locally_deleted(self, tids: Iterable[TxnId]) -> List[TxnId]:
+    def confirm_locally_deleted(
+        self, records: Iterable[TransactionRecord]
+    ) -> List[TxnId]:
         """Global GC phase 1 (§5.2): which of these have we locally deleted?
         Also opportunistically deletes any we *could* delete right now, which
-        keeps the global protocol from stalling on idle nodes."""
+        keeps the global protocol from stalling on idle nodes.
+
+        Takes full records, not bare tids: confirming a transaction licenses
+        the global GC to erase it from durable storage, so this node must
+        tombstone the write-set keys in its pruned-watermark map even when it
+        never learned the commit (a dropped announcement + supersedence).
+        Otherwise a later ``snapshot_read`` could resolve *past* the erased
+        version at a watermark that covered it — returning an answer it can
+        no longer prove complete."""
         self._check_alive()
         confirmed: List[TxnId] = []
         with self._lock:
             deleted = set(self._locally_deleted)
-        for tid in tids:
+        for proposed in records:
+            tid = proposed.tid
             if tid in deleted:
                 confirmed.append(tid)
                 continue
             record = self.cache.get(tid)
             if record is None:
-                # never knew it (e.g. node joined later): safe to confirm —
-                # no local transaction can be reading it.
+                # never knew it (dropped announcement, or this node joined
+                # later): safe to confirm — no local transaction can be
+                # reading it — but the snapshot fence must still learn that
+                # versions of these keys up to this timestamp may vanish.
                 if not self._has_active_readers_tid(tid):
+                    self.cache.note_pruned(proposed)
                     confirmed.append(tid)
                 continue
             if is_superseded(record, self.cache) and not self._has_active_readers(record):

@@ -20,6 +20,19 @@ can catch protocol bugs rather than inherit them):
   re-applied effects.
 * **span uniqueness** — from ``span`` events: no span ID is emitted twice
   (attempt-qualified IDs must make kill-and-retry replays distinct).
+* **read durability** (gossip-fed fast path, §4) — from ``read`` + ``order``
+  events: a read that resolved to version ``tid`` must be sequenced *after*
+  that transaction's commit record was durably written.  The multicast
+  plane pushes commit metadata ahead of storage probes; if a cache entry
+  ever let a reader observe a version before its record landed, a crash
+  could revoke the version after it was served.
+* **snapshot bound** (bounded-staleness snapshot reads) — from ``snap``
+  events: a served snapshot read must (a) land within its declared
+  staleness bound, (b) never return a version *newer* than its watermark,
+  and (c) never *miss* a version committed at or below the watermark
+  before the read (the watermark is a promise of completeness up to it).
+  Commit ``order`` events that carry ``tid``/``keys`` metadata feed (c);
+  older traces without those fields simply skip it.
 
 Versions are compared by their encoded TxnId strings, whose lexicographic
 order equals ``⟨timestamp, uuid⟩`` order (see ``core/ids.py``).
@@ -49,7 +62,9 @@ __all__ = [
 
 @dataclass
 class Violation:
-    invariant: str   # read-atomicity | write-ordering | exactly-once | span-unique
+    # read-atomicity | write-ordering | exactly-once | span-unique
+    # | read-durability | snapshot-bound
+    invariant: str
     detail: str
 
     def __str__(self) -> str:
@@ -64,6 +79,7 @@ class CheckResult:
     commits_checked: int = 0
     finishes_checked: int = 0
     spans_checked: int = 0
+    snaps_checked: int = 0
 
     @property
     def ok(self) -> bool:
@@ -76,6 +92,7 @@ class CheckResult:
             f"commit orders checked: {self.commits_checked}",
             f"workflow finishes:     {self.finishes_checked}",
             f"spans checked:         {self.spans_checked}",
+            f"snapshot reads:        {self.snaps_checked}",
             f"violations:            {len(self.violations)}",
         ]
         lines.extend(f"  {v}" for v in self.violations)
@@ -171,6 +188,114 @@ def _check_exactly_once(finishes_by_uuid: Mapping[str, List[dict]],
 
 
 # ---------------------------------------------------------------------------
+# invariant 4: read durability (gossip-fed fast path)
+# ---------------------------------------------------------------------------
+
+def _tid_ts(encoded: str) -> Optional[int]:
+    """Timestamp component of an encoded TxnId, or None if unparsable."""
+    head, _, _ = str(encoded).partition(".")
+    try:
+        return int(head)
+    except ValueError:
+        return None
+
+
+def _tid_uuid(encoded: str) -> Optional[str]:
+    enc = str(encoded)
+    if "." not in enc:
+        return None
+    return enc.split(".", 1)[1]
+
+
+def _check_read_durability(reads_by_txn: Mapping[str, List[dict]],
+                           orders_by_uuid: Mapping[str, List[dict]],
+                           out: CheckResult) -> None:
+    """A read resolving to ``tid`` must be sequenced after that commit's
+    record write.  Transactions whose order events are absent from the
+    trace (e.g. committed before tracing started) are skipped — the
+    invariant only binds when both sides are observable."""
+    min_record_seq: Dict[str, int] = {}
+    for uuid, evs in orders_by_uuid.items():
+        seqs = [e["seq"] for e in evs if e.get("stage") == "record"]
+        if seqs:
+            min_record_seq[uuid] = min(seqs)
+    for txn, reads in reads_by_txn.items():
+        for r in reads:
+            tid = r.get("tid")
+            seq = r.get("seq")
+            if tid is None or seq is None:
+                continue
+            uuid = _tid_uuid(tid)
+            if uuid is None:
+                continue
+            rec = min_record_seq.get(uuid)
+            if rec is not None and seq < rec:
+                out.violations.append(Violation(
+                    "read-durability",
+                    f"txn {txn}: read {r.get('key')}@{tid} (seq {seq}) "
+                    f"before its commit record landed (seq {rec}) — the "
+                    f"version was not durable when served"))
+
+
+# ---------------------------------------------------------------------------
+# invariant 5: bounded-staleness snapshot reads
+# ---------------------------------------------------------------------------
+
+def _check_snapshot_bounds(snaps: List[dict],
+                           orders_by_uuid: Mapping[str, List[dict]],
+                           out: CheckResult) -> None:
+    """Three obligations per served ``snap`` event: the lag the node
+    reported must fit the caller's bound; the returned version must not be
+    newer than the watermark; and no version committed at or below the
+    watermark (whose record landed before the read) may be missed."""
+    committed: List[Tuple[str, int, str, int]] = []  # key, ts, tid, rec seq
+    for evs in orders_by_uuid.values():
+        for e in evs:
+            if e.get("stage") != "record":
+                continue
+            tid, keys = e.get("tid"), e.get("keys")
+            if tid is None or not keys:
+                continue  # pre-fast-path trace: no snapshot metadata
+            ts = _tid_ts(tid)
+            if ts is None:
+                continue
+            committed.extend((str(k), ts, str(tid), e["seq"]) for k in keys)
+
+    for s in snaps:
+        out.snaps_checked += 1
+        key, wm, seq = s.get("key"), s.get("wm"), s.get("seq")
+        if wm is None or seq is None:
+            continue
+        lag, bound = s.get("lag_ns"), s.get("bound_ns")
+        if lag is not None and bound is not None and lag > bound:
+            out.violations.append(Violation(
+                "snapshot-bound",
+                f"snapshot read of {key} served with lag {lag}ns beyond "
+                f"its declared staleness bound {bound}ns"))
+        tid = s.get("tid")
+        rts = _tid_ts(tid) if tid is not None else None
+        if rts is not None and rts > wm:
+            out.violations.append(Violation(
+                "snapshot-bound",
+                f"snapshot read of {key} returned {tid} (ts {rts}) above "
+                f"its watermark {wm}"))
+            continue
+        newest: Optional[Tuple[int, str]] = None
+        for k, ts, ctid, rec_seq in committed:
+            if k != key or ts > wm or rec_seq >= seq:
+                continue
+            if newest is None or ts > newest[0]:
+                newest = (ts, ctid)
+        if newest is not None and (rts is None or rts < newest[0]):
+            out.violations.append(Violation(
+                "snapshot-bound",
+                f"snapshot read of {key} at watermark {wm} returned "
+                f"{tid or 'NULL'} but {newest[1]} (ts {newest[0]}) was "
+                f"committed within the bound — a covered version was "
+                f"missed"))
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -180,6 +305,7 @@ def check_events(events: Iterable[Mapping]) -> CheckResult:
     orders_by_uuid: Dict[str, List[dict]] = {}
     finishes_by_uuid: Dict[str, List[dict]] = {}
     span_ids: Dict[str, int] = {}
+    snaps: List[dict] = []
 
     for ev in events:
         out.events += 1
@@ -196,10 +322,14 @@ def check_events(events: Iterable[Mapping]) -> CheckResult:
             sid = ev.get("span")
             if sid is not None:
                 span_ids[sid] = span_ids.get(sid, 0) + 1
+        elif kind == "snap":
+            snaps.append(dict(ev))
 
     _check_read_atomicity(reads_by_txn, out)
     _check_write_ordering(orders_by_uuid, out)
     _check_exactly_once(finishes_by_uuid, out)
+    _check_read_durability(reads_by_txn, orders_by_uuid, out)
+    _check_snapshot_bounds(snaps, orders_by_uuid, out)
     for sid, n in span_ids.items():
         if n > 1:
             out.violations.append(Violation(
@@ -221,21 +351,60 @@ def check_file(path: str) -> CheckResult:
 # seeded violation (negative self-test)
 # ---------------------------------------------------------------------------
 
-def seeded_violation_events() -> List[dict]:
-    """A minimal trace with one deliberate read-atomicity violation: txn B
-    reads y from t1 (which cowrote x and y) but x from the older t0."""
-    t0 = f"{1000:020d}.aaaa"
-    t1 = f"{2000:020d}.bbbb"
-    return [
-        {"seq": 1, "ev": "order", "uuid": "bbbb", "stage": "versions"},
-        {"seq": 2, "ev": "order", "uuid": "bbbb", "stage": "record",
-         "writes": 2},
-        {"seq": 3, "ev": "order", "uuid": "bbbb", "stage": "visible"},
-        {"seq": 4, "ev": "read", "txn": "reader", "key": "x", "tid": t0,
-         "cow": ["x"]},
-        {"seq": 5, "ev": "read", "txn": "reader", "key": "y", "tid": t1,
-         "cow": ["x", "y"]},
-    ]
+SEED_KINDS = ("read-atomicity", "read-durability", "snapshot-bound")
+
+
+def seeded_violation_events(kind: str = "read-atomicity") -> List[dict]:
+    """A minimal trace with exactly one deliberate violation of ``kind``.
+
+    ``read-atomicity`` (the default): txn B reads y from t1 (which cowrote
+    x and y) but x from the older t0.  ``read-durability``: a read resolves
+    to a version whose commit record lands only *after* the read.
+    ``snapshot-bound``: a snapshot read whose watermark covers ts 2000
+    returns the ts-1000 version, missing a covered commit."""
+    if kind == "read-atomicity":
+        t0 = f"{1000:020d}.aaaa"
+        t1 = f"{2000:020d}.bbbb"
+        return [
+            {"seq": 1, "ev": "order", "uuid": "bbbb", "stage": "versions"},
+            {"seq": 2, "ev": "order", "uuid": "bbbb", "stage": "record",
+             "writes": 2},
+            {"seq": 3, "ev": "order", "uuid": "bbbb", "stage": "visible"},
+            {"seq": 4, "ev": "read", "txn": "reader", "key": "x", "tid": t0,
+             "cow": ["x"]},
+            {"seq": 5, "ev": "read", "txn": "reader", "key": "y", "tid": t1,
+             "cow": ["x", "y"]},
+        ]
+    if kind == "read-durability":
+        t = f"{1500:020d}.cccc"
+        return [
+            {"seq": 1, "ev": "order", "uuid": "cccc", "stage": "versions"},
+            # the read lands BEFORE the commit record: a gossip cache entry
+            # served a version that was not yet durable
+            {"seq": 2, "ev": "read", "txn": "reader", "key": "x", "tid": t,
+             "cow": ["x"]},
+            {"seq": 3, "ev": "order", "uuid": "cccc", "stage": "record",
+             "writes": 1},
+            {"seq": 4, "ev": "order", "uuid": "cccc", "stage": "visible"},
+        ]
+    if kind == "snapshot-bound":
+        t0 = f"{1000:020d}.aaaa"
+        t1 = f"{2000:020d}.bbbb"
+        return [
+            {"seq": 1, "ev": "order", "uuid": "aaaa", "stage": "versions"},
+            {"seq": 2, "ev": "order", "uuid": "aaaa", "stage": "record",
+             "writes": 1, "tid": t0, "keys": ["x"]},
+            {"seq": 3, "ev": "order", "uuid": "aaaa", "stage": "visible"},
+            {"seq": 4, "ev": "order", "uuid": "bbbb", "stage": "versions"},
+            {"seq": 5, "ev": "order", "uuid": "bbbb", "stage": "record",
+             "writes": 1, "tid": t1, "keys": ["x"]},
+            {"seq": 6, "ev": "order", "uuid": "bbbb", "stage": "visible"},
+            # the watermark (2500) covers t1 (ts 2000), yet the snapshot
+            # returned the older t0 — a covered version was missed
+            {"seq": 7, "ev": "snap", "key": "x", "tid": t0, "wm": 2500,
+             "lag_ns": 0, "bound_ns": 10_000_000_000},
+        ]
+    raise ValueError(f"unknown seed kind {kind!r}; one of {SEED_KINDS}")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -248,13 +417,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.selftest:
-        res = check_events(seeded_violation_events())
-        detected = any(v.invariant == "read-atomicity"
-                       for v in res.violations)
-        print(res.summary())
-        print("selftest:", "seeded violation detected"
-              if detected else "FAILED to detect seeded violation")
-        return 0 if detected else 1
+        all_detected = True
+        for kind in SEED_KINDS:
+            res = check_events(seeded_violation_events(kind))
+            detected = [v.invariant for v in res.violations] == [kind]
+            all_detected = all_detected and detected
+            print(f"-- seed: {kind}")
+            print(res.summary())
+            print("selftest:", "seeded violation detected"
+                  if detected else "FAILED to detect seeded violation")
+        return 0 if all_detected else 1
 
     if not args.trace:
         ap.error("a trace file is required (or --selftest)")

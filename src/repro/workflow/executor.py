@@ -81,6 +81,13 @@ class WorkflowConfig:
     # workflow/txn.py).  Off by default here: the bare executor is the
     # simple blocking driver; WorkflowPool defaults it on.
     commit_offload: bool = False
+    # honor ``Step.read_only`` declarations: such steps open their
+    # transaction scope on the read-only fast lane (no version writes, no
+    # commit record, no memo) — see core/node.py ``_commit_read_only``.
+    # Disable to force every step through the full write path, e.g. to
+    # measure the lane's benefit or when memoized resume of read-only
+    # steps is worth more than their commit cost.
+    read_only_lane: bool = True
 
 
 @dataclass
@@ -158,16 +165,27 @@ def execute_step(
     *,
     memoizing: bool,
     memo_store: Optional[MemoStore],
+    read_only_lane: bool = True,
 ) -> Any:
     """Run one step body under a session — the unit every workflow driver
     shares.  ``WorkflowExecutor`` invokes it once per platform submission;
     ``WorkflowPool`` folds many of these (across workflows) into a single
     batched invocation.  Handles the begin-site failure point, memo encoding,
-    and the inline-vs-separate memo commit split (see ``txn.py``)."""
-    session.step_begin(step.name, step.reads)
+    and the inline-vs-separate memo commit split (see ``txn.py``).
+
+    Steps declared ``read_only`` (when ``read_only_lane`` is on) skip memo
+    encoding and persistence entirely: a memo's job is to make a *re-driven*
+    step's writes replayable without re-execution, and a read-only step has
+    no writes to replay — re-running its body against committed state is
+    always safe, so the lane trades the memo write for a cheap re-read."""
+    ro = read_only_lane and bool(getattr(step, "read_only", False))
+    session.step_begin(step.name, step.reads, read_only=ro)
     ctx = StepContext(step, session, platform, inputs, args)
     platform.maybe_fail(site=f"step:{step.name}:begin")
     result = step.fn(ctx)
+    if ro:
+        session.step_commit(step.name, None)
+        return result
     payload = encode_memo(result, ctx.writes) if memoizing else None
     inline = bool(getattr(session, "inline_memo", False))
     session.step_commit(step.name, payload if inline else None)
@@ -372,4 +390,5 @@ class WorkflowExecutor:
         return execute_step(
             step, session, self.platform, inputs, args,
             memoizing=memoizing, memo_store=self._memo,
+            read_only_lane=self.config.read_only_lane,
         )

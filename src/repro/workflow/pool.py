@@ -107,6 +107,11 @@ class PoolConfig:
     # the dependent's body start).  Memo saves become fire-and-forget
     # (safe: a lost memo just re-runs its step, recommitting idempotently).
     commit_offload: bool = True
+    # honor ``Step.read_only`` declarations: such steps ride the read-only
+    # fast lane (no version writes, no commit record, no memo — see
+    # workflow/executor.py ``execute_step`` and core/node.py
+    # ``_commit_read_only``)
+    read_only_lane: bool = True
     # scheduling.  batch_max_steps=None (default) sizes batches adaptively
     # from an EWMA of observed step latency vs. invoke overhead; an explicit
     # integer is a static override (the historical knob).
@@ -901,7 +906,14 @@ class WorkflowPool:
         # chain trigger, a crashed consumer's double drive): the rival may
         # commit this step's memo after our attempt's load_all.  Worth a
         # late probe at dispatch; fresh first attempts cannot race this way.
-        probe_memo = self._memoizing and (run.attempt > 1 or run.resume_eligible)
+        # Read-only-lane steps never persist memos, so probing is pointless.
+        probe_memo = (
+            self._memoizing
+            and (run.attempt > 1 or run.resume_eligible)
+            and not (
+                self.config.read_only_lane and getattr(step, "read_only", False)
+            )
+        )
 
         def thunk() -> None:
             # bodies in one batch run sequentially inside invoke_batch, so
@@ -932,6 +944,7 @@ class WorkflowPool:
                     result = execute_step(
                         step, session, self.platform, inputs, run.args,
                         memoizing=self._memoizing, memo_store=self._memo,
+                        read_only_lane=self.config.read_only_lane,
                     )
                 outcome: Tuple[bool, Any] = (True, result)
             except BaseException as exc:  # noqa: BLE001 - reported, not raised

@@ -42,7 +42,10 @@ class Step:
     step's *declared* read set — advisory placement metadata (most-important
     key first) that locality-aware routing (``core/routing.py``) uses to
     schedule the step near cached data; it never constrains what the body
-    may actually read.
+    may actually read.  ``read_only`` *is* a contract: the step declares it
+    will never ``ctx.put`` — its transaction rides the read-only fast lane
+    (no version writes, no commit record, no §3.3.1 probe) and a write
+    attempt raises ``ReadOnlyTransaction``, failing the step attempt.
     """
 
     name: str
@@ -52,6 +55,7 @@ class Step:
     allow_skipped_deps: bool = False
     branch: Optional[int] = None
     reads: Tuple[str, ...] = ()
+    read_only: bool = False
 
 
 class WorkflowSpec:
@@ -79,6 +83,7 @@ class WorkflowSpec:
         when: Optional[Callable[[Dict[str, Any]], bool]] = None,
         allow_skipped_deps: bool = False,
         reads: Sequence[str] = (),
+        read_only: bool = False,
     ) -> str:
         return self.add(
             Step(
@@ -88,6 +93,7 @@ class WorkflowSpec:
                 when=when,
                 allow_skipped_deps=allow_skipped_deps,
                 reads=tuple(reads),
+                read_only=read_only,
             )
         )
 
@@ -100,6 +106,7 @@ class WorkflowSpec:
         deps: Sequence[str] = (),
         when: Optional[Callable[[Dict[str, Any]], bool]] = None,
         reads: Optional[Callable[[int], Sequence[str]]] = None,
+        read_only: bool = False,
     ) -> List[str]:
         """Stamp out ``n`` parallel branches ``prefix[i]`` sharing one body;
         the body distinguishes branches via ``ctx.branch``.  ``reads(i)``
@@ -117,6 +124,7 @@ class WorkflowSpec:
                         when=when,
                         branch=i,
                         reads=tuple(reads(i)) if reads is not None else (),
+                        read_only=read_only,
                     )
                 )
             )
@@ -130,6 +138,7 @@ class WorkflowSpec:
         *,
         allow_skipped_deps: bool = True,
         reads: Sequence[str] = (),
+        read_only: bool = False,
     ) -> str:
         """Aggregation step over parallel branches; by default tolerates
         conditionally-skipped inputs (it sees only the results that exist)."""
@@ -140,6 +149,7 @@ class WorkflowSpec:
                 deps=tuple(deps),
                 allow_skipped_deps=allow_skipped_deps,
                 reads=tuple(reads),
+                read_only=read_only,
             )
         )
 

@@ -280,10 +280,15 @@ class WorkflowSession:
     def put(self, step_name: str, key: str, value: bytes) -> None:
         raise NotImplementedError
 
-    def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
+    def step_begin(self, step_name: str, reads: Sequence[str] = (),
+                   read_only: bool = False) -> None:
         """Called before a step body runs.  ``reads`` is the step's declared
         read set — per-step scopes may use it to place the step's
-        transaction near cached data (``core/routing.py``)."""
+        transaction near cached data (``core/routing.py``).  ``read_only``
+        declares the step will never write: per-step scopes open its
+        transaction on the read-only fast lane (no version writes, commit
+        record or §3.3.1 probe); scopes whose transactions span steps
+        ignore it (the enclosing transaction may still write)."""
 
     def step_commit(self, step_name: str, memo_payload: Optional[bytes]) -> None:
         """Called after a step body returns; per-step scopes commit here."""
@@ -462,7 +467,8 @@ class StepTxnSession(WorkflowSession):
             if exc is not None:
                 raise exc
 
-    def step_begin(self, step_name: str, reads: Sequence[str] = ()) -> None:
+    def step_begin(self, step_name: str, reads: Sequence[str] = (),
+                   read_only: bool = False) -> None:
         self._drain_commits()
         if self.place_steps:
             node = self.cluster.pick_node(
@@ -480,7 +486,8 @@ class StepTxnSession(WorkflowSession):
         else:
             node = self.node
         txid = node.start_transaction(
-            step_txn_uuid(self.uuid, step_name), fresh=self.fresh
+            step_txn_uuid(self.uuid, step_name), fresh=self.fresh,
+            read_only=read_only,
         )
         with self._lock:
             self._txids[step_name] = txid

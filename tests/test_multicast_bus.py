@@ -1,0 +1,304 @@
+"""Fault-injectable multicast fabric (core/multicast.py).
+
+Per-failure-mode unit tests for the seeded ``BusFaults`` knobs, the named
+``multicast:send`` fault site, membership hygiene (replacement nodes must
+not inherit a predecessor's backlog; killed nodes must not leave orphaned
+inboxes), and the gossip-plane envelope: eager commit push, per-peer
+horizon tracking along contiguous sequence prefixes, and gap repair."""
+
+import pytest
+
+from repro.core import (
+    AftCluster,
+    AftNodeConfig,
+    BusFaults,
+    ClusterConfig,
+    MulticastBus,
+    SnapshotUnavailable,
+    TransactionRecord,
+    TxnId,
+)
+from repro.faas.platform import FaasConfig, FunctionFailure, LambdaPlatform
+from repro.storage import MemoryStorage
+
+
+def make_cluster(n=2, **node_kw):
+    cfg = ClusterConfig(
+        num_nodes=n,
+        node=AftNodeConfig(**node_kw),
+        start_background_threads=False,
+    )
+    return AftCluster(MemoryStorage(), cfg)
+
+
+def put_commit(node, items, uuid=None):
+    tx = node.start_transaction(uuid)
+    for k, v in items.items():
+        node.put(tx, k, v)
+    return node.commit_transaction(tx)
+
+
+def rec(ts, uuid, *keys):
+    return TransactionRecord(tid=TxnId(ts, uuid), write_set=tuple(keys))
+
+
+# ----------------------------------------------------------- fault knobs
+def test_drop_rate_loses_messages():
+    bus = MulticastBus(BusFaults(drop_rate=1.0))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])
+    assert bus.inbox_depth("b") == 0
+    assert bus.messages_dropped == 1
+    assert bus.drain_messages("b") == []
+
+
+def test_delay_holds_messages_for_n_drains():
+    bus = MulticastBus(BusFaults(delay_rate=1.0, delay_rounds=2))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])
+    assert bus.messages_delayed == 1
+    assert bus.inbox_depth("b") == 1  # held, but not lost
+    assert bus.drain_messages("b") == []          # round 1: still held
+    delivered = bus.drain_messages("b")           # round 2: released
+    assert [m.records[0].tid.uuid for m in delivered] == ["u"]
+
+
+def test_reorder_front_inserts():
+    bus = MulticastBus(BusFaults(reorder_rate=1.0))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u1", "k")], seq=1)
+    bus.send("a", "b", [rec(2, "u2", "k")], seq=2)
+    seqs = [m.seq for m in bus.drain_messages("b")]
+    assert seqs == [2, 1]  # the later send jumped the queue
+    assert bus.messages_reordered >= 1
+
+
+def test_duplicate_delivers_twice():
+    bus = MulticastBus(BusFaults(duplicate_rate=1.0))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])
+    delivered = bus.drain_messages("b")
+    assert len(delivered) == 2
+    assert bus.messages_duplicated == 1
+
+
+def test_drop_wins_over_other_knobs():
+    bus = MulticastBus(BusFaults(drop_rate=1.0, delay_rate=1.0,
+                                 duplicate_rate=1.0, reorder_rate=1.0))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])
+    assert bus.inbox_depth("b") == 0
+    assert bus.messages_delayed == 0
+
+
+def test_set_faults_none_heals_the_bus():
+    bus = MulticastBus(BusFaults(drop_rate=1.0))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u1", "k")])
+    bus.set_faults(None)
+    bus.send("a", "b", [rec(2, "u2", "k")])
+    assert [m.records[0].tid.uuid for m in bus.drain_messages("b")] == ["u2"]
+
+
+def test_faults_are_seeded_deterministic():
+    def schedule(seed):
+        bus = MulticastBus(BusFaults(drop_rate=0.5, seed=seed))
+        bus.register("a")
+        bus.register("b")
+        for i in range(40):
+            bus.send("a", "b", [rec(i + 1, f"u{i}", "k")])
+        return [m.records[0].tid.uuid for m in bus.drain_messages("b")]
+
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)  # and the knob actually bites
+
+
+# --------------------------------------------------- named fault site
+def test_multicast_send_fault_site_raises_into_sender():
+    platform = LambdaPlatform(FaasConfig(
+        failure_rate=1.0, failure_sites=("multicast:send",)))
+    bus = MulticastBus()
+    bus.fault_hook = platform.maybe_fail
+    bus.register("a")
+    bus.register("b")
+    with pytest.raises(FunctionFailure):
+        bus.send("a", "b", [rec(1, "u", "k")])
+    assert bus.inbox_depth("b") == 0
+    assert platform.failures_injected == 1
+
+
+def test_fault_site_scoping_spares_other_sites():
+    platform = LambdaPlatform(FaasConfig(
+        failure_rate=1.0, failure_sites=("step:shard",)))
+    bus = MulticastBus()
+    bus.fault_hook = platform.maybe_fail
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])  # site mismatch: no injection
+    assert bus.inbox_depth("b") == 1
+
+
+def test_agent_counts_send_failures_and_fault_manager_heals():
+    """An agent whose broadcast dies mid-send must not raise into the
+    committing client; the §4.2 anti-entropy scan recovers the commit."""
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    platform = LambdaPlatform(FaasConfig(
+        failure_rate=1.0, failure_sites=("multicast:send",)))
+    cluster.bus.fault_hook = platform.maybe_fail
+    put_commit(n0, {"k": b"v"})  # eager push dies at the fault site
+    agent = cluster.agents[n0.node_id]
+    assert agent.send_failures >= 1
+    cluster.bus.fault_hook = None
+    cluster.fault_manager.step()  # finds the unannounced commit in storage
+    cluster.step_all()
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v"
+
+
+# ------------------------------------------------------------ membership
+def test_register_replaces_and_reports_discarded_backlog():
+    bus = MulticastBus()
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u1", "k")])
+    bus.send("a", "b", [rec(2, "u2", "k")])
+    assert bus.register("b") == 2  # replacement starts with an empty inbox
+    assert bus.inbox_depth("b") == 0
+
+
+def test_register_discards_delayed_backlog_too():
+    bus = MulticastBus(BusFaults(delay_rate=1.0, delay_rounds=3))
+    bus.register("a")
+    bus.register("b")
+    bus.send("a", "b", [rec(1, "u", "k")])
+    assert bus.register("b") == 1
+    for _ in range(4):
+        assert bus.drain_messages("b") == []  # the held message is gone
+
+
+def test_unregister_removes_member():
+    bus = MulticastBus()
+    bus.register("a")
+    bus.unregister("a")
+    assert "a" not in bus.members()
+    assert bus.inbox_depth("a") == 0
+
+
+def test_send_to_unknown_member_is_a_noop():
+    bus = MulticastBus()
+    bus.register("a")
+    bus.send("a", "ghost", [rec(1, "u", "k")])
+    assert bus.inbox_depth("ghost") == 0
+
+
+def test_kill_mid_stream_leaves_no_orphaned_inbox():
+    """Regression: a killed node used to keep its bus inbox registered, so
+    peers' eager pushes accumulated in a queue nobody would ever drain."""
+    cluster = make_cluster(3)
+    n0 = cluster.nodes[0]
+    dead = cluster.kill_node(1)
+    assert dead.node_id not in cluster.bus.members()
+    # commits after the kill must not pile up for the corpse
+    for i in range(5):
+        put_commit(n0, {f"k{i}": b"v"})
+    cluster.step_all()
+    assert cluster.bus.inbox_depth(dead.node_id) == 0
+
+
+def test_replacement_node_does_not_inherit_backlog():
+    cluster = make_cluster(2)
+    n0 = cluster.nodes[0]
+    put_commit(n0, {"k": b"v"})
+    cluster.kill_node(1)
+    cluster.fault_manager.check_heartbeats()  # spawns the replacement
+    live = cluster.live_nodes()
+    assert len(live) == 2
+    fresh = [n for n in live if n is not n0][0]
+    # the replacement bootstrapped from durable storage, not the bus
+    tx = fresh.start_transaction()
+    assert fresh.get(tx, "k") == b"v"
+    cluster.step_all()  # and normal gossip keeps flowing to it
+    put_commit(n0, {"k2": b"v2"})
+    cluster.step_all()
+    tx2 = fresh.start_transaction()
+    assert fresh.get(tx2, "k2") == b"v2"
+
+
+# ------------------------------------------- gossip envelope & horizons
+def test_eager_push_delivers_commit_metadata_at_commit_time():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    tid = put_commit(n0, {"k": b"v"})
+    assert cluster.agents[n0.node_id].eager_pushes == 1
+    # the record is already on the wire: draining n1's inbox alone (no n0
+    # step) folds it into n1's commit-set cache
+    cluster.agents[n1.node_id].step()
+    assert n1.cache.get(tid) is not None
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v"
+
+
+def test_peer_horizons_advance_and_cover_commits():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    tid = put_commit(n0, {"k": b"v"})
+    cluster.step_all()
+    a1 = cluster.agents[n1.node_id]
+    assert a1.peer_horizons.get(n0.node_id, -1) >= tid.timestamp
+    assert n1.read_watermark_ns() >= tid.timestamp
+
+
+def test_unheard_peer_floors_the_watermark():
+    cluster = make_cluster(2)
+    n1 = cluster.nodes[1]
+    # no round has run: the peer's horizon is unknown → floor at -1
+    assert n1.read_watermark_ns() == -1
+    with pytest.raises(SnapshotUnavailable):
+        n1.snapshot_read("k", max_staleness_s=1.0)
+
+
+def test_dropped_message_stalls_horizon_until_gap_repair():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    cluster.step_all()  # establish seq baselines both ways
+    a1 = cluster.agents[n1.node_id]
+    baseline = a1.peer_horizons[n0.node_id]
+
+    # lose one commit announcement: the receiver sees a seq gap
+    cluster.bus.set_faults(BusFaults(drop_rate=1.0))
+    tid = put_commit(n0, {"k": b"v"})
+    cluster.bus.set_faults(None)
+    cluster.step_all()
+    # the horizon may advance only below the lost commit, never past it
+    assert a1.peer_horizons[n0.node_id] < tid.timestamp
+    assert a1.peer_horizons[n0.node_id] >= baseline
+
+    # after gap_repair_rounds stalled rounds the agent re-bootstraps and
+    # jumps the gap, adopting the newest pending horizon
+    for _ in range(a1.gap_repair_rounds + 1):
+        cluster.step_all()
+    assert a1.gap_repairs >= 1
+    assert a1.peer_horizons[n0.node_id] >= tid.timestamp
+    # and the re-scan observed the commit the drop had hidden
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v"
+
+
+def test_duplicate_envelopes_do_not_regress_horizons():
+    cluster = make_cluster(2)
+    cluster.bus.set_faults(BusFaults(duplicate_rate=1.0))
+    n0, n1 = cluster.nodes
+    tid = put_commit(n0, {"k": b"v"})
+    cluster.step_all()
+    cluster.step_all()
+    a1 = cluster.agents[n1.node_id]
+    assert a1.peer_horizons[n0.node_id] >= tid.timestamp
+    tx = n1.start_transaction()
+    assert n1.get(tx, "k") == b"v"

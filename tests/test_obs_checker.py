@@ -191,6 +191,121 @@ def test_duplicate_span_ids_are_flagged():
 
 
 # ---------------------------------------------------------------------------
+# read durability (gossip-fed fast path)
+# ---------------------------------------------------------------------------
+
+def test_read_durability_seed_is_flagged():
+    res = check_events(seeded_violation_events("read-durability"))
+    assert [v.invariant for v in res.violations] == ["read-durability"]
+    assert "before its commit record landed" in res.violations[0].detail
+
+
+def test_read_after_record_is_durable():
+    """The same shape with the read sequenced AFTER the record is clean."""
+    t = tid(1500, "cccc")
+    events = [
+        {"seq": 1, "ev": "order", "uuid": "cccc", "stage": "versions"},
+        {"seq": 2, "ev": "order", "uuid": "cccc", "stage": "record",
+         "writes": 1},
+        {"seq": 3, "ev": "order", "uuid": "cccc", "stage": "visible"},
+        {"seq": 4, "ev": "read", "txn": "reader", "key": "x", "tid": t,
+         "cow": ["x"]},
+    ]
+    assert check_events(events).ok
+
+
+def test_read_durability_skips_unobserved_commits():
+    """A read resolving to a txn with no order events in the trace (it
+    committed before tracing started) is skipped, not flagged."""
+    events = [
+        {"seq": 1, "ev": "read", "txn": "reader", "key": "x",
+         "tid": tid(1500, "pre-trace"), "cow": ["x"]},
+    ]
+    assert check_events(events).ok
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness snapshot reads
+# ---------------------------------------------------------------------------
+
+def snap_commit(uuid: str, ts: int, seq0: int, keys):
+    """A §3.3-ordered commit whose record carries snapshot metadata."""
+    return [
+        {"seq": seq0, "ev": "order", "uuid": uuid, "stage": "versions"},
+        {"seq": seq0 + 1, "ev": "order", "uuid": uuid, "stage": "record",
+         "writes": len(keys), "tid": tid(ts, uuid), "keys": list(keys)},
+        {"seq": seq0 + 2, "ev": "order", "uuid": uuid, "stage": "visible"},
+    ]
+
+
+def test_clean_snapshot_read_scores_clean():
+    """Returning the newest version at/below the watermark, within bound."""
+    events = snap_commit("aaaa", 1000, 1, ["x"]) + snap_commit(
+        "bbbb", 2000, 4, ["x"]) + [
+        {"seq": 7, "ev": "snap", "key": "x", "tid": tid(2000, "bbbb"),
+         "wm": 2500, "lag_ns": 10, "bound_ns": 1000},
+    ]
+    res = check_events(events)
+    assert res.ok, res.summary()
+    assert res.snaps_checked == 1
+
+
+def test_snapshot_missed_covered_version_is_flagged():
+    res = check_events(seeded_violation_events("snapshot-bound"))
+    assert [v.invariant for v in res.violations] == ["snapshot-bound"]
+    assert "covered version was missed" in res.violations[0].detail
+
+
+def test_snapshot_null_return_misses_covered_version():
+    events = snap_commit("aaaa", 1000, 1, ["x"]) + [
+        {"seq": 4, "ev": "snap", "key": "x", "tid": None,
+         "wm": 1500, "lag_ns": 0, "bound_ns": 1000},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["snapshot-bound"]
+
+
+def test_snapshot_lag_beyond_bound_is_flagged():
+    events = [
+        {"seq": 1, "ev": "snap", "key": "x", "tid": None,
+         "wm": 100, "lag_ns": 5000, "bound_ns": 1000},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["snapshot-bound"]
+    assert "beyond its declared staleness bound" in res.violations[0].detail
+
+
+def test_snapshot_version_above_watermark_is_flagged():
+    events = snap_commit("bbbb", 2000, 1, ["x"]) + [
+        {"seq": 4, "ev": "snap", "key": "x", "tid": tid(2000, "bbbb"),
+         "wm": 1500, "lag_ns": 0, "bound_ns": 1000},
+    ]
+    res = check_events(events)
+    assert [v.invariant for v in res.violations] == ["snapshot-bound"]
+    assert "above its watermark" in res.violations[0].detail
+
+
+def test_snapshot_version_after_read_not_required():
+    """A version committed ABOVE the watermark (or recorded after the
+    read) cannot be demanded of the snapshot."""
+    events = snap_commit("aaaa", 1000, 1, ["x"]) + [
+        {"seq": 4, "ev": "snap", "key": "x", "tid": tid(1000, "aaaa"),
+         "wm": 1500, "lag_ns": 0, "bound_ns": 1000},
+    ] + snap_commit("bbbb", 1200, 5, ["x"])  # record AFTER the snap read
+    assert check_events(events).ok
+
+
+def test_old_traces_without_record_metadata_skip_snapshot_check():
+    """Records lacking tid/keys (pre-fast-path traces) cannot feed the
+    missed-version check — the snap event alone stays clean."""
+    events = clean_commit("aaaa", 1) + [
+        {"seq": 4, "ev": "snap", "key": "x", "tid": None,
+         "wm": 99999, "lag_ns": 0, "bound_ns": 1000},
+    ]
+    assert check_events(events).ok
+
+
+# ---------------------------------------------------------------------------
 # file + CLI round trip
 # ---------------------------------------------------------------------------
 
@@ -215,6 +330,19 @@ def test_cli_exit_codes(tmp_path, capsys):
     out = capsys.readouterr().out
     assert "seeded violation detected" in out
     assert "violations:            1" in out
+
+
+def test_cli_selftest_covers_all_seed_kinds(capsys):
+    assert main(["--selftest"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("seeded violation detected") == 3
+    for kind in ("read-atomicity", "read-durability", "snapshot-bound"):
+        assert f"-- seed: {kind}" in out
+
+
+def test_unknown_seed_kind_raises():
+    with pytest.raises(ValueError):
+        seeded_violation_events("no-such-invariant")
 
 
 def test_cli_requires_a_trace_or_selftest():

@@ -1,0 +1,186 @@
+"""Property test (hypothesis): the gossip-fed read fast path is safe.
+
+Under ARBITRARY multicast fault schedules — seeded drop / delay / reorder /
+duplicate — interleaved with concurrent writers, agent rounds, and reads:
+
+* **read-atomic audits report zero anomalies**: every pair-write commits
+  both keys of a cowritten pair with identical payloads, so a reader that
+  observes two different payloads inside one (read-only) transaction has
+  witnessed a fractured read (Definition 1, §3.4) — whatever the bus did;
+* **snapshot reads never lie**: a served bounded-staleness read returns a
+  version at or below its watermark, and never *misses* a committed
+  version at or below the watermark (the watermark is a completeness
+  promise — losing an announcement must stall it, fail-safe, not let a
+  newer covered commit go unseen).
+
+The oracle is the writers' own synchronous commit log: an entry is added
+only after ``commit_transaction`` returned, so every oracle entry with
+timestamp ≤ a later snapshot's watermark was durable before that read.
+"""
+
+import pytest
+
+from repro.core import (
+    AftCluster,
+    AftNodeConfig,
+    BusFaults,
+    ClusterConfig,
+    SnapshotUnavailable,
+)
+from repro.storage import MemoryStorage
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+
+PAIRS = [("a1", "a2"), ("b1", "b2"), ("c1", "c2")]
+
+
+def make_cluster(n=3):
+    cfg = ClusterConfig(
+        num_nodes=n,
+        node=AftNodeConfig(),
+        start_background_threads=False,
+    )
+    return AftCluster(MemoryStorage(), cfg)
+
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("write"), st.integers(0, 1), st.integers(0, 2)),
+        st.tuples(st.just("step")),
+        st.tuples(st.just("read"), st.integers(0, 2)),
+        st.tuples(st.just("snap"), st.integers(0, 5)),
+    ),
+    min_size=6,
+    max_size=40,
+)
+
+
+@settings(
+    max_examples=30, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    ops=ops_strategy,
+    drop=st.sampled_from([0.0, 0.15, 0.5]),
+    delay=st.sampled_from([0.0, 0.3]),
+    delay_rounds=st.integers(min_value=1, max_value=3),
+    reorder=st.sampled_from([0.0, 0.3]),
+    duplicate=st.sampled_from([0.0, 0.3]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_read_path_safe_under_bus_faults(
+    ops, drop, delay, delay_rounds, reorder, duplicate, seed
+):
+    cluster = make_cluster(3)
+    cluster.bus.set_faults(BusFaults(
+        drop_rate=drop, delay_rate=delay, delay_rounds=delay_rounds,
+        reorder_rate=reorder, duplicate_rate=duplicate, seed=seed,
+    ))
+    writers = [cluster.nodes[0], cluster.nodes[1]]
+    reader = cluster.nodes[2]
+    # oracle: key → [(commit timestamp, payload)], appended only after the
+    # synchronous commit returned (so entries are durably committed)
+    oracle = {k: [] for pair in PAIRS for k in pair}
+    counter = 0
+    anomalies = []
+
+    for op in ops:
+        if op[0] == "write":
+            _, w, p = op
+            counter += 1
+            payload = f"{w}:{counter}".encode()
+            node = writers[w]
+            tx = node.start_transaction()
+            for key in PAIRS[p]:
+                node.put(tx, key, payload)
+            tid = node.commit_transaction(tx)
+            for key in PAIRS[p]:
+                oracle[key].append((tid.timestamp, payload))
+        elif op[0] == "step":
+            cluster.step_all()
+        elif op[0] == "read":
+            _, p = op
+            k1, k2 = PAIRS[p]
+            tx = reader.start_transaction(read_only=True)
+            v1 = reader.get(tx, k1)
+            v2 = reader.get(tx, k2)
+            reader.commit_transaction(tx)
+            # both keys of a pair are only ever written together with
+            # identical payloads: two different non-NULL payloads is a
+            # fractured read (a NULL beside a value mirrors Algorithm 1's
+            # dynamic read sets — stale-but-atomic, not a fracture)
+            if v1 is not None and v2 is not None and v1 != v2:
+                anomalies.append((k1, v1, k2, v2))
+        elif op[0] == "snap":
+            _, i = op
+            key = [k for pair in PAIRS for k in pair][i]
+            try:
+                snap = reader.snapshot_read(key, max_staleness_s=3600.0)
+            except SnapshotUnavailable:
+                continue  # fail-safe degradation is always legal
+            wm = snap.watermark_ns
+            got_ts = snap.tid.timestamp if snap.tid is not None else -1
+            # (a) never serve a version from beyond the watermark
+            assert got_ts <= wm, (key, got_ts, wm)
+            # (b) never miss a committed version covered by the watermark
+            missed = [(ts, v) for ts, v in oracle[key] if got_ts < ts <= wm]
+            assert not missed, (key, got_ts, wm, missed)
+
+    assert anomalies == [], anomalies
+    # heal the bus and let anti-entropy converge: the reader must end up
+    # seeing every pair at its newest committed payload
+    cluster.bus.set_faults(None)
+    agent = cluster.agents[reader.node_id]
+    for _ in range(agent.gap_repair_rounds + 2):
+        cluster.step_all()
+    for pair in PAIRS:
+        k1, k2 = pair
+        if not oracle[k1]:
+            continue
+        tx = reader.start_transaction(read_only=True)
+        v1 = reader.get(tx, k1)
+        v2 = reader.get(tx, k2)
+        reader.commit_transaction(tx)
+        newest = max(oracle[k1])[1]
+        assert v1 == newest and v2 == newest, (pair, v1, v2, newest)
+
+
+@settings(
+    max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    writes=st.integers(min_value=1, max_value=8),
+    drop_first=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_snapshot_watermark_stalls_never_lies(writes, drop_first, seed):
+    """Losing announcements may only make snapshots UNAVAILABLE or more
+    stale-but-honest — never wrong.  With the bus silenced entirely the
+    reader's watermark cannot cover any of the lost commits."""
+    cluster = make_cluster(2)
+    n0, reader = cluster.nodes
+    cluster.step_all()  # establish contact so the watermark can advance
+    if drop_first:
+        cluster.bus.set_faults(BusFaults(drop_rate=1.0, seed=seed))
+    tids = []
+    for i in range(writes):
+        tx = n0.start_transaction()
+        n0.put(tx, "k", f"v{i}".encode())
+        tids.append(n0.commit_transaction(tx))
+    cluster.step_all()
+    try:
+        snap = reader.snapshot_read("k", max_staleness_s=3600.0)
+    except SnapshotUnavailable:
+        return
+    wm = snap.watermark_ns
+    if drop_first:
+        # every announcement since contact was dropped: the watermark must
+        # sit below ALL the unheard commits (fail-safe stall)
+        assert wm < tids[0].timestamp
+        assert snap.tid is None or snap.tid.timestamp <= wm
+    else:
+        assert snap.tid == tids[-1]
+        assert snap.value == f"v{writes - 1}".encode()

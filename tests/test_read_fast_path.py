@@ -1,0 +1,290 @@
+"""Read fast path: the read-only transaction lane and bounded-staleness
+snapshot reads (core/node.py), plus their workflow-layer plumbing
+(Step.read_only through executor and pool)."""
+
+import pytest
+
+from repro.core import (
+    AftCluster,
+    AftNode,
+    AftNodeConfig,
+    ClusterConfig,
+    ReadOnlyTransaction,
+    SnapshotUnavailable,
+)
+from repro.core.records import COMMIT_PREFIX
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.storage import MemoryStorage
+from repro.workflow import (
+    TxnScope,
+    WorkflowConfig,
+    WorkflowExecutor,
+    WorkflowSpec,
+)
+
+
+@pytest.fixture
+def node():
+    return AftNode(MemoryStorage(), AftNodeConfig(node_id="n0"))
+
+
+def make_cluster(n=2, **node_kw):
+    cfg = ClusterConfig(
+        num_nodes=n,
+        node=AftNodeConfig(**node_kw),
+        start_background_threads=False,
+    )
+    return AftCluster(MemoryStorage(), cfg)
+
+
+def put_commit(node, items, uuid=None):
+    tx = node.start_transaction(uuid)
+    for k, v in items.items():
+        node.put(tx, k, v)
+    return node.commit_transaction(tx)
+
+
+# ------------------------------------------------------- read-only lane
+def test_read_only_txn_reads_and_commits(node):
+    put_commit(node, {"k": b"v"})
+    tx = node.start_transaction(read_only=True)
+    assert node.get(tx, "k") == b"v"
+    tid = node.commit_transaction(tx)
+    assert tid is not None
+    # idempotent re-commit of the same scope returns the same tid
+    assert node.commit_transaction(tx) == tid
+
+
+def test_read_only_txn_rejects_writes(node):
+    tx = node.start_transaction(read_only=True)
+    with pytest.raises(ReadOnlyTransaction):
+        node.put(tx, "k", b"v")
+    # the scope is still usable for reads and commits after the rejection
+    assert node.get(tx, "k") is None
+    node.commit_transaction(tx)
+
+
+def test_read_only_commit_writes_nothing_durable():
+    storage = MemoryStorage()
+    node = AftNode(storage, AftNodeConfig(node_id="n0"))
+    put_commit(node, {"k": b"v"})
+    before = sorted(storage.list_keys(""))
+    tx = node.start_transaction(read_only=True)
+    node.get(tx, "k")
+    node.commit_transaction(tx)
+    assert sorted(storage.list_keys("")) == before  # no record, no u/ index
+
+
+def test_read_only_commit_does_not_poison_retry_probe(node):
+    """A read-only commit must NOT enter the §3.3.1 committed-uuid set: a
+    later non-read-only retry of the same uuid would find the probe
+    satisfied and skip its writes."""
+    tx = node.start_transaction("wf-uuid", read_only=True)
+    node.commit_transaction(tx)
+    assert not list(node.storage.list_keys(COMMIT_PREFIX))
+    # the same uuid re-driven as a writing transaction commits for real
+    tx2 = node.start_transaction("wf-uuid")
+    node.put(tx2, "k", b"v")
+    node.commit_transaction(tx2)
+    tx3 = node.start_transaction()
+    assert node.get(tx3, "k") == b"v"
+
+
+def test_read_only_async_commit_delegates(node):
+    put_commit(node, {"k": b"v"})
+    tx = node.start_transaction(read_only=True)
+    assert node.get(tx, "k") == b"v"
+    fut = node.commit_transaction_async(tx)
+    tid = fut.result()
+    assert tid is not None
+    assert node.commit_transaction(tx) == tid
+
+
+def test_read_only_through_client():
+    cluster = make_cluster(2)
+    from repro.core import AftClient
+
+    client = AftClient(cluster)
+    n0 = cluster.nodes[0]
+    put_commit(n0, {"k": b"v"})
+    cluster.step_all()
+    tx = client.start_transaction(read_only=True)
+    with pytest.raises(ReadOnlyTransaction):
+        client.put(tx, "k", b"x")
+    client.commit_transaction(tx)
+
+
+# ------------------------------------------------------- snapshot reads
+def test_snapshot_read_single_node_serves_latest(node):
+    tid = put_commit(node, {"k": b"v"})
+    snap = node.snapshot_read("k", max_staleness_s=5.0)
+    assert snap.value == b"v"
+    assert snap.tid == tid
+    assert snap.watermark_ns >= tid.timestamp
+    assert node.stats["snapshot_reads"] == 1
+
+
+def test_snapshot_read_missing_key_is_null(node):
+    snap = node.snapshot_read("ghost", max_staleness_s=5.0)
+    assert snap.value is None and snap.tid is None
+
+
+def test_snapshot_read_ignores_versions_above_watermark(node):
+    """A version committed after the watermark was taken is invisible to
+    the snapshot — pin the watermark via the provider hook."""
+    t1 = put_commit(node, {"k": b"v1"})
+    wm = node.read_watermark_ns()
+    node.set_watermark_provider(lambda: wm)
+    put_commit(node, {"k": b"v2"})  # newer than the pinned watermark
+    snap = node.snapshot_read("k", max_staleness_s=3600.0)
+    assert snap.tid == t1
+    assert snap.value == b"v1"
+
+
+def test_snapshot_unavailable_when_lag_exceeds_bound(node):
+    node.set_watermark_provider(lambda: 0)  # hopelessly stale floor
+    put_commit(node, {"k": b"v"})
+    with pytest.raises(SnapshotUnavailable):
+        node.snapshot_read("k", max_staleness_s=0.001)
+    assert node.stats["snapshot_unavailable"] == 1
+
+
+def test_snapshot_read_cluster_waits_for_gossip():
+    cluster = make_cluster(2)
+    n0, n1 = cluster.nodes
+    tid = put_commit(n0, {"k": b"v"})
+    # before any gossip round n1's watermark floors at -1: fail-safe
+    with pytest.raises(SnapshotUnavailable):
+        n1.snapshot_read("k", max_staleness_s=1.0)
+    cluster.step_all()
+    snap = n1.snapshot_read("k", max_staleness_s=3600.0)
+    assert snap.value == b"v"
+    assert snap.tid == tid
+    assert snap.lag_ns >= 0
+
+
+def test_phase1_confirmation_tombstones_unknown_records(node):
+    """Global GC phase 1 on a node that never learned the commit must still
+    tombstone the write-set keys: confirming licenses storage erasure, after
+    which the snapshot lane can no longer prove completeness below any
+    watermark covering the erased version."""
+    from repro.core.records import TransactionRecord
+    from repro.core.ids import TxnId
+
+    ghost = TransactionRecord(tid=TxnId(1234, "never-seen"),
+                              write_set=("p", "q"))
+    confirmed = node.confirm_locally_deleted([ghost])
+    assert confirmed == [ghost.tid]
+    assert node.cache.pruned_max_ts("p") == 1234
+    assert node.cache.pruned_max_ts("q") == 1234
+    assert node.cache.get(ghost.tid) is None  # tombstone only, not indexed
+
+
+def test_snapshot_fails_safe_when_global_gc_erased_unlearned_version():
+    """A dropped announcement + immediate supersedence + global GC: the
+    reader never learns the old version, storage forgets it, yet the
+    reader's watermark comes to cover its timestamp.  The snapshot lane
+    must refuse to serve (it would otherwise return NULL/stale and silently
+    miss a covered commit) — and must recover once the watermark passes the
+    superseding version."""
+    cluster = make_cluster(2)
+    n0, reader = cluster.nodes
+    cluster.step_all()  # contact + seq baseline
+
+    from repro.core import BusFaults
+
+    cluster.bus.set_faults(BusFaults(drop_rate=1.0))
+    t_old = put_commit(n0, {"a1": b"old", "a2": b"old"})  # announcement lost
+    cluster.bus.set_faults(None)
+    t_new = put_commit(n0, {"a1": b"new", "a2": b"new"})  # supersedes t_old
+
+    # global GC erases the superseded commit before the reader's gap repair
+    # can rescan storage; phase 1 tombstones it on the reader
+    fm = cluster.fault_manager
+    fm.scan_commit_set()
+    assert fm.gc_round() == 1
+    assert reader.cache.pruned_max_ts("a2") == t_old.timestamp
+
+    # let gap repair learn the superseding version, then pin the peer floor
+    # inside [t_old, t_new): the watermark covers the erased version but not
+    # its successor — exactly the covered-but-unservable window
+    agent = cluster.agents[reader.node_id]
+    for _ in range(agent.gap_repair_rounds + 1):
+        cluster.step_all()
+    assert reader.cache.latest_version_of("a2") == t_new
+    live_provider = reader._watermark_provider
+    reader.set_watermark_provider(lambda: t_new.timestamp - 1)
+    with pytest.raises(SnapshotUnavailable):
+        reader.snapshot_read("a2", max_staleness_s=3600.0)
+
+    # once the watermark covers the superseding version the lane self-heals
+    reader.set_watermark_provider(live_provider)
+    assert reader.read_watermark_ns() >= t_new.timestamp
+    snap = reader.snapshot_read("a2", max_staleness_s=3600.0)
+    assert snap.value == b"new"
+    assert snap.tid == t_new
+
+
+def test_client_snapshot_read_routes():
+    cluster = make_cluster(2)
+    from repro.core import AftClient
+
+    client = AftClient(cluster)
+    put_commit(cluster.nodes[0], {"k": b"v"})
+    cluster.step_all()
+    snap = client.snapshot_read("k", max_staleness_s=3600.0)
+    assert snap.value == b"v"
+
+
+# --------------------------------------------- workflow-layer plumbing
+def run_wf(spec, *, config):
+    platform = LambdaPlatform(FaasConfig(warm_latency_ms=0.0))
+    cluster = make_cluster(1)
+    ex = WorkflowExecutor(platform, cluster=cluster, config=config)
+    return ex, ex.run(spec)
+
+
+def ro_spec(body=None):
+    spec = WorkflowSpec("ro")
+    spec.step("write", lambda ctx: ctx.put("k", b"v") or "w")
+    spec.step(
+        "read",
+        body or (lambda ctx: (ctx.get("k") or b"").decode()),
+        deps=("write",),
+        reads=("k",),
+        read_only=True,
+    )
+    spec.validate()
+    return spec
+
+
+def test_read_only_step_runs_on_fast_lane():
+    cfg = WorkflowConfig(scope=TxnScope.STEP, memoize=True)
+    ex, res = run_wf(ro_spec(), config=cfg)
+    assert res.results["read"] == "v"
+    node = ex.cluster.nodes[0]
+    # exactly two commit records would mean the read step wrote one; the
+    # fast lane leaves only the write step's record (+ its memo commit)
+    records = list(node.storage.list_keys(COMMIT_PREFIX))
+    uuids = {k for k in records if "read" in k}
+    assert not uuids  # no commit record for the read-only step
+
+
+def test_read_only_step_write_attempt_fails_step():
+    cfg = WorkflowConfig(scope=TxnScope.STEP, max_attempts=1)
+    spec = ro_spec(body=lambda ctx: ctx.put("x", b"boom"))
+    platform = LambdaPlatform(FaasConfig(warm_latency_ms=0.0))
+    cluster = make_cluster(1)
+    ex = WorkflowExecutor(platform, cluster=cluster, config=cfg)
+    with pytest.raises(Exception) as ei:
+        ex.run(spec)
+    step_failure = ei.value.__cause__
+    assert isinstance(step_failure.cause, ReadOnlyTransaction)
+
+
+def test_read_only_lane_can_be_disabled():
+    cfg = WorkflowConfig(scope=TxnScope.STEP, read_only_lane=False)
+    spec = ro_spec(body=lambda ctx: ctx.put("x", b"ok") or "wrote")
+    ex, res = run_wf(spec, config=cfg)
+    # with the lane off, read_only is advisory: the write goes through
+    assert res.results["read"] == "wrote"
