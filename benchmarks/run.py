@@ -33,6 +33,7 @@ MODULES = {
     "figr": "benchmarks.fig_routing",
     "figc": "benchmarks.fig_chain",
     "figa": "benchmarks.fig_async",
+    "figs": "benchmarks.fig_serve",   # needs the [jax] extra
     "ckpt": "benchmarks.ckpt_bench",
 }
 

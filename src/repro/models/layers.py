@@ -131,26 +131,36 @@ def _attend_chunk(
     q: jax.Array,          # (B, Cq, KV, G, hd) one query chunk, grouped
     k: jax.Array,          # (B, S, KV, hd)
     v: jax.Array,          # (B, S, KV, hd)
-    q_start: jax.Array,    # scalar: global position of the chunk's first query
+    q_start: jax.Array,    # global position of the chunk's first query:
+                           # scalar, or (B,) when every batch row sits at its
+                           # own position (continuous-batching decode)
     *,
     causal: bool,
     window: int,
     softcap: float,
-    kv_valid_len: Optional[jax.Array],
+    kv_valid_len: Optional[jax.Array],   # scalar or (B,)
 ) -> jax.Array:
     scale = 1.0 / math.sqrt(q.shape[-1])
     scores = jnp.einsum("bqngk,bsnk->bngqs", q, k).astype(jnp.float32) * scale
     scores = _softcap(scores, softcap)
     s_len = k.shape[1]
-    q_pos = q_start + jnp.arange(q.shape[1])
+    q_start = jnp.asarray(q_start)
+    # q_pos: (q,) for a shared scalar start, (B, q) for per-row starts
+    q_pos = q_start[..., None] + jnp.arange(q.shape[1])
     k_pos = jnp.arange(s_len)
-    mask = jnp.ones((q.shape[1], s_len), dtype=bool)
+    mask = jnp.ones(q_pos.shape + (s_len,), dtype=bool)
     if causal:
-        mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= q_pos[..., None] >= k_pos
     if window > 0:
-        mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= q_pos[..., None] - k_pos < window
     if kv_valid_len is not None:
-        mask &= k_pos[None, :] < kv_valid_len
+        valid = jnp.asarray(kv_valid_len)
+        if valid.ndim:                       # (B,) per-row valid prefixes
+            mask = mask & (k_pos < valid[:, None, None])
+        else:
+            mask = mask & (k_pos < valid)
+    if mask.ndim == 3:                       # (B, q, s) → (B, 1, 1, q, s)
+        mask = mask[:, None, None, :, :]
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bngqs,bsnk->bqngk", probs, v)
@@ -263,7 +273,7 @@ def decode_attention(
     x: jax.Array,              # (B, 1, d)
     cache_k: jax.Array,        # (B, S_max, KV, hd) — bf16 or int8
     cache_v: jax.Array,
-    position: jax.Array,       # scalar int: index of the new token
+    position: jax.Array,       # scalar int, or (B,) per-row positions
     cfg: ArchConfig,
     *,
     window: int = 0,
@@ -276,9 +286,20 @@ def decode_attention(
     attend over the valid prefix.  For cross-attention the cache is the
     encoder/vision projection and is not updated.  With ``k_scale`` the
     caches are int8 (per token × head absmax) and dequantized on read — on
-    TPU the dequant fuses into the attention matmul's cache stream."""
+    TPU the dequant fuses into the attention matmul's cache stream.
+
+    ``position`` may be a (B,) vector for continuous batching, where each
+    batch row decodes at its own offset.  A per-row position of ``S_max``
+    (the cache length) is a write-proof sentinel: the masked row write
+    touches nothing and the row attends over an empty prefix, which lets a
+    fixed-slot engine run free slots through the same jitted step."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), position, dtype=jnp.int32)
+    position = jnp.asarray(position, dtype=jnp.int32)
+    per_row = position.ndim == 1
+    if per_row:
+        positions = position[:, None]                     # (B, 1)
+    else:
+        positions = jnp.full((b, 1), position, dtype=jnp.int32)
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     if "bq" in params:
         q = q + params["bq"]
@@ -290,7 +311,26 @@ def decode_attention(
             k_new = k_new + params["bk"]
             v_new = v_new + params["bv"]
         k_new = apply_rope(k_new, positions, cfg.rope_theta)
-        if k_scale is not None:
+        if per_row:
+            # each row scatters into its own cache slot; the free-slot
+            # sentinel (position == S_max) is out of bounds and drops —
+            # an O(B) scatter, not an O(B*S_max) masked rewrite
+            rows = jnp.arange(b, dtype=jnp.int32)
+            put4 = lambda cache, new: cache.at[rows, position].set(
+                new[:, 0].astype(cache.dtype), mode="drop")
+            put3 = lambda cache, new: cache.at[rows, position].set(
+                new[:, 0], mode="drop")
+            if k_scale is not None:
+                k8, ks_new = kv_quantize(k_new)
+                v8, vs_new = kv_quantize(v_new)
+                cache_k = put4(cache_k, k8)
+                cache_v = put4(cache_v, v8)
+                k_scale = put3(k_scale, ks_new)
+                v_scale = put3(v_scale, vs_new)
+            else:
+                cache_k = put4(cache_k, k_new)
+                cache_v = put4(cache_v, v_new)
+        elif k_scale is not None:
             k8, ks_new = kv_quantize(k_new)
             v8, vs_new = kv_quantize(v_new)
             cache_k = jax.lax.dynamic_update_slice(
@@ -359,6 +399,69 @@ def prefill_kv(
     k = apply_rope(k, positions, cfg.rope_theta)
     pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
     return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+def prefill_chunk_attention(
+    params: Dict[str, jax.Array],
+    x: jax.Array,              # (B, C, d) — one prompt chunk
+    cache_k: jax.Array,        # (B, S_max, KV, hd) — bf16 or int8
+    cache_v: jax.Array,
+    offset: jax.Array,         # scalar int: global position of chunk row 0
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array,
+           Optional[jax.Array], Optional[jax.Array]]:
+    """Chunked prefill into an existing decode cache: project/rope the
+    chunk at positions ``[offset, offset+C)``, write its K/V into the
+    cache, and attend the chunk causally over the cache prefix.  Shapes
+    are fixed by (B, C, S_max), so a continuous-batching engine can feed
+    prompts of any length through one jitted call.  The chunk write must
+    stay in bounds (``offset + C <= S_max``); padded rows past the prompt
+    end are masked out by causality for this chunk and overwritten by the
+    decode loop before they ever enter the valid prefix."""
+    b, c, _ = x.shape
+    positions = offset + jnp.arange(c, dtype=jnp.int32)[None, :]  # (1, C)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k_new = k_new + params["bk"]
+        v_new = v_new + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if k_scale is not None:
+        k8, ks_new = kv_quantize(k_new)
+        v8, vs_new = kv_quantize(v_new)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k8, (0, offset, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v8, (0, offset, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, ks_new, (0, offset, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, vs_new, (0, offset, 0))
+        k_eff = kv_dequantize(cache_k, k_scale, x.dtype)
+        v_eff = kv_dequantize(cache_v, v_scale, x.dtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, offset, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, offset, 0, 0))
+        k_eff, v_eff = cache_k, cache_v
+    cache_k = constrain(cache_k, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    cache_v = constrain(cache_v, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    q = q.reshape(b, c, kvh, g, hd)
+    out = _attend_chunk(
+        q, k_eff, v_eff, offset,
+        causal=True, window=window, softcap=cfg.attn_softcap,
+        kv_valid_len=offset + c,
+    )
+    out = out.reshape(b, c, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", "seq", "embed"), cache_k, cache_v, \
+        k_scale, v_scale
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,7 @@ from .config import (
 )
 from .layers import (
     attention_defs, decode_attention, mlp, mlp_defs, multi_head_attention,
-    prefill_kv, rmsnorm, rmsnorm_def,
+    prefill_chunk_attention, prefill_kv, rmsnorm, rmsnorm_def,
 )
 from .moe import moe_defs, moe_ffn
 from .params import ParamDef, abstract, axes_tree, initialize, is_def, specs
@@ -339,6 +339,41 @@ def block_decode(kind: str, bp, x, st, cfg: ArchConfig, ctx: Ctx):
     raise ValueError(kind)
 
 
+# block kinds whose decode state can be built incrementally, chunk by chunk,
+# into a pre-allocated cache.  Recurrent kinds (mamba2/xlstm) carry conv/
+# hidden tails that this path does not stitch across chunk boundaries.
+CHUNKABLE_KINDS = (ATTN, LOCAL, DENSE, MOE, SHARED_ATTN)
+
+
+def block_prefill_chunk(kind: str, bp, x, st, cfg: ArchConfig, ctx: Ctx):
+    """Chunked prefill over an existing decode state.  x: (B, C, d);
+    ``ctx.position`` is the chunk's global offset (scalar int32).  Returns
+    (x, new_state).  Attention-family kinds only — see CHUNKABLE_KINDS."""
+    eps = cfg.norm_eps
+    if kind not in CHUNKABLE_KINDS:
+        raise NotImplementedError(
+            f"chunked prefill is not supported for block kind {kind!r}")
+    ap = ctx.shared["attn"] if kind == SHARED_ATTN else bp["attn"]
+    window = cfg.sliding_window if kind == LOCAL else 0
+    h, ck, cv, ks, vs = prefill_chunk_attention(
+        ap, rmsnorm(x, bp["ln1"], eps), st["k"], st["v"], ctx.position, cfg,
+        window=window, k_scale=st.get("ks"), v_scale=st.get("vs"))
+    if cfg.post_block_norm:
+        h = rmsnorm(h, bp["post1"], eps)
+    x = x + h
+    if kind == MOE:
+        h, _ = moe_ffn(bp["moe"], rmsnorm(x, bp["ln2"], eps), cfg)
+    else:
+        mp = ctx.shared["mlp"] if kind == SHARED_ATTN else bp["mlp"]
+        h = mlp(mp, rmsnorm(x, bp["ln2"], eps), cfg.act)
+    if cfg.post_block_norm:
+        h = rmsnorm(h, bp["post2"], eps)
+    new_st = {**st, "k": ck, "v": cv}
+    if ks is not None:
+        new_st["ks"], new_st["vs"] = ks, vs
+    return x + h, new_st
+
+
 # ---------------------------------------------------------------------------
 # the model
 # ---------------------------------------------------------------------------
@@ -589,9 +624,66 @@ class Model:
         logits = self._logits(params, x[:, -1:, :])
         return logits, out
 
+    # ------------------------------------------------------ chunked prefill
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True iff every block kind can prefill incrementally into a
+        pre-allocated decode state (continuous batching needs this)."""
+        kinds = set(self.cfg.pattern) | set(self.cfg.tail)
+        return kinds <= set(CHUNKABLE_KINDS)
+
+    def prefill_chunk(self, params, state, tokens, offset):
+        """Incremental prefill for continuous batching: run ``tokens``
+        (B, C) int32 at global positions ``[offset, offset+C)``, writing
+        K/V into the given decode state.  Shapes are fixed by (B, C), so
+        one jitted call serves prompts of any length; the chunk write must
+        stay within the state's ``max_len``.  Returns (logits (B, C, V),
+        new_state)."""
+        cfg = self.cfg
+        if not self.supports_chunked_prefill:
+            bad = sorted((set(cfg.pattern) | set(cfg.tail))
+                         - set(CHUNKABLE_KINDS))
+            raise NotImplementedError(
+                f"chunked prefill unsupported for block kinds {bad}")
+        shared = params.get("shared") if self.has_shared else None
+        x = self._embed(params, tokens)
+        kinds = dict(zip(self.pattern_names, cfg.pattern))
+
+        def body(carry, xs):
+            x, shared, off = carry
+            bp_slice, st_slice = xs
+            c = Ctx(shared=None if isinstance(shared, jax.Array) else shared,
+                    position=off)
+            new_states = {}
+            for name in self.pattern_names:
+                x, st = block_prefill_chunk(kinds[name], bp_slice[name], x,
+                                            st_slice[name], cfg, c)
+                new_states[name] = st
+            return (x, shared, off), new_states
+
+        shared0 = shared if shared is not None else jnp.float32(0)
+        (x, _, _), new_pattern = instrumented_scan(
+            body, (x, shared0, jnp.asarray(offset, jnp.int32)),
+            (params["pattern"], state["pattern"]), name="prefill_chunk_layers",
+            logical_axes=((Ax(("batch", "seq", "embed")), self._shared_axes(),
+                           AX0),
+                          (self._unit_axes(), self._unit_state_axes())))
+        out = {"pattern": new_pattern}
+        if cfg.tail:
+            ctx = Ctx(shared=shared, position=jnp.asarray(offset, jnp.int32))
+            tail_states = {}
+            for name, kind in zip(self.tail_names, cfg.tail):
+                x, st = block_prefill_chunk(kind, params["tail"][name], x,
+                                            state["tail"][name], cfg, ctx)
+                tail_states[name] = st
+            out["tail"] = tail_states
+        return self._logits(params, x), out
+
     # --------------------------------------------------------------- decode
     def decode_step(self, params, state, tokens, position, frontend=None):
-        """One decode step.  tokens: (B, 1) int32; position: scalar int32.
+        """One decode step.  tokens: (B, 1) int32; position: scalar int32,
+        or (B,) int32 for continuous batching (each row at its own offset;
+        a row position of ``max_len`` is a write-proof free-slot sentinel).
         Returns (logits (B,1,V), new_state)."""
         cfg = self.cfg
         # NOTE: for enc-dec decode the cross K/V already live in the state;

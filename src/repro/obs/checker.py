@@ -33,6 +33,14 @@ can catch protocol bugs rather than inherit them):
   before the read (the watermark is a promise of completeness up to it).
   Commit ``order`` events that carry ``tid``/``keys`` metadata feed (c);
   older traces without those fields simply skip it.
+* **refresh correlation** (serving-lane weight swaps) — from ``span``
+  events named ``weight_refresh``: a replica's swap carries the publishing
+  transaction's UUID; when that publish's order events are in the trace,
+  the swap must be sequenced *after* the publish's commit record.  A swap
+  before durability means the replica served weights a crash could still
+  revoke.  Publishes absent from the trace (committed before tracing
+  began) are skipped — the invariant binds only when both sides are
+  observable.
 
 Versions are compared by their encoded TxnId strings, whose lexicographic
 order equals ``⟨timestamp, uuid⟩`` order (see ``core/ids.py``).
@@ -63,7 +71,7 @@ __all__ = [
 @dataclass
 class Violation:
     # read-atomicity | write-ordering | exactly-once | span-unique
-    # | read-durability | snapshot-bound
+    # | read-durability | snapshot-bound | refresh-correlation
     invariant: str
     detail: str
 
@@ -80,6 +88,7 @@ class CheckResult:
     finishes_checked: int = 0
     spans_checked: int = 0
     snaps_checked: int = 0
+    refreshes_checked: int = 0
 
     @property
     def ok(self) -> bool:
@@ -93,6 +102,7 @@ class CheckResult:
             f"workflow finishes:     {self.finishes_checked}",
             f"spans checked:         {self.spans_checked}",
             f"snapshot reads:        {self.snaps_checked}",
+            f"weight refreshes:      {self.refreshes_checked}",
             f"violations:            {len(self.violations)}",
         ]
         lines.extend(f"  {v}" for v in self.violations)
@@ -296,6 +306,34 @@ def _check_snapshot_bounds(snaps: List[dict],
 
 
 # ---------------------------------------------------------------------------
+# invariant 6: weight-refresh ↔ publish correlation (serving lane)
+# ---------------------------------------------------------------------------
+
+def _check_refresh_correlation(refreshes: List[dict],
+                               orders_by_uuid: Mapping[str, List[dict]],
+                               out: CheckResult) -> None:
+    """A ``weight_refresh`` span carrying ``publish_uuid`` must be
+    sequenced after that publish's commit record whenever the publish's
+    order events are in the trace."""
+    for ev in refreshes:
+        out.refreshes_checked += 1
+        uuid = ev.get("publish_uuid")
+        seq = ev.get("seq")
+        if uuid is None or seq is None:
+            continue
+        orders = orders_by_uuid.get(str(uuid))
+        if not orders:
+            continue  # publish committed before tracing began
+        record_seqs = [e["seq"] for e in orders if e.get("stage") == "record"]
+        if not record_seqs or min(record_seqs) > seq:
+            out.violations.append(Violation(
+                "refresh-correlation",
+                f"replica {ev.get('engine', '?')} swapped to step "
+                f"{ev.get('step', '?')} (seq {seq}) before publish {uuid} "
+                f"wrote its commit record — the weights were not durable"))
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -306,6 +344,7 @@ def check_events(events: Iterable[Mapping]) -> CheckResult:
     finishes_by_uuid: Dict[str, List[dict]] = {}
     span_ids: Dict[str, int] = {}
     snaps: List[dict] = []
+    refreshes: List[dict] = []
 
     for ev in events:
         out.events += 1
@@ -322,6 +361,8 @@ def check_events(events: Iterable[Mapping]) -> CheckResult:
             sid = ev.get("span")
             if sid is not None:
                 span_ids[sid] = span_ids.get(sid, 0) + 1
+            if ev.get("name") == "weight_refresh":
+                refreshes.append(dict(ev))
         elif kind == "snap":
             snaps.append(dict(ev))
 
@@ -330,6 +371,7 @@ def check_events(events: Iterable[Mapping]) -> CheckResult:
     _check_exactly_once(finishes_by_uuid, out)
     _check_read_durability(reads_by_txn, orders_by_uuid, out)
     _check_snapshot_bounds(snaps, orders_by_uuid, out)
+    _check_refresh_correlation(refreshes, orders_by_uuid, out)
     for sid, n in span_ids.items():
         if n > 1:
             out.violations.append(Violation(
@@ -351,7 +393,8 @@ def check_file(path: str) -> CheckResult:
 # seeded violation (negative self-test)
 # ---------------------------------------------------------------------------
 
-SEED_KINDS = ("read-atomicity", "read-durability", "snapshot-bound")
+SEED_KINDS = ("read-atomicity", "read-durability", "snapshot-bound",
+              "refresh-correlation")
 
 
 def seeded_violation_events(kind: str = "read-atomicity") -> List[dict]:
@@ -361,7 +404,9 @@ def seeded_violation_events(kind: str = "read-atomicity") -> List[dict]:
     x and y) but x from the older t0.  ``read-durability``: a read resolves
     to a version whose commit record lands only *after* the read.
     ``snapshot-bound``: a snapshot read whose watermark covers ts 2000
-    returns the ts-1000 version, missing a covered commit."""
+    returns the ts-1000 version, missing a covered commit.
+    ``refresh-correlation``: a replica swaps to a published weight set
+    before the publish's commit record lands."""
     if kind == "read-atomicity":
         t0 = f"{1000:020d}.aaaa"
         t1 = f"{2000:020d}.bbbb"
@@ -403,6 +448,20 @@ def seeded_violation_events(kind: str = "read-atomicity") -> List[dict]:
             # returned the older t0 — a covered version was missed
             {"seq": 7, "ev": "snap", "key": "x", "tid": t0, "wm": 2500,
              "lag_ns": 0, "bound_ns": 10_000_000_000},
+        ]
+    if kind == "refresh-correlation":
+        return [
+            # the swap is sequenced BEFORE the publish's commit record:
+            # the replica served weights that were not yet durable
+            {"seq": 1, "ev": "span", "name": "weight_refresh",
+             "trace": "t" * 16, "span": "tttttttttttttttt/weight_refresh#r0@2",
+             "publish_uuid": "publish.r0.2", "step": 2, "engine": "r0"},
+            {"seq": 2, "ev": "order", "uuid": "publish.r0.2",
+             "stage": "versions"},
+            {"seq": 3, "ev": "order", "uuid": "publish.r0.2",
+             "stage": "record", "writes": 3},
+            {"seq": 4, "ev": "order", "uuid": "publish.r0.2",
+             "stage": "visible"},
         ]
     raise ValueError(f"unknown seed kind {kind!r}; one of {SEED_KINDS}")
 

@@ -1,27 +1,56 @@
-"""Serving: batched decode engine with read-atomic weight refresh.
+"""Serving: continuous-batching decode engines with read-atomic weight
+refresh, and the AFT serving lane (inference requests as read-only
+workflows).
 
 ``refresh`` (workflow-driven atomic weight publication) is framework-free;
-the jax-backed ``ServeEngine`` is imported lazily so environments without
-jax can still drive publish/read workflows.
+the jax-backed engines (``ServeEngine``, ``ContinuousEngine``) and the
+``lane`` module (parameter-tree sharding + ``InferenceLane``) are imported
+lazily so environments without jax can still drive publish/read workflows.
 """
 
 from .refresh import (
     build_publish_workflow,
+    manifest_key,
+    publish_uuid,
     publish_weights,
     read_weight_set,
+    shard_key,
 )
 
 __all__ = [
-    "ServeEngine",
+    "ContinuousEngine",
+    "EngineStats",
+    "GenTicket",
+    "InferenceLane",
+    "LaneConfig",
     "ServeConfig",
+    "ServeEngine",
+    "TornWeightSet",
     "build_publish_workflow",
+    "manifest_key",
+    "params_to_shards",
+    "publish_params",
+    "publish_uuid",
     "publish_weights",
+    "read_params",
     "read_weight_set",
+    "shard_key",
+    "shards_to_params",
 ]
+
+_ENGINE = ("ServeEngine", "ServeConfig", "ContinuousEngine", "EngineStats",
+           "GenTicket")
+_LANE = ("InferenceLane", "LaneConfig", "TornWeightSet", "params_to_shards",
+         "publish_params", "read_params", "shards_to_params")
 
 
 def __getattr__(name):
-    if name in ("ServeEngine", "ServeConfig"):
-        from .engine import ServeConfig, ServeEngine  # heavy: imports jax
-        return {"ServeEngine": ServeEngine, "ServeConfig": ServeConfig}[name]
+    if name in _ENGINE:
+        from . import engine  # heavy: imports jax
+
+        return getattr(engine, name)
+    if name in _LANE:
+        from . import lane  # heavy: imports jax via the serializer
+
+        return getattr(lane, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

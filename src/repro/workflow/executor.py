@@ -144,6 +144,22 @@ class StepContext:
     def workflow_uuid(self) -> str:
         return self._session.uuid
 
+    @property
+    def placed_node(self) -> Optional[str]:
+        """Node id this step's session was routed to (placement hints →
+        router), or None when the session carries no node affinity
+        (``place_steps`` resolves per step; unscoped sessions have none).
+        Lets a step body reach node-local resources — e.g. the serving
+        lane's per-node model replicas (``serve/lane.py``)."""
+        session = self._session
+        nodes = getattr(session, "_nodes", None)
+        node = None
+        if nodes and self._step.name in nodes:
+            node = nodes[self._step.name]
+        if node is None:
+            node = getattr(session, "node", None)
+        return getattr(node, "node_id", None) if node is not None else None
+
     def get(self, key: str) -> Optional[bytes]:
         return self._session.get(self._step.name, key)
 

@@ -15,5 +15,7 @@ if importlib.util.find_spec("jax") is None:
         "test_kernels.py",
         "test_models_blocks.py",
         "test_property_ckpt.py",
+        "test_serve_continuous.py",
+        "test_serve_lane.py",
         "test_trainer_serve.py",
     ]

@@ -9,6 +9,7 @@ import json
 import pytest
 
 from repro.obs.checker import (
+    SEED_KINDS,
     check_events,
     check_file,
     main,
@@ -335,8 +336,8 @@ def test_cli_exit_codes(tmp_path, capsys):
 def test_cli_selftest_covers_all_seed_kinds(capsys):
     assert main(["--selftest"]) == 0
     out = capsys.readouterr().out
-    assert out.count("seeded violation detected") == 3
-    for kind in ("read-atomicity", "read-durability", "snapshot-bound"):
+    assert out.count("seeded violation detected") == len(SEED_KINDS)
+    for kind in SEED_KINDS:
         assert f"-- seed: {kind}" in out
 
 

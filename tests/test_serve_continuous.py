@@ -1,0 +1,155 @@
+"""Continuous-batching engine: equivalence, compile-once, refresh spans.
+
+The continuous engine must produce exactly the tokens the static reference
+produces (greedy, float32 KV cache), while compiling its jitted
+prefill/decode pair at most once regardless of prompt-length / batch mix —
+and ``install_weights`` must span every swap with the publishing
+transaction's UUID for the offline checker."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.models import Model  # noqa: E402
+from repro.models.config import get_config  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+from repro.serve.engine import (  # noqa: E402
+    ContinuousEngine,
+    ServeConfig,
+    ServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # float32 KV cache so chunked and full prefill agree bit-for-bit
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b").reduced(pattern_repeats=2),
+        kv_cache_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return model, params
+
+
+PROMPTS = [
+    ([5, 6, 7], 5),
+    ([11, 12, 13, 14, 15], 2),
+    ([21, 22, 23, 24, 25, 26, 27, 28, 29], 7),
+    ([31, 32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42], 3),
+    ([51, 52, 53, 54, 55, 56], 4),
+]
+
+
+def drive(engine, tickets):
+    while not all(t.done() for t in tickets):
+        assert engine.step(), "engine stalled with work pending"
+    return [t.result(timeout=0) for t in tickets]
+
+
+def test_matches_static_reference(setup):
+    model, params = setup
+    scfg = ServeConfig(max_len=48, slots=4, prefill_chunk=4)
+    ref = ServeEngine(model, None, scfg, params=params)
+    eng = ContinuousEngine(model, None, scfg, params=params)
+
+    expect = [ref.generate([p], n)[0] for p, n in PROMPTS]
+    tickets = [eng.submit(p, n) for p, n in PROMPTS]
+    got = drive(eng, tickets)
+    assert got == expect
+    assert eng.stats["completed"] == len(PROMPTS)
+
+
+def test_compiles_exactly_once(setup):
+    """The tentpole claim: mixed lengths, overlapping lifetimes, join/
+    leave mid-flight — one compiled prefill, one compiled decode."""
+    model, params = setup
+    scfg = ServeConfig(max_len=48, slots=4, prefill_chunk=4)
+    eng = ContinuousEngine(model, None, scfg, params=params)
+    drive(eng, [eng.submit(p, n) for p, n in PROMPTS])
+    # second wave with fresh length mix re-uses both compilations
+    drive(eng, [eng.submit([9] * 7, 6), eng.submit([3], 1)])
+    assert eng.compile_counts() == {"prefill": 1, "decode": 1}
+
+
+def test_footprint_guard(setup):
+    model, params = setup
+    eng = ContinuousEngine(
+        model, None, ServeConfig(max_len=16, slots=2, prefill_chunk=8),
+        params=params)
+    with pytest.raises(AssertionError):
+        eng.submit(list(range(1, 18)), 1)   # padded prefill exceeds cache
+    with pytest.raises(AssertionError):
+        eng.submit(list(range(1, 10)), 12)  # prompt + max_new exceeds cache
+
+
+def test_weight_swap_between_iterations(setup):
+    """A swap mid-stream changes tokens only from the next iteration on,
+    and the monotonic step guard rejects stale installs."""
+    model, params = setup
+    params2 = jax.tree.map(lambda x: x * 1.05, params)
+    scfg = ServeConfig(max_len=48, slots=2, prefill_chunk=4)
+    eng = ContinuousEngine(model, None, scfg, params=params)
+    assert eng.install_weights(params, 1)
+    t = eng.submit([5, 6, 7, 8], 6)
+    eng.step()
+    assert eng.install_weights(params2, 2)
+    assert not eng.install_weights(params, 1)  # stale: rejected
+    drive(eng, [t])
+    assert eng.weights_step == 2
+    assert len(t.result(timeout=0)) == 6
+
+
+def test_fresh_default_config():
+    """Engines built without a config must not share one mutable default."""
+    cfg = get_config("tinyllama-1.1b").reduced(pattern_repeats=2)
+    model = Model(cfg)
+    a = ServeEngine(model, None)
+    b = ServeEngine(model, None)
+    assert a.config is not b.config
+    a.config.max_len = 7
+    assert b.config.max_len != 7
+
+
+def test_stats_shim_and_registry(setup):
+    model, params = setup
+    eng = ContinuousEngine(
+        model, None, ServeConfig(max_len=48, slots=2, prefill_chunk=4),
+        params=params)
+    drive(eng, [eng.submit([5, 6, 7], 2)])
+    # dict surface still live
+    assert eng.stats["tokens_out"] == 2
+    assert eng.stats["completed"] == 1
+    # registry carries the same counters (plus histograms/gauges)
+    snap = eng.registry.snapshot()
+    assert snap["tokens_out"] == 2
+    # the callable shim warns once and returns the registry snapshot
+    import repro.serve.engine as engine_mod
+    engine_mod._stats_deprecation_warned = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        via_call = eng.stats()
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert via_call["tokens_out"] == 2
+
+
+def test_refresh_span_carries_publish_uuid(setup):
+    model, params = setup
+    eng = ContinuousEngine(
+        model, None, ServeConfig(max_len=48, slots=2, prefill_chunk=4),
+        params=params)
+    prev = obs_trace.get_tracer()
+    tracer = obs_trace.enable(capacity=1000)
+    try:
+        eng.install_weights(params, 3, publish_uuid="publish.run.3")
+    finally:
+        obs_trace.set_tracer(prev)
+        tracer.close()
+    spans = [e for e in tracer.events()
+             if e.get("ev") == "span" and e.get("name") == "weight_refresh"]
+    assert len(spans) == 1
+    assert spans[0]["publish_uuid"] == "publish.run.3"
+    assert spans[0]["step"] == 3
+    assert spans[0]["trace"] == obs_trace.txn_trace_id("publish.run.3")

@@ -1,0 +1,159 @@
+"""Weight publication through a shared WorkflowPool under failure injection.
+
+``serve/refresh.py``'s publish DAG is driver-agnostic; these tests drive it
+through a ``WorkflowPool`` (the fleet shape: many runs/steps publishing
+concurrently through shared platform invocations) and prove the atomic /
+exactly-once contract holds under injected step crashes and a node kill:
+a reader never assembles a torn weight set, and re-driving a publish UUID
+never double-commits.  Framework-free — no jax."""
+
+import pytest
+
+from repro.core import AftCluster, ClusterConfig
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.serve.refresh import (
+    build_publish_workflow,
+    manifest_key,
+    publish_uuid,
+    read_weight_set,
+)
+from repro.storage.memory import MemoryStorage
+from repro.workflow import PoolConfig, TxnScope, WorkflowPool
+
+
+def make_cluster(nodes=1, routing=None):
+    return AftCluster(
+        MemoryStorage(),
+        ClusterConfig(num_nodes=nodes, start_background_threads=False,
+                      routing=routing),
+    )
+
+
+def fast_platform(**kw):
+    return LambdaPlatform(FaasConfig(time_scale=0.0, **kw))
+
+
+def shard_bytes(step):
+    return {f"part{i}": bytes([i]) * 64 + str(step).encode()
+            for i in range(4)}
+
+
+def publish_spec(run_id, step):
+    blobs = shard_bytes(step)
+    return build_publish_workflow(
+        sorted(blobs), lambda name, _s: blobs[name],
+        run_id=run_id, step=step)
+
+
+def assert_untorn(cluster, run_id, expect_steps):
+    """The visible set must be whole and from one publish.  Concurrent
+    publishes commit in *commit* order, not submission order (which is why
+    ``install_weights`` guards monotonically) — so the final visible step
+    is any of ``expect_steps``."""
+    got = read_weight_set(cluster.client(), run_id=run_id)
+    assert got is not None
+    step, blobs = got
+    assert step in expect_steps
+    assert blobs == shard_bytes(step)  # every shard from the same publish
+    return step
+
+
+def test_pool_publish_visible_and_untorn():
+    cluster = make_cluster()
+    platform = fast_platform()
+    with WorkflowPool(platform, cluster=cluster,
+                      config=PoolConfig(scope=TxnScope.WORKFLOW)) as pool:
+        t = pool.submit(publish_spec("r0", 1), uuid=publish_uuid("r0", 1))
+        res = t.result(timeout=60)
+        assert res.results["manifest"] == 1
+    assert_untorn(cluster, "r0", {1})
+    platform.shutdown()
+
+
+def test_pool_publish_survives_injected_crashes():
+    """Step bodies crash at random (ctx.maybe_fail); the pool re-drives
+    until every publish commits — and no reader interleaving can observe a
+    half-published set (read_weight_set is one read transaction)."""
+    cluster = make_cluster()
+    platform = fast_platform(failure_rate=0.3, seed=13)
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, max_attempts=40)
+    steps = list(range(1, 6))
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        for s in steps:  # sequential: each step awaited, as a trainer would
+            res = pool.submit(publish_spec("r1", s),
+                              uuid=publish_uuid("r1", s)).result(timeout=120)
+            assert res.results["manifest"] == s
+            # the set visible after each commit is THIS complete publish
+            assert_untorn(cluster, "r1", {s})
+    assert_untorn(cluster, "r1", {max(steps)})
+    platform.shutdown()
+
+
+def test_pool_publish_redrive_same_uuid_exactly_once():
+    """Re-submitting a committed publish UUID must dedupe, not re-commit:
+    the manifest's version history grows by exactly one commit."""
+    cluster = make_cluster()
+    platform = fast_platform()
+    with WorkflowPool(platform, cluster=cluster,
+                      config=PoolConfig(scope=TxnScope.WORKFLOW)) as pool:
+        first = pool.submit(publish_spec("r2", 7),
+                            uuid=publish_uuid("r2", 7)).result(timeout=60)
+        again = pool.submit(publish_spec("r2", 7),
+                            uuid=publish_uuid("r2", 7)).result(timeout=60)
+    assert first.committed_tid is not None
+    # the re-drive resolves against the SAME committed transaction
+    assert again.committed_tid == first.committed_tid
+    assert again.deduped or again.steps_memoized > 0
+    assert_untorn(cluster, "r2", {7})
+    platform.shutdown()
+
+
+def test_pool_publish_through_node_kill():
+    """Hard-kill an AFT node while a stream of publishes is in flight:
+    every publish lands, the final set is whole."""
+    cluster = make_cluster(nodes=2, routing="consistent_hash")
+    platform = fast_platform(failure_rate=0.1, seed=7)
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, max_attempts=40)
+    steps = list(range(1, 9))
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [
+            pool.submit(publish_spec("r3", s), uuid=publish_uuid("r3", s))
+            for s in steps
+        ]
+        cluster.kill_node(0)
+        results = [t.result(timeout=120) for t in tickets]
+    assert [r.results["manifest"] for r in results] == steps
+    assert_untorn(cluster, "r3", set(steps))
+    platform.shutdown()
+
+
+def test_step_scope_reader_never_torn_mid_publish():
+    """A read-only consumer polling while publishes stream through the
+    pool: each observation is a complete set of a single step."""
+    cluster = make_cluster()
+    platform = fast_platform()
+    cfg = PoolConfig(scope=TxnScope.WORKFLOW, max_attempts=20)
+    observations = []
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [
+            pool.submit(publish_spec("r4", s), uuid=publish_uuid("r4", s))
+            for s in range(1, 7)
+        ]
+        import time
+        while not all(t.done() for t in tickets):
+            got = read_weight_set(cluster.client(), run_id="r4")
+            if got is not None:
+                observations.append(got)
+            time.sleep(0.001)
+        for t in tickets:
+            t.result(timeout=60)
+    for step, blobs in observations:
+        assert blobs == shard_bytes(step), f"torn set at step {step}"
+    assert_untorn(cluster, "r4", set(range(1, 7)))
+    platform.shutdown()
+
+
+def test_manifest_key_shape():
+    assert manifest_key("weights", "run") == "weights/run/manifest"
+    with pytest.raises(TypeError):
+        manifest_key()  # keys are explicit, no defaults
