@@ -39,9 +39,12 @@ def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
                  router=None,
                  data_cache_bytes: Optional[int] = None,
                  node_overrides: Optional[Dict] = None,
+                 cluster_overrides: Optional[Dict] = None,
                  background: bool = True) -> AftCluster:
     """``node_overrides`` patches extra AftNodeConfig fields (e.g. the I/O
     pipeline knobs ``io_workers`` / ``enable_io_pipeline`` in fig_async);
+    ``cluster_overrides`` does the same for ClusterConfig (elastic knobs
+    like ``join_ramp_step`` / ``multicast_eager_push`` in fig_elastic);
     ``background=False`` skips the multicast/GC/fault-manager threads for
     single-node latency studies where they only add scheduler noise."""
     from repro.core import FaultManagerConfig
@@ -64,6 +67,8 @@ def make_cluster(engine, *, nodes: int = 1, data_cache: bool = True,
                         replacement_delay_s=1.0 * time_scale * 33,
                         routing=router,
                         start_background_threads=background)
+    for k, v in (cluster_overrides or {}).items():
+        setattr(cfg, k, v)
     cluster = AftCluster(engine, cfg)
     if background:
         cluster.start()

@@ -1,0 +1,455 @@
+"""fig_elastic: elastic membership under a diurnal + flash-crowd trace (fige).
+
+Two claims about the elastic cluster layer (ISSUE 9):
+
+1. **autoscaling holds tail latency** — a diurnal trace (night → morning →
+   flash crowd → evening) drives paced async-commit load through each
+   node's bounded storage I/O pipeline.  A *static* 2-node cluster
+   saturates during the flash crowd (closed-loop p99 grows with per-node
+   queueing), while the *autoscaled* cluster — an :class:`Autoscaler`
+   watching the obs registry's load gauges AND its merged commit-latency
+   p99 — joins ramping nodes (JOINING → LIVE with warm-up handoff) until
+   fleet p99 is back under target, holding it roughly flat.  When the
+   crowd leaves, it scales back down by *draining* (never killing).
+
+2. **migration is safe under faults** — a kill-during-migration arm runs a
+   counter+mirror workflow stream, starts a join (warm-up handoff in
+   flight), hard-kills a donor node mid-migration, then drains a node
+   under load.  The audit replays every counter from a fresh node: zero
+   incomplete, zero duplicate effects, zero fractured co-writes — and the
+   offline trace checker replays the whole benchmark's event stream with
+   zero violations.
+
+Methodology: load is closed-loop (each client thread submits one
+transaction at a time), so once a node's pipeline workers are busy,
+latency is proportional to per-node concurrency — exactly the signal an
+operator's p99 dashboard would show.  Both arms run the same trace, seeds,
+and engine; the autoscaler is the only variable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import (
+    AftNode,
+    AftNodeConfig,
+    Autoscaler,
+    AutoscalerConfig,
+    NodeLifecycle,
+    PlacementHint,
+)
+from repro.core.routing import ConsistentHashRouter
+from repro.faas.platform import FaasConfig, LambdaPlatform
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
+from repro.storage.simulated import LatencyModel, SimulatedEngine
+from repro.workflow import PoolConfig, TxnScope, WorkflowPool, WorkflowSpec
+
+from .common import engine, make_cluster, save
+
+BASE_NODES = 2
+MAX_NODES = 12
+IO_WORKERS = 4           # read/probe threads per node
+KEYS = 1024
+VALUE_BYTES = 512
+# latency under study is simulated-storage-bound queueing; run the trace
+# much less compressed than the suite default so pipeline service time
+# (a storage sleep, which parallelizes) dwarfs per-op Python overhead
+# (which doesn't — this container has one core, so adding nodes only
+# helps when the capacity bound is sleeping workers, as it is for a real
+# AFT deployment bound on storage round-trips)
+TRACE_TIME_SCALE = 9.0
+MIGRATION_TIME_SCALE = 0.15
+# the autoscaler's flash-crowd objective: scale up while commit p99 is
+# above this (and load confirms it's demand, not a blip) — the gated
+# steady-state p99 then converges to ~this target by control, which is
+# what makes the headline ratio reproducible run to run
+P99_TARGET_MS = 420.0
+
+# diurnal + flash-crowd trace: (phase, closed-loop clients, duration
+# multiplier).  The gated phases feed the headline p99 ratios and run
+# longer so their p99 rests on enough samples to be stable; warmup
+# absorbs cold-start transients (connection/cache/thread spin-up) so the
+# night baseline measures steady low-load service, and the onset phase
+# is the autoscaler's adaptation window — reported, not gated.
+TRACE = (
+    ("warmup", 6, 1.0),         # uncounted: startup transients
+    ("night", 6, 2.5),          # gated: the low-load baseline
+    ("morning", 12, 1.0),
+    ("flash_onset", 24, 1.0),
+    ("flash_steady", 24, 2.5),  # gated: the saturation probe
+    ("evening", 6, 1.0),        # scale-down window
+)
+GATED = ("night", "flash_steady")
+
+
+def _trace_engine(seed: int) -> SimulatedEngine:
+    """Provisioned-capacity cloud KVS: dynamodb medians, tight tails.
+    The trace arms measure *queueing* under a flash crowd — with the
+    stock sigma the engine's own lognormal tail lottery dominates both
+    phases' p99 on a run this short and drowns the signal."""
+    return SimulatedEngine(
+        read=LatencyModel(base_ms=3.6, per_kb_ms=0.02, sigma=0.12,
+                          batch_base_ms=4.8, batch_per_item_ms=0.35),
+        write=LatencyModel(base_ms=4.2, per_kb_ms=0.02, sigma=0.12,
+                           batch_base_ms=5.5, batch_per_item_ms=0.45),
+        overwrite_visibility_lag_ms=25.0,
+        time_scale=TRACE_TIME_SCALE, seed=seed, name="dynamodb-prov",
+    )
+
+
+def _pct(samples: List[float], q: float) -> float:
+    if not samples:
+        return 0.0
+    ordered = sorted(samples)
+    idx = min(len(ordered) - 1, int(round(q * (len(ordered) - 1))))
+    return ordered[idx]
+
+
+def _client_loop(cluster, phase_state: Dict, out: List[Tuple[str, float]],
+                 stop: threading.Event, seed: int) -> None:
+    """One closed-loop client: route by key, async-commit through the
+    owner's pipeline, record (phase, latency).  Membership churns under
+    us — a node retiring between route and commit surfaces as an
+    exception, and the op simply retries on the refreshed ring."""
+    rng = random.Random(seed)
+    while not stop.is_set():
+        key = f"k/{rng.randrange(KEYS)}"
+        t0 = time.perf_counter()
+        try:
+            node = cluster.pick_node(PlacementHint(keys=(key,)))
+            tx = node.start_transaction()
+            node.put(tx, key, b"v" * VALUE_BYTES)
+            node.commit_transaction_async(tx).result(timeout=120)
+            node.release_transaction(tx)
+        except Exception:
+            time.sleep(0.001)  # retired/killed mid-op: retry, fresh ring
+            continue
+        out.append((phase_state["phase"], time.perf_counter() - t0))
+        # a little client think time decorrelates arrivals — bursts of
+        # lock-step submissions would otherwise manufacture p99 queueing
+        # that no open-world trace exhibits
+        time.sleep(rng.uniform(0.0, 0.03))
+
+
+def _run_trace(autoscale: bool, phase_s: float, seed: int) -> Dict:
+    store = _trace_engine(seed)
+    cluster = make_cluster(
+        store, nodes=BASE_NODES, time_scale=TRACE_TIME_SCALE,
+        # 256 vnodes: at 10 nodes the default 64 leaves ~1.5x ring-share
+        # skew, which shows up directly as the hottest node's p99
+        router=ConsistentHashRouter(vnodes=256),
+        # a small flush page + one flush on the wire bounds per-node commit
+        # throughput the way a provisioned-capacity table does — the flash
+        # crowd must then either queue (static) or spread (autoscaled)
+        node_overrides={
+            "io_workers": IO_WORKERS,
+            "flush_max_items": 4,
+            "flush_concurrency": 1,
+            # batched announcement rounds only: per-commit eager push costs
+            # O(peers) Python per commit, which at 10 nodes on one core
+            # competes with the very ops under measurement
+            "multicast_interval_s": 0.15,
+        },
+        cluster_overrides={"multicast_eager_push": False},
+    )
+    # faster weight ramp: the flash crowd is seconds, not minutes
+    cluster.config.join_ramp_step = 0.5
+    scaler: Optional[Autoscaler] = None
+    if autoscale:
+        scaler = Autoscaler(cluster, cluster.fault_manager, AutoscalerConfig(
+            min_nodes=BASE_NODES, max_nodes=MAX_NODES,
+            # AND-gated triggers: the load floor confirms there is real
+            # demand, the p99 gate is the objective — night runs hot per
+            # node but FAST (no queueing), so it must not scale; the flash
+            # crowd's queueing pushes commit p99 over target and the
+            # cluster widens until p99 is back under it
+            scale_up_load=3.5,
+            scale_up_p99_ms=P99_TARGET_MS,
+            scale_down_load=2.0,
+            up_ticks=1, down_ticks=4,
+            up_cooldown_s=0.05, down_cooldown_s=0.2,
+            # rebalance when one arc carries 3x the mean load — skew is a
+            # split problem, not a fleet-width problem
+            split_ratio=3.0, split_cooldown_s=1.0,
+        ))
+
+    samples: List[Tuple[str, float]] = []
+    phase_state = {"phase": TRACE[0][0]}
+    nodes_seen = {TRACE[0][0]: len(cluster.live_nodes())}
+    clients_of = {p: c for p, c, _m in TRACE}
+    max_nodes = len(cluster.live_nodes())
+    threads: List[threading.Thread] = []
+    stops: List[threading.Event] = []
+
+    def set_clients(n: int) -> None:
+        while len(threads) > n:
+            stops.pop().set()
+            threads.pop()
+        while len(threads) < n:
+            stop = threading.Event()
+            t = threading.Thread(
+                target=_client_loop,
+                args=(cluster, phase_state, samples, stop,
+                      seed * 1000 + len(threads)),
+                daemon=True,
+            )
+            stops.append(stop)
+            threads.append(t)
+            t.start()
+
+    for phase, clients, dur_mult in TRACE:
+        phase_state["phase"] = phase
+        set_clients(clients)
+        deadline = time.perf_counter() + phase_s * dur_mult
+        while time.perf_counter() < deadline:
+            if scaler is not None:
+                scaler.step()
+            # 10 Hz: each tick walks every node's registry — on this
+            # container that CPU bill lands on the same core serving ops
+            time.sleep(0.1)
+        nodes_seen[phase] = len(cluster.live_nodes())
+        max_nodes = max(max_nodes, len(cluster.live_nodes()))
+    for stop in stops:
+        stop.set()
+    for t in threads:
+        t.join(timeout=120)
+    # post-trace: the crowd is gone — let the scaler walk membership all
+    # the way back down (each drain serializes: decide → drain → retire)
+    drained_alive = True
+    if scaler is not None:
+        deadline = time.perf_counter() + 60
+        while time.perf_counter() < deadline:
+            scaler.step()
+            draining = any(
+                cluster.lifecycle_of(n) is NodeLifecycle.DRAINING
+                for n in cluster.live_nodes()
+            )
+            if len(cluster.live_nodes()) <= BASE_NODES and not draining:
+                break
+            time.sleep(0.02)
+        drained = [e for e in scaler.events if e["event"] == "scale-down"]
+        for event in drained:
+            node = next(
+                (n for n in cluster.nodes if n.node_id == event["node"]), None
+            )
+            # a drained node object stays alive (graceful) even after it
+            # leaves membership — a killed one would have alive=False
+            if node is not None and not node.alive:
+                drained_alive = False
+
+    phases = {}
+    for phase, _clients, _mult in TRACE:
+        lat = [dt for p, dt in samples if p == phase]
+        phases[phase] = {
+            "clients": clients_of[phase],
+            "ops": len(lat),
+            "p50_ms": round(_pct(lat, 0.50) * 1e3, 2),
+            "p99_ms": round(_pct(lat, 0.99) * 1e3, 2),
+            "nodes_at_end": nodes_seen[phase],
+        }
+    out = {
+        "arm": "autoscaled" if autoscale else "static",
+        "phases": phases,
+        "max_nodes": max_nodes,
+        "final_nodes": len(cluster.live_nodes()),
+        "total_ops": len(samples),
+    }
+    if scaler is not None:
+        out["scaler_events"] = [
+            {k: v for k, v in e.items() if k != "at"} for e in scaler.events
+        ]
+        out["drained_not_killed"] = drained_alive
+    cluster.stop()
+    return out
+
+
+# ------------------------------------------------------- migration safety arm
+def counter_spec(wf: int) -> WorkflowSpec:
+    """RMW a private counter AND an atomically co-written mirror — the
+    exactly-once + fractured-state probe (same audit as fig_routing)."""
+    spec = WorkflowSpec(f"el-{wf}")
+
+    def bump(ctx):
+        raw = ctx.get(f"elc/{wf}")
+        count = json.loads(raw)["count"] if raw else 0
+        ctx.maybe_fail()
+        payload = json.dumps({"count": count + 1}).encode()
+        ctx.put(f"elc/{wf}", payload)
+        ctx.put(f"elc2/{wf}", payload)  # must never diverge from elc/
+        return count + 1
+
+    spec.step("bump", bump, reads=(f"elc/{wf}",))
+    return spec
+
+
+def _settle_lifecycle(cluster, want, node, timeout_s: float = 30.0) -> bool:
+    deadline = time.perf_counter() + timeout_s
+    while time.perf_counter() < deadline:
+        cluster.advance_lifecycle()
+        if cluster.lifecycle_of(node) is want:
+            return True
+        time.sleep(0.01)
+    return cluster.lifecycle_of(node) is want
+
+
+def _run_migration_arm(workflows: int, seed: int) -> Dict:
+    """Join a node mid-stream, kill a donor while the joiner is still
+    warming up, then drain a node under load — and prove every counter
+    landed exactly once with no fractured pairs."""
+    ts = MIGRATION_TIME_SCALE
+    store = engine("dynamodb", ts, seed=seed)
+    cluster = make_cluster(
+        store, nodes=3, time_scale=ts, fast_failover=True,
+        router="consistent_hash",
+    )
+    platform = LambdaPlatform(
+        FaasConfig(time_scale=ts, max_workers=32, seed=seed)
+    )
+    cfg = PoolConfig(
+        scope=TxnScope.WORKFLOW, max_attempts=25,
+        max_inflight_steps=256, max_admitted_workflows=8192,
+    )
+    wave2 = max(workflows // 3, 8)
+    with WorkflowPool(platform, cluster=cluster, config=cfg) as pool:
+        tickets = [pool.submit(counter_spec(i)) for i in range(workflows)]
+        deadline = time.perf_counter() + 30
+        while (
+            sum(t.done() for t in tickets) < workflows // 3
+            and time.perf_counter() < deadline
+        ):
+            time.sleep(0.005)
+        # migration starts: a ramping joiner begins warm-up handoff ...
+        joiner = cluster.join_node(ramp=True)
+        joining_at_kill = (
+            cluster.lifecycle_of(joiner) is NodeLifecycle.JOINING
+        )
+        # ... and a donor dies before the joiner reaches LIVE
+        killed_id = cluster.kill_node(1).node_id
+        join_completed = _settle_lifecycle(cluster, NodeLifecycle.LIVE, joiner)
+        results = [t.result(timeout=600) for t in tickets]
+        retried = sum(1 for r in results if r.attempts > 1)
+        memo_resumes = sum(r.steps_memoized for r in results)
+        # scale-down under load: drain (never kill) while wave 2 runs
+        wave2_tickets = [
+            pool.submit(counter_spec(workflows + i)) for i in range(wave2)
+        ]
+        victim = cluster.live_nodes()[-1]
+        cluster.drain_node(victim, wait=False)
+        wave2_results = [t.result(timeout=600) for t in wave2_tickets]
+        deadline = time.perf_counter() + 30
+        while (
+            cluster.lifecycle_of(victim) is not NodeLifecycle.RETIRED
+            and time.perf_counter() < deadline
+        ):
+            cluster.advance_lifecycle()
+            time.sleep(0.01)
+        drained_not_killed = (
+            cluster.lifecycle_of(victim) is NodeLifecycle.RETIRED
+            and victim.alive
+        )
+
+    total = workflows + wave2
+    # audit from the durable source of truth: a fresh node bootstrapped
+    # from the Commit Set sees exactly what survived
+    audit = AftNode(store, AftNodeConfig(node_id="elastic-audit"))
+    duplicates = anomalies = incomplete = 0
+    tx = audit.start_transaction()
+    for i in range(total):
+        raw = audit.get(tx, f"elc/{i}")
+        raw2 = audit.get(tx, f"elc2/{i}")
+        count = json.loads(raw)["count"] if raw else 0
+        if count == 0:
+            incomplete += 1
+        duplicates += max(count - 1, 0)
+        if raw != raw2:
+            anomalies += 1  # fractured pair: the atomic co-write diverged
+    audit.abort_transaction(tx)
+
+    out = {
+        "workflows": total,
+        "completed": len(results) + len(wave2_results),
+        "killed_node": killed_id,
+        "joining_at_kill": joining_at_kill,
+        "join_completed": join_completed,
+        "workflows_retried": retried,
+        "steps_memo_resumed": memo_resumes,
+        "drained_not_killed": drained_not_killed,
+        "incomplete_counters": incomplete,
+        "duplicate_effects": duplicates,
+        "anomalies": anomalies,
+        "exactly_once": duplicates == 0 and incomplete == 0,
+    }
+    platform.shutdown()
+    cluster.stop()
+    return out
+
+
+def run(quick: bool = True) -> Dict:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke:
+        phase_s, mig_workflows = 3.0, 45
+    elif quick:
+        phase_s, mig_workflows = 4.0, 150
+    else:
+        phase_s, mig_workflows = 8.0, 600
+
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(
+        path=os.environ.get(obs_trace.TRACE_FILE_ENV), capacity=500_000
+    )
+    try:
+        static = _run_trace(autoscale=False, phase_s=phase_s, seed=11)
+        autoscaled = _run_trace(autoscale=True, phase_s=phase_s, seed=11)
+        migration = _run_migration_arm(mig_workflows, seed=29)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        tracer.close()
+    checked = check_events(tracer.events())
+
+    def deg(arm: Dict) -> float:
+        base = max(arm["phases"]["night"]["p99_ms"], 1e-9)
+        return round(arm["phases"]["flash_steady"]["p99_ms"] / base, 2)
+
+    out = {
+        "base_nodes": BASE_NODES,
+        "max_nodes": MAX_NODES,
+        "io_workers": IO_WORKERS,
+        "trace": [{"phase": p, "clients": c, "dur_mult": m}
+                  for p, c, m in TRACE],
+        "static": static,
+        "autoscaled": autoscaled,
+        "migration": migration,
+        "trace_events": len(tracer.events()),
+        "checker_violations": len(checked.violations),
+        "headline": {
+            # the two gated ratios: flash-crowd p99 over the arm's own
+            # night baseline
+            "static_p99_degradation": deg(static),
+            "autoscaled_p99_degradation": deg(autoscaled),
+            "autoscaled_peak_p99_ms":
+                autoscaled["phases"]["flash_steady"]["p99_ms"],
+            "static_peak_p99_ms": static["phases"]["flash_steady"]["p99_ms"],
+            "autoscaled_max_nodes": autoscaled["max_nodes"],
+            "scaled_back_down": autoscaled["final_nodes"] <= BASE_NODES + 1,
+            "drained_not_killed": (
+                autoscaled.get("drained_not_killed", True)
+                and migration["drained_not_killed"]
+            ),
+            "migration_exactly_once": migration["exactly_once"],
+            "migration_anomalies": migration["anomalies"],
+            "checker_violations": len(checked.violations),
+        },
+    }
+    save("fig_elastic", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -33,12 +33,13 @@ MODULES = {
     "figr": "benchmarks.fig_routing",
     "figc": "benchmarks.fig_chain",
     "figa": "benchmarks.fig_async",
+    "fige": "benchmarks.fig_elastic",
     "figs": "benchmarks.fig_serve",   # needs the [jax] extra
     "ckpt": "benchmarks.ckpt_bench",
 }
 
 # fast, representative subset for CI smoke runs (seconds each)
-SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc", "figa"]
+SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc", "figa", "fige"]
 
 
 def main() -> int:

@@ -13,7 +13,7 @@ from .atomic_read import (
     fractured_read_witness,
     is_atomic_readset,
 )
-from .cluster import AftClient, AftCluster, ClusterConfig
+from .cluster import AftClient, AftCluster, ClusterConfig, NodeLifecycle
 from .commit_cache import CommitSetCache, DataCache
 from .errors import (
     AftError,
@@ -24,7 +24,12 @@ from .errors import (
     TransactionNotRunning,
     UnknownTransaction,
 )
-from .fault_manager import FaultManager, FaultManagerConfig
+from .fault_manager import (
+    Autoscaler,
+    AutoscalerConfig,
+    FaultManager,
+    FaultManagerConfig,
+)
 from .gc import LocalGcAgent
 from .ids import Clock, TxnHandle, TxnId, fresh_uuid
 from .multicast import (
@@ -63,6 +68,9 @@ __all__ = [
     "AftCluster",
     "AftClient",
     "ClusterConfig",
+    "NodeLifecycle",
+    "Autoscaler",
+    "AutoscalerConfig",
     "TxnState",
     "TxnId",
     "TxnHandle",

@@ -4,9 +4,11 @@ Plays the role Kubernetes plays in the paper: membership, a pluggable
 request router (``core/routing.py`` — stateless round-robin by default,
 exactly the paper's §6 load balancer), a standby-node pool for fast
 replacement, and the wiring between nodes, the multicast bus, local GC
-agents, and the fault manager.  Autoscaling policy is pluggable (§4.3
-leaves it out of scope; we provide a simple load-based policy as a
-beyond-paper extension in ``autoscale.py``).
+agents, and the fault manager.  Membership is an explicit lifecycle
+(:class:`NodeLifecycle`: JOINING → LIVE → DRAINING → RETIRED) driven by
+``join_node``/``drain_node``/``advance_lifecycle``; autoscaling policy
+(§4.3 leaves it out of scope) is the :class:`~repro.core.fault_manager.
+Autoscaler`, a beyond-paper extension watching the obs metrics view.
 
 ``AftClient`` is the application-facing handle: a logical request (possibly
 spanning many FaaS functions / trainer hosts) opens a session pinned to one
@@ -21,6 +23,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Callable, Dict, List, Optional, Union
 
 from ..storage.base import StorageEngine
@@ -31,6 +34,28 @@ from .ids import TxnId
 from .multicast import MulticastAgent, MulticastBus
 from .node import AftNode, AftNodeConfig
 from .routing import PlacementHint, Router, make_router
+
+
+class NodeLifecycle(Enum):
+    """Explicit membership lifecycle (elastic cluster).
+
+    ``JOINING``  — wired into the bus/ring at a ramping arc weight; warm-up
+                   handoff streams the inherited arcs' commit-set metadata
+                   from the prior owners before the weight reaches 1.0;
+    ``LIVE``     — full ring weight, full GC-ack responsibilities;
+    ``DRAINING`` — ring weight 0 (no *new* sessions), finishing in-flight
+                   sessions; still a bus/watermark peer so its commits keep
+                   announcing; excluded from the GC marker-ack quorum (its
+                   agent is on the way out and must not stall retirement);
+    ``RETIRED``  — out of membership: bus inbox unregistered, ring arcs
+                   redistributed, peers' watermark floors no longer wait on
+                   it, marker acks no longer require it.
+    """
+
+    JOINING = "joining"
+    LIVE = "live"
+    DRAINING = "draining"
+    RETIRED = "retired"
 
 
 @dataclass
@@ -47,6 +72,27 @@ class ClusterConfig:
     # "consistent_hash", "cache_aware") or a Router instance; None keeps the
     # paper's stateless round-robin LB, decision-for-decision.
     routing: Union[str, Router, None] = None
+    # --- elastic membership (join/drain lifecycle) ----------------------
+    # a JOINING node enters the ring at this arc weight and ramps by
+    # join_ramp_step per advance_lifecycle() tick until it reaches 1.0
+    # (→ LIVE); ring policies without weights go LIVE on the first tick
+    join_initial_weight: float = 0.25
+    join_ramp_step: float = 0.25
+    # stream the inherited arcs' commit-set records + uuid→tid metadata
+    # from the prior owners before a joiner takes traffic
+    warmup_handoff: bool = True
+    # cap per-donor handoff volume (records)
+    warmup_handoff_limit: int = 10_000
+    # blocking drain (scale_to shrink / drain_node(wait=True)): how long to
+    # wait for in-flight sessions before retiring anyway (the session
+    # holders then fall back to the §3.3.1 retry machinery)
+    drain_timeout_s: float = 10.0
+    # commit-time per-record fan-out (§4 eager push).  Off = announcements
+    # ride the periodic batched multicast round only — same guarantees,
+    # higher metadata latency, O(1) instead of O(peers) work per commit
+    # (the knob large elastic clusters turn when commit rate × peer count
+    # outgrows the announcement budget)
+    multicast_eager_push: bool = True
 
 
 class AftCluster:
@@ -61,12 +107,22 @@ class AftCluster:
         self.router = make_router(self.config.routing)
         self._node_seq = 0
         self._lock = threading.RLock()
+        # explicit membership lifecycle (elastic cluster): node_id → state
+        self.lifecycle: Dict[str, NodeLifecycle] = {}
+        # (event, node) callbacks fired on lifecycle transitions — the hook
+        # the gossip planes (core/gossip.py Digest/MetricsPlane) use to
+        # register/unregister peers in step with ring updates
+        self._membership_listeners: List[
+            Callable[[str, AftNode], None]] = []
         self.fault_manager = FaultManager(
             storage,
             self.bus,
             membership=self.all_nodes,  # incl. dead: heartbeat detection
             config=self.config.fault_manager,
             on_node_failure=self._replace_node,
+            # GC marker-ack quorum: LIVE/JOINING members only — DRAINING
+            # and RETIRED nodes must never stall marker retirement
+            ack_membership=self.gc_ack_nodes,
         )
         for _ in range(self.config.num_nodes):
             self._add_node()
@@ -83,17 +139,35 @@ class AftCluster:
         cfg = AftNodeConfig(**{**self.config.node.__dict__, "node_id": node_id})
         return AftNode(self.storage, cfg, bootstrap=bootstrap)
 
-    def _wire_node(self, node: AftNode) -> None:
-        agent = MulticastAgent(node, self.bus, peers=self.live_node_ids)
+    def _wire_node(
+        self,
+        node: AftNode,
+        lifecycle: NodeLifecycle = NodeLifecycle.LIVE,
+        weight: float = 1.0,
+    ) -> None:
+        """Membership admission: bus inbox (via the agent constructor), GC
+        agent, membership list, lifecycle state, and ring arcs change
+        together — the inbox exists *before* the ring update can route a
+        session to the node, so an eager push can never hit a missing
+        queue."""
+        agent = MulticastAgent(
+            node, self.bus, peers=self.live_node_ids,
+            eager_push=self.config.multicast_eager_push,
+        )
         gc_agent = LocalGcAgent(node)
         with self._lock:
             self.nodes.append(node)
             self.agents[node.node_id] = agent
             self.gc_agents[node.node_id] = gc_agent
+            self.lifecycle[node.node_id] = lifecycle
+        if weight != 1.0 or self.router.weight_of(node.node_id) != 1.0:
+            self.router.set_weight(node.node_id, weight)
         self._sync_router()
         if self.config.start_background_threads:
             agent.start()
             gc_agent.start()
+        self._notify("join" if lifecycle is NodeLifecycle.JOINING else "live",
+                     node)
 
     def _add_node(self) -> AftNode:
         node = self._make_node()
@@ -109,13 +183,17 @@ class AftCluster:
             agent = self.agents.pop(dead.node_id, None)
             gc_agent = self.gc_agents.pop(dead.node_id, None)
             standby = self.standbys.pop(0) if self.standbys else None
+            self.lifecycle[dead.node_id] = NodeLifecycle.RETIRED
         # resync BEFORE the replacement delay: during the cold-start window
         # the router must already have forgotten the dead node's ring arc
+        self.router.forget_node(dead.node_id)
         self._sync_router()
         if agent is not None:
             agent.stop()
         if gc_agent is not None:
             gc_agent.stop()
+        self._forget_peer_everywhere(dead.node_id)
+        self._notify("retired", dead)
         if self.config.replacement_delay_s > 0:
             time.sleep(self.config.replacement_delay_s)  # container download
         node = standby if standby is not None else self._make_node(bootstrap=False)
@@ -134,35 +212,207 @@ class AftCluster:
     def live_node_ids(self) -> List[str]:
         return [n.node_id for n in self.live_nodes()]
 
-    def scale_to(self, n: int) -> None:
-        """Elastically add/remove nodes (coordination-free: §4.3)."""
-        while len(self.live_nodes()) < n:
-            self._add_node()
-        while len(self.live_nodes()) > n:
-            node = self.live_nodes()[-1]
-            self.remove_node(node)
-
-    def remove_node(self, node: AftNode) -> None:
+    def routable_nodes(self) -> List[AftNode]:
+        """Live nodes eligible for NEW sessions: DRAINING members keep
+        serving their in-flight sessions (and stay bus/watermark peers) but
+        take no new placements, under every routing policy."""
         with self._lock:
+            out = [
+                n for n in self.nodes
+                if n.alive
+                and self.lifecycle.get(n.node_id) is not NodeLifecycle.DRAINING
+            ]
+        return out or self.live_nodes()  # all-draining: serve rather than fail
+
+    def gc_ack_nodes(self) -> List[AftNode]:
+        """The GC marker-ack quorum (``FaultManager.sweep_finished_markers``):
+        LIVE and JOINING members only.  A DRAINING node's GC agent is on the
+        way out and a RETIRED/dead one is gone — requiring their acks would
+        stall marker retirement forever (the historical scale-down bug)."""
+        with self._lock:
+            return [
+                n for n in self.nodes
+                if n.alive
+                and self.lifecycle.get(n.node_id)
+                in (NodeLifecycle.LIVE, NodeLifecycle.JOINING)
+            ]
+
+    def lifecycle_of(self, node: AftNode) -> NodeLifecycle:
+        with self._lock:
+            return self.lifecycle.get(node.node_id, NodeLifecycle.RETIRED)
+
+    # -- membership listeners (gossip planes, tests) ------------------------
+    def add_membership_listener(
+        self, fn: Callable[[str, AftNode], None]
+    ) -> None:
+        """``fn(event, node)`` fires on lifecycle transitions: ``join``,
+        ``live``, ``draining``, ``retired``.  Fired after the cluster's own
+        state (ring, bus, agents) reflects the transition, so a listener
+        registering metrics-plane peers sees a consistent view."""
+        with self._lock:
+            self._membership_listeners.append(fn)
+
+    def _notify(self, event: str, node: AftNode) -> None:
+        with self._lock:
+            listeners = list(self._membership_listeners)
+        for fn in listeners:
+            try:
+                fn(event, node)
+            except Exception:
+                pass  # listeners are observers, never correctness hooks
+
+    # -------------------------------------------- elastic lifecycle: join
+    def join_node(self, *, ramp: bool = True) -> AftNode:
+        """Grow the cluster by one node through the explicit lifecycle:
+        wire bus + ring (JOINING, low arc weight), stream warm-up handoff
+        from the prior arc owners, then ramp to LIVE.  With ``ramp=True``
+        the weight ramp advances on :meth:`advance_lifecycle` ticks (the
+        autoscaler's loop or ``step_all``); ``ramp=False`` joins at full
+        weight immediately (still warmed up) — the fast path ``scale_to``
+        uses."""
+        node = self._make_node(bootstrap=False)
+        weight = self.config.join_initial_weight if ramp else 1.0
+        state = NodeLifecycle.JOINING if ramp else NodeLifecycle.LIVE
+        self._wire_node(node, lifecycle=state, weight=weight)
+        if self.config.warmup_handoff:
+            self._warmup_handoff(node)
+        return node
+
+    def _warmup_handoff(self, joiner: AftNode) -> int:
+        """Stream commit-set records (and thereby uuid → tid idempotence
+        metadata) for the joiner's inherited arcs from every prior owner.
+        With a ring policy the transferred range is exact (ring ownership
+        under the *new* ring); weightless policies stream the donors' recent
+        records wholesale, bounded by the handoff limit."""
+        owner_id = getattr(self.router, "owner_id", None)
+        if owner_id is not None:
+            def owned(key: str) -> bool:
+                return owner_id(key) == joiner.node_id
+        else:
+            def owned(key: str) -> bool:
+                return True
+        moved = 0
+        for donor in self.live_nodes():
+            if donor.node_id == joiner.node_id or not donor.alive:
+                continue
+            try:
+                records = donor.handoff_records(
+                    owned, limit=self.config.warmup_handoff_limit
+                )
+                if records:
+                    joiner.warmup_from(records)
+                    moved += len(records)
+            except NodeFailed:
+                continue  # donor died mid-handoff; anti-entropy heals (§4.2)
+        return moved
+
+    # ------------------------------------------- elastic lifecycle: drain
+    def drain_node(self, node: AftNode, *, wait: bool = False,
+                   timeout_s: Optional[float] = None) -> None:
+        """Graceful scale-down: mark DRAINING (ring weight → 0, so no new
+        sessions), let in-flight sessions finish, then retire.  With
+        ``wait=False`` retirement happens on :meth:`advance_lifecycle`
+        ticks; ``wait=True`` blocks until the node is idle (or
+        ``timeout_s``), then retires — in-flight sessions surviving the
+        timeout fall back to the §3.3.1 retry machinery.  This path NEVER
+        reuses :meth:`kill_node`: the node stays alive, its commits keep
+        announcing, and its pipeline flushes before detach."""
+        with self._lock:
+            if self.lifecycle.get(node.node_id) in (
+                NodeLifecycle.RETIRED, NodeLifecycle.DRAINING
+            ):
+                if not wait:
+                    return
+            else:
+                self.lifecycle[node.node_id] = NodeLifecycle.DRAINING
+        self.router.set_weight(node.node_id, 0.0)
+        self._sync_router()
+        self._notify("draining", node)
+        if not wait:
+            return
+        deadline = time.monotonic() + (
+            self.config.drain_timeout_s if timeout_s is None else timeout_s
+        )
+        while (node.alive and node.active_transaction_count() > 0
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        self._retire_node(node)
+
+    def _retire_node(self, node: AftNode) -> None:
+        """Final membership exit, atomic with the ring update: the node
+        leaves ``self.nodes`` (so watermark floors and GC marker acks stop
+        considering it), its bus inbox unregisters, peers drop its gossip
+        state, and its pipeline flushes shut."""
+        with self._lock:
+            if self.lifecycle.get(node.node_id) is NodeLifecycle.RETIRED:
+                return
             if node in self.nodes:
                 self.nodes.remove(node)
             agent = self.agents.pop(node.node_id, None)
             gc_agent = self.gc_agents.pop(node.node_id, None)
+            self.lifecycle[node.node_id] = NodeLifecycle.RETIRED
+        self.router.forget_node(node.node_id)
         self._sync_router()
-        # drain its fresh commits into the bus before detaching
         if agent is not None:
-            agent.step()
-            agent.stop()
+            if node.alive:
+                agent.step()  # final flush: fresh commits reach peers + FM
+            agent.stop()      # unregisters the bus inbox
         if gc_agent is not None:
             gc_agent.stop()
+        self._forget_peer_everywhere(node.node_id)
         node.close_pipeline()  # graceful leave: flush + stop I/O threads
+        self._notify("retired", node)
+
+    def _forget_peer_everywhere(self, node_id: str) -> None:
+        for peer_agent in list(self.agents.values()):
+            peer_agent.forget_peer(node_id)
+
+    def advance_lifecycle(self) -> None:
+        """One lifecycle tick: ramp JOINING weights toward LIVE, retire
+        idle DRAINING nodes.  Driven by ``step_all`` (tests), the
+        autoscaler loop, or any caller pacing its own migrations."""
+        with self._lock:
+            entries = [
+                (n, self.lifecycle.get(n.node_id)) for n in self.nodes
+            ]
+        for node, state in entries:
+            if state is NodeLifecycle.JOINING:
+                if not node.alive:
+                    continue  # heartbeat path owns dead nodes
+                w = self.router.weight_of(node.node_id)
+                w = min(1.0, w + self.config.join_ramp_step)
+                self.router.set_weight(node.node_id, w)
+                self._sync_router()
+                if w >= 1.0:
+                    with self._lock:
+                        self.lifecycle[node.node_id] = NodeLifecycle.LIVE
+                    self._notify("live", node)
+            elif state is NodeLifecycle.DRAINING:
+                if not node.alive or node.active_transaction_count() == 0:
+                    self._retire_node(node)
+
+    def scale_to(self, n: int) -> None:
+        """Elastically add/remove nodes (coordination-free: §4.3).  Growth
+        joins warmed-up full-weight nodes; shrink always DRAINS — graceful
+        retirement never reuses the kill path."""
+        while len(self.live_nodes()) < n:
+            self.join_node(ramp=False)
+        while len(self.live_nodes()) > n:
+            node = self.live_nodes()[-1]
+            self.drain_node(node, wait=True)
+
+    def remove_node(self, node: AftNode) -> None:
+        """Immediate graceful removal (drain with no grace period) — kept
+        for callers that know the node is idle; prefer :meth:`drain_node`."""
+        self.drain_node(node, wait=True, timeout_s=0.0)
 
     def kill_node(self, index: int = 0) -> AftNode:
         """Failure injection (§6.7): hard-kill a live node.  Its agents are
         detached immediately — in particular the multicast inbox is
         unregistered, or peers' eager pushes would accumulate in a queue
         nobody will ever drain (the node stays in ``self.nodes`` so
-        heartbeat detection still sees the corpse)."""
+        heartbeat detection still sees the corpse).  This is the CRASH
+        path; graceful scale-down goes through :meth:`drain_node`."""
         with self._lock:
             node = self.live_nodes()[index]
             node.fail()
@@ -186,9 +436,11 @@ class AftCluster:
         (``core/routing.py``; default is the paper's §6 stateless
         round-robin LB).  Never returns a node already known dead: the
         live-list snapshot is re-validated after the policy chooses,
-        closing the ``kill_node`` → ``_replace_node`` race window."""
+        closing the ``kill_node`` → ``_replace_node`` race window.
+        DRAINING nodes are excluded from the candidate set (they finish
+        their in-flight sessions but take no new ones)."""
         for _ in range(4):
-            nodes = self.live_nodes()
+            nodes = self.routable_nodes()
             if not nodes:
                 raise NodeFailed("no live AFT nodes")
             node = self.router.route(nodes, hint)
@@ -226,6 +478,7 @@ class AftCluster:
         for gc_agent in list(self.gc_agents.values()):
             gc_agent.step()
         self.fault_manager.step()
+        self.advance_lifecycle()  # ramp JOINING, retire idle DRAINING
 
     def __enter__(self) -> "AftCluster":
         return self

@@ -121,10 +121,16 @@ class FaultManager:
         membership: Callable[[], List[AftNode]],
         config: Optional[FaultManagerConfig] = None,
         on_node_failure: Optional[Callable[[AftNode], None]] = None,
+        ack_membership: Optional[Callable[[], List[AftNode]]] = None,
     ) -> None:
         self.storage = storage
         self.bus = bus
         self.membership = membership
+        # the GC marker-ack quorum may be narrower than full membership: an
+        # elastic cluster passes LIVE/JOINING members only, so a DRAINING or
+        # RETIRED node never stalls marker retirement (it acked its last
+        # sweep before detaching, or its metadata died with it)
+        self.ack_membership = ack_membership
         self.config = config or FaultManagerConfig()
         self.on_node_failure = on_node_failure
         self.bus.register(FAULT_MANAGER_ID)
@@ -316,7 +322,8 @@ class FaultManager:
         markers = self.storage.list_keys(WF_FINISH_PREFIX)
         if not markers:
             return 0
-        live = [n for n in self.membership() if n.alive]
+        ack_src = self.ack_membership or self.membership
+        live = [n for n in ack_src() if n.alive]
         doomed: List[str] = []
         raws = self.storage.get_batch(markers)
         for marker in markers:
@@ -429,3 +436,225 @@ class FaultManager:
         for t in self._threads:
             t.join(timeout=5)
         self._threads.clear()
+
+
+# ---------------------------------------------------------------- autoscaler
+@dataclass
+class AutoscalerConfig:
+    """Policy knobs for :class:`Autoscaler` (Cloudburst-style signals over
+    the obs :class:`~repro.obs.registry.Registry`)."""
+
+    min_nodes: int = 1
+    max_nodes: int = 8
+    # load signal: mean (open_sessions + inflight_ops) per routable node
+    scale_up_load: float = 6.0
+    scale_down_load: float = 1.0
+    # latency signal: merged commit.total p99 must exceed this to scale up
+    # even when the load signal alone is borderline (0 disables the gate)
+    scale_up_p99_ms: float = 0.0
+    # persistence: a decision needs this many CONSECUTIVE ticks past
+    # threshold — one bursty sample must not flap membership
+    up_ticks: int = 2
+    down_ticks: int = 4
+    # cooldowns (seconds) after a membership change in either direction
+    up_cooldown_s: float = 0.5
+    down_cooldown_s: float = 2.0
+    # hot-arc splitting: split when the hottest arc carries at least this
+    # multiple of the mean arc load (router must support split_hot_arc)
+    split_ratio: float = 4.0
+    split_cooldown_s: float = 1.0
+    tick_interval_s: float = 0.25
+
+
+class Autoscaler:
+    """Watches the cluster's merged metrics view and issues elastic
+    membership decisions: ``scale-up`` (join a ramping node), ``scale-down``
+    (drain the last-joined node — never kill), and ``split`` (hot-arc
+    midpoint split on the ring).
+
+    Signals come from the obs :class:`Registry` snapshots the fault manager
+    aggregates (gossip-fed, or :meth:`FaultManager.collect_metrics` direct
+    refresh): per-node ``open_sessions``/``inflight_ops`` gauges for load
+    and the merged ``commit.total`` histogram p99 for latency.  Decisions
+    are serialized — while any node is JOINING or DRAINING the autoscaler
+    only ticks :meth:`AftCluster.advance_lifecycle` and waits, so at most
+    one migration is in flight at a time and warm-up handoff bandwidth is
+    never split."""
+
+    def __init__(
+        self,
+        cluster,  # AftCluster (untyped to avoid the import cycle)
+        fm: FaultManager,
+        config: Optional[AutoscalerConfig] = None,
+    ) -> None:
+        self.cluster = cluster
+        self.fm = fm
+        self.config = config or AutoscalerConfig()
+        self.events: List[Dict[str, object]] = []
+        self._up_streak = 0
+        self._down_streak = 0
+        self._last_scale_at = 0.0
+        self._last_split_at = 0.0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -------------------------------------------------------------- signals
+    def _load_signal(self) -> float:
+        """Mean (open_sessions + inflight_ops) per routable node."""
+        view = self.fm.cluster_metrics()["nodes"]
+        routable = {n.node_id for n in self.cluster.routable_nodes()}
+        loads = [
+            snap.get("open_sessions", 0.0) + snap.get("inflight_ops", 0.0)
+            for node_id, snap in view.items()
+            if node_id in routable
+        ]
+        if not loads:
+            return 0.0
+        return sum(loads) / len(loads)
+
+    def _p99_ms(self) -> float:
+        merged = self.fm.cluster_metrics()["cluster"]
+        hist = merged.get("commit.total")
+        if isinstance(hist, dict):
+            return float(hist.get("p99_ms", 0.0))
+        return 0.0
+
+    def _migration_in_flight(self) -> bool:
+        from .cluster import NodeLifecycle  # late import: avoid cycle
+
+        with self.cluster._lock:
+            states = [
+                self.cluster.lifecycle.get(n.node_id)
+                for n in self.cluster.nodes
+            ]
+        return any(
+            s in (NodeLifecycle.JOINING, NodeLifecycle.DRAINING)
+            for s in states
+        )
+
+    def _record(self, kind: str, **detail: object) -> None:
+        self.events.append({"event": kind, "at": time.monotonic(), **detail})
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> Optional[str]:
+        """One policy tick.  Returns the decision taken (``"scale-up"``,
+        ``"scale-down"``, ``"split"``) or ``None``."""
+        cfg = self.config
+        # keep in-flight migrations moving before (and instead of) deciding
+        self.cluster.advance_lifecycle()
+        if self._migration_in_flight():
+            return None
+        self.fm.collect_metrics()
+        load = self._load_signal()
+        p99 = self._p99_ms()
+        n = len(self.cluster.live_nodes())
+        now = time.monotonic()
+
+        if load >= cfg.scale_up_load and (
+            cfg.scale_up_p99_ms <= 0.0 or p99 >= cfg.scale_up_p99_ms
+        ):
+            self._up_streak += 1
+            self._down_streak = 0
+        elif load <= cfg.scale_down_load:
+            self._down_streak += 1
+            self._up_streak = 0
+        else:
+            self._up_streak = 0
+            self._down_streak = 0
+
+        if (
+            self._up_streak >= cfg.up_ticks
+            and n < cfg.max_nodes
+            and now - self._last_scale_at >= cfg.up_cooldown_s
+        ):
+            node = self.cluster.join_node(ramp=True)
+            self._up_streak = 0
+            self._last_scale_at = now
+            self._record(
+                "scale-up", node=node.node_id, load=load, p99_ms=p99, nodes=n
+            )
+            return "scale-up"
+
+        if (
+            self._down_streak >= cfg.down_ticks
+            and n > cfg.min_nodes
+            and now - self._last_scale_at >= cfg.down_cooldown_s
+        ):
+            victim = self.cluster.live_nodes()[-1]
+            self.cluster.drain_node(victim, wait=False)
+            self._down_streak = 0
+            self._last_scale_at = now
+            self._record(
+                "scale-down", node=victim.node_id, load=load, nodes=n
+            )
+            return "scale-down"
+
+        # hot-arc split: rebalance without changing the node count
+        split_hot = getattr(self.cluster.router, "split_hot_arc", None)
+        hottest = getattr(self.cluster.router, "hottest_arc", None)
+        if (
+            split_hot is not None
+            and hottest is not None
+            and now - self._last_split_at >= cfg.split_cooldown_s
+        ):
+            hot = hottest()
+            if hot is not None:
+                arc_hash, owner, arc_load, mean = hot
+                if mean > 0 and arc_load / mean >= cfg.split_ratio:
+                    coldest = self._coldest_node(exclude=owner)
+                    if coldest is not None and split_hot(
+                        coldest, min_ratio=cfg.split_ratio
+                    ):
+                        self._last_split_at = now
+                        self._record(
+                            "split",
+                            arc=arc_hash,
+                            from_node=owner,
+                            to_node=coldest,
+                        )
+                        decay = getattr(
+                            self.cluster.router, "decay_arc_loads", None
+                        )
+                        if decay is not None:
+                            decay()
+                        return "split"
+        return None
+
+    def _coldest_node(self, exclude: str) -> Optional[str]:
+        view = self.fm.cluster_metrics()["nodes"]
+        best_id, best_load = None, None
+        for node in self.cluster.routable_nodes():
+            if node.node_id == exclude:
+                continue
+            snap = view.get(node.node_id, {})
+            load = snap.get("open_sessions", 0.0) + snap.get(
+                "inflight_ops", 0.0
+            )
+            if best_load is None or load < best_load:
+                best_id, best_load = node.node_id, load
+        return best_id
+
+    # -------------------------------------------------------------- driving
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                try:
+                    self.step()
+                except Exception:
+                    pass  # policy is advisory; next tick retries
+                self._stop.wait(self.config.tick_interval_s)
+
+        self._thread = threading.Thread(
+            target=loop, name="autoscaler", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None

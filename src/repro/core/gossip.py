@@ -137,6 +137,41 @@ class DigestPlane:
         for node in self.nodes:
             node.set_watermark_provider(self._floor_fn(node))
 
+    # -- elastic membership --------------------------------------------------
+    def add_node(self, node: AftNode) -> None:
+        """Admit a (JOINING) member to the gossip plane: digest slot,
+        horizon book-keeping, and watermark provider in one step — the
+        node starts gating its own watermark on the full peer set
+        immediately (fail-safe: unheard peers floor at -1)."""
+        if any(n.node_id == node.node_id for n in self.nodes):
+            return
+        self.nodes.append(node)
+        self._pending.setdefault(node.node_id, [])
+        self.peer_horizons.setdefault(node.node_id, {})
+        node.set_watermark_provider(self._floor_fn(node))
+
+    def remove_node(self, node_or_id) -> None:
+        """Retire a member: peers' watermark floors stop waiting on its
+        horizon the moment it leaves ``self.nodes`` (the floor closure
+        re-reads the list every round), and its gathered-horizon residue is
+        dropped so a later rejoin starts clean."""
+        node_id = getattr(node_or_id, "node_id", node_or_id)
+        self.nodes = [n for n in self.nodes if n.node_id != node_id]
+        self._pending.pop(node_id, None)
+        self.peer_horizons.pop(node_id, None)
+        for known in self.peer_horizons.values():
+            known.pop(node_id, None)
+
+    def membership_listener(self):
+        """Adapter for ``AftCluster.add_membership_listener``: keeps the
+        plane's peer set in step with lifecycle transitions."""
+        def on_event(event: str, node: AftNode) -> None:
+            if event in ("join", "live"):
+                self.add_node(node)
+            elif event == "retired":
+                self.remove_node(node)
+        return on_event
+
     def _floor_fn(self, node: AftNode):
         """Watermark floor for one node: min over the *currently live* other
         plane members' gathered horizons (-1 until heard from — fail-safe),
@@ -269,6 +304,29 @@ class MetricsPlane:
         self.views: Dict[str, dict] = {}  # node_id → latest snapshot
         self.stats = {"rounds": 0, "published": 0, "ingested": 0,
                       "hash_mismatches": 0}
+
+    # -- elastic membership --------------------------------------------------
+    def add_node(self, node: AftNode) -> None:
+        if any(n.node_id == node.node_id for n in self.nodes):
+            return
+        self.nodes.append(node)
+
+    def remove_node(self, node_or_id) -> None:
+        node_id = getattr(node_or_id, "node_id", node_or_id)
+        self.nodes = [n for n in self.nodes if n.node_id != node_id]
+        self._ingested_seq.pop(node_id, None)
+        self.views.pop(node_id, None)
+
+    def membership_listener(self):
+        """Adapter for ``AftCluster.add_membership_listener``: a retired
+        node's last snapshot leaves the merged view at once, so autoscaler
+        signals never average in a gone member."""
+        def on_event(event: str, node: AftNode) -> None:
+            if event in ("join", "live"):
+                self.add_node(node)
+            elif event == "retired":
+                self.remove_node(node)
+        return on_event
 
     def _publish(self, node: AftNode) -> Tuple[int, int]:
         """Write the node's snapshot blob; returns (seq, hash64)."""

@@ -268,6 +268,9 @@ class MulticastAgent:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._seq_lock = threading.Lock()
+        # serializes whole §4 rounds: the background loop and foreign-thread
+        # callers (retire's final flush, step_all) share receiver state
+        self._step_lock = threading.Lock()
         self._seq = 0  # this node's broadcast counter (per-source contiguity)
         # receiver-side horizon tracking, all keyed by source node id
         self._next_seq: Dict[str, int] = {}
@@ -317,6 +320,10 @@ class MulticastAgent:
     def step(self) -> None:
         if not self.node.alive:
             return
+        with self._step_lock:
+            self._step()
+
+    def _step(self) -> None:
         # horizon BEFORE draining: every commit visible after this point is
         # either in the drained batch (announced now) or has a timestamp
         # above the horizon (in-flight commits cap it) — so the claim
@@ -424,6 +431,9 @@ class MulticastAgent:
                 if not self.node.alive:
                     return
                 raise
+            if not pend:  # drained while bootstrap() ran
+                self._gap_rounds.pop(src, None)
+                continue
             top = max(pend)
             self._adopt_horizon(src, pend[top])
             self._next_seq[src] = top + 1
@@ -431,6 +441,19 @@ class MulticastAgent:
             self._pending.pop(src, None)
             self._gap_rounds.pop(src, None)
             self.gap_repairs += 1
+
+    def forget_peer(self, peer_id: str) -> None:
+        """A peer RETIRED (graceful leave, ``core/cluster.py``): drop its
+        horizon-tracking state so a sequence gap it left behind can never
+        trigger a pointless full re-bootstrap, and its stale horizon can
+        never be misread if a future node reuses the id.  The watermark
+        floor needs no change — it re-evaluates CURRENT membership every
+        call, so the retired peer already stopped gating it."""
+        with self._step_lock:
+            self._next_seq.pop(peer_id, None)
+            self._pending.pop(peer_id, None)
+            self._gap_rounds.pop(peer_id, None)
+            self.peer_horizons.pop(peer_id, None)
 
     def _watermark_floor(self) -> Optional[int]:
         """Min of live peers' horizons, re-evaluated against CURRENT

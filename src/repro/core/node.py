@@ -114,9 +114,9 @@ class NodeStats(dict):
     Dict access (``node.stats["commits"]``) keeps the historical counter
     surface; calling it (``node.stats()``) returns a *thread-safe snapshot*
     with derived gauges — open sessions, in-flight ops, data-cache hit
-    rate — taken under the node lock.  The snapshot is what routing
-    policies (``core/routing.py``) and benchmark reports consume: a copy,
-    never a live view, so a scorer iterating it cannot race the node.
+    rate — taken under the node lock.  Benchmark reports and legacy tests
+    are the remaining consumers; routing policies (``core/routing.py``)
+    read ``node.registry.snapshot()`` directly.
 
     Deprecation shim: the snapshot is now assembled by the node's metrics
     registry (``node.registry``, ``repro/obs/registry.py``); calling
@@ -231,9 +231,8 @@ class AftNode:
         # asynchronous I/O pipeline: created lazily on first async use, so
         # synchronous workloads never start its threads
         self._pipeline: Optional[StorageIOPipeline] = None
-        # commit-latency samples (seconds).  stats() sorts a snapshot per
-        # call and routing policies call stats() on the placement hot path,
-        # so the window stays small enough that the sort is tens of µs.
+        # commit-latency samples (seconds) for the legacy stats() snapshot
+        # (routing reads the registry's commit.total histogram instead).
         # _lat_lock guards iteration-vs-append: sorting a deque while a
         # committer appends raises "deque mutated during iteration".
         self._commit_lat: Deque[float] = deque(maxlen=1024)
@@ -253,6 +252,8 @@ class AftNode:
                 "prefetched_keys": 0,
                 "aborts": 0,
                 "staleness_aborts": 0,
+                "warmup_records_in": 0,
+                "handoff_records_out": 0,
                 "remote_merges": 0,
                 "remote_skipped_superseded": 0,
                 "gc_removed": 0,
@@ -1271,6 +1272,38 @@ class AftNode:
     def committed_tid_for_uuid(self, uuid: str) -> Optional[TxnId]:
         with self._lock:
             return self._committed_uuids.get(uuid)
+
+    # ------------------------------------- elastic membership: arc handoff
+    def handoff_records(
+        self, owned: Callable[[str], bool], limit: int = 10_000
+    ) -> List[TransactionRecord]:
+        """Warm-up handoff, donor side: the commit-set records whose write
+        sets touch key ranges ``owned`` (a predicate over storage keys —
+        typically "does the new ring route this key to the joiner?").  The
+        prior arc owner streams these to a JOINING node *before* the node
+        takes live traffic, so its Commit Set Cache and uuid → tid
+        idempotence map (the in-memory view of the ``u/`` index) are warm
+        for exactly the arcs it inherits — reads on the transferred range
+        resolve locally instead of paying the durable bootstrap scan."""
+        self._check_alive()
+        out: List[TransactionRecord] = []
+        for record in self.cache.snapshot_records():
+            if len(out) >= limit:
+                break
+            if any(owned(k) for k in record.write_set):
+                out.append(record)
+        self.stats["handoff_records_out"] += len(out)
+        return out
+
+    def warmup_from(self, records: Iterable[TransactionRecord]) -> int:
+        """Warm-up handoff, receiver side: fold a donor's streamed records
+        into this node's commit-set cache and uuid → tid map (both filled by
+        :meth:`merge_remote_commits`, which also tombstone-tracks anything
+        already superseded)."""
+        records = list(records)
+        merged = self.merge_remote_commits(records)
+        self.stats["warmup_records_in"] += len(records)
+        return merged
 
     # ------------------------------------------------------------------- GC
     def _has_active_readers(self, record: TransactionRecord) -> bool:

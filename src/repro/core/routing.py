@@ -21,10 +21,10 @@ This module extracts the placement decision out of ``AftCluster``/
   ids.  Requests carrying the same :class:`PlacementHint` (workflow uuid or
   primary key) deterministically rehit the same node across clients and
   retries, and node death/scale moves only the dead node's arc;
-* :class:`CacheAwareRouter` — scores every live node from its
-  ``AftNode.stats()`` snapshot: declared-read-set presence in the data
-  cache, the node's cache hit rate, and its current load (open sessions +
-  in-flight ops).  The consistent-hash owner gets an anchor bonus so cold
+* :class:`CacheAwareRouter` — scores every live node from its obs-registry
+  snapshot (``node.registry.snapshot()``): declared-read-set presence in the
+  data cache, the node's cache hit rate, and its current load (open sessions
+  + in-flight ops).  The consistent-hash owner gets an anchor bonus so cold
   keys converge to a home node instead of scattering, but a hot node under
   load spills to its neighbours (which then cache the hot keys too).
 
@@ -93,6 +93,19 @@ class Router:
     def sync(self, nodes: Sequence[AftNode]) -> None:
         """Membership changed; rebuild any derived state (e.g. the ring)."""
 
+    # -- elastic-membership surface (no-ops for weightless policies) --------
+    def set_weight(self, node_id: str, weight: float) -> None:
+        """Scale a node's share of the key space (ring policies only): the
+        cluster ramps a JOINING node up and a DRAINING node down here."""
+
+    def weight_of(self, node_id: str) -> float:
+        """Current arc weight; weightless policies are always full-share
+        (the cluster's lifecycle ramp completes in one tick)."""
+        return 1.0
+
+    def forget_node(self, node_id: str) -> None:
+        """A node retired: drop any per-node residue (weights, splits)."""
+
     # -- shared guards -------------------------------------------------------
     @staticmethod
     def _alive(nodes: Sequence[AftNode]) -> List[AftNode]:
@@ -126,12 +139,26 @@ class RoundRobinRouter(Router):
 
 
 class ConsistentHashRouter(Router):
-    """Virtual-node hash ring keyed by ``PlacementHint.ring_key``.
+    """Weight-aware virtual-node hash ring keyed by ``PlacementHint.ring_key``.
 
     ``vnodes`` virtual points per node smooth the arc sizes; node death or
     scale moves only the affected arcs (tested: ≲ 2/n of keys move when the
     membership changes by one node).  Hints without a ring key fall back to
     round-robin — a ring is only useful when there is an identity to hash.
+
+    Elastic membership (``core/cluster.py``) adds two mechanisms:
+
+    * **per-node weights** — ``set_weight(node_id, w)`` scales a node's
+      virtual-point count by ``w ∈ [0, 1]``.  A JOINING node ramps its
+      weight up (small arcs first, so warm-up handoff streams a bounded
+      key range at a time); a DRAINING node ramps down to 0 (no *new*
+      sessions route there while in-flight ones finish);
+    * **hot-arc splitting** — every ring-keyed routing decision reports
+      load against the arc that served it (``arc_loads``).  When an arc
+      runs disproportionately hot (a skewed key clustering there),
+      ``split_hot_arc`` donates the hot arc's midpoint range to an
+      explicit target node by inserting extra virtual points, moving
+      roughly half the arc's keys without disturbing any other arc.
     """
 
     name = "consistent_hash"
@@ -142,22 +169,148 @@ class ConsistentHashRouter(Router):
         self._hashes: List[int] = []
         self._ring_ids: List[str] = []   # node_id per ring point, hash-sorted
         self._by_id: Dict[str, AftNode] = {}
+        self._weights: Dict[str, float] = {}      # node_id → arc weight (0..1]
+        self._last_nodes: List[AftNode] = []      # last sync'd membership
+        # hot-arc split points: arc-point hash → node_id, surviving resyncs
+        # while the target node stays a member
+        self._splits: Dict[int, str] = {}
+        # per-arc load accounting: arc-point hash → routed-request count
+        self._arc_loads: Dict[int, float] = {}
         self._fallback = RoundRobinRouter()
 
     def sync(self, nodes: Sequence[AftNode]) -> None:
         points = []
         by_id = {}
+        with self._lock:
+            weights = dict(self._weights)
+            splits = dict(self._splits)
         for node in nodes:
             if not node.alive:
                 continue
             by_id[node.node_id] = node
-            for v in range(self.vnodes):
+            w = weights.get(node.node_id, 1.0)
+            n_points = (
+                max(1, int(round(self.vnodes * min(w, 1.0))))
+                if w > 0.0 else 0
+            )
+            for v in range(n_points):
                 points.append((_stable_hash(f"{node.node_id}#{v}"), node.node_id))
+        # re-apply surviving hot-arc split points (drop any whose target
+        # node left the membership — its keys fall back to the base ring)
+        for h, nid in list(splits.items()):
+            if nid in by_id:
+                points.append((h, nid))
+            else:
+                splits.pop(h)
         points.sort()
         with self._lock:
             self._hashes = [h for h, _ in points]
             self._ring_ids = [nid for _, nid in points]
             self._by_id = by_id
+            self._splits = splits
+            self._last_nodes = [n for n in nodes if n.alive]
+            # drop load buckets for arcs that no longer exist
+            live_points = set(self._hashes)
+            self._arc_loads = {
+                h: v for h, v in self._arc_loads.items() if h in live_points
+            }
+
+    # -- elastic membership: weights ----------------------------------------
+    def set_weight(self, node_id: str, weight: float) -> None:
+        """Set a node's arc weight and rebuild the ring from the last
+        synced membership.  ``weight=1.0`` (the default) is a full member;
+        fractional weights shrink the node's share of the key space;
+        ``0.0`` removes its arcs entirely (draining) while the node itself
+        stays routable for in-flight sessions held elsewhere."""
+        with self._lock:
+            self._weights[node_id] = max(0.0, min(1.0, float(weight)))
+            last = list(self._last_nodes)
+        self.sync(last)
+
+    def weight_of(self, node_id: str) -> float:
+        with self._lock:
+            return self._weights.get(node_id, 1.0)
+
+    def forget_node(self, node_id: str) -> None:
+        """Drop a retired node's weight and split-point residue."""
+        with self._lock:
+            self._weights.pop(node_id, None)
+            self._splits = {
+                h: nid for h, nid in self._splits.items() if nid != node_id
+            }
+            last = [n for n in self._last_nodes if n.node_id != node_id]
+        self.sync(last)
+
+    # -- elastic membership: per-arc load + hot-arc splitting ----------------
+    def _note_arc_load(self, arc_hash: int, amount: float = 1.0) -> None:
+        # caller holds self._lock
+        self._arc_loads[arc_hash] = self._arc_loads.get(arc_hash, 0.0) + amount
+
+    def arc_loads(self) -> Dict[int, Tuple[str, float]]:
+        """Per-arc load report: arc-point hash → (owner node_id, routed
+        requests since the last decay).  The autoscaler's split signal."""
+        with self._lock:
+            owners = dict(zip(self._hashes, self._ring_ids))
+            return {
+                h: (owners[h], load)
+                for h, load in self._arc_loads.items()
+                if h in owners
+            }
+
+    def decay_arc_loads(self, factor: float = 0.5) -> None:
+        """Exponential decay so the split signal tracks *current* skew."""
+        with self._lock:
+            self._arc_loads = {
+                h: v * factor for h, v in self._arc_loads.items() if v * factor > 0.01
+            }
+
+    def hottest_arc(self) -> Optional[Tuple[int, str, float, float]]:
+        """(arc_hash, owner_id, load, mean_load) of the hottest arc, or
+        None when no ring-keyed traffic has been observed.  The mean is
+        taken over ALL ring arcs (unloaded arcs count as zero) — skew is
+        hot-vs-ring, not hot-vs-other-hot."""
+        report = self.arc_loads()
+        if not report:
+            return None
+        h, (owner, load) = max(report.items(), key=lambda kv: kv[1][1])
+        with self._lock:
+            n_arcs = len(self._hashes)
+        mean = sum(v for _, v in report.values()) / max(1, n_arcs)
+        return h, owner, load, mean
+
+    def split_arc(self, arc_hash: int, to_node_id: str) -> bool:
+        """Split the arc ending at ``arc_hash``: insert a virtual point at
+        the arc's midpoint owned by ``to_node_id``, so the lower half of the
+        arc's key range moves there.  Returns False when the arc or target
+        is unknown (a racing resync)."""
+        with self._lock:
+            if to_node_id not in self._by_id or arc_hash not in self._hashes:
+                return False
+            i = self._hashes.index(arc_hash)
+            lo = self._hashes[i - 1] if i > 0 else self._hashes[-1]
+            hi = arc_hash
+            span = (hi - lo) % (1 << 64)
+            if span < 2:
+                return False
+            mid = (lo + span // 2) % (1 << 64)
+            if mid in self._hashes:
+                return False
+            self._splits[mid] = to_node_id
+            self._arc_loads.pop(arc_hash, None)
+            last = list(self._last_nodes)
+        self.sync(last)
+        return True
+
+    def split_hot_arc(self, to_node_id: str, *, min_ratio: float = 2.0) -> bool:
+        """Split the hottest arc into ``to_node_id`` if it carries at least
+        ``min_ratio``× the mean arc load.  The autoscaler's split action."""
+        hot = self.hottest_arc()
+        if hot is None:
+            return False
+        arc_hash, owner, load, mean = hot
+        if owner == to_node_id or mean <= 0 or load < min_ratio * mean:
+            return False
+        return self.split_arc(arc_hash, to_node_id)
 
     def _maybe_self_heal(self, live: Sequence[AftNode]) -> None:
         with self._lock:
@@ -190,8 +343,12 @@ class ConsistentHashRouter(Router):
             i = bisect_right(hashes, _stable_hash(key))
             # walk clockwise past points whose node died after the last sync
             for off in range(len(ring_ids)):
-                node = live_ids.get(ring_ids[(i + off) % len(ring_ids)])
+                j = (i + off) % len(ring_ids)
+                node = live_ids.get(ring_ids[j])
                 if node is not None and node.alive:
+                    # per-key-range load report: the serving arc is the one
+                    # ending at this ring point (the hot-arc split signal)
+                    self._note_arc_load(hashes[j])
                     return node
         return self._fallback.route(live, hint)
 
@@ -220,7 +377,9 @@ class CacheAwareConfig:
 
 
 class CacheAwareRouter(Router):
-    """Cloudburst-style locality + load scheduling over ``AftNode.stats()``.
+    """Cloudburst-style locality + load scheduling over the node's obs
+    registry (``node.registry.snapshot()`` — the unified metrics read path;
+    the deprecated ``AftNode.stats()`` shim is no longer consulted).
 
     For every live node: ``score = affinity·W_a + hit_rate·W_h − load/S·W_l
     (+ anchor bonus for the ring owner)``; route to the argmax.  Without a
@@ -236,20 +395,34 @@ class CacheAwareRouter(Router):
     def sync(self, nodes: Sequence[AftNode]) -> None:
         self._anchor.sync(nodes)
 
+    def set_weight(self, node_id: str, weight: float) -> None:
+        self._anchor.set_weight(node_id, weight)
+
+    def weight_of(self, node_id: str) -> float:
+        return self._anchor.weight_of(node_id)
+
+    def forget_node(self, node_id: str) -> None:
+        self._anchor.forget_node(node_id)
+
+    def owner_id(self, ring_key: str) -> Optional[str]:
+        """Ring owner under the anchor ring (warm-up handoff's ownership
+        predicate routes through this)."""
+        return self._anchor.owner_id(ring_key)
+
     def _score(self, node: AftNode, hint: Optional[PlacementHint],
                anchor_id: Optional[str]) -> float:
         cfg = self.config
-        snap = node.stats()
+        snap = node.registry.snapshot()
         affinity = 0.0
         if hint is not None and hint.keys:
             present = sum(
                 1 for k in hint.keys if node.data_cache.contains_key(k)
             )
             affinity = present / len(hint.keys)
-        load = snap["open_sessions"] + snap["inflight_ops"]
+        load = snap.get("open_sessions", 0.0) + snap.get("inflight_ops", 0.0)
         score = (
             cfg.affinity_weight * affinity
-            + cfg.hit_rate_weight * snap["data_cache_hit_rate"]
+            + cfg.hit_rate_weight * snap.get("data_cache_hit_rate", 0.0)
             - cfg.load_weight * (load / cfg.load_scale)
         )
         if anchor_id is not None and node.node_id == anchor_id:

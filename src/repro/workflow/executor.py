@@ -131,6 +131,10 @@ class StepContext:
         self.inputs = inputs
         self.args = args
         self.writes: Dict[str, bytes] = {}
+        # keys the body actually read, in first-touch order: memoized with
+        # the result so a resume can infer its PlacementHint (routing
+        # locality) without a manually declared Step.reads
+        self.reads: list = []
 
     @property
     def step_name(self) -> str:
@@ -161,6 +165,8 @@ class StepContext:
         return getattr(node, "node_id", None) if node is not None else None
 
     def get(self, key: str) -> Optional[bytes]:
+        if key not in self.reads:
+            self.reads.append(key)
         return self._session.get(self._step.name, key)
 
     def put(self, key: str, value: bytes) -> None:
@@ -202,7 +208,9 @@ def execute_step(
     if ro:
         session.step_commit(step.name, None)
         return result
-    payload = encode_memo(result, ctx.writes) if memoizing else None
+    payload = (
+        encode_memo(result, ctx.writes, reads=ctx.reads) if memoizing else None
+    )
     inline = bool(getattr(session, "inline_memo", False))
     session.step_commit(step.name, payload if inline else None)
     if memoizing and not inline:
@@ -259,15 +267,28 @@ class WorkflowExecutor:
             if attempt > 1:
                 self.stats["workflow_retries"] += 1
                 self.platform._sleep_ms(cfg.retry_backoff_ms * (attempt - 1))
+            # memos load BEFORE the session exists: a resume/retry infers
+            # its placement hint from the memoized steps' recorded read
+            # sets, so locality routing works even when no Step.reads were
+            # declared.  Declared reads stay first (deterministic ring
+            # anchor); inferred keys extend them.
+            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
+            records: list = []
+            hint_keys = spec.declared_reads()
+            if memoizing and (attempt > 1 or resume_eligible):
+                memos, records, memo_reads = self._memo.load_all_with_reads(
+                    workflow_uuid, spec.steps, scope=cfg.scope
+                )
+                hint_keys = hint_keys + tuple(
+                    k for k in memo_reads if k not in hint_keys
+                )
             session = make_session(
                 cfg.scope,
                 workflow_uuid,
                 cluster=self.cluster,
                 storage=self.storage,
                 cowritten_hint=cfg.declared_writes,
-                hint=PlacementHint(
-                    uuid=workflow_uuid, keys=spec.declared_reads()
-                ),
+                hint=PlacementHint(uuid=workflow_uuid, keys=hint_keys),
                 place_steps=cfg.place_steps,
                 commit_offload=cfg.commit_offload,
                 # first attempt of a UUID minted just above: no rival can
@@ -275,11 +296,7 @@ class WorkflowExecutor:
                 # pure overhead.  Retries and explicit re-drives must probe.
                 fresh=(attempt == 1 and not resume_eligible),
             )
-            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
-            if memoizing and (attempt > 1 or resume_eligible):
-                memos, records = self._memo.load_all(
-                    workflow_uuid, spec.steps, scope=cfg.scope
-                )
+            if records:
                 session.recover(records)
             try:
                 results, skipped, ran, memoized = self._run_attempt(

@@ -521,15 +521,26 @@ class WorkflowPool:
                         record.tid if record else None,
                     ))
                     return
+            # memos load BEFORE the session: a resume/retry enriches its
+            # placement hint with the memoized steps' recorded read sets,
+            # so locality routing needs no manually declared Step.reads
+            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
+            records: list = []
+            hint_keys = run.spec.declared_reads()
+            if self._memoizing and (run.attempt > 1 or run.resume_eligible):
+                memos, records, memo_reads = self._memo.load_all_with_reads(
+                    run.uuid, run.spec.steps, scope=self.config.scope
+                )
+                hint_keys = hint_keys + tuple(
+                    k for k in memo_reads if k not in hint_keys
+                )
             session = make_session(
                 self.config.scope,
                 run.uuid,
                 cluster=self.cluster,
                 storage=self.storage,
                 cowritten_hint=self.config.declared_writes,
-                hint=PlacementHint(
-                    uuid=run.uuid, keys=run.spec.declared_reads()
-                ),
+                hint=PlacementHint(uuid=run.uuid, keys=hint_keys),
                 place_steps=self.config.place_steps,
                 commit_offload=self.config.commit_offload,
                 # first attempt of a UUID this pool minted: nobody else can
@@ -537,11 +548,7 @@ class WorkflowPool:
                 # chain/explicit re-drives (resume_eligible) must probe.
                 fresh=(run.attempt == 1 and not run.resume_eligible),
             )
-            memos: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
-            if self._memoizing and (run.attempt > 1 or run.resume_eligible):
-                memos, records = self._memo.load_all(
-                    run.uuid, run.spec.steps, scope=self.config.scope
-                )
+            if records:
                 session.recover(records)
             self._emit(("attempt_ready", run, epoch, session, memos))
         except BaseException as exc:  # noqa: BLE001 - surfaces via retry path

@@ -85,18 +85,23 @@ def memo_txn_uuid(workflow_uuid: str, step_name: str) -> str:
 # memo records
 # ---------------------------------------------------------------------------
 
-def encode_memo(result: Any, writes: Dict[str, bytes]) -> bytes:
+def encode_memo(
+    result: Any, writes: Dict[str, bytes], reads: Sequence[str] = ()
+) -> bytes:
+    """``reads`` — the keys the step body actually read, recorded so a
+    resume/retry can infer a :class:`PlacementHint` from the memo instead
+    of requiring a manually declared ``Step.reads`` set."""
+    body: Dict[str, Any] = {
+        "result": result,
+        "writes": {
+            k: base64.b64encode(v).decode("ascii")
+            for k, v in writes.items()
+        },
+    }
+    if reads:
+        body["reads"] = list(reads)
     try:
-        return json.dumps(
-            {
-                "result": result,
-                "writes": {
-                    k: base64.b64encode(v).decode("ascii")
-                    for k, v in writes.items()
-                },
-            },
-            separators=(",", ":"),
-        ).encode()
+        return json.dumps(body, separators=(",", ":")).encode()
     except (TypeError, ValueError) as exc:
         raise TypeError(
             "step results must be JSON-serializable to be memoized "
@@ -106,12 +111,19 @@ def encode_memo(result: Any, writes: Dict[str, bytes]) -> bytes:
 
 
 def decode_memo(raw: bytes) -> Tuple[Any, Dict[str, bytes]]:
+    result, writes, _reads = decode_memo_full(raw)
+    return result, writes
+
+
+def decode_memo_full(
+    raw: bytes,
+) -> Tuple[Any, Dict[str, bytes], Tuple[str, ...]]:
     body = json.loads(raw)
     writes = {
         k: base64.b64decode(v.encode("ascii"))
         for k, v in body.get("writes", {}).items()
     }
-    return body.get("result"), writes
+    return body.get("result"), writes, tuple(body.get("reads", ()))
 
 
 class MemoStore:
@@ -217,11 +229,29 @@ class MemoStore:
         would eventually perform, done eagerly) — without this, a resumed
         step on a fresh node could read NULL for a sibling's committed write.
         """
+        found, records, _reads = self.load_all_with_reads(
+            workflow_uuid, step_names, scope
+        )
+        return found, records
+
+    def load_all_with_reads(
+        self,
+        workflow_uuid: str,
+        step_names: Iterable[str],
+        scope: Optional[TxnScope] = None,
+    ):
+        """:meth:`load_all` plus the union of the memoized steps' recorded
+        read sets (ordered, deduped) — the keys the workflow's bodies
+        *actually* touched.  Drivers feed these into the resume attempt's
+        :class:`PlacementHint` so locality routing works without a manually
+        declared ``Step.reads``.  Returns ``(memos, records, reads)``."""
         from ..core.records import lookup_committed_record
 
         storage = self.cluster.storage
         found: Dict[str, Tuple[Any, Dict[str, bytes]]] = {}
         records = []
+        reads: list = []
+        seen_reads: set = set()
         for name in step_names:
             # a memo commit is either its own transaction (TxnScope.WORKFLOW)
             # or rides inside the step's transaction (TxnScope.STEP); when
@@ -247,8 +277,13 @@ class MemoStore:
                 record.storage_key_for(memo_key(workflow_uuid, name))
             )
             if payload is not None:
-                found[name] = decode_memo(payload)
-        return found, records
+                result, writes, step_reads = decode_memo_full(payload)
+                found[name] = (result, writes)
+                for key in step_reads:
+                    if key not in seen_reads:
+                        seen_reads.add(key)
+                        reads.append(key)
+        return found, records, tuple(reads)
 
 
 # ---------------------------------------------------------------------------
