@@ -1,0 +1,264 @@
+"""fig_hotpath: the metadata hot path at memory speed (figh).
+
+Measures the PR-10 rebuild of the node-local metadata path — striped
+``CommitSetCache``, incremental Algorithm-1 reads, encode-once record
+fan-out, O(1) LRU ``DataCache`` — against a **pre-PR proxy** baseline:
+the same code configured back to the old shape (``cache_stripes=1`` makes
+every section the coarse lock, ``incremental_reads=False`` selects the
+retained reference ``atomic_read_select`` that rescans the read set per
+read, and ``set_encode_cache(False)`` re-serializes records at every
+fan-out point).  The old FIFO ``DataCache`` is not restorable by knob; its
+effect is covered by the regression test, not this benchmark.
+
+Two arms, each run under both configs on one node over ``MemoryStorage``
+(zero storage latency, so metadata CPU *is* the workload):
+
+* **contended** — 8 closed-loop driver threads; each transaction reads 16
+  cowritten pairs (32 reads) and atomically rewrites one pair (2 writes).
+  Headline: steps/sec (committed transactions per second) ratio.  Python's
+  GIL means the win must come from doing *less work per read* (O(R) vs
+  O(R²) lower-bound maintenance, candidate-tail slices vs full-list
+  copies, fewer contended lock handoffs) — not from parallelism.
+* **long** — single-threaded 64-read transactions; headline: mean
+  ``read.resolve`` latency (selection only, storage fetch excluded) from
+  the node registry's histogram.
+
+Safety is audited, not assumed: every pair read inside a transaction must
+resolve to the *same* version (both keys are only ever written together,
+so Definition 1 forces tid equality — a mismatch is a fractured read), and
+a separate untimed traced pass replays its whole event stream through the
+offline checker at zero violations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import threading
+import time
+from typing import Dict
+
+from repro.core import (
+    AftNode,
+    AftNodeConfig,
+    ReadAbortError,
+    encode_cache_stats,
+    set_encode_cache,
+)
+from repro.obs import trace as obs_trace
+from repro.obs.checker import check_events
+from repro.storage import MemoryStorage
+
+from .common import save
+
+THREADS = 8
+PAIRS = 64                  # shared keyspace: p/<i> + q/<i> cowritten pairs
+READS_PER_TXN_PAIRS = 16    # 16 pairs -> 32 reads per contended transaction
+LONG_READS = 64             # reads per long-arm transaction (32 pairs)
+
+BASELINE = {"cache_stripes": 1, "incremental_reads": False}
+OPTIMIZED = {"cache_stripes": 16, "incremental_reads": True}
+
+
+def _make_node(overrides: Dict, name: str) -> AftNode:
+    cfg = AftNodeConfig(node_id=name, enable_data_cache=True,
+                        txn_timeout_s=60.0, **overrides)
+    return AftNode(MemoryStorage(), cfg)
+
+
+def _seed_pairs(node: AftNode, pairs: int) -> None:
+    """Give every pair an initial atomically-cowritten version."""
+    for i in range(pairs):
+        tx = node.start_transaction()
+        payload = json.dumps({"pair": i, "gen": 0}).encode()
+        node.put(tx, f"p/{i}", payload)
+        node.put(tx, f"q/{i}", payload)
+        node.commit_transaction(tx)
+        node.release_transaction(tx)
+
+
+def _txn_step(node: AftNode, rng: random.Random, n_pairs: int,
+              stats: Dict) -> None:
+    """One transaction: read ``n_pairs`` pairs (audited), rewrite one."""
+    tx = node.start_transaction()
+    try:
+        chosen = rng.sample(range(PAIRS), n_pairs)
+        for i in chosen:
+            _v1, t1 = node.get_versioned(tx, f"p/{i}")
+            _v2, t2 = node.get_versioned(tx, f"q/{i}")
+            # p/<i> and q/<i> are only ever written together: Definition 1
+            # makes unequal versions inside one transaction a fractured read
+            if t1 != t2:
+                stats["anomalies"] += 1
+        w = chosen[0]
+        payload = json.dumps(
+            {"pair": w, "gen": rng.randrange(1 << 30)}).encode()
+        node.put(tx, f"p/{w}", payload)
+        node.put(tx, f"q/{w}", payload)
+        node.commit_transaction(tx)
+        stats["commits"] += 1
+    except ReadAbortError:
+        node.abort_transaction(tx)   # §3.6 staleness abort: retry-able
+        stats["aborts"] += 1
+    finally:
+        node.release_transaction(tx)
+
+
+def _run_contended(overrides: Dict, txns_per_thread: int,
+                   seed: int) -> Dict:
+    node = _make_node(overrides, f"hot-{overrides['cache_stripes']}")
+    _seed_pairs(node, PAIRS)
+    stats = {"commits": 0, "aborts": 0, "anomalies": 0}
+    lock = threading.Lock()
+    barrier = threading.Barrier(THREADS)
+
+    def driver(tid: int) -> None:
+        rng = random.Random(seed * 100 + tid)
+        local = {"commits": 0, "aborts": 0, "anomalies": 0}
+        barrier.wait()
+        for _ in range(txns_per_thread):
+            _txn_step(node, rng, READS_PER_TXN_PAIRS, local)
+        with lock:
+            for k, v in local.items():
+                stats[k] += v
+
+    threads = [threading.Thread(target=driver, args=(i,), daemon=True)
+               for i in range(THREADS)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    snap = node.registry.snapshot()
+    resolve = snap.get("read.resolve", {})
+    out = {
+        "threads": THREADS,
+        "txns_per_thread": txns_per_thread,
+        "commits": stats["commits"],
+        "aborts": stats["aborts"],
+        "anomalies": stats["anomalies"],
+        "wall_s": round(wall, 3),
+        "steps_per_s": round(stats["commits"] / max(wall, 1e-9), 1),
+        "read_resolve_mean_ms": _hist_mean(resolve),
+        "read_resolve_p99_ms": resolve.get("p99_ms", 0.0),
+        "cache_lock_acquires": snap.get("cache_lock_acquires", 0),
+        "cache_lock_contended": snap.get("cache_lock_contended", 0),
+        "cache_lock_wait_ms": round(snap.get("cache_lock_wait_ms", 0.0), 2),
+    }
+    return out
+
+
+def _run_long(overrides: Dict, txns: int, seed: int) -> Dict:
+    node = _make_node(overrides, f"long-{overrides['cache_stripes']}")
+    _seed_pairs(node, PAIRS)
+    rng = random.Random(seed)
+    stats = {"commits": 0, "aborts": 0, "anomalies": 0}
+    t0 = time.perf_counter()
+    for _ in range(txns):
+        _txn_step(node, rng, LONG_READS // 2, stats)
+    wall = time.perf_counter() - t0
+    resolve = node.registry.snapshot().get("read.resolve", {})
+    return {
+        "txns": txns,
+        "reads_per_txn": LONG_READS,
+        "commits": stats["commits"],
+        "aborts": stats["aborts"],
+        "anomalies": stats["anomalies"],
+        "wall_s": round(wall, 3),
+        "read_resolve_mean_ms": _hist_mean(resolve),
+        "read_resolve_p99_ms": resolve.get("p99_ms", 0.0),
+        "resolve_count": resolve.get("count", 0),
+    }
+
+
+def _hist_mean(summary: Dict) -> float:
+    count = summary.get("count", 0)
+    if not count:
+        return 0.0
+    return round(float(summary.get("sum_ms", 0.0)) / count, 5)
+
+
+def run(quick: bool = True) -> Dict:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke:
+        txns_per_thread, long_txns = 30, 20
+    elif quick:
+        txns_per_thread, long_txns = 120, 60
+    else:
+        txns_per_thread, long_txns = 500, 250
+
+    # -- baseline (pre-PR proxy): coarse lock, reference reads, no encode
+    # cache.  Encode caching is process-global; restore before the
+    # optimized arms.
+    set_encode_cache(False)
+    try:
+        base_contended = _run_contended(BASELINE, txns_per_thread, seed=7)
+        base_long = _run_long(BASELINE, long_txns, seed=13)
+    finally:
+        set_encode_cache(True)
+
+    # -- optimized: striped cache, incremental Algorithm 1, encode-once
+    opt_contended = _run_contended(OPTIMIZED, txns_per_thread, seed=7)
+    opt_long = _run_long(OPTIMIZED, long_txns, seed=13)
+
+    # -- traced audit pass (untimed): rerun the optimized contended shape
+    # under the tracer and replay its event stream through the offline
+    # checker.  Kept out of the timed arms so neither config pays tracing
+    # overhead in the headline.
+    prev_tracer = obs_trace.get_tracer()
+    tracer = obs_trace.enable(
+        path=os.environ.get(obs_trace.TRACE_FILE_ENV), capacity=500_000)
+    try:
+        audit = _run_contended(
+            OPTIMIZED, max(txns_per_thread // 2, 10), seed=23)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        tracer.close()
+    checked = check_events(tracer.events())
+
+    enc = encode_cache_stats()  # process-wide, see node gauge docs
+    speedup = round(
+        opt_contended["steps_per_s"] / max(base_contended["steps_per_s"],
+                                           1e-9), 2)
+    resolve_ratio = round(
+        base_long["read_resolve_mean_ms"]
+        / max(opt_long["read_resolve_mean_ms"], 1e-9), 2)
+    total_anomalies = (
+        base_contended["anomalies"] + base_long["anomalies"]
+        + opt_contended["anomalies"] + opt_long["anomalies"]
+        + audit["anomalies"])
+
+    out = {
+        "pairs": PAIRS,
+        "reads_per_contended_txn": READS_PER_TXN_PAIRS * 2,
+        "baseline_knobs": {**BASELINE, "encode_cache": False},
+        "optimized_knobs": {**OPTIMIZED, "encode_cache": True},
+        "contended": {"baseline": base_contended,
+                      "optimized": opt_contended},
+        "long": {"baseline": base_long, "optimized": opt_long},
+        "traced_audit": audit,
+        "encode_cache": enc,
+        "trace_events": len(tracer.events()),
+        "headline": {
+            "speedup_steps_per_s": speedup,
+            "baseline_steps_per_s": base_contended["steps_per_s"],
+            "optimized_steps_per_s": opt_contended["steps_per_s"],
+            "read_resolve_mean_ratio": resolve_ratio,
+            "baseline_resolve_mean_ms": base_long["read_resolve_mean_ms"],
+            "optimized_resolve_mean_ms": opt_long["read_resolve_mean_ms"],
+            "optimized_lock_wait_ms": opt_contended["cache_lock_wait_ms"],
+            "anomalies": total_anomalies,
+            "aborts": (base_contended["aborts"] + opt_contended["aborts"]
+                       + base_long["aborts"] + opt_long["aborts"]),
+            "checker_violations": len(checked.violations),
+        },
+    }
+    save("fig_hotpath", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -34,12 +34,14 @@ MODULES = {
     "figc": "benchmarks.fig_chain",
     "figa": "benchmarks.fig_async",
     "fige": "benchmarks.fig_elastic",
+    "figh": "benchmarks.fig_hotpath",
     "figs": "benchmarks.fig_serve",   # needs the [jax] extra
     "ckpt": "benchmarks.ckpt_bench",
 }
 
 # fast, representative subset for CI smoke runs (seconds each)
-SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc", "figa", "fige"]
+SMOKE_DEFAULT = ["fig2", "figw", "figp", "figr", "figc", "figa", "fige",
+                 "figh"]
 
 
 def main() -> int:

@@ -9,7 +9,9 @@ from .anomaly import AnomalyAggregator, AnomalyCounts, TransactionObserver
 from .atomic_read import (
     ReadSelection,
     ReadStatus,
+    SessionReadState,
     atomic_read_select,
+    atomic_read_select_incremental,
     fractured_read_witness,
     is_atomic_readset,
 )
@@ -38,6 +40,8 @@ from .multicast import (
     BusMessage,
     MulticastAgent,
     MulticastBus,
+    decode_envelope,
+    encode_envelope,
 )
 from .node import AftNode, AftNodeConfig, SnapshotResult, TxnState
 from .records import (
@@ -48,7 +52,9 @@ from .records import (
     commit_key,
     data_key,
     embed_metadata,
+    encode_cache_stats,
     extract_metadata,
+    set_encode_cache,
 )
 from .routing import (
     CacheAwareConfig,
@@ -91,6 +97,8 @@ __all__ = [
     "FaultManagerConfig",
     "LocalGcAgent",
     "atomic_read_select",
+    "atomic_read_select_incremental",
+    "SessionReadState",
     "ReadStatus",
     "ReadSelection",
     "is_atomic_readset",
@@ -111,6 +119,10 @@ __all__ = [
     "data_key",
     "embed_metadata",
     "extract_metadata",
+    "set_encode_cache",
+    "encode_cache_stats",
+    "encode_envelope",
+    "decode_envelope",
     "COMMIT_PREFIX",
     "DATA_PREFIX",
     "Router",

@@ -17,12 +17,14 @@ when no valid version survives both constraints (§3.6).
 
 from __future__ import annotations
 
+from bisect import bisect_left
 from dataclasses import dataclass
 from enum import Enum
-from typing import Dict, Mapping, Optional
+from typing import Dict, Mapping, Optional, Tuple
 
 from .commit_cache import CommitSetCache
 from .ids import TxnId
+from .records import TransactionRecord
 
 
 class ReadStatus(Enum):
@@ -38,13 +40,62 @@ class ReadSelection:
     tid: Optional[TxnId] = None
 
 
+class SessionReadState:
+    """Incremental case-1 state for one transaction (the hot-path variant).
+
+    The reference ``atomic_read_select`` recomputes Algorithm 1's lines 3–5
+    — "does any prior read's cowritten set contain ``k``?" — by rescanning
+    the whole read set on *every* read: O(|R|) cache lookups per read,
+    O(|R|²) per transaction.  This state maintains the same information
+    incrementally: when a read joins the read set, ``note_read`` folds the
+    chosen record's write set into ``lower`` (key → newest cowriting tid
+    among prior reads), making each subsequent lower-bound lookup O(1).
+
+    Equivalence with the reference (proved by the property suite in
+    tests/test_atomic_read_incremental.py): every read-set entry was
+    selected from the cache, so its record existed and was folded in at
+    join time.  The reference re-resolves those records at *select* time
+    and conservatively drops the constraint if one was pruned meanwhile;
+    §5.1 GC never prunes a record read by a running transaction, so for
+    live sessions the two computations see identical records.  If that
+    guard were ever violated, the incremental map *retains* the constraint
+    the reference would drop — the safe direction (a too-high lower bound
+    can only force a fresher-or-aborted read, never a fractured one).
+    """
+
+    __slots__ = ("lower",)
+
+    def __init__(self) -> None:
+        self.lower: Dict[str, TxnId] = {}
+
+    def note_read(self, record: Optional[TransactionRecord]) -> None:
+        """Fold a just-read version's cowritten set into the lower-bound map.
+        Call once, when the read joins the read set (under the session lock).
+        """
+        if record is None:
+            return
+        tid = record.tid
+        lower = self.lower
+        for k in record.write_set:
+            cur = lower.get(k)
+            if cur is None or tid > cur:
+                lower[k] = tid
+
+
 def atomic_read_select(
     key: str,
     read_set: Mapping[str, TxnId],
     cache: CommitSetCache,
 ) -> ReadSelection:
     """Lines 1–23 of Algorithm 1: choose a version; storage fetch is the
-    caller's job (line 25)."""
+    caller's job (line 25).
+
+    This is the *reference oracle*: it freezes the whole cache (the coarse
+    all-stripes section) and rescans the full read set per read.  The hot
+    path uses :func:`atomic_read_select_incremental`; this implementation is
+    retained as the equivalence baseline for the property suite and as the
+    ``incremental_reads=False`` escape hatch.
+    """
     with cache.lock:  # one consistent view of records + index for this read
         # lines 3–5: lower bound from cowritten sets of prior reads (case 1)
         lower: Optional[TxnId] = None
@@ -87,6 +138,68 @@ def atomic_read_select(
 
         # line 22–23: no valid version — abort/retry (§3.6)
         return ReadSelection(ReadStatus.NO_VALID_VERSION)
+
+
+def atomic_read_select_incremental(
+    key: str,
+    read_set: Mapping[str, TxnId],
+    cache: CommitSetCache,
+    state: SessionReadState,
+) -> Tuple[ReadSelection, Optional[TransactionRecord]]:
+    """Algorithm 1 on the striped hot path: O(candidates) per read.
+
+    Case 1 (lower bound) comes from ``state.lower`` — maintained
+    incrementally by ``SessionReadState.note_read`` — instead of rescanning
+    the read set.  Case 2 runs newest-first over only the candidate tail of
+    the key's version list, sliced under the key's single stripe lock.
+
+    Returns ``(selection, record)`` so the caller can fold the chosen
+    record into the session state (and trace its cowritten set) without a
+    second cache lookup.
+
+    Per-read consistency argument (why one stripe lock is enough):
+
+    * the candidate list is read atomically under ``key``'s stripe lock, so
+      it is a true point-in-time version list for ``key``;
+    * case-1 bounds come from the session-local map (stable under the
+      caller's session lock) — no cross-stripe cache access;
+    * candidate records are resolved *after* releasing the stripe (readers
+      never nest stripe locks).  The add path inserts a record before (and
+      atomically with) its index entries, so every indexed candidate had a
+      live record when the list was sliced; a candidate resolving to None
+      here was pruned concurrently — skipping it selects an older version
+      that still satisfies Definition 1 (prunes only ever *remove* newer
+      choices; the selection degrades in freshness, never in safety).  The
+      coarse-lock reference behaves identically under the same race.
+    """
+    lower = state.lower.get(key)
+    with cache.lock_for_key(key):
+        versions = cache.versions_view(key)
+        # NULL read (lines 7–9): no versions and nothing forces one to exist
+        if not versions and lower is None:
+            return ReadSelection(ReadStatus.NOT_FOUND), None
+        # line 11: copy only the candidate tail (t >= lower) — usually a
+        # handful of entries — instead of the whole list per read
+        if lower is None:
+            candidates = list(versions)
+        else:
+            candidates = versions[bisect_left(versions, lower):]
+
+    # lines 13–21: newest-first case-2 rejection, outside the stripe lock
+    for t in reversed(candidates):
+        record = cache.get(t)
+        if record is None:  # pruned concurrently; skip (see docstring)
+            continue
+        valid = True
+        for l_key in record.write_set:
+            prior = read_set.get(l_key)
+            if prior is not None and prior < t:
+                valid = False
+                break
+        if valid:
+            return ReadSelection(ReadStatus.OK, t), record
+
+    return ReadSelection(ReadStatus.NO_VALID_VERSION), None
 
 
 # ---------------------------------------------------------------------------

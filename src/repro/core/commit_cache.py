@@ -1,4 +1,4 @@
-"""Commit Set Cache + key version index (§3.1).
+"""Commit Set Cache + key version index (§3.1) — striped for the hot path.
 
 Each AFT node locally caches the IDs (and write sets) of recently committed
 transactions to avoid a metadata fetch on every read, plus an index mapping
@@ -6,70 +6,224 @@ each key to the recently-created versions of that key — the two structures
 Algorithm 1 consumes.  The cache is warmed at node start by scanning the
 latest records of the durable Transaction Commit Set (bootstrap, §3.1) and is
 pruned by the local metadata GC (§5.1).
+
+Locking design (the metadata hot path)
+--------------------------------------
+The cache is partitioned into ``stripes`` shards.  A transaction's record
+lives in the stripe of ``hash(tid)``; each key's version list (and pruned
+watermark) lives in the stripe of ``hash(key)``.  Read accessors take exactly
+one stripe lock; mutators (``add``/``remove``/``note_pruned``) take the union
+of the stripes they touch in ascending stripe order (deadlock-free), so the
+invariant *"a transaction appears in the index iff its record is present"*
+holds atomically at every instant — not just at quiescence.
+
+Rules the callers must follow (enforced by the accessors below):
+
+* readers never nest stripe locks — resolve a key's version list under
+  ``lock_for_key``, then release before resolving candidate records via
+  ``get`` (which takes the candidate's own stripe);
+* the coarse ``global_section()`` (all stripes, ascending) is reserved for
+  bootstrap warm-up and full GC sweeps;
+* nested single-stripe acquisitions are legal *inside* ``global_section``
+  (the locks are reentrant and already held).
+
+Why a per-read consistent view survives striping is argued in
+``atomic_read.atomic_read_select_incremental``.
 """
 
 from __future__ import annotations
 
 import threading
 from bisect import bisect_left, bisect_right, insort
-from typing import Callable, Dict, Iterable, List, Optional, Set
+from collections import OrderedDict
+from time import perf_counter
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .ids import TxnId
 from .records import TransactionRecord
 
+DEFAULT_STRIPES = 16
 
-class CommitSetCache:
-    """Thread-safe committed-transaction metadata cache.
 
-    Invariant: a transaction appears in ``_index`` (key → sorted versions)
-    iff its record is in ``_records``; Algorithm 1 may therefore resolve any
-    indexed version's cowritten set locally.
-    """
+class _Stripe:
+    """One shard: a records map keyed by TxnId-hash plus an index/pruned map
+    keyed by key-hash (the two hash spaces share the stripe array)."""
+
+    __slots__ = ("lock", "records", "index", "pruned_max",
+                 "acquires", "contended", "wait_s")
 
     def __init__(self) -> None:
-        self._records: Dict[TxnId, TransactionRecord] = {}
-        # key → sorted (ascending) list of committed TxnIds that wrote it
-        self._index: Dict[str, List[TxnId]] = {}
-        self._lock = threading.RLock()
+        self.lock = threading.RLock()
+        self.records: Dict[TxnId, TransactionRecord] = {}
+        self.index: Dict[str, List[TxnId]] = {}
+        self.pruned_max: Dict[str, int] = {}
+        # contention accounting (read via CommitSetCache.lock_stats)
+        self.acquires = 0
+        self.contended = 0
+        self.wait_s = 0.0
+
+
+class _Section:
+    """Context manager over an ascending run of stripes (one, some, or all).
+
+    Also exposes ``acquire``/``release`` so legacy ``cache.lock`` callers that
+    treat it like a Lock keep working.
+    """
+
+    __slots__ = ("_cache", "_stripes")
+
+    def __init__(self, cache: "CommitSetCache",
+                 stripes: Sequence[_Stripe]) -> None:
+        self._cache = cache
+        self._stripes = stripes
+
+    def acquire(self) -> None:
+        for s in self._stripes:
+            self._cache._acquire(s)
+
+    def release(self) -> None:
+        for s in reversed(self._stripes):
+            s.lock.release()
+
+    def __enter__(self) -> "_Section":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class CommitSetCache:
+    """Thread-safe committed-transaction metadata cache, striped.
+
+    Invariant: a transaction appears in the index (key → sorted versions)
+    iff its record is present; Algorithm 1 may therefore resolve any
+    indexed version's cowritten set locally (a candidate that resolves to
+    ``None`` was pruned *after* the index was consulted — skipping it keeps
+    the selection safe, see atomic_read.py).
+    """
+
+    def __init__(self, stripes: int = DEFAULT_STRIPES) -> None:
+        if stripes < 1:
+            raise ValueError("stripes must be >= 1")
+        self._stripes: Tuple[_Stripe, ...] = tuple(
+            _Stripe() for _ in range(stripes))
+        self._n = stripes
         # monotone log of locally-known commits, for the multicast thread to
-        # drain ("transactions committed recently on this node", §4)
+        # drain ("transactions committed recently on this node", §4); its own
+        # lock — always acquired innermost (stripe → fresh, never the reverse)
+        self._fresh_lock = threading.Lock()
         self._fresh: List[TransactionRecord] = []
-        # key → newest timestamp ever PRUNED for that key (§5.1 GC).  The
-        # snapshot lane needs this: a version resolved at a watermark is
-        # only trustworthy if no pruned version could have sat between it
-        # and the watermark (see AftNode.snapshot_read).
-        self._pruned_max: Dict[str, int] = {}
+
+    # -- stripe plumbing ----------------------------------------------------
+    def _stripe_for_tid(self, tid: TxnId) -> _Stripe:
+        return self._stripes[hash(tid) % self._n]
+
+    def _stripe_for_key(self, key: str) -> _Stripe:
+        return self._stripes[hash(key) % self._n]
+
+    def _acquire(self, stripe: _Stripe) -> None:
+        # fast path: uncontended (or reentrant) acquire; the slow path feeds
+        # the lock-wait gauges surfaced through the obs registry
+        if stripe.lock.acquire(blocking=False):
+            stripe.acquires += 1
+            return
+        t0 = perf_counter()
+        stripe.lock.acquire()
+        stripe.acquires += 1
+        stripe.contended += 1
+        stripe.wait_s += perf_counter() - t0
+
+    def _section_for(self, *members) -> _Section:
+        """Ascending-order section over the stripes the members hash to."""
+        picked: Dict[int, _Stripe] = {}
+        for m in members:
+            i = hash(m) % self._n
+            picked[i] = self._stripes[i]
+        return _Section(self, [picked[i] for i in sorted(picked)])
+
+    def lock_for_key(self, key: str) -> _Section:
+        """Single-stripe section guarding ``key``'s version list and pruned
+        watermark — the Algorithm-1 read fast path."""
+        return _Section(self, (self._stripe_for_key(key),))
+
+    def global_section(self) -> _Section:
+        """Coarse all-stripes section (ascending order).  Bootstrap warm-up
+        and full sweeps only — never on the per-read hot path."""
+        return _Section(self, self._stripes)
+
+    @property
+    def lock(self):
+        """Legacy coarse lock: a context manager freezing every stripe.  The
+        reference ``atomic_read_select`` oracle uses it to get the original
+        one-big-lock consistent view; new code should prefer the striped
+        accessors."""
+        return self.global_section()
+
+    @property
+    def stripe_count(self) -> int:
+        return self._n
+
+    def lock_stats(self) -> Dict[str, float]:
+        """Aggregate stripe-lock contention counters (approximate: read
+        without freezing the stripes)."""
+        acquires = contended = 0
+        wait_s = 0.0
+        for s in self._stripes:
+            acquires += s.acquires
+            contended += s.contended
+            wait_s += s.wait_s
+        return {"acquires": acquires, "contended": contended,
+                "wait_ms": wait_s * 1e3}
 
     # -- writes --------------------------------------------------------------
     def add(self, record: TransactionRecord, *, fresh: bool = False) -> bool:
-        """Merge a committed transaction's metadata.  Returns False if known."""
-        with self._lock:
-            if record.tid in self._records:
+        """Merge a committed transaction's metadata.  Returns False if known.
+
+        Takes the union of the record's tid stripe and its write-set key
+        stripes so the records/index invariant is atomic with respect to
+        every reader and to concurrent ``remove`` of the same tid.
+        """
+        tid = record.tid
+        with self._section_for(tid, *record.write_set):
+            records = self._stripe_for_tid(tid).records
+            if tid in records:
                 return False
-            self._records[record.tid] = record
+            records[tid] = record
             for key in record.write_set:
-                insort(self._index.setdefault(key, []), record.tid)
+                insort(self._stripe_for_key(key).index.setdefault(key, []),
+                       tid)
             if fresh:
-                self._fresh.append(record)
+                with self._fresh_lock:
+                    self._fresh.append(record)
             return True
 
     def remove(self, tid: TxnId) -> Optional[TransactionRecord]:
         """Drop a transaction's metadata (local GC, §5.1)."""
-        with self._lock:
-            record = self._records.pop(tid, None)
-            if record is None:
+        # two-phase: peek the record (its write set names the key stripes we
+        # must also hold), then re-check under the full section — the record
+        # is immutable, so a tid→record binding never changes between phases
+        stripe = self._stripe_for_tid(tid)
+        with _Section(self, (stripe,)):
+            record = stripe.records.get(tid)
+        if record is None:
+            return None
+        with self._section_for(tid, *record.write_set):
+            record = stripe.records.pop(tid, None)
+            if record is None:  # lost the race to a concurrent remove
                 return None
             for key in record.write_set:
-                if tid.timestamp > self._pruned_max.get(key, -1):
-                    self._pruned_max[key] = tid.timestamp
-                versions = self._index.get(key)
+                ks = self._stripe_for_key(key)
+                if tid.timestamp > ks.pruned_max.get(key, -1):
+                    ks.pruned_max[key] = tid.timestamp
+                versions = ks.index.get(key)
                 if versions is None:
                     continue
                 i = bisect_left(versions, tid)
                 if i < len(versions) and versions[i] == tid:
                     versions.pop(i)
                 if not versions:
-                    del self._index[key]
+                    del ks.index[key]
             return record
 
     def note_pruned(self, record: TransactionRecord) -> None:
@@ -77,49 +231,65 @@ class CommitSetCache:
         without requiring the record to be indexed here — global GC phase 1
         confirming a commit this node never learned (the announcement was
         dropped and the record was superseded before repair caught up)."""
-        with self._lock:
-            for key in record.write_set:
-                if record.tid.timestamp > self._pruned_max.get(key, -1):
-                    self._pruned_max[key] = record.tid.timestamp
+        ts = record.tid.timestamp
+        for key in record.write_set:
+            ks = self._stripe_for_key(key)
+            with _Section(self, (ks,)):
+                if ts > ks.pruned_max.get(key, -1):
+                    ks.pruned_max[key] = ts
 
     def drain_fresh(self) -> List[TransactionRecord]:
         """Hand the multicast thread everything committed since last drain."""
-        with self._lock:
+        with self._fresh_lock:
             out, self._fresh = self._fresh, []
             return out
 
     # -- reads ---------------------------------------------------------------
     def get(self, tid: TxnId) -> Optional[TransactionRecord]:
-        with self._lock:
-            return self._records.get(tid)
+        stripe = self._stripe_for_tid(tid)
+        with _Section(self, (stripe,)):
+            return stripe.records.get(tid)
 
     def __contains__(self, tid: TxnId) -> bool:
-        with self._lock:
-            return tid in self._records
+        stripe = self._stripe_for_tid(tid)
+        with _Section(self, (stripe,)):
+            return tid in stripe.records
 
     def versions_of(self, key: str) -> List[TxnId]:
-        """Committed versions of ``key`` known locally, ascending."""
-        with self._lock:
-            return list(self._index.get(key, ()))
+        """Committed versions of ``key`` known locally, ascending (a copy —
+        safe to hold after the call returns)."""
+        stripe = self._stripe_for_key(key)
+        with _Section(self, (stripe,)):
+            return list(stripe.index.get(key, ()))
+
+    def versions_view(self, key: str) -> Sequence[TxnId]:
+        """Zero-copy view of ``key``'s ascending version list.  The caller
+        MUST hold ``lock_for_key(key)`` and must not retain the view past
+        releasing it (Algorithm-1 slices its candidate tail under the lock
+        instead of copying the whole list per read)."""
+        return self._stripe_for_key(key).index.get(key, ())
 
     def latest_version_of(self, key: str) -> Optional[TxnId]:
-        with self._lock:
-            versions = self._index.get(key)
+        stripe = self._stripe_for_key(key)
+        with _Section(self, (stripe,)):
+            versions = stripe.index.get(key)
             return versions[-1] if versions else None
 
     def pruned_max_ts(self, key: str) -> int:
         """Newest timestamp ever pruned for ``key`` (-1 if never pruned).
         Monotone; survives the pruned records themselves."""
-        with self._lock:
-            return self._pruned_max.get(key, -1)
+        stripe = self._stripe_for_key(key)
+        with _Section(self, (stripe,)):
+            return stripe.pruned_max.get(key, -1)
 
     def latest_version_at(self, key: str, max_ts_ns: int) -> Optional[TxnId]:
         """Newest locally-known committed version of ``key`` with timestamp
         ≤ ``max_ts_ns`` — the snapshot-lane resolver: given a gossiped read
         watermark, the freshest version at-or-below it is the snapshot's
         answer."""
-        with self._lock:
-            versions = self._index.get(key)
+        stripe = self._stripe_for_key(key)
+        with _Section(self, (stripe,)):
+            versions = stripe.index.get(key)
             if not versions:
                 return None
             i = bisect_right(versions, max_ts_ns,
@@ -127,34 +297,47 @@ class CommitSetCache:
             return versions[i - 1] if i else None
 
     def all_tids(self) -> List[TxnId]:
-        with self._lock:
-            return list(self._records.keys())
+        """All locally-known committed tids.  Per-stripe collection without a
+        global freeze — weakly consistent, which every caller (the §5.1 GC
+        sweep) tolerates: a tid added or removed concurrently may or may not
+        appear, exactly as with the old coarse lock released between the
+        snapshot and the sweep body."""
+        out: List[TxnId] = []
+        for stripe in self._stripes:
+            with _Section(self, (stripe,)):
+                out.extend(stripe.records.keys())
+        return out
 
     def snapshot_records(self) -> List[TransactionRecord]:
-        with self._lock:
-            return list(self._records.values())
+        """Weakly-consistent copy of all records (fault-manager sweeps, node
+        handoff).  Same consistency note as ``all_tids``."""
+        out: List[TransactionRecord] = []
+        for stripe in self._stripes:
+            with _Section(self, (stripe,)):
+                out.extend(stripe.records.values())
+        return out
 
     def __len__(self) -> int:
-        with self._lock:
-            return len(self._records)
-
-    # -- coarse lock for multi-structure atomic sections ---------------------
-    @property
-    def lock(self) -> threading.RLock:
-        return self._lock
+        total = 0
+        for stripe in self._stripes:
+            with _Section(self, (stripe,)):
+                total += len(stripe.records)
+        return total
 
 
 class DataCache:
-    """LRU (key, version) → bytes cache (§3.1, evaluated in §6.2).
+    """O(1) LRU (key, version) → bytes cache (§3.1, evaluated in §6.2).
 
     Values are immutable once committed (versions are never overwritten), so
     the cache never needs invalidation — only eviction (capacity or GC).
+    Backed by an ``OrderedDict``: hits promote via ``move_to_end`` and
+    eviction pops the true least-recently-used entry in O(1), replacing the
+    old FIFO list whose ``pop(0)`` was O(n) and whose ``get`` never promoted.
     """
 
     def __init__(self, max_bytes: int = 64 * 1024 * 1024) -> None:
         self.max_bytes = max_bytes
-        self._data: Dict[tuple, bytes] = {}
-        self._order: List[tuple] = []  # LRU approximation: move-to-end
+        self._data: "OrderedDict[tuple, bytes]" = OrderedDict()
         self._size = 0
         self._lock = threading.Lock()
         # key → number of cached versions, so routers can probe "does this
@@ -162,14 +345,17 @@ class DataCache:
         self._key_counts: Dict[str, int] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: str, tid: TxnId) -> Optional[bytes]:
+        ent = (key, tid)
         with self._lock:
-            v = self._data.get((key, tid))
+            v = self._data.get(ent)
             if v is None:
                 self.misses += 1
             else:
                 self.hits += 1
+                self._data.move_to_end(ent)
             return v
 
     def put(self, key: str, tid: TxnId, value: bytes) -> None:
@@ -177,19 +363,19 @@ class DataCache:
             return
         with self._lock:
             ent = (key, tid)
-            if ent in self._data:
-                self._size -= len(self._data[ent])
+            prior = self._data.get(ent)
+            if prior is not None:
+                self._size -= len(prior)
+                self._data.move_to_end(ent)
             else:
-                self._order.append(ent)
                 self._key_counts[key] = self._key_counts.get(key, 0) + 1
             self._data[ent] = value
             self._size += len(value)
-            while self._size > self.max_bytes and self._order:
-                old = self._order.pop(0)
-                v = self._data.pop(old, None)
-                if v is not None:
-                    self._size -= len(v)
-                    self._drop_key_count(old[0])
+            while self._size > self.max_bytes and self._data:
+                old, v = self._data.popitem(last=False)
+                self._size -= len(v)
+                self._drop_key_count(old[0])
+                self.evictions += 1
 
     def evict_transaction(self, record: TransactionRecord) -> None:
         """Drop any cached data written by ``record`` (GC eviction, §5.1)."""
@@ -202,8 +388,6 @@ class DataCache:
 
     def _drop_key_count(self, key: str) -> None:
         # caller holds self._lock; entry removal from _data already happened
-        # (the stale _order slot for evict_transaction is harmless: pop(old,
-        # None) misses and nothing double-counts)
         n = self._key_counts.get(key, 0) - 1
         if n > 0:
             self._key_counts[key] = n
@@ -223,4 +407,5 @@ class DataCache:
                 "misses": self.misses,
                 "entries": len(self._data),
                 "bytes": self._size,
+                "evictions": self.evictions,
             }

@@ -133,7 +133,8 @@ class DigestPlane:
         self.peer_horizons: Dict[str, Dict[str, int]] = {
             n.node_id: {} for n in self.nodes}
         self.stats = {"rounds": 0, "rows_sent": 0, "records_fetched": 0,
-                      "pruned": 0, "horizons_withheld": 0}
+                      "pruned": 0, "horizons_withheld": 0,
+                      "resolve_memo_hits": 0}
         for node in self.nodes:
             node.set_watermark_provider(self._floor_fn(node))
 
@@ -230,6 +231,11 @@ class DigestPlane:
         gathered = exchange_digests(np.stack(per_node), self.mesh)
         h_gathered = self._exchange_horizons(horizons)
         merged = 0
+        # decode-once fan-in: every receiver resolves the same gathered
+        # digest rows, so one storage lookup + record decode per (ts, hash)
+        # serves all n receivers (the decoded record also seeds the
+        # encode-once cache, so downstream re-fan-out reuses its bytes)
+        resolved: Dict[Tuple[int, int], Optional[TransactionRecord]] = {}
         for i, node in enumerate(self.nodes):
             if not node.alive:
                 continue
@@ -237,10 +243,16 @@ class DigestPlane:
                 if j == i:
                     continue
                 for ts, h in unpack_digest(gathered[j]):
-                    rec = self._resolve(ts, h)
+                    if (ts, h) in resolved:
+                        rec = resolved[(ts, h)]
+                        self.stats["resolve_memo_hits"] += 1
+                    else:
+                        rec = self._resolve(ts, h)
+                        resolved[(ts, h)] = rec
+                        if rec is not None:
+                            self.stats["records_fetched"] += 1
                     if rec is None:
                         continue
-                    self.stats["records_fetched"] += 1
                     merged += node.merge_remote_commits([rec])
                 src_h = h_gathered.get(src.node_id)
                 if src_h is not None:

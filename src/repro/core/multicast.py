@@ -59,6 +59,35 @@ FAULT_MANAGER_ID = "fault-manager"
 SEND_FAULT_SITE = "multicast:send"
 
 
+def encode_envelope(records: List[TransactionRecord]) -> bytes:
+    """Serialize a batch of commit records into one wire envelope: a
+    4-byte big-endian length prefix per record's (memoized) ``encode()``
+    bytes, concatenated.  Encoded ONCE per batch by the sending agent and
+    the identical bytes object is shared across every peer's message —
+    the encode-once fan-out (previously each peer's send re-encoded the
+    same records)."""
+    parts = []
+    for r in records:
+        raw = r.encode()
+        parts.append(len(raw).to_bytes(4, "big"))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def decode_envelope(payload: bytes) -> Tuple[TransactionRecord, ...]:
+    """Inverse of :func:`encode_envelope` (out-of-process receivers; the
+    in-process bus delivers the record objects directly)."""
+    out: List[TransactionRecord] = []
+    pos = 0
+    n = len(payload)
+    while pos < n:
+        rlen = int.from_bytes(payload[pos:pos + 4], "big")
+        pos += 4
+        out.append(TransactionRecord.decode(payload[pos:pos + rlen]))
+        pos += rlen
+    return tuple(out)
+
+
 @dataclass
 class BusFaults:
     """Seeded, per-message fault plan for the multicast fabric.
@@ -90,6 +119,11 @@ class BusMessage:
     records: Tuple[TransactionRecord, ...] = ()
     seq: Optional[int] = None
     horizon: Optional[int] = None
+    # the batch's wire image (``encode_envelope``), serialized once by the
+    # sender and SHARED (same bytes object) across all peers' messages; the
+    # in-process bus delivers ``records`` directly, so receivers never pay a
+    # decode — ``payload`` models (and meters) what would cross the network
+    payload: Optional[bytes] = None
 
 
 class MulticastBus:
@@ -113,6 +147,7 @@ class MulticastBus:
         self.fault_hook: Optional[Callable[[str], None]] = None
         self.messages_sent = 0
         self.records_sent = 0
+        self.payload_bytes_sent = 0   # wire-image bytes enqueued (modeled)
         self.messages_dropped = 0
         self.messages_delayed = 0
         self.messages_reordered = 0
@@ -168,7 +203,11 @@ class MulticastBus:
         *,
         seq: Optional[int] = None,
         horizon: Optional[int] = None,
+        payload: Optional[bytes] = None,
     ) -> None:
+        """``payload`` is the batch's pre-serialized wire envelope
+        (``encode_envelope(records)``): agents encode it once per batch and
+        pass the same bytes to every peer's send."""
         if not records and seq is None:
             return  # nothing to say and no envelope to advance
         if self.fault_hook is not None:
@@ -176,7 +215,7 @@ class MulticastBus:
         if self.drop_filter is not None and self.drop_filter(src, dst):
             return
         msg = BusMessage(src=src, records=tuple(records),
-                         seq=seq, horizon=horizon)
+                         seq=seq, horizon=horizon, payload=payload)
         with self._lock:
             inbox = self._inboxes.get(dst)
             if inbox is None:
@@ -201,10 +240,14 @@ class MulticastBus:
                     self.messages_reordered += 1
                     self.messages_sent += 1
                     self.records_sent += len(records)
+                    if payload is not None:
+                        self.payload_bytes_sent += len(payload)
                     return
             inbox.append(msg)
             self.messages_sent += 1
             self.records_sent += len(records)
+            if payload is not None:
+                self.payload_bytes_sent += len(payload)
 
     def _release_delayed(self, member_id: str) -> None:
         # caller holds self._lock
@@ -282,6 +325,10 @@ class MulticastAgent:
         self.eager_pushes = 0
         self.send_failures = 0
         self.gap_repairs = 0
+        # encode-once accounting: envelopes serialized vs. peer sends that
+        # shared them (the pre-PR behavior was one encode per peer)
+        self.envelope_encodes = 0
+        self.envelope_shares = 0
         node.set_watermark_provider(self._watermark_floor)
         if eager_push:
             node.set_commit_listener(self._on_commit)
@@ -302,13 +349,19 @@ class MulticastAgent:
             self._seq += 1
             seq = self._seq
             horizon = self.node.commit_horizon_ns()
+        # serialize the batch's wire envelope once; every peer's message
+        # shares the same bytes object (encode-once fan-out)
+        batch = [record]
+        payload = encode_envelope(batch)
+        self.envelope_encodes += 1
         sent = False
         for peer in self.peers():
             if peer == self.node.node_id:
                 continue
             try:
-                self.bus.send(self.node.node_id, peer, [record],
-                              seq=seq, horizon=horizon)
+                self.bus.send(self.node.node_id, peer, batch,
+                              seq=seq, horizon=horizon, payload=payload)
+                self.envelope_shares += 1
                 sent = True
             except Exception:
                 self.send_failures += 1
@@ -332,10 +385,13 @@ class MulticastAgent:
         horizon = self.node.commit_horizon_ns()
         fresh = self.node.drain_fresh_commits()
         if fresh:
-            # fault manager always receives the unpruned set (§4.2)
+            # fault manager always receives the unpruned set (§4.2);
+            # serialized once (the record encodes are memoized, so this
+            # reuses the commit-time bytes rather than re-encoding)
             try:
                 self.bus.send(self.node.node_id, FAULT_MANAGER_ID,
-                              list(fresh))
+                              list(fresh), payload=encode_envelope(fresh))
+                self.envelope_encodes += 1
             except Exception:
                 self.send_failures += 1
         # §4.1 pruning accounting runs every round; with eager push the
@@ -345,6 +401,11 @@ class MulticastAgent:
         self.pruned_total += len(fresh) - len(outgoing)
         to_peers: List[TransactionRecord] = (
             [] if self.eager_push else outgoing)
+        # one envelope per round, shared across every peer (encode-once)
+        payload: Optional[bytes] = None
+        if to_peers:
+            payload = encode_envelope(to_peers)
+            self.envelope_encodes += 1
         with self._seq_lock:
             self._seq += 1
             seq = self._seq
@@ -353,7 +414,9 @@ class MulticastAgent:
                 continue
             try:
                 self.bus.send(self.node.node_id, peer, to_peers,
-                              seq=seq, horizon=horizon)
+                              seq=seq, horizon=horizon, payload=payload)
+                if payload is not None:
+                    self.envelope_shares += 1
             except Exception:
                 self.send_failures += 1
         if to_peers:

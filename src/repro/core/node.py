@@ -35,7 +35,13 @@ from ..obs import trace as obs_trace
 from ..obs.registry import Registry
 from ..storage.base import StorageEngine
 from ..storage.pipeline import PipelineConfig, StorageIOPipeline
-from .atomic_read import ReadSelection, ReadStatus, atomic_read_select
+from .atomic_read import (
+    ReadSelection,
+    ReadStatus,
+    SessionReadState,
+    atomic_read_select,
+    atomic_read_select_incremental,
+)
 from .commit_cache import CommitSetCache, DataCache
 from .errors import (
     NodeFailed,
@@ -57,6 +63,7 @@ from .records import (
     WORKFLOW_MEMO_PREFIX,
     commit_key,
     data_key,
+    encode_cache_stats,
     lookup_committed_record,
     uuid_key,
 )
@@ -81,6 +88,13 @@ class AftNodeConfig:
                                           # UUID (rare path only)
     storage_read_retries: int = 3
     storage_read_retry_s: float = 0.02    # scaled by the engine's time_scale
+    # --- metadata hot path ------------------------------------------------
+    # lock striping of the CommitSetCache (1 = the old single global lock)
+    cache_stripes: int = 16
+    # per-session incremental Algorithm-1 lower bounds: O(candidates) per
+    # read instead of rescanning the whole read set under the coarse lock
+    # (False = the retained reference oracle, used as the benchmark baseline)
+    incremental_reads: bool = True
     min_gc_age_s: float = 0.0             # §5.2.1 mitigation knob
     clock_skew_ns: int = 0                # tests: protocols don't need sync
     # --- asynchronous storage I/O pipeline (storage/pipeline.py) ---------
@@ -163,8 +177,11 @@ class TransactionContext:
     # an in-flight async commit (commit_transaction_async): concurrent
     # committers of one session share it instead of double-committing
     commit_future: Optional[Future] = None
-    # guards read_set: one session may be driven by many parallel branches of
-    # a workflow DAG (the buffer has its own lock)
+    # incremental Algorithm-1 state: key → newest cowriting tid among prior
+    # reads (case-1 lower bounds), folded in as reads join the read set
+    read_state: SessionReadState = field(default_factory=SessionReadState)
+    # guards read_set (and read_state): one session may be driven by many
+    # parallel branches of a workflow DAG (the buffer has its own lock)
     lock: threading.Lock = field(default_factory=threading.Lock)
 
     def read_set_snapshot(self) -> Dict[str, TxnId]:
@@ -204,7 +221,7 @@ class AftNode:
             time_scale=getattr(storage, "time_scale", 1.0),
         )
         self.clock = Clock(skew_ns=self.config.clock_skew_ns)
-        self.cache = CommitSetCache()
+        self.cache = CommitSetCache(stripes=max(1, self.config.cache_stripes))
         self.data_cache = DataCache(self.config.data_cache_bytes)
         self._txns: Dict[str, TransactionContext] = {}
         self._committed_uuids: Dict[str, TxnId] = {}
@@ -269,6 +286,9 @@ class AftNode:
         self._h_version_flush = self.registry.histogram("commit.version_flush")
         self._h_probe = self.registry.histogram("commit.probe")
         self._h_record_write = self.registry.histogram("commit.record_write")
+        # Algorithm-1 selection time per read (metadata-only: the storage
+        # fetch is excluded) — the hot-path benchmark's headline histogram
+        self._h_read_resolve = self.registry.histogram("read.resolve")
         if bootstrap:
             self.bootstrap()
 
@@ -371,6 +391,17 @@ class AftNode:
         snap["data_cache_bytes"] = dc["bytes"]
         lookups = dc["hits"] + dc["misses"]
         snap["data_cache_hit_rate"] = dc["hits"] / lookups if lookups else 0.0
+        snap["data_cache_evictions"] = dc["evictions"]
+        # commit-set-cache stripe-lock contention (per node)
+        ls = self.cache.lock_stats()
+        snap["cache_lock_acquires"] = ls["acquires"]
+        snap["cache_lock_contended"] = ls["contended"]
+        snap["cache_lock_wait_ms"] = ls["wait_ms"]
+        # record encode-once cache (process-wide counters: every node in
+        # this process shares the module-level memoization accounting)
+        enc = encode_cache_stats()
+        snap["record_encode_hits"] = enc["hits"]
+        snap["record_encode_misses"] = enc["misses"]
         pipe = self._pipeline
         if pipe is not None:
             for k, v in pipe.stats().items():
@@ -536,14 +567,17 @@ class AftNode:
         if not keys:
             return 0
         raws = self.storage.get_batch(keys)
-        for k in keys:
-            raw = raws.get(k)
-            if raw is None:
-                continue
-            record = TransactionRecord.decode(raw)
-            if self.cache.add(record):
-                self._committed_uuids[record.tid.uuid] = record.tid
-                loaded += 1
+        # coarse all-stripes section: warm-up is the one bulk-load where a
+        # single frozen view beats striped fine-grained locking (§3.1)
+        with self.cache.global_section():
+            for k in keys:
+                raw = raws.get(k)
+                if raw is None:
+                    continue
+                record = TransactionRecord.decode(raw)
+                if self.cache.add(record):
+                    self._committed_uuids[record.tid.uuid] = record.tid
+                    loaded += 1
         return loaded
 
     # ------------------------------------------------------------- Table 1
@@ -628,11 +662,19 @@ class AftNode:
             # step per session: parallel DAG branches selecting against stale
             # snapshots could otherwise each pass Definition 1 individually yet
             # insert disjoint keys that are jointly fractured (e.g. m@old and
-            # k@T with T cowriting {m, k}).  Lock order is ctx.lock → cache.lock
-            # (inside atomic_read_select); nothing takes them in reverse.  The
-            # storage fetch stays outside the lock.
+            # k@T with T cowriting {m, k}).  Lock order is ctx.lock → cache
+            # stripe locks (inside the select); nothing takes them in reverse.
+            # The storage fetch stays outside the lock.
             with ctx.lock:
-                sel = atomic_read_select(key, ctx.read_set, self.cache)
+                t_sel = time.perf_counter()
+                if self.config.incremental_reads:
+                    sel, rec = atomic_read_select_incremental(
+                        key, ctx.read_set, self.cache, ctx.read_state)
+                else:  # retained coarse-lock reference oracle
+                    sel = atomic_read_select(key, ctx.read_set, self.cache)
+                    rec = (self.cache.get(sel.tid)
+                           if sel.tid is not None else None)
+                self._h_read_resolve.observe_s(time.perf_counter() - t_sel)
                 if sel.status is ReadStatus.NOT_FOUND:
                     return None, None
                 if sel.status is ReadStatus.NO_VALID_VERSION:
@@ -642,13 +684,13 @@ class AftNode:
                     )
                 assert sel.tid is not None
                 ctx.read_set[key] = sel.tid  # line 24: R_new = R ∪ {k_target}
+                ctx.read_state.note_read(rec)  # fold case-1 bounds in once
                 chosen = sel.tid
             value = self._fetch(key, chosen)
             tracer = obs_trace.get_tracer()
             if tracer.enabled:
                 # the offline checker (repro/obs/checker.py) replays these
                 # to re-derive Definition-1 read atomicity from the log alone
-                rec = self.cache.get(chosen)
                 tracer.emit(
                     "read",
                     txn=ctx.uuid,

@@ -55,10 +55,41 @@ the child's ``w/<seq>`` marker exists (``core/gc.py``).
 from __future__ import annotations
 
 import json
+import os
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional, Tuple
 
 from .ids import TxnId
+
+# -- encode-once record fan-out ---------------------------------------------
+# A committed TransactionRecord is immutable, so its wire bytes never change:
+# memoizing encode() lets one serialization feed the pipeline flush, every
+# multicast peer envelope, and gossip blobs.  The toggle exists for the
+# hot-path benchmark's pre-PR baseline arm and as an escape hatch
+# (REPRO_ENCODE_CACHE=0).  Hit/miss counters are plain ints updated without a
+# lock — approximate under races, which the gauges tolerate.
+_ENCODE_CACHE_ENABLED = os.environ.get("REPRO_ENCODE_CACHE", "1") != "0"
+_ENCODE_STATS = {"hits": 0, "misses": 0}
+
+
+def set_encode_cache(enabled: bool) -> None:
+    """Enable/disable record-encode memoization (already-cached bytes keep
+    being served; only new caching stops)."""
+    global _ENCODE_CACHE_ENABLED
+    _ENCODE_CACHE_ENABLED = bool(enabled)
+
+
+def encode_cache_enabled() -> bool:
+    return _ENCODE_CACHE_ENABLED
+
+
+def encode_cache_stats() -> Dict[str, int]:
+    return dict(_ENCODE_STATS)
+
+
+def reset_encode_cache_stats() -> None:
+    _ENCODE_STATS["hits"] = 0
+    _ENCODE_STATS["misses"] = 0
 
 DATA_PREFIX = "d/"
 COMMIT_PREFIX = "t/"
@@ -176,6 +207,14 @@ class TransactionRecord:
 
     # -- serialization -----------------------------------------------------
     def encode(self) -> bytes:
+        # encode-once: records are immutable after commit, so the first
+        # serialization is cached on the instance (frozen dataclasses still
+        # carry a __dict__; fields are untouched, so eq/hash are unaffected)
+        if _ENCODE_CACHE_ENABLED:
+            cached = self.__dict__.get("_enc")
+            if cached is not None:
+                _ENCODE_STATS["hits"] += 1
+                return cached
         body = {
             "t": self.tid.encode(),
             "w": sorted(self.write_set),
@@ -186,15 +225,24 @@ class TransactionRecord:
                 if v != data_key(k, self.tid)
             },
         }
-        return json.dumps(body, separators=(",", ":")).encode()
+        raw = json.dumps(body, separators=(",", ":")).encode()
+        if _ENCODE_CACHE_ENABLED:
+            _ENCODE_STATS["misses"] += 1
+            object.__setattr__(self, "_enc", raw)
+        return raw
 
     @staticmethod
     def decode(raw: bytes) -> "TransactionRecord":
         body = json.loads(raw)
         tid = TxnId.decode(body["t"])
-        return TransactionRecord(
+        rec = TransactionRecord(
             tid=tid, write_set=tuple(body["w"]), storage_keys=dict(body.get("s", {}))
         )
+        if _ENCODE_CACHE_ENABLED:
+            # seed the encode cache with the wire bytes we just parsed, so a
+            # record merged from a peer re-fans-out without re-serializing
+            object.__setattr__(rec, "_enc", bytes(raw))
+        return rec
 
 
 @dataclass(frozen=True)
@@ -229,22 +277,60 @@ def lookup_committed_record(storage, uuid: str) -> Optional["TransactionRecord"]
     return TransactionRecord.decode(raw)
 
 
+# version-header frame: a length-prefixed binary layout replacing the old
+# per-get JSON header (json.dumps on embed + json.loads on every extract).
+# Byte 0 discriminates the formats: the legacy frame opens with a 4-byte
+# big-endian header length whose leading byte is 0x00 for any sane header
+# (< 16 MiB), while the binary frame leads with the 0xAF magic.
+_META_MAGIC = 0xAF
+_META_VERSION = 1
+
+
 def embed_metadata(value: bytes, tid: TxnId, cowritten: Iterable[str]) -> bytes:
-    """Prefix a payload with AFT metadata.
+    """Prefix a payload with AFT metadata (binary frame).
 
     Used in two places: (1) AFT's own data versions, so that values are
     self-describing for recovery tooling; (2) the *plain* storage baselines of
     §6.1.2, which embed "the same metadata AFT uses—a timestamp, a UUID, and a
     cowritten key set" (~70 bytes) to let the anomaly detectors of Table 2
     observe RYW/FR violations without a shim.
+
+    Frame: ``AF 01 | u16 len(tid) | tid | u16 n | (u16 len(key) | key)*n |
+    payload`` — all lengths big-endian, strings utf-8.
     """
-    header = json.dumps(
-        {"t": tid.encode(), "c": sorted(cowritten)}, separators=(",", ":")
-    ).encode()
-    return len(header).to_bytes(4, "big") + header + value
+    parts = [bytes((_META_MAGIC, _META_VERSION))]
+    tid_b = tid.encode().encode()
+    parts.append(len(tid_b).to_bytes(2, "big"))
+    parts.append(tid_b)
+    keys = sorted(cowritten)
+    parts.append(len(keys).to_bytes(2, "big"))
+    for k in keys:
+        kb = k.encode()
+        parts.append(len(kb).to_bytes(2, "big"))
+        parts.append(kb)
+    parts.append(value)
+    return b"".join(parts)
 
 
 def extract_metadata(raw: bytes) -> Tuple[bytes, TxnId, Tuple[str, ...]]:
+    if raw[:1] == bytes((_META_MAGIC,)):
+        if raw[1] != _META_VERSION:
+            raise ValueError(f"unknown metadata frame version {raw[1]}")
+        pos = 2
+        tlen = int.from_bytes(raw[pos:pos + 2], "big")
+        pos += 2
+        tid = TxnId.decode(raw[pos:pos + tlen].decode())
+        pos += tlen
+        n = int.from_bytes(raw[pos:pos + 2], "big")
+        pos += 2
+        keys = []
+        for _ in range(n):
+            klen = int.from_bytes(raw[pos:pos + 2], "big")
+            pos += 2
+            keys.append(raw[pos:pos + klen].decode())
+            pos += klen
+        return raw[pos:], tid, tuple(keys)
+    # legacy JSON-header frame (values written before the binary frame)
     hlen = int.from_bytes(raw[:4], "big")
     header = json.loads(raw[4 : 4 + hlen])
     return raw[4 + hlen :], TxnId.decode(header["t"]), tuple(header["c"])

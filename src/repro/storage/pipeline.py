@@ -141,6 +141,10 @@ class StorageIOPipeline:
             "put_items": 0,
             "flushes": 0,            # SUCCESSFUL put flushes only
             "flushed_items": 0,
+            "flushed_bytes": 0,      # value bytes landed by successful
+                                     # put flushes (commit records ride the
+                                     # encode-once cache, so this now meters
+                                     # wire bytes, not re-serialization work)
             "flush_groups": 0,       # Σ distinct groups per flush
             "flush_failures": 0,
             "flush_size_max": 0,
@@ -514,6 +518,8 @@ class StorageIOPipeline:
             if batch and put_exc is None:
                 self._s["flushes"] += 1
                 self._s["flushed_items"] += len(batch)
+                self._s["flushed_bytes"] += sum(
+                    len(v) for v in batch.values())
                 self._s["flush_groups"] += len(groups)
                 if len(batch) > self._s["flush_size_max"]:
                     self._s["flush_size_max"] = len(batch)

@@ -1,0 +1,242 @@
+"""Metadata hot-path unit + stress coverage.
+
+* striped ``CommitSetCache`` thread-safety: concurrent add/remove/read load,
+  then the records/index invariant ("a transaction appears in the index iff
+  its record is present") checked stripe by stripe at quiescence, with no
+  dangling index entries and every version list still sorted;
+* ``DataCache`` LRU regression: a re-read key must survive eviction pressure
+  (the old FIFO evicted it regardless of recency);
+* encode-once record fan-out: identity-cached bytes, decode seeding, the
+  ``set_encode_cache`` toggle, and the multicast envelope roundtrip;
+* binary version-header frame: roundtrip, unicode keys, legacy-JSON
+  fallback, unknown-version rejection.
+"""
+
+import json
+import threading
+
+import pytest
+
+from repro.core import (
+    CommitSetCache,
+    DataCache,
+    TransactionRecord,
+    TxnId,
+    decode_envelope,
+    embed_metadata,
+    encode_envelope,
+    extract_metadata,
+    set_encode_cache,
+)
+from repro.core.records import encode_cache_enabled
+
+
+def _rec(ts, uuid, write_set):
+    return TransactionRecord(
+        tid=TxnId(timestamp=ts, uuid=uuid), write_set=tuple(sorted(write_set))
+    )
+
+
+# -- striped cache -----------------------------------------------------------
+
+def _check_invariant(cache):
+    """records/index iff-invariant, checked under the coarse section."""
+    with cache.global_section():
+        records = {}
+        for s in cache._stripes:
+            records.update(s.records)
+        indexed = set()
+        for s in cache._stripes:
+            for key, versions in s.index.items():
+                assert versions == sorted(versions), f"unsorted list for {key}"
+                assert len(versions) == len(set(versions))
+                for tid in versions:
+                    assert tid in records, f"dangling index entry {key}@{tid}"
+                    assert key in records[tid].write_set
+                    indexed.add(tid)
+        for tid, rec in records.items():
+            for key in rec.write_set:
+                stripe = cache._stripe_for_key(key)
+                assert tid in stripe.index.get(key, ()), (
+                    f"record {tid} missing from index of {key}"
+                )
+        assert indexed <= set(records)
+
+
+def test_striped_cache_concurrent_stress():
+    cache = CommitSetCache(stripes=8)
+    keys = [f"k{i}" for i in range(12)]
+    n_per_thread = 300
+    barrier = threading.Barrier(8)
+    errors = []
+
+    def adder(base):
+        barrier.wait()
+        for i in range(n_per_thread):
+            ws = (keys[(base + i) % 12], keys[(base + i * 7 + 3) % 12])
+            cache.add(_rec(base * 100_000 + i + 1, f"a{base}-{i}", ws),
+                      fresh=(i % 3 == 0))
+
+    def remover(base):
+        barrier.wait()
+        for i in range(n_per_thread):
+            cache.remove(TxnId(base * 100_000 + i + 1, f"a{base}-{i}"))
+
+    def reader():
+        barrier.wait()
+        for i in range(n_per_thread):
+            k = keys[i % 12]
+            for t in cache.versions_of(k):
+                cache.get(t)  # may be None if pruned concurrently — fine
+            cache.latest_version_of(k)
+            cache.pruned_max_ts(k)
+            len(cache)
+            cache.all_tids()
+
+    def run(fn, *args):
+        def wrapped():
+            try:
+                fn(*args)
+            except Exception as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+        return threading.Thread(target=wrapped)
+
+    threads = (
+        [run(adder, b) for b in range(4)]
+        + [run(remover, b) for b in (0, 2)]  # race adders on same tids
+        + [run(reader), run(reader)]
+    )
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    _check_invariant(cache)
+
+    stats = cache.lock_stats()
+    assert stats["acquires"] > 0
+    # drain_fresh returns only records actually added (never duplicates)
+    fresh = cache.drain_fresh()
+    assert len(fresh) == len({r.tid for r in fresh})
+
+
+def test_striped_cache_single_stripe_still_correct():
+    cache = CommitSetCache(stripes=1)
+    r = _rec(1, "u1", ["x", "y"])
+    assert cache.add(r)
+    assert not cache.add(r)  # idempotent
+    assert cache.versions_of("x") == [r.tid]
+    assert cache.remove(r.tid) is r
+    assert cache.versions_of("x") == []
+    assert cache.pruned_max_ts("x") == 1
+    _check_invariant(cache)
+    with pytest.raises(ValueError):
+        CommitSetCache(stripes=0)
+
+
+def test_versions_view_is_zero_copy():
+    cache = CommitSetCache(stripes=4)
+    r = _rec(5, "u5", ["k"])
+    cache.add(r)
+    with cache.lock_for_key("k"):
+        view = cache.versions_view("k")
+        stripe = cache._stripe_for_key("k")
+        assert view is stripe.index["k"]  # no copy under the stripe lock
+    assert cache.versions_view("missing") == ()
+
+
+def test_legacy_coarse_lock_context_manager():
+    cache = CommitSetCache(stripes=4)
+    with cache.lock:  # freezes every stripe; nested accessors stay legal
+        cache.add(_rec(9, "u9", ["z"]))
+        assert cache.latest_version_of("z") is not None
+
+
+# -- DataCache LRU -----------------------------------------------------------
+
+def test_data_cache_lru_rereads_survive_eviction():
+    """Regression: under FIFO, k0 (oldest insert) was evicted even though it
+    was just re-read; LRU must evict the cold k1 instead."""
+    dc = DataCache(max_bytes=100)
+    t = TxnId(1, "t")
+    dc.put("k0", t, b"x" * 40)
+    dc.put("k1", t, b"y" * 40)
+    assert dc.get("k0", t) is not None  # promote k0
+    dc.put("k2", t, b"z" * 40)          # forces one eviction
+    assert dc.get("k0", t) is not None, "re-read key evicted (FIFO behavior)"
+    assert dc.get("k1", t) is None      # true LRU victim
+    assert dc.stats()["evictions"] == 1
+    assert not dc.contains_key("k1") and dc.contains_key("k0")
+
+
+def test_data_cache_put_existing_promotes():
+    dc = DataCache(max_bytes=100)
+    t = TxnId(1, "t")
+    dc.put("a", t, b"x" * 40)
+    dc.put("b", t, b"y" * 40)
+    dc.put("a", t, b"X" * 40)  # overwrite promotes too
+    dc.put("c", t, b"z" * 40)
+    assert dc.get("a", t) == b"X" * 40
+    assert dc.get("b", t) is None
+
+
+# -- encode-once + envelopes -------------------------------------------------
+
+def test_encode_once_identity_and_decode_seeding():
+    r = _rec(7, "u7", ["p", "q"])
+    e1 = r.encode()
+    e2 = r.encode()
+    assert e1 is e2  # memoized on the instance
+    r2 = TransactionRecord.decode(e1)
+    assert r2 == r
+    # decode seeds the cache with the wire bytes: no re-serialization
+    assert r2.encode() == e1
+
+
+def test_encode_cache_toggle():
+    assert encode_cache_enabled()
+    set_encode_cache(False)
+    try:
+        r = _rec(8, "u8", ["p"])
+        e1 = r.encode()
+        e2 = r.encode()
+        assert e1 == e2
+        assert "_enc" not in r.__dict__  # nothing cached while disabled
+    finally:
+        set_encode_cache(True)
+
+
+def test_envelope_roundtrip():
+    recs = [_rec(i + 1, f"e{i}", ["a", f"k{i}"]) for i in range(3)]
+    payload = encode_envelope(recs)
+    out = decode_envelope(payload)
+    assert list(out) == recs
+    assert decode_envelope(encode_envelope([])) == ()
+    # each record's bytes ride the encode-once cache inside the envelope
+    assert recs[0].encode() in payload
+
+
+# -- binary version-header frame --------------------------------------------
+
+def test_metadata_frame_roundtrip():
+    tid = TxnId(42, "abc")
+    framed = embed_metadata(b"\x00payload\xff", tid, ["k2", "k1", "ék"])
+    value, out_tid, cow = extract_metadata(framed)
+    assert value == b"\x00payload\xff"
+    assert out_tid == tid
+    assert cow == ("k1", "k2", "ék")  # sorted
+
+
+def test_metadata_frame_legacy_json_fallback():
+    tid = TxnId(7, "legacy")
+    header = json.dumps({"t": tid.encode(), "c": ["a", "b"]}).encode()
+    legacy = len(header).to_bytes(4, "big") + header + b"body"
+    value, out_tid, cow = extract_metadata(legacy)
+    assert value == b"body" and out_tid == tid and cow == ("a", "b")
+
+
+def test_metadata_frame_unknown_version_rejected():
+    framed = bytearray(embed_metadata(b"v", TxnId(1, "u"), ["k"]))
+    framed[1] = 99
+    with pytest.raises(ValueError):
+        extract_metadata(bytes(framed))
